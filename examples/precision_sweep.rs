@@ -1,0 +1,60 @@
+//! Precision sweep on one real trained model: the Fig. 2 experiment as a
+//! focused example, printing AUC ratio vs fractional bits and the weight
+//! dynamic range that explains the integer-bit requirement.
+//!
+//! ```text
+//! cargo run --release --example precision_sweep [model_key] [samples]
+//! ```
+
+use rnn_hls::config::Fig2Config;
+use rnn_hls::model::Weights;
+use rnn_hls::report::fig2;
+use rnn_hls::runtime::manifest;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = manifest::default_artifacts_dir();
+    let mut args = std::env::args().skip(1);
+    let key = args.next().unwrap_or_else(|| "top_gru".into());
+    let samples: usize = args
+        .next()
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(800);
+
+    let weights = Weights::load(artifacts.join(format!("weights/{key}.json")))?;
+    let (lo, hi) = weights.weight_range();
+    println!(
+        "model {key}: {} parameters, weight range [{lo:.3}, {hi:.3}]",
+        weights.arch.param_count()
+    );
+    println!(
+        "=> integer bits must cover ±{:.1} plus accumulation headroom;\n\
+        the paper settles on {} integer bits for this benchmark\n",
+        lo.abs().max(hi),
+        rnn_hls::hls::paper::chosen_integer_bits(&weights.arch.name),
+    );
+
+    let cfg = Fig2Config {
+        keys: vec![key.clone()],
+        samples,
+        ..Default::default()
+    };
+    let points = fig2::run(&artifacts, &cfg, None)?;
+    fig2::shape_check(&points, &key)?;
+    println!("shape check OK: ratio saturates at high fractional bits");
+
+    // Find the cheapest (fewest total bits) config within 1% of float.
+    let best = points
+        .iter()
+        .filter(|p| p.ratio() > 0.99)
+        .min_by_key(|p| p.integer_bits + p.fractional_bits);
+    if let Some(p) = best {
+        println!(
+            "cheapest near-lossless type: ap_fixed<{},{}> (ratio {:.4})",
+            p.integer_bits + p.fractional_bits,
+            p.integer_bits,
+            p.ratio()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: load one AOT-compiled model, classify a freshly generated
+//! event through every engine, and print the HLS synthesis estimate for
+//! the same network — the whole three-layer story in ~80 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//! Requires `make artifacts` to have been run once.
+
+use rnn_hls::coordinator::server::predicted_label;
+use rnn_hls::data::generators;
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::hls::{HlsConfig, HlsDesign};
+use rnn_hls::model::Weights;
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+use rnn_hls::runtime::{manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = manifest::default_artifacts_dir();
+    let key = std::env::args().nth(1).unwrap_or_else(|| "top_gru".into());
+    let benchmark = key.split('_').next().unwrap().to_string();
+
+    // 1. Generate one live event (the workload the trigger would see).
+    let mut generator = generators::for_benchmark(&benchmark, 7)?;
+    let event = generator.generate();
+    println!("generated one {benchmark} event, true label = {}", event.label);
+
+    // 2. PJRT engine: the AOT-compiled JAX/Pallas model (the request path).
+    let runtime = Runtime::new(&artifacts)?;
+    let model = runtime.model(&key, 1)?;
+    let t0 = std::time::Instant::now();
+    let pjrt_out = &model.run_batch(&event.features, 1)?[0];
+    println!(
+        "pjrt  engine: probs {:?} -> label {} ({:.1} µs)",
+        pjrt_out,
+        predicted_label(pjrt_out),
+        t0.elapsed().as_secs_f64() * 1e6
+    );
+
+    // 3. f32 rust engine (reference numerics).
+    let weights = Weights::load(artifacts.join(format!("weights/{key}.json")))?;
+    let float_engine = FloatEngine::new(&weights)?;
+    let float_out = float_engine.forward(&event.features);
+    println!(
+        "float engine: probs {:?} -> label {}",
+        float_out,
+        predicted_label(&float_out)
+    );
+
+    // 4. Bit-accurate ap_fixed<16,6> engine (the FPGA datapath stand-in).
+    let fixed_engine = FixedEngine::new(
+        &weights,
+        QuantConfig::ptq(FixedSpec::default16_6()),
+    )?;
+    let fixed_out = fixed_engine.forward(&event.features);
+    println!(
+        "fixed<16,6> : probs {:?} -> label {}",
+        fixed_out,
+        predicted_label(&fixed_out)
+    );
+
+    // 5. What would this cost on the FPGA?  Ask the HLS model.
+    let reuse = rnn_hls::hls::paper::reuse_grid(&benchmark, weights.arch.cell)[0];
+    let report = HlsDesign::new(
+        weights.arch.clone(),
+        HlsConfig::paper_default(FixedSpec::default16_6(), reuse),
+    )
+    .synthesize()?;
+    println!("\nHLS synthesis estimate:\n{}", report.summary());
+    println!(
+        "\n(`rnn-hls sweep --benchmark {benchmark}` explores alternatives,\n\
+         `rnn-hls report all` regenerates every paper table/figure)"
+    );
+    Ok(())
+}

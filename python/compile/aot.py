@@ -1,0 +1,148 @@
+"""AOT export: lower every benchmark model to HLO *text* for the rust runtime.
+
+This is the L2→L3 bridge.  Each trained model is lowered with the Pallas
+backend (the whole inference graph comes from L1 kernels), weights baked
+in as constants, at each serving batch size, and written as HLO **text**:
+
+    jax.jit(fn).lower(spec) → StableHLO → XlaComputation → as_hlo_text()
+
+Text — NOT ``lowered.compile()``/``.serialize()`` — is the interchange
+format because jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``hlo/{bench}_{cell}_b{B}.hlo.txt`` — one module per model × batch size
+* ``golden/{bench}_{cell}.json``      — forward outputs on the first 8
+  frozen test samples, for rust↔python cross-validation
+* ``manifest.json``                   — registry the rust runtime loads
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data as datamod
+from compile import model as modelmod
+
+# Serving batch buckets.  1/10/100 are the batch sizes of the paper's §5.2
+# GPU-throughput comparison; the dynamic batcher in rust pads to the next
+# bucket.
+BATCH_SIZES = (1, 10, 100)
+N_GOLDEN = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(a, params, batch: int) -> tuple[str, list[list[str]]]:
+    """Lower ``forward(params, ·, a)`` with weights as runtime parameters.
+
+    Weights are NOT baked in as constants: XLA's HLO text printer elides
+    large literals as ``constant({...})``, which the rust-side parser
+    accepts but fills with garbage — a silent numerical corruption.  The
+    weights instead become parameters 1..N (parameter 0 is the input
+    batch); the rust runtime builds the weight literals once from
+    ``weights/{key}.json`` in the flatten order recorded in the manifest.
+
+    Returns (hlo_text, param_order) where param_order[i] = [layer, tensor]
+    for HLO parameter ``i + 1``.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    paths, _ = jax.tree_util.tree_flatten_with_path(params)
+    order = [[str(p[0].key), str(p[1].key)] for p, _leaf in paths]
+
+    def fn(x, *ws):
+        p = jax.tree_util.tree_unflatten(treedef, ws)
+        return (modelmod.forward(p, x, a, backend="pallas"),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, a.seq_len, a.input_size), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in flat]
+    return to_hlo_text(jax.jit(fn).lower(x_spec, *w_specs)), order
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--only", default=None, help="lower a single arch key")
+    args = ap.parse_args()
+
+    hlo_dir = os.path.join(args.out, "hlo")
+    golden_dir = os.path.join(args.out, "golden")
+    os.makedirs(hlo_dir, exist_ok=True)
+    os.makedirs(golden_dir, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text-v1", "models": []}
+    for a in modelmod.all_archs():
+        if args.only and a.key != args.only:
+            continue
+        wpath = os.path.join(args.out, "weights", f"{a.key}.json")
+        if not os.path.exists(wpath):
+            print(f"skip {a.key}: no weights at {wpath} (run train first)")
+            continue
+        with open(wpath) as f:
+            a2, params = modelmod.params_from_json(f.read())
+        assert a2 == a, (a2, a)
+
+        entry = {
+            "key": a.key,
+            "benchmark": a.name,
+            "cell": a.cell,
+            "seq_len": a.seq_len,
+            "input_size": a.input_size,
+            "hidden_size": a.hidden_size,
+            "output_size": a.output_size,
+            "weights": f"weights/{a.key}.json",
+            "dataset": f"data/{a.name}_test.bin",
+            "golden": f"golden/{a.key}.json",
+            "hlo": {},
+        }
+        for batch in BATCH_SIZES:
+            text, order = lower_model(a, params, batch)
+            rel = f"hlo/{a.key}_b{batch}.hlo.txt"
+            with open(os.path.join(args.out, rel), "w") as f:
+                f.write(text)
+            entry["hlo"][str(batch)] = rel
+            entry["param_order"] = order
+            print(f"wrote {rel} ({len(text)} chars)")
+
+        # Golden outputs on the frozen test set (float path, ref backend —
+        # identical numerics to pallas, asserted in pytest).
+        xt, _yt, _c = datamod.read_dataset(
+            os.path.join(args.out, "data", f"{a.name}_test.bin")
+        )
+        xg = jnp.asarray(xt[:N_GOLDEN])
+        yg = np.asarray(modelmod.forward(params, xg, a, backend="ref"))
+        with open(os.path.join(golden_dir, f"{a.key}.json"), "w") as f:
+            json.dump(
+                {
+                    "n": N_GOLDEN,
+                    "output_size": a.output_size,
+                    "outputs": [[float(v) for v in row] for row in yg],
+                },
+                f,
+            )
+        manifest["models"].append(entry)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

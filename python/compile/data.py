@@ -1,0 +1,262 @@
+"""Synthetic dataset generators for the three benchmarks.
+
+The paper trains on MadGraph+Pythia top jets, CMS OpenData tracks, and the
+Google QuickDraw strokes — none of which are available here (repro gate).
+Per DESIGN.md §Hardware-substitution we build generators that preserve the
+*discriminating structure* each RNN has to learn, so that (a) the models
+train to a realistic AUC regime and (b) the post-training-quantization
+scan of Fig. 2 sees weight/activation dynamic ranges comparable to the
+paper's models.
+
+All generators are seeded ``numpy.random.Generator`` based and mirrored
+algorithm-for-algorithm in ``rust/src/data/`` (the rust side feeds the
+live serving demo; the *evaluation* test sets are generated here once and
+stored under ``artifacts/data/`` so Fig. 2 is bit-reproducible).
+
+Binary test-set format (read by ``rust/src/data/dataset.rs``)::
+
+    magic   8 bytes  b"RNNDAT01"
+    n       u32 LE   number of samples
+    seq     u32 LE   sequence length
+    feat    u32 LE   features per step
+    classes u32 LE   number of classes (1 => binary, sigmoid output)
+    data    n*seq*feat f32 LE, row-major [sample][step][feature]
+    labels  n u32 LE
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"RNNDAT01"
+
+
+# --------------------------------------------------------------------------
+# Top quark tagging: 1-prong (light q) vs 3-prong (top) jet substructure toy.
+# Features per particle: [log pT, eta_rel, phi_rel, log E, dR, pid]
+# --------------------------------------------------------------------------
+
+
+def top_tagging(
+    seed: int, n: int, seq_len: int = 20, n_feat: int = 6
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` jets, half top (label 1), half light-quark (label 0)."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, seq_len, n_feat), np.float32)
+    y = (rng.random(n) < 0.5).astype(np.uint32)
+
+    for i in range(n):
+        is_top = bool(y[i])
+        # Top jets have 3 hard subjets (b q q' from t→bW→bqq'), light jets 1
+        # (occasionally 2 from a hard gluon emission).
+        if is_top:
+            n_prong = 3
+        else:
+            n_prong = 1 if rng.random() < 0.8 else 2
+        # Subjet axes inside the R=0.8 cone; tops' prongs are wider apart.
+        spread = 0.35 if is_top else 0.12
+        axes = rng.normal(0.0, spread, size=(n_prong, 2))
+        # pT sharing between prongs (Dirichlet) around a ~1 TeV jet.
+        frac = rng.dirichlet(np.full(n_prong, 3.0))
+        jet_pt = rng.normal(1000.0, 10.0)  # delta pT/pT = 0.01 at 1 TeV
+
+        n_part = int(rng.integers(12, seq_len + 1))
+        pts = np.zeros(n_part)
+        etas = np.zeros(n_part)
+        phis = np.zeros(n_part)
+        pids = np.zeros(n_part)
+        for p in range(n_part):
+            prong = int(rng.choice(n_prong, p=frac))
+            # Fragmentation: particle pT exponential within its prong.
+            pts[p] = frac[prong] * jet_pt * rng.exponential(0.22)
+            width = 0.05 if is_top else 0.08
+            etas[p] = axes[prong, 0] + rng.normal(0.0, width)
+            phis[p] = axes[prong, 1] + rng.normal(0.0, width)
+            pids[p] = rng.integers(-2, 3)
+
+        order = np.argsort(-pts)  # pT-ordered, as in the paper
+        pts, etas, phis, pids = pts[order], etas[order], phis[order], pids[order]
+        energy = pts * np.cosh(etas)
+        dr = np.sqrt(etas**2 + phis**2)
+        feats = np.stack(
+            [
+                np.log1p(pts) / 7.0,
+                etas,
+                phis,
+                np.log1p(energy) / 7.0,
+                dr,
+                pids / 2.0,
+            ],
+            axis=-1,
+        ).astype(np.float32)
+        x[i, :n_part] = feats  # zero-padded tail, as in the paper
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# Jet flavor tagging: displaced-track toy (b / c / light).
+# Features per track: [pt_rel, dR, d0, dz, S(d0), S(dz)]
+# --------------------------------------------------------------------------
+
+
+def flavor_tagging(
+    seed: int, n: int, seq_len: int = 15, n_feat: int = 6
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` jets with labels 0=light, 1=c, 2=b."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, seq_len, n_feat), np.float32)
+    y = rng.integers(0, 3, size=n).astype(np.uint32)
+
+    # (mean displaced multiplicity, d0 scale [cm], significance scale)
+    profile = {
+        0: (0.25, 0.010, 1.0),  # light: fakes only
+        1: (1.8, 0.025, 2.5),  # c hadrons: ~cτ 60-300 µm
+        2: (3.5, 0.045, 5.0),  # b hadrons: ~cτ 450 µm + tertiary c
+    }
+    for i in range(n):
+        mult, d0_scale, sig_scale = profile[int(y[i])]
+        n_trk = int(rng.integers(6, seq_len + 1))
+        n_disp = min(int(rng.poisson(mult)), n_trk)
+
+        d0 = rng.normal(0.0, 0.008, size=n_trk)  # prompt: resolution only
+        dz = rng.normal(0.0, 0.015, size=n_trk)
+        if n_disp > 0:
+            sign = rng.choice([-1.0, 1.0], size=n_disp, p=[0.1, 0.9])
+            d0[:n_disp] = sign * rng.exponential(d0_scale, size=n_disp)
+            dz[:n_disp] += rng.normal(0.0, d0_scale, size=n_disp)
+        sigma_d0 = rng.uniform(0.006, 0.014, size=n_trk)
+        sigma_dz = rng.uniform(0.010, 0.025, size=n_trk)
+        s_d0 = d0 / sigma_d0 + rng.normal(0, 0.3, size=n_trk)
+        s_dz = dz / sigma_dz + rng.normal(0, 0.3, size=n_trk)
+        # Heavy-flavor decay tracks are harder and closer to the jet axis.
+        pt_rel = rng.beta(1.5, 6.0, size=n_trk)
+        dr = rng.exponential(0.12, size=n_trk).clip(max=0.5)
+
+        order = np.argsort(-np.abs(s_d0))  # paper: ordered by S(d0)
+        feats = np.stack(
+            [
+                pt_rel[order],
+                dr[order],
+                (d0[order] * 10.0).clip(-4, 4),
+                (dz[order] * 10.0).clip(-4, 4),
+                (s_d0[order] / 4.0).clip(-6, 6),
+                (s_dz[order] / 4.0).clip(-6, 6),
+            ],
+            axis=-1,
+        ).astype(np.float32)
+        x[i, :n_trk] = feats
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# QuickDraw: parametric stroke-curve families standing in for
+# {ant, butterfly, bee, mosquito, snail}.  Features per step: [x, y, t]
+# --------------------------------------------------------------------------
+
+
+def _curve(cls: int, s: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Return (len(s), 2) points of the class's stroke family at phases s."""
+    two_pi = 2.0 * np.pi
+    if cls == 0:  # "ant": three body segments drawn as successive circles
+        seg = np.floor(s * 3).clip(max=2)
+        phase = (s * 3 - seg) * two_pi
+        cx = (seg - 1.0) * 0.9
+        r = 0.35 + 0.1 * (seg == 1)
+        return np.stack([cx + r * np.cos(phase), r * np.sin(phase)], -1)
+    if cls == 1:  # "butterfly": four-petal rose curve
+        theta = s * two_pi
+        r = np.abs(np.cos(2.0 * theta)) + 0.15
+        return np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
+    if cls == 2:  # "bee": ellipse body with zigzag stripes
+        theta = s * two_pi
+        x = 1.2 * np.cos(theta)
+        y = 0.6 * np.sin(theta) + 0.25 * np.sign(np.sin(theta * 8.0)) * (s > 0.5)
+        return np.stack([x, y], -1)
+    if cls == 3:  # "mosquito": small body, long radial legs (star rays)
+        n_ray = 6
+        ray = np.floor(s * n_ray).clip(max=n_ray - 1)
+        along = (s * n_ray - ray)
+        # out-and-back along each ray
+        dist = 0.2 + 1.3 * (1.0 - np.abs(2.0 * along - 1.0))
+        ang = ray / n_ray * two_pi + 0.3
+        return np.stack([dist * np.cos(ang), dist * np.sin(ang)], -1)
+    # cls == 4, "snail": Archimedean spiral
+    theta = s * 3.0 * two_pi
+    r = 0.08 + 0.10 * theta
+    return np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
+
+
+def quickdraw(
+    seed: int, n: int, seq_len: int = 100, n_feat: int = 3
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` stroke sequences over 5 synthetic drawing classes."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, seq_len, n_feat), np.float32)
+    y = rng.integers(0, 5, size=n).astype(np.uint32)
+
+    for i in range(n):
+        s = np.linspace(0.0, 1.0, seq_len)
+        pts = _curve(int(y[i]), s, rng)
+        # Per-drawing augmentation: rotation, anisotropic scale, offset.
+        ang = rng.uniform(0, 2 * np.pi)
+        rot = np.array(
+            [[np.cos(ang), -np.sin(ang)], [np.sin(ang), np.cos(ang)]]
+        )
+        scale = rng.uniform(0.7, 1.3, size=2)
+        pts = (pts * scale) @ rot.T + rng.normal(0, 0.15, size=2)
+        pts += rng.normal(0.0, 0.04, size=pts.shape)  # pen jitter
+        # RAW coordinate scale: the real QuickDraw data records pen
+        # positions on a ~0-255 canvas, and the paper's Fig. 2c shows the
+        # model needs >= 10 integer bits as a result.  We keep that
+        # property: coordinates span roughly +-200 (needs int >= 10;
+        # int 6 / 8 clip at +-32 / +-128 and lose the drawing).
+        pts *= 200.0 / 1.6
+        # Timestamp: cumulative arc length with speed noise, scaled to
+        # the game's 15-second window.
+        seg = np.linalg.norm(np.diff(pts, axis=0), axis=1)
+        seg *= rng.uniform(0.7, 1.3, size=seg.shape)
+        t = np.concatenate([[0.0], np.cumsum(seg)])
+        t = 15.0 * t / max(t[-1], 1e-6)
+        x[i] = np.stack([pts[:, 0], pts[:, 1], t], -1).astype(np.float32)
+    return x, y
+
+
+GENERATORS = {
+    "top": top_tagging,
+    "flavor": flavor_tagging,
+    "quickdraw": quickdraw,
+}
+
+N_CLASSES = {"top": 1, "flavor": 3, "quickdraw": 5}
+
+
+def generate(name: str, seed: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` samples of benchmark ``name`` with the given seed."""
+    return GENERATORS[name](seed, n)
+
+
+# --------------------------------------------------------------------------
+# Binary test-set container (see module docstring for the layout).
+# --------------------------------------------------------------------------
+
+
+def write_dataset(path: str, x: np.ndarray, y: np.ndarray, classes: int) -> None:
+    n, seq, feat = x.shape
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIII", n, seq, feat, classes))
+        f.write(x.astype("<f4").tobytes())
+        f.write(y.astype("<u4").tobytes())
+
+
+def read_dataset(path: str) -> tuple[np.ndarray, np.ndarray, int]:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r} in {path}")
+        n, seq, feat, classes = struct.unpack("<IIII", f.read(16))
+        x = np.frombuffer(f.read(n * seq * feat * 4), "<f4").reshape(n, seq, feat)
+        y = np.frombuffer(f.read(n * 4), "<u4")
+    return x.copy(), y.copy(), classes

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+* :mod:`compile.kernels.lstm` — fused LSTM sequence kernel (Eq. 1).
+* :mod:`compile.kernels.gru` — fused GRU sequence kernel (reset_after).
+* :mod:`compile.kernels.dense` — tiled affine kernel for the MLP heads.
+* :mod:`compile.kernels.ref` — pure-jnp oracle for all of the above.
+"""
+
+from compile.kernels import ref  # noqa: F401
+from compile.kernels.dense import dense  # noqa: F401
+from compile.kernels.gru import gru  # noqa: F401
+from compile.kernels.lstm import lstm  # noqa: F401

@@ -1,0 +1,82 @@
+"""Pallas dense (affine) kernel with output tiling.
+
+The non-recurrent layers of the benchmark models (Table 1's "Dense layer
+sizes" column) run through this kernel so the whole forward pass lowers
+from Pallas.  The grid tiles the output dimension — the direct analogue of
+hls4ml splitting a matrix multiply across DSPs with a reuse factor: a
+smaller ``block_out`` keeps fewer MXU lanes live per step across more grid
+steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    y = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "linear":
+        raise ValueError(f"unsupported fused activation: {activation}")
+    o_ref[...] = y
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "linear",
+    block_out: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Affine layer ``act(x @ w + b)`` as a Pallas kernel.
+
+    Args:
+      x: ``(B, I)``.
+      w: ``(I, O)`` (Keras convention).
+      b: ``(O,)``.
+      activation: fused activation: linear | relu | sigmoid | tanh.
+        (softmax is NOT fused: it needs the full row, and hls4ml likewise
+        implements it as a separate LUT-based layer.)
+      block_out: output-tile width; must divide O. None → whole O.
+
+    Returns:
+      ``(B, O)``.
+    """
+    batch, in_dim = x.shape
+    if w.shape[0] != in_dim:
+        raise ValueError(f"w rows {w.shape[0]} != input dim {in_dim}")
+    out_dim = w.shape[1]
+    if b.shape != (out_dim,):
+        raise ValueError(f"bias shape {b.shape} != {(out_dim,)}")
+    if block_out is None:
+        block_out = out_dim
+    if out_dim % block_out != 0:
+        raise ValueError(f"block_out {block_out} must divide O {out_dim}")
+    b2 = b.reshape(1, out_dim)
+
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=(out_dim // block_out,),
+        in_specs=[
+            pl.BlockSpec((batch, in_dim), lambda j: (0, 0)),
+            pl.BlockSpec((in_dim, block_out), lambda j: (0, j)),
+            pl.BlockSpec((1, block_out), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((batch, block_out), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), x.dtype),
+        interpret=interpret,
+    )(x, w, b2)

@@ -1,0 +1,110 @@
+"""Fused Pallas GRU sequence kernel (Keras ``reset_after=True`` variant).
+
+Mirrors ``lstm.py``: grid over time steps, hidden state resident in the
+output block across steps, gate matmuls packed over the 3H axis.  The
+``reset_after`` convention (separate input/recurrent biases, reset gate
+applied *after* the recurrent matmul) matches Keras' TF2 default and the
+paper's GRU parameter counts (Table 1).
+
+See ``lstm.py`` for the interpret=True requirement and the TPU mapping of
+the paper's FPGA design knobs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_kernel(x_ref, w_ref, u_ref, b_ref, h_ref, *, hidden: int):
+    """Grid step ``t``: one GRU state update, state resident in the h block."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x_t = x_ref[:, 0, :]  # (B, I)
+    h_prev = h_ref[...]
+
+    bias = b_ref[...]  # (2, 3H): row 0 input bias, row 1 recurrent bias
+    x_mat = (
+        jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32)
+        + bias[0:1, :]
+    )
+    h_mat = (
+        jnp.dot(h_prev, u_ref[...], preferred_element_type=jnp.float32)
+        + bias[1:2, :]
+    )
+
+    xz = x_mat[:, 0 * hidden : 1 * hidden]
+    xr = x_mat[:, 1 * hidden : 2 * hidden]
+    xh = x_mat[:, 2 * hidden : 3 * hidden]
+    hz = h_mat[:, 0 * hidden : 1 * hidden]
+    hr = h_mat[:, 1 * hidden : 2 * hidden]
+    hh = h_mat[:, 2 * hidden : 3 * hidden]
+
+    z = jax.nn.sigmoid(xz + hz)
+    r = jax.nn.sigmoid(xr + hr)
+    # reset_after: the reset gate multiplies the *post-matmul* recurrent
+    # contribution (a Hadamard product, as in the paper's §3).
+    g = jnp.tanh(xh + r * hh)
+    h_ref[...] = z * h_prev + (1.0 - z) * g
+
+
+def gru(
+    x_seq: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """GRU over a sequence via a fused Pallas kernel.
+
+    Drop-in replacement for :func:`compile.kernels.ref.gru`.
+
+    Args:
+      x_seq: inputs ``(B, T, I)``.
+      w: kernel ``(I, 3H)``, Keras ``[z, r, h]`` packing.
+      u: recurrent kernel ``(H, 3H)``.
+      b: bias ``(2, 3H)``.
+
+    Returns:
+      final hidden state ``(B, H)``.
+    """
+    batch, seq_len, in_dim = x_seq.shape
+    hidden = u.shape[0]
+    if w.shape != (in_dim, 3 * hidden):
+        raise ValueError(f"kernel shape {w.shape} != {(in_dim, 3 * hidden)}")
+    if b.shape != (2, 3 * hidden):
+        raise ValueError(f"bias shape {b.shape} != {(2, 3 * hidden)}")
+
+    h = pl.pallas_call(
+        functools.partial(_gru_kernel, hidden=hidden),
+        grid=(seq_len,),
+        in_specs=[
+            pl.BlockSpec((batch, 1, in_dim), lambda t: (0, t, 0)),
+            pl.BlockSpec((in_dim, 3 * hidden), lambda t: (0, 0)),
+            pl.BlockSpec((hidden, 3 * hidden), lambda t: (0, 0)),
+            pl.BlockSpec((2, 3 * hidden), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, hidden), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, hidden), x_seq.dtype),
+        interpret=interpret,
+    )(x_seq, w, u, b)
+    return h
+
+
+def vmem_footprint_bytes(
+    batch: int, seq_len: int, in_dim: int, hidden: int, dtype_bytes: int = 4
+) -> int:
+    """VMEM bytes resident during one grid step (see lstm.py counterpart)."""
+    x_slice = batch * in_dim
+    weights = in_dim * 3 * hidden + hidden * 3 * hidden + 2 * 3 * hidden
+    state = batch * hidden
+    gates = 2 * batch * 3 * hidden
+    return (x_slice + weights + state + gates) * dtype_bytes

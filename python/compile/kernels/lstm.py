@@ -1,0 +1,136 @@
+"""Fused Pallas LSTM sequence kernel.
+
+The paper's FPGA "static mode" keeps the recurrent state resident inside
+the single RNN block while the sequence streams through it.  The TPU
+re-think of that insight (DESIGN.md §Hardware-Adaptation) is a *fused
+sequence kernel*: one ``pallas_call`` whose grid iterates over time steps,
+keeping ``h``/``c`` resident in fast memory (the output block is mapped to
+the same tile on every grid step, so it never round-trips to HBM between
+steps), and the four gate matmuls of Eq. 1 issued as two packed MXU
+contractions per step (``x_t @ W`` and ``h_{t-1} @ U`` over the 4H-packed
+gate axis).
+
+``interpret=True`` is mandatory on this CPU image: real-TPU lowering emits
+a Mosaic custom-call that the CPU PJRT plugin cannot execute.  The kernel
+is still *structured* for TPU: 2-D blocks, gate-packed matmuls, and a
+``block_h`` knob (the TPU analogue of hls4ml's reuse factor — smaller
+blocks keep fewer multipliers live per step at the cost of more grid
+steps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, w_ref, u_ref, b_ref, h_ref, c_ref, *, hidden: int):
+    """Grid step ``t``: one LSTM state update, state resident in h/c blocks."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x_t = x_ref[:, 0, :]  # (B, I) — this step's slice of the sequence
+    h_prev = h_ref[...]
+    c_prev = c_ref[...]
+
+    # Packed gate pre-activations: both contractions hit the full 4H gate
+    # axis in one go (the MXU analogue of hls4ml packaging kernel +
+    # recurrent kernel into single dense calls).
+    z = (
+        jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_prev, u_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    zi = z[:, 0 * hidden : 1 * hidden]
+    zf = z[:, 1 * hidden : 2 * hidden]
+    zc = z[:, 2 * hidden : 3 * hidden]
+    zo = z[:, 3 * hidden : 4 * hidden]
+
+    i = jax.nn.sigmoid(zi)
+    f = jax.nn.sigmoid(zf)
+    g = jnp.tanh(zc)
+    o = jax.nn.sigmoid(zo)
+
+    # Hadamard products — the op the paper added to hls4ml — run on the VPU.
+    c_new = f * c_prev + i * g
+    h_ref[...] = o * jnp.tanh(c_new)
+    c_ref[...] = c_new
+
+
+def lstm(
+    x_seq: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """LSTM over a sequence via a fused Pallas kernel.
+
+    Drop-in replacement for :func:`compile.kernels.ref.lstm`.
+
+    Args:
+      x_seq: inputs ``(B, T, I)``.
+      w: kernel ``(I, 4H)``, Keras ``[i, f, c, o]`` packing.
+      u: recurrent kernel ``(H, 4H)``.
+      b: bias ``(4H,)``.
+      interpret: must stay True on CPU-only PJRT (see module docstring).
+
+    Returns:
+      final hidden state ``(B, H)``.
+    """
+    batch, seq_len, in_dim = x_seq.shape
+    hidden = u.shape[0]
+    if w.shape != (in_dim, 4 * hidden):
+        raise ValueError(f"kernel shape {w.shape} != {(in_dim, 4 * hidden)}")
+    if b.shape != (4 * hidden,):
+        raise ValueError(f"bias shape {b.shape} != {(4 * hidden,)}")
+    b2 = b.reshape(1, 4 * hidden)
+
+    h, _c = pl.pallas_call(
+        functools.partial(_lstm_kernel, hidden=hidden),
+        grid=(seq_len,),
+        in_specs=[
+            # One time-slice of the sequence per grid step.
+            pl.BlockSpec((batch, 1, in_dim), lambda t: (0, t, 0)),
+            # Weights: same full block each step (stay resident).
+            pl.BlockSpec((in_dim, 4 * hidden), lambda t: (0, 0)),
+            pl.BlockSpec((hidden, 4 * hidden), lambda t: (0, 0)),
+            pl.BlockSpec((1, 4 * hidden), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            # State blocks pinned to tile (0, 0) on every step: the VMEM
+            # residency that mirrors the FPGA static-mode state registers.
+            pl.BlockSpec((batch, hidden), lambda t: (0, 0)),
+            pl.BlockSpec((batch, hidden), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x_seq.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x_seq.dtype),
+        ],
+        interpret=interpret,
+    )(x_seq, w, u, b2)
+    return h
+
+
+def vmem_footprint_bytes(
+    batch: int, seq_len: int, in_dim: int, hidden: int, dtype_bytes: int = 4
+) -> int:
+    """Bytes resident in VMEM during one grid step of the fused kernel.
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to estimate TPU viability:
+    one x-slice + both weight matrices + bias + h + c + the packed gate
+    buffer.  Must stay under ~16 MiB (one TensorCore's VMEM).
+    """
+    x_slice = batch * in_dim
+    weights = in_dim * 4 * hidden + hidden * 4 * hidden + 4 * hidden
+    state = 2 * batch * hidden
+    gates = batch * 4 * hidden
+    return (x_slice + weights + state + gates) * dtype_bytes

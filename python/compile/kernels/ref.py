@@ -1,0 +1,152 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions are the *semantic ground truth*: the Pallas kernels in
+``lstm.py`` / ``gru.py`` / ``dense.py`` must match them to float32
+tolerance (checked in ``python/tests/test_kernels.py``), and the rust
+fixed-point engine (``rust/src/nn``) must match their float path before
+quantization.
+
+Conventions follow Keras so that Table 1 of the paper reproduces exactly:
+
+* ``dense``:      ``y = x @ w + b`` with ``w.shape == (in, out)``.
+* ``lstm``:       Keras gate packing ``[i, f, c, o]`` along the last axis of
+                  the kernel ``w (in, 4H)``, recurrent kernel ``u (H, 4H)``
+                  and bias ``b (4H,)``.
+* ``gru``:        Keras ``reset_after=True`` variant (the TF2 default — this
+                  is what gives the paper's 1680/46080/51072 parameter
+                  counts): gate packing ``[z, r, h]``, kernel ``w (in, 3H)``,
+                  recurrent kernel ``u (H, 3H)``, bias ``b (2, 3H)`` with
+                  row 0 the input bias and row 1 the recurrent bias.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine layer, Keras convention: ``x (B, I) @ w (I, O) + b (O,)``."""
+    return jnp.dot(x, w) + b
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def tanh(x: jax.Array) -> jax.Array:
+    return jnp.tanh(x)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)
+
+
+def hadamard(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise product — the one op the paper had to add to hls4ml."""
+    return a * b
+
+
+def lstm_cell(
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """One LSTM state update (Eq. 1 of the paper, Keras packing).
+
+    Args:
+      x: input at this step, ``(B, I)``.
+      h: previous hidden state, ``(B, H)``.
+      c: previous cell state, ``(B, H)``.
+      w: kernel ``(I, 4H)`` packed ``[i, f, c, o]``.
+      u: recurrent kernel ``(H, 4H)``, same packing.
+      b: bias ``(4H,)``.
+
+    Returns:
+      ``(h_new, c_new)``, each ``(B, H)``.
+    """
+    z = jnp.dot(x, w) + jnp.dot(h, u) + b
+    zi, zf, zc, zo = jnp.split(z, 4, axis=-1)
+    i = jax.nn.sigmoid(zi)
+    f = jax.nn.sigmoid(zf)
+    g = jnp.tanh(zc)
+    o = jax.nn.sigmoid(zo)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm(
+    x_seq: jax.Array, w: jax.Array, u: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Run an LSTM over a full sequence, returning the final hidden state.
+
+    Args:
+      x_seq: ``(B, T, I)``.
+    Returns:
+      final hidden state ``(B, H)`` (Keras ``return_sequences=False``).
+    """
+    batch = x_seq.shape[0]
+    hidden = u.shape[0]
+    h0 = jnp.zeros((batch, hidden), dtype=x_seq.dtype)
+    c0 = jnp.zeros((batch, hidden), dtype=x_seq.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(x_t, h, c, w, u, b)
+        return (h, c), None
+
+    (h, _c), _ = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    return h
+
+
+def gru_cell(
+    x: jax.Array,
+    h: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+) -> jax.Array:
+    """One GRU state update, Keras ``reset_after=True`` convention.
+
+    Args:
+      x: input at this step, ``(B, I)``.
+      h: previous hidden state, ``(B, H)``.
+      w: kernel ``(I, 3H)`` packed ``[z, r, h]``.
+      u: recurrent kernel ``(H, 3H)``, same packing.
+      b: bias ``(2, 3H)``; ``b[0]`` input bias, ``b[1]`` recurrent bias.
+
+    Returns:
+      ``h_new (B, H)``.
+    """
+    x_mat = jnp.dot(x, w) + b[0]
+    h_mat = jnp.dot(h, u) + b[1]
+    xz, xr, xh = jnp.split(x_mat, 3, axis=-1)
+    hz, hr, hh = jnp.split(h_mat, 3, axis=-1)
+    z = jax.nn.sigmoid(xz + hz)
+    r = jax.nn.sigmoid(xr + hr)
+    g = jnp.tanh(xh + r * hh)
+    return z * h + (1.0 - z) * g
+
+
+def gru(
+    x_seq: jax.Array, w: jax.Array, u: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Run a GRU over a full sequence, returning the final hidden state."""
+    batch = x_seq.shape[0]
+    hidden = u.shape[0]
+    h0 = jnp.zeros((batch, hidden), dtype=x_seq.dtype)
+
+    def step(h, x_t):
+        h = gru_cell(x_t, h, w, u, b)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0, jnp.swapaxes(x_seq, 0, 1))
+    return h

@@ -1,0 +1,310 @@
+"""L2: the paper's benchmark models as JAX compute graphs.
+
+Builds the six benchmark variants of Table 1 (three tasks × {LSTM, GRU}),
+with parameter shapes/initialization matching Keras so the trainable
+parameter counts reproduce the paper exactly:
+
+=============== ===== ==== ====== ========= === ======== ======= =======
+benchmark       seq   in   hidden dense     out non-RNN  LSTM    GRU
+=============== ===== ==== ====== ========= === ======== ======= =======
+top             20    6    20     64        1   1,409    2,160   1,680
+flavor          15    6    120    50/10     3   6,593    60,960  46,080
+quickdraw       100   3    128    256/128   5   66,565   67,584  51,072
+=============== ===== ==== ====== ========= === ======== ======= =======
+
+The forward pass can run through either backend:
+
+* ``backend="ref"``    — pure jnp (:mod:`compile.kernels.ref`), used for
+  training (fast under jit) and as the numerical oracle;
+* ``backend="pallas"`` — the fused Pallas kernels, used for the AOT
+  artifacts so the whole inference graph lowers from L1 kernels.
+
+Both produce identical numerics (pytest asserts allclose).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dense as dense_pallas
+from compile.kernels import gru as gru_pallas
+from compile.kernels import lstm as lstm_pallas
+from compile.kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """Hyperparameters of one benchmark model (one row of Table 1)."""
+
+    name: str  # "top" | "flavor" | "quickdraw"
+    cell: str  # "lstm" | "gru"
+    seq_len: int
+    input_size: int
+    hidden_size: int
+    dense_sizes: tuple[int, ...]
+    output_size: int
+    # "sigmoid" for binary (top tagging), "softmax" for multi-class.
+    output_activation: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}_{self.cell}"
+
+    def rnn_param_count(self) -> int:
+        """Trainable parameters in the recurrent layer (Table 1 columns)."""
+        i, h = self.input_size, self.hidden_size
+        if self.cell == "lstm":
+            return 4 * (i * h + h * h + h)
+        # GRU with reset_after=True: two bias vectors of size 3H.
+        return 3 * (i * h + h * h) + 2 * 3 * h
+
+    def non_rnn_param_count(self) -> int:
+        """Trainable parameters in the dense head (Table 1 "Non-RNN")."""
+        total = 0
+        prev = self.hidden_size
+        for size in self.dense_sizes + (self.output_size,):
+            total += prev * size + size
+            prev = size
+        return total
+
+    def param_count(self) -> int:
+        return self.rnn_param_count() + self.non_rnn_param_count()
+
+
+_BASE = {
+    "top": dict(
+        seq_len=20,
+        input_size=6,
+        hidden_size=20,
+        dense_sizes=(64,),
+        output_size=1,
+        output_activation="sigmoid",
+    ),
+    "flavor": dict(
+        seq_len=15,
+        input_size=6,
+        hidden_size=120,
+        dense_sizes=(50, 10),
+        output_size=3,
+        output_activation="softmax",
+    ),
+    "quickdraw": dict(
+        seq_len=100,
+        input_size=3,
+        hidden_size=128,
+        dense_sizes=(256, 128),
+        output_size=5,
+        output_activation="softmax",
+    ),
+}
+
+BENCHMARKS = tuple(_BASE)
+CELLS = ("lstm", "gru")
+
+
+def arch(name: str, cell: str) -> Arch:
+    """Look up one of the six benchmark architectures."""
+    if name not in _BASE:
+        raise KeyError(f"unknown benchmark {name!r}; want one of {BENCHMARKS}")
+    if cell not in CELLS:
+        raise KeyError(f"unknown cell {cell!r}; want one of {CELLS}")
+    return Arch(name=name, cell=cell, **_BASE[name])
+
+
+def all_archs() -> list[Arch]:
+    return [arch(n, c) for n in BENCHMARKS for c in CELLS]
+
+
+# --------------------------------------------------------------------------
+# Initialization (Keras defaults: glorot_uniform kernels, orthogonal
+# recurrent kernels, zero biases with unit forget-gate bias for LSTM).
+# --------------------------------------------------------------------------
+
+
+def _glorot(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def _orthogonal(key: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Orthogonal init for the recurrent kernel, column-stacked per gate."""
+    n_stack = cols // rows
+    mats = []
+    for sub in jax.random.split(key, n_stack):
+        a = jax.random.normal(sub, (rows, rows), jnp.float32)
+        q, r = jnp.linalg.qr(a)
+        q = q * jnp.sign(jnp.diag(r))
+        mats.append(q)
+    return jnp.concatenate(mats, axis=1)
+
+
+def init_params(a: Arch, key: jax.Array) -> dict[str, Any]:
+    """Initialize a parameter pytree for architecture ``a``.
+
+    Layout (all Keras-shaped):
+      ``rnn/w (I, GH)``, ``rnn/u (H, GH)``, ``rnn/b`` (``(4H,)`` LSTM or
+      ``(2, 3H)`` GRU), then ``dense{k}/w``, ``dense{k}/b`` for each head
+      layer, and ``out/w``, ``out/b``.
+    """
+    gates = 4 if a.cell == "lstm" else 3
+    keys = jax.random.split(key, 3 + 2 * (len(a.dense_sizes) + 1))
+    gh = gates * a.hidden_size
+
+    w = _glorot(keys[0], (a.input_size, gh))
+    u = _orthogonal(keys[1], a.hidden_size, gh)
+    if a.cell == "lstm":
+        # unit_forget_bias: ones on the forget-gate quarter.
+        b = jnp.concatenate(
+            [
+                jnp.zeros(a.hidden_size),
+                jnp.ones(a.hidden_size),
+                jnp.zeros(2 * a.hidden_size),
+            ]
+        ).astype(jnp.float32)
+    else:
+        b = jnp.zeros((2, gh), jnp.float32)
+
+    params: dict[str, Any] = {"rnn": {"w": w, "u": u, "b": b}}
+    prev = a.hidden_size
+    ki = 3
+    for idx, size in enumerate(a.dense_sizes):
+        params[f"dense{idx}"] = {
+            "w": _glorot(keys[ki], (prev, size)),
+            "b": jnp.zeros(size, jnp.float32),
+        }
+        prev = size
+        ki += 2
+    params["out"] = {
+        "w": _glorot(keys[ki], (prev, a.output_size)),
+        "b": jnp.zeros(a.output_size, jnp.float32),
+    }
+    return params
+
+
+def count_params(params: dict[str, Any]) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(leaf.size) for leaf in leaves)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def forward(
+    params: dict[str, Any],
+    x_seq: jax.Array,
+    a: Arch,
+    *,
+    backend: str = "ref",
+) -> jax.Array:
+    """Full model forward: RNN → dense head → output activation.
+
+    Args:
+      params: pytree from :func:`init_params` (or loaded weights).
+      x_seq: ``(B, T, I)`` float32.
+      a: architecture descriptor.
+      backend: "ref" (pure jnp) or "pallas" (fused L1 kernels).
+
+    Returns:
+      ``(B, output_size)`` probabilities (sigmoid/softmax applied).
+    """
+    rnn = params["rnn"]
+    if backend == "pallas":
+        rnn_fn = lstm_pallas if a.cell == "lstm" else gru_pallas
+        h = rnn_fn(x_seq, rnn["w"], rnn["u"], rnn["b"])
+        for idx in range(len(a.dense_sizes)):
+            layer = params[f"dense{idx}"]
+            h = dense_pallas(h, layer["w"], layer["b"], activation="relu")
+        out = params["out"]
+        if a.output_activation == "sigmoid":
+            h = dense_pallas(h, out["w"], out["b"], activation="sigmoid")
+        else:
+            h = dense_pallas(h, out["w"], out["b"], activation="linear")
+            h = jax.nn.softmax(h, axis=-1)
+        return h
+    if backend != "ref":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    rnn_fn = ref.lstm if a.cell == "lstm" else ref.gru
+    h = rnn_fn(x_seq, rnn["w"], rnn["u"], rnn["b"])
+    for idx in range(len(a.dense_sizes)):
+        layer = params[f"dense{idx}"]
+        h = ref.relu(ref.dense(h, layer["w"], layer["b"]))
+    out = params["out"]
+    h = ref.dense(h, out["w"], out["b"])
+    if a.output_activation == "sigmoid":
+        return jax.nn.sigmoid(h)
+    return jax.nn.softmax(h, axis=-1)
+
+
+def logits(
+    params: dict[str, Any], x_seq: jax.Array, a: Arch
+) -> jax.Array:
+    """Pre-activation outputs (for numerically-stable training losses)."""
+    rnn = params["rnn"]
+    rnn_fn = ref.lstm if a.cell == "lstm" else ref.gru
+    h = rnn_fn(x_seq, rnn["w"], rnn["u"], rnn["b"])
+    for idx in range(len(a.dense_sizes)):
+        layer = params[f"dense{idx}"]
+        h = ref.relu(ref.dense(h, layer["w"], layer["b"]))
+    out = params["out"]
+    return ref.dense(h, out["w"], out["b"])
+
+
+# --------------------------------------------------------------------------
+# Weight (de)serialization — the interchange format the rust engine loads.
+# --------------------------------------------------------------------------
+
+
+def params_to_json(a: Arch, params: dict[str, Any]) -> str:
+    """Serialize weights for ``rust/src/model``: flat row-major f32 lists."""
+    layers = []
+    for name in ["rnn"] + [f"dense{i}" for i in range(len(a.dense_sizes))] + ["out"]:
+        entry: dict[str, Any] = {"name": name}
+        for pname, val in sorted(params[name].items()):
+            arr = jax.device_get(val)
+            entry[pname] = {
+                "shape": list(arr.shape),
+                "data": [float(v) for v in arr.reshape(-1)],
+            }
+        layers.append(entry)
+    doc = {
+        "arch": {
+            "name": a.name,
+            "cell": a.cell,
+            "seq_len": a.seq_len,
+            "input_size": a.input_size,
+            "hidden_size": a.hidden_size,
+            "dense_sizes": list(a.dense_sizes),
+            "output_size": a.output_size,
+            "output_activation": a.output_activation,
+        },
+        "param_count": count_params(params),
+        "layers": layers,
+    }
+    return json.dumps(doc)
+
+
+def params_from_json(text: str) -> tuple[Arch, dict[str, Any]]:
+    """Inverse of :func:`params_to_json` (round-trip tested)."""
+    doc = json.loads(text)
+    meta = doc["arch"]
+    a = arch(meta["name"], meta["cell"])
+    params: dict[str, Any] = {}
+    for entry in doc["layers"]:
+        tensors = {}
+        for pname, val in entry.items():
+            if pname == "name":
+                continue
+            tensors[pname] = jnp.asarray(
+                val["data"], jnp.float32
+            ).reshape(val["shape"])
+        params[entry["name"]] = tensors
+    return a, params

@@ -1,0 +1,59 @@
+"""AOT export tests: HLO text well-formedness and lowering invariants."""
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as m
+
+
+@pytest.fixture(scope="module")
+def top_gru_lowered():
+    a = m.arch("top", "gru")
+    params = m.init_params(a, jax.random.PRNGKey(0))
+    return aot.lower_model(a, params, batch=1)
+
+
+def test_hlo_is_text_module(top_gru_lowered):
+    text, _ = top_gru_lowered
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_hlo_parameters_are_input_plus_weights(top_gru_lowered):
+    """Parameter 0 is the input batch; parameters 1..N are the weight
+    tensors in manifest order (weights must NOT be baked in: the HLO text
+    printer elides large constants as `{...}`, silently corrupting them)."""
+    text, order = top_gru_lowered
+    entry = text.split("ENTRY")[1]
+    assert entry.count("parameter(") == 1 + len(order)
+    assert "f32[1,20,6]" in entry  # (batch, seq, input)
+    assert "{...}" not in entry
+
+
+def test_param_order_covers_all_layers(top_gru_lowered):
+    _, order = top_gru_lowered
+    layers = {layer for layer, _t in order}
+    assert layers == {"rnn", "dense0", "out"}
+    # dict flatten order is sorted by key, stable across runs
+    assert order == sorted(order)
+
+
+def test_hlo_batch_shapes():
+    a = m.arch("top", "lstm")
+    params = m.init_params(a, jax.random.PRNGKey(1))
+    for batch in (1, 10):
+        text, _ = aot.lower_model(a, params, batch=batch)
+        assert f"f32[{batch},20,6]" in text
+
+
+def test_hlo_no_custom_calls(top_gru_lowered):
+    """interpret=True must lower pallas to plain HLO — a Mosaic custom-call
+    would be unloadable by the CPU PJRT plugin."""
+    text, _ = top_gru_lowered
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_batch_sizes_constant():
+    # The rust batcher's bucket list must stay in sync with the manifest.
+    assert aot.BATCH_SIZES == (1, 10, 100)

@@ -1,0 +1,98 @@
+"""Synthetic generator tests: shapes, determinism, separability, container."""
+
+import numpy as np
+import pytest
+
+from compile import data as d
+
+SHAPES = {"top": (20, 6), "flavor": (15, 6), "quickdraw": (100, 3)}
+
+
+@pytest.mark.parametrize("name", list(SHAPES))
+def test_shapes_and_dtypes(name):
+    x, y = d.generate(name, seed=1, n=64)
+    seq, feat = SHAPES[name]
+    assert x.shape == (64, seq, feat)
+    assert x.dtype == np.float32
+    assert y.shape == (64,)
+    assert y.dtype == np.uint32
+
+
+@pytest.mark.parametrize("name", list(SHAPES))
+def test_deterministic_given_seed(name):
+    x1, y1 = d.generate(name, seed=42, n=32)
+    x2, y2 = d.generate(name, seed=42, n=32)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = d.generate(name, seed=43, n=32)
+    assert not np.array_equal(x1, x3)
+
+
+@pytest.mark.parametrize("name", list(SHAPES))
+def test_labels_cover_all_classes(name):
+    _, y = d.generate(name, seed=5, n=400)
+    classes = d.N_CLASSES[name]
+    n_labels = 2 if classes == 1 else classes
+    assert set(np.unique(y)) == set(range(n_labels))
+
+
+@pytest.mark.parametrize("name", list(SHAPES))
+def test_features_bounded(name):
+    """top/flavor features are O(1) (int 6 suffices); quickdraw keeps the
+    raw ~0-255 coordinate scale that forces >= 10 integer bits (Fig 2c)."""
+    x, _ = d.generate(name, seed=7, n=256)
+    bound = 512.0 if name == "quickdraw" else 32.0
+    assert np.abs(x).max() < bound
+    if name == "quickdraw":
+        assert np.abs(x[:, :, :2]).max() > 64.0  # raw scale preserved
+    assert np.isfinite(x).all()
+
+
+def test_top_tagging_prong_structure_separates():
+    """Tops (3-prong) have wider dR spread than light jets — the feature
+    the RNN learns; a crude cut on it must already beat chance."""
+    x, y = d.generate("top", seed=11, n=1000)
+    dr = x[:, :, 4]  # dR feature
+    pt = x[:, :, 0]
+    spread = (dr * (pt > 0)).sum(1) / np.maximum((pt > 0).sum(1), 1)
+    sig, bkg = spread[y == 1].mean(), spread[y == 0].mean()
+    assert sig > bkg * 1.3
+
+
+def test_flavor_displacement_orders_classes():
+    """Mean |S(d0)| of the leading track: b > c > light."""
+    x, y = d.generate("flavor", seed=13, n=1500)
+    lead_sig = np.abs(x[:, 0, 4])
+    means = [lead_sig[y == k].mean() for k in range(3)]
+    assert means[2] > means[1] > means[0]
+
+
+def test_quickdraw_classes_differ_geometrically():
+    x, y = d.generate("quickdraw", seed=17, n=500)
+    # radial profile variance differs between spiral (4) and rose (1)
+    r = np.sqrt(x[:, :, 0] ** 2 + x[:, :, 1] ** 2)
+    v_spiral = r[y == 4].std(axis=1).mean()
+    v_rose = r[y == 1].std(axis=1).mean()
+    assert abs(v_spiral - v_rose) > 0.02
+    # timestamps are monotone in [0, 15] (the game's drawing window)
+    t = x[:, :, 2]
+    assert (np.diff(t, axis=1) >= -1e-4).all()
+    assert t.min() >= 0.0 and t.max() <= 15.0 + 1e-4
+
+
+def test_dataset_container_roundtrip(tmp_path):
+    x, y = d.generate("flavor", seed=3, n=20)
+    path = str(tmp_path / "t.bin")
+    d.write_dataset(path, x, y, d.N_CLASSES["flavor"])
+    x2, y2, classes = d.read_dataset(path)
+    assert classes == 3
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_dataset_container_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"NOTMAGIC" + b"\0" * 32)
+    with pytest.raises(ValueError):
+        d.read_dataset(path)

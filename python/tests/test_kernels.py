@@ -1,0 +1,203 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; every kernel must match ``ref.py`` to float32
+tolerance under interpret=True.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, gru, lstm, ref
+
+ATOL = 2e-5
+
+
+def _rand(key, shape, scale=0.4):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# LSTM
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    seq=st.integers(1, 24),
+    in_dim=st.integers(1, 12),
+    hidden=st.integers(1, 48),
+)
+def test_lstm_matches_ref(batch, seq, in_dim, hidden):
+    x = _rand(0, (batch, seq, in_dim), 1.0)
+    w = _rand(1, (in_dim, 4 * hidden))
+    u = _rand(2, (hidden, 4 * hidden))
+    b = _rand(3, (4 * hidden,), 0.1)
+    got = lstm(x, w, u, b)
+    want = ref.lstm(x, w, u, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=ATOL)
+
+
+def test_lstm_paper_shapes():
+    """The exact recurrent shapes of the three benchmarks (Table 1)."""
+    for in_dim, hidden, seq in [(6, 20, 20), (6, 120, 15), (3, 128, 100)]:
+        x = _rand(0, (2, seq, in_dim), 1.0)
+        w = _rand(1, (in_dim, 4 * hidden))
+        u = _rand(2, (hidden, 4 * hidden))
+        b = _rand(3, (4 * hidden,), 0.1)
+        np.testing.assert_allclose(
+            np.array(lstm(x, w, u, b)),
+            np.array(ref.lstm(x, w, u, b)),
+            atol=ATOL,
+        )
+
+
+def test_lstm_zero_input_keeps_forget_dynamics():
+    """With zero inputs the state evolves only through gate biases."""
+    hidden = 8
+    x = jnp.zeros((1, 5, 4))
+    w = jnp.zeros((4, 4 * hidden))
+    u = jnp.zeros((hidden, 4 * hidden))
+    b = jnp.concatenate(
+        [jnp.zeros(hidden), jnp.ones(hidden), jnp.zeros(2 * hidden)]
+    )
+    got = np.array(lstm(x, w, u, b))
+    want = np.array(ref.lstm(x, w, u, b))
+    np.testing.assert_allclose(got, want, atol=ATOL)
+    # sigmoid(0)=0.5 input gate, tanh(0)=0 candidate -> h stays 0
+    np.testing.assert_allclose(got, np.zeros_like(got), atol=ATOL)
+
+
+def test_lstm_rejects_bad_shapes():
+    x = jnp.zeros((1, 3, 4))
+    with pytest.raises(ValueError):
+        lstm(x, jnp.zeros((4, 12)), jnp.zeros((8, 32)), jnp.zeros(32))
+    with pytest.raises(ValueError):
+        lstm(x, jnp.zeros((4, 32)), jnp.zeros((8, 32)), jnp.zeros(31))
+
+
+def test_lstm_under_jit_and_grad_free():
+    """The kernel composes with jit (needed for AOT lowering)."""
+    x = _rand(0, (2, 6, 5), 1.0)
+    w, u, b = _rand(1, (5, 32)), _rand(2, (8, 32)), _rand(3, (32,), 0.1)
+    got = jax.jit(lambda xx: lstm(xx, w, u, b))(x)
+    np.testing.assert_allclose(
+        np.array(got), np.array(ref.lstm(x, w, u, b)), atol=ATOL
+    )
+
+
+def test_lstm_vmem_footprint_model():
+    from compile.kernels.lstm import vmem_footprint_bytes
+
+    # quickdraw LSTM at batch 100 must still fit one TensorCore's ~16 MiB.
+    assert vmem_footprint_bytes(100, 100, 3, 128) < 16 * 2**20
+    assert vmem_footprint_bytes(1, 20, 6, 20) < 64 * 2**10
+
+
+# ---------------------------------------------------------------------------
+# GRU (reset_after)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    seq=st.integers(1, 24),
+    in_dim=st.integers(1, 12),
+    hidden=st.integers(1, 48),
+)
+def test_gru_matches_ref(batch, seq, in_dim, hidden):
+    x = _rand(0, (batch, seq, in_dim), 1.0)
+    w = _rand(1, (in_dim, 3 * hidden))
+    u = _rand(2, (hidden, 3 * hidden))
+    b = _rand(3, (2, 3 * hidden), 0.1)
+    got = gru(x, w, u, b)
+    want = ref.gru(x, w, u, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=ATOL)
+
+
+def test_gru_paper_shapes():
+    for in_dim, hidden, seq in [(6, 20, 20), (6, 120, 15), (3, 128, 100)]:
+        x = _rand(0, (2, seq, in_dim), 1.0)
+        w = _rand(1, (in_dim, 3 * hidden))
+        u = _rand(2, (hidden, 3 * hidden))
+        b = _rand(3, (2, 3 * hidden), 0.1)
+        np.testing.assert_allclose(
+            np.array(gru(x, w, u, b)),
+            np.array(ref.gru(x, w, u, b)),
+            atol=ATOL,
+        )
+
+
+def test_gru_reset_after_bias_split_matters():
+    """reset_after uses two bias rows; swapping them must change outputs
+    (guards against accidentally collapsing to reset_before semantics)."""
+    x = _rand(0, (1, 4, 3), 1.0)
+    w = _rand(1, (3, 12))
+    u = _rand(2, (4, 12))
+    b = jnp.stack([jnp.full(12, 0.5), jnp.full(12, -0.5)])
+    got = np.array(gru(x, w, u, b))
+    swapped = np.array(gru(x, w, u, b[::-1]))
+    assert not np.allclose(got, swapped)
+
+
+def test_gru_rejects_bad_shapes():
+    x = jnp.zeros((1, 3, 4))
+    with pytest.raises(ValueError):
+        gru(x, jnp.zeros((4, 8)), jnp.zeros((8, 24)), jnp.zeros((2, 24)))
+    with pytest.raises(ValueError):
+        gru(x, jnp.zeros((4, 24)), jnp.zeros((8, 24)), jnp.zeros((24,)))
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 16),
+    in_dim=st.integers(1, 64),
+    out_dim=st.integers(1, 64),
+    act=st.sampled_from(["linear", "relu", "sigmoid", "tanh"]),
+)
+def test_dense_matches_ref(batch, in_dim, out_dim, act):
+    x = _rand(0, (batch, in_dim), 1.0)
+    w = _rand(1, (in_dim, out_dim))
+    b = _rand(2, (out_dim,), 0.1)
+    got = np.array(dense(x, w, b, activation=act))
+    want = np.dot(np.array(x), np.array(w)) + np.array(b)
+    if act == "relu":
+        want = np.maximum(want, 0)
+    elif act == "sigmoid":
+        want = 1 / (1 + np.exp(-want))
+    elif act == "tanh":
+        want = np.tanh(want)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_out", [1, 2, 4, 8, 16])
+def test_dense_tiling_is_invisible(block_out):
+    """Output tiling (the reuse-factor analogue) must not change numerics."""
+    x = _rand(0, (3, 10), 1.0)
+    w = _rand(1, (10, 16))
+    b = _rand(2, (16,), 0.1)
+    full = np.array(dense(x, w, b))
+    tiled = np.array(dense(x, w, b, block_out=block_out))
+    np.testing.assert_allclose(full, tiled, atol=ATOL)
+
+
+def test_dense_rejects_nondividing_block():
+    with pytest.raises(ValueError):
+        dense(jnp.zeros((1, 4)), jnp.zeros((4, 10)), jnp.zeros(10), block_out=3)
+
+
+def test_hadamard_ref():
+    a = _rand(0, (4, 8), 1.0)
+    b = _rand(1, (4, 8), 1.0)
+    np.testing.assert_allclose(
+        np.array(ref.hadamard(a, b)), np.array(a) * np.array(b)
+    )

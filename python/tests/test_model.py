@@ -1,0 +1,123 @@
+"""L2 model tests: Table 1 parameter counts, backend agreement, round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+# (name, cell) -> (rnn params, non-rnn params, total) — Table 1 + §4 text.
+PAPER_COUNTS = {
+    ("top", "lstm"): (2160, 1409, 3569),
+    ("top", "gru"): (1680, 1409, 3089),
+    ("flavor", "lstm"): (60960, 6593, 67553),
+    ("flavor", "gru"): (46080, 6593, 52673),
+    ("quickdraw", "lstm"): (67584, 66565, 134149),
+    ("quickdraw", "gru"): (51072, 66565, 117637),
+}
+
+
+@pytest.mark.parametrize("name,cell", list(PAPER_COUNTS))
+def test_param_counts_match_table1(name, cell):
+    a = m.arch(name, cell)
+    rnn, non_rnn, total = PAPER_COUNTS[(name, cell)]
+    assert a.rnn_param_count() == rnn
+    assert a.non_rnn_param_count() == non_rnn
+    assert a.param_count() == total
+
+
+@pytest.mark.parametrize("name,cell", list(PAPER_COUNTS))
+def test_init_params_match_arch_count(name, cell):
+    a = m.arch(name, cell)
+    params = m.init_params(a, jax.random.PRNGKey(0))
+    assert m.count_params(params) == a.param_count()
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+def test_forward_backends_agree(cell):
+    a = m.arch("top", cell)
+    params = m.init_params(a, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, a.seq_len, a.input_size))
+    y_ref = np.array(m.forward(params, x, a, backend="ref"))
+    y_pal = np.array(m.forward(params, x, a, backend="pallas"))
+    np.testing.assert_allclose(y_ref, y_pal, atol=3e-6)
+
+
+def test_forward_backends_agree_multiclass():
+    a = m.arch("flavor", "gru")
+    params = m.init_params(a, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, a.seq_len, a.input_size))
+    y_ref = np.array(m.forward(params, x, a, backend="ref"))
+    y_pal = np.array(m.forward(params, x, a, backend="pallas"))
+    np.testing.assert_allclose(y_ref, y_pal, atol=3e-6)
+    np.testing.assert_allclose(y_ref.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_output_ranges():
+    a = m.arch("top", "lstm")
+    params = m.init_params(a, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, a.seq_len, a.input_size))
+    y = np.array(m.forward(params, x, a))
+    assert y.shape == (16, 1)
+    assert (y >= 0).all() and (y <= 1).all()
+
+
+def test_logits_are_preactivation():
+    a = m.arch("top", "gru")
+    params = m.init_params(a, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, a.seq_len, a.input_size))
+    z = np.array(m.logits(params, x, a))
+    y = np.array(m.forward(params, x, a))
+    np.testing.assert_allclose(1 / (1 + np.exp(-z)), y, atol=1e-6)
+
+
+def test_unknown_arch_rejected():
+    with pytest.raises(KeyError):
+        m.arch("nope", "lstm")
+    with pytest.raises(KeyError):
+        m.arch("top", "rnn")
+
+
+def test_params_json_roundtrip():
+    a = m.arch("top", "gru")
+    params = m.init_params(a, jax.random.PRNGKey(7))
+    text = m.params_to_json(a, params)
+    a2, params2 = m.params_from_json(text)
+    assert a2 == a
+    for layer, tensors in params.items():
+        for pname, val in tensors.items():
+            np.testing.assert_allclose(
+                np.array(val), np.array(params2[layer][pname]), atol=0
+            )
+
+
+def test_forward_json_roundtrip_preserves_outputs():
+    a = m.arch("flavor", "lstm")
+    params = m.init_params(a, jax.random.PRNGKey(8))
+    a2, params2 = m.params_from_json(m.params_to_json(a, params))
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, a.seq_len, a.input_size))
+    np.testing.assert_allclose(
+        np.array(m.forward(params, x, a)),
+        np.array(m.forward(params2, x, a2)),
+        atol=1e-7,
+    )
+
+
+def test_lstm_forget_bias_is_one():
+    a = m.arch("top", "lstm")
+    params = m.init_params(a, jax.random.PRNGKey(0))
+    b = np.array(params["rnn"]["b"])
+    h = a.hidden_size
+    np.testing.assert_allclose(b[h : 2 * h], 1.0)
+    np.testing.assert_allclose(b[:h], 0.0)
+
+
+def test_orthogonal_recurrent_init():
+    a = m.arch("top", "gru")
+    params = m.init_params(a, jax.random.PRNGKey(0))
+    u = np.array(params["rnn"]["u"])  # (H, 3H), each HxH block orthogonal
+    h = a.hidden_size
+    for g in range(3):
+        blk = u[:, g * h : (g + 1) * h]
+        np.testing.assert_allclose(blk.T @ blk, np.eye(h), atol=1e-5)

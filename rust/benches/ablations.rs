@@ -1,0 +1,88 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. **Softmax LUT size/precision** (§5.1: "we find it necessary to
+//!    increase the precision and size of the LUT used for the softmax …
+//!    of the flavor-tagging and QuickDraw models"): quantized AUC with
+//!    the default 1024-entry/<18,8> table vs the enlarged 4096/<24,10>.
+//! 2. **Rounding/overflow mode** (Vivado defaults AP_TRN/AP_WRAP vs our
+//!    PTQ AP_TRN/AP_SAT): wrap-induced AUC cliffs at small integer
+//!    widths justify the saturation default.
+//! 3. **Cached static mode** (§3's unimplemented future-work note,
+//!    implemented in `hls::latency::schedule_cached_static`): throughput
+//!    between plain static and non-static at zero resource cost.
+
+use rnn_hls::data::Dataset;
+use rnn_hls::fixed::{FixedSpec, QuantConfig, TableConfig};
+use rnn_hls::hls::{latency, paper, HlsConfig};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::FixedEngine;
+use rnn_hls::report::fig2::eval_auc;
+use rnn_hls::runtime::manifest;
+use rnn_hls::util::threads::default_workers;
+
+fn main() {
+    let artifacts = manifest::default_artifacts_dir();
+    let workers = default_workers();
+
+    if artifacts.join("manifest.json").exists() {
+        println!("=== ablation 1: softmax LUT (flavor_gru, <16,6>) ===");
+        let weights =
+            Weights::load(artifacts.join("weights/flavor_gru.json")).unwrap();
+        let ds = Dataset::load(artifacts.join("data/flavor_test.bin"))
+            .unwrap()
+            .truncated(500);
+        let cfg = QuantConfig::ptq(FixedSpec::new(16, 6));
+        for (label, table) in [
+            ("default 1024/<18,8>", TableConfig::softmax_default()),
+            ("enlarged 4096/<24,10>", TableConfig::softmax_high()),
+        ] {
+            let engine =
+                FixedEngine::with_softmax_table(&weights, cfg, table).unwrap();
+            let auc = eval_auc(&engine, &ds, workers);
+            println!("  softmax table {label:<22} AUC {auc:.4}");
+        }
+
+        println!("\n=== ablation 2: overflow mode (top_gru, small int bits) ===");
+        let weights =
+            Weights::load(artifacts.join("weights/top_gru.json")).unwrap();
+        let ds = Dataset::load(artifacts.join("data/top_test.bin"))
+            .unwrap()
+            .truncated(500);
+        for int_bits in [2u32, 4, 6] {
+            let spec = FixedSpec::new(int_bits + 10, int_bits);
+            let sat = FixedEngine::new(&weights, QuantConfig::ptq(spec)).unwrap();
+            let wrap =
+                FixedEngine::new(&weights, QuantConfig::vivado_default(spec))
+                    .unwrap();
+            println!(
+                "  int {int_bits}: AP_SAT AUC {:.4} | AP_WRAP AUC {:.4}",
+                eval_auc(&sat, &ds, workers),
+                eval_auc(&wrap, &ds, workers)
+            );
+        }
+    } else {
+        println!("(skip engine ablations: no artifacts)");
+    }
+
+    println!("\n=== ablation 3: cached static mode (§3 future work) ===");
+    for (name, cell) in [("top", Cell::Gru), ("quickdraw", Cell::Lstm)] {
+        let arch = zoo::arch(name, cell).unwrap();
+        let reuse = paper::reuse_grid(name, cell)[0];
+        let cfg = HlsConfig::paper_default(FixedSpec::new(16, 6), reuse);
+        let plain = latency::schedule(&arch, &cfg).unwrap();
+        let (cached, in_flight) =
+            latency::schedule_cached_static(&arch, &cfg).unwrap();
+        println!(
+            "  {:<16} R={:<10} static {:>9.0} ev/s -> cached {:>9.0} ev/s \
+             ({}x, {} in flight, latency unchanged {:.1} µs)",
+            arch.key(),
+            reuse.label(),
+            plain.throughput_hz,
+            cached.throughput_hz,
+            in_flight,
+            in_flight,
+            cached.latency_us,
+        );
+        assert!(cached.throughput_hz >= plain.throughput_hz);
+    }
+}

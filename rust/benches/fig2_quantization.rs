@@ -1,0 +1,69 @@
+//! Bench: Fig. 2 — the PTQ quantization scan.
+//!
+//! Times the bit-accurate fixed-point engine (the workhorse of the scan)
+//! per model, then regenerates a reduced Fig. 2 grid and checks its
+//! shape.  `rnn-hls report fig2` runs the full-resolution version.
+
+use rnn_hls::config::Fig2Config;
+use rnn_hls::data::Dataset;
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::model::Weights;
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+use rnn_hls::report::fig2;
+use rnn_hls::runtime::manifest;
+use rnn_hls::util::timing::{bench_for, report_row};
+use std::time::Duration;
+
+fn main() {
+    let artifacts = manifest::default_artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("no artifacts — run `make artifacts` first");
+        return;
+    }
+
+    println!("=== engine forward-pass cost (per sample) ===");
+    for key in ["top_gru", "flavor_gru", "quickdraw_lstm"] {
+        let weights =
+            Weights::load(artifacts.join(format!("weights/{key}.json"))).unwrap();
+        let benchmark = key.split('_').next().unwrap();
+        let ds = Dataset::load(
+            artifacts.join(format!("data/{benchmark}_test.bin")),
+        )
+        .unwrap();
+        let x = ds.sample(0);
+
+        let float_engine = FloatEngine::new(&weights).unwrap();
+        let stats = bench_for(Duration::from_millis(300), || {
+            std::hint::black_box(float_engine.forward(x));
+        });
+        report_row(&format!("float/{key}"), &stats);
+
+        let fixed_engine = FixedEngine::new(
+            &weights,
+            QuantConfig::ptq(FixedSpec::default16_6()),
+        )
+        .unwrap();
+        let stats = bench_for(Duration::from_millis(300), || {
+            std::hint::black_box(fixed_engine.forward(x));
+        });
+        report_row(&format!("fixed<16,6>/{key}"), &stats);
+    }
+
+    println!("\n=== reduced Fig. 2 grid (shape check) ===");
+    let cfg = Fig2Config {
+        keys: vec!["top_gru".into(), "top_lstm".into()],
+        samples: 400,
+        integer_bits: vec![6, 10],
+        fractional_bits: vec![2, 6, 10, 14],
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let points = fig2::run(&artifacts, &cfg, None).unwrap();
+    println!("scan wall time: {:.2} s", t0.elapsed().as_secs_f64());
+    for key in &cfg.keys {
+        match fig2::shape_check(&points, key) {
+            Ok(()) => println!("shape OK: {key}"),
+            Err(e) => println!("shape WARN: {e}"),
+        }
+    }
+}

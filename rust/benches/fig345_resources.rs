@@ -1,0 +1,39 @@
+//! Bench: Figs. 3–5 — DSP/FF/LUT vs total width.
+//!
+//! Regenerates the three resource figures for every benchmark and times
+//! the estimator itself (it sits inside design-space search loops, so
+//! its cost matters).
+
+use rnn_hls::config::SweepConfig;
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::hls::{resource, HlsConfig, ReuseFactor};
+use rnn_hls::model::{zoo, Cell};
+use rnn_hls::report::resources;
+use rnn_hls::util::timing::{bench, report_row};
+
+fn main() {
+    println!("=== estimator micro-cost ===");
+    let arch = zoo::arch("quickdraw", Cell::Lstm).unwrap();
+    let cfg = HlsConfig::paper_default(
+        FixedSpec::new(16, 10),
+        ReuseFactor::new(96, 64),
+    );
+    let stats = bench(100, 10_000, || {
+        std::hint::black_box(resource::estimate(&arch, &cfg));
+    });
+    report_row("resource/estimate quickdraw_lstm", &stats);
+
+    println!("\n=== Figs. 3-5 regeneration ===");
+    let t0 = std::time::Instant::now();
+    let mut total_points = 0;
+    for benchmark in ["top", "flavor", "quickdraw"] {
+        let points =
+            resources::figs345(&SweepConfig::paper(benchmark), None).unwrap();
+        total_points += points.len();
+    }
+    println!(
+        "regenerated {} figure points in {:.2} s",
+        total_points,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,40 @@
+//! Bench: Fig. 6 + Table 5 — static vs non-static RNN mode.
+//!
+//! Regenerates the mode comparison (resources blow up ×seq_len, II
+//! collapses to 1) and asserts the paper's >300× throughput claim.
+
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::hls::{latency, HlsConfig, ReuseFactor, RnnMode, Strategy};
+use rnn_hls::model::{zoo, Cell};
+use rnn_hls::report::{resources, tables};
+
+fn main() {
+    println!("=== Table 5 ===");
+    tables::table5(None).unwrap();
+
+    println!("=== Fig. 6 ===");
+    resources::fig6(None).unwrap();
+
+    // §5.3: "increased throughput for non-static mode by a factor of more
+    // than 300" for the top-tagging models.
+    for cell in [Cell::Gru, Cell::Lstm] {
+        let arch = zoo::arch("top", cell).unwrap();
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(10, 6),
+            ReuseFactor::fully_parallel(),
+        );
+        cfg.strategy = Strategy::Latency;
+        let stat = latency::schedule(&arch, &cfg).unwrap();
+        cfg.mode = RnnMode::NonStatic;
+        let non = latency::schedule(&arch, &cfg).unwrap();
+        let gain = non.throughput_hz / stat.throughput_hz;
+        println!(
+            "{}: static II {} -> non-static II {} ({:.0}x throughput)",
+            arch.key(),
+            stat.ii_cycles,
+            non.ii_cycles,
+            gain
+        );
+        assert!(gain > 300.0, "paper claims >300x, got {gain:.0}x");
+    }
+}

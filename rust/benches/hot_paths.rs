@@ -1,0 +1,90 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization loop.
+//!
+//! Everything the serving path touches per request, measured in
+//! isolation: fixed/float matvec-bound forwards, LUT activations, queue
+//! handoff, batch formation, JSON parse (startup), PJRT dispatch.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rnn_hls::coordinator::{batcher, BatcherConfig, BoundedQueue, Request};
+use rnn_hls::data::generators;
+use rnn_hls::fixed::{ActTables, FixedSpec, QuantConfig};
+use rnn_hls::runtime::manifest;
+use rnn_hls::util::timing::{bench, bench_for, report_row};
+
+fn main() {
+    let q16 = QuantConfig::ptq(FixedSpec::default16_6());
+
+    // Activation LUT lookup.
+    let tables = ActTables::new(q16);
+    let raws: Vec<i64> = (-512..512).map(|i| i * 17).collect();
+    let stats = bench(10, 2000, || {
+        let mut acc = 0i64;
+        for &r in &raws {
+            acc = acc.wrapping_add(tables.sigmoid_raw(r, q16.spec));
+        }
+        std::hint::black_box(acc);
+    });
+    report_row("fixed/sigmoid_lut x1024", &stats);
+
+    // Generator cost (source thread budget).
+    let mut gen = generators::for_benchmark("top", 1).unwrap();
+    let stats = bench(100, 5000, || {
+        std::hint::black_box(gen.generate());
+    });
+    report_row("generator/top_event", &stats);
+
+    // Queue push+pop round trip.
+    let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(1024));
+    let req = Request {
+        id: 0,
+        features: vec![0.0f32; 120],
+        label: 0,
+        enqueued_at: std::time::Instant::now(),
+    };
+    let stats = bench(100, 100_000, || {
+        queue.push(req.clone()).unwrap();
+        std::hint::black_box(queue.pop_timeout(Duration::from_millis(1)));
+    });
+    report_row("queue/push+pop", &stats);
+
+    // Batch formation from a pre-filled queue.
+    let stats = bench(10, 2000, || {
+        for i in 0..10 {
+            queue
+                .push(Request {
+                    id: i,
+                    features: vec![0.0f32; 120],
+                    label: 0,
+                    enqueued_at: std::time::Instant::now(),
+                })
+                .unwrap();
+        }
+        let cfg = BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::ZERO,
+        };
+        let batch = batcher::next_batch(&queue, &cfg).unwrap();
+        std::hint::black_box(batch.packed_features());
+    });
+    report_row("batcher/form_batch10+pack", &stats);
+
+    // PJRT dispatch (needs artifacts).
+    let artifacts = manifest::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        let runtime = rnn_hls::runtime::Runtime::new(&artifacts).unwrap();
+        for (key, batch) in
+            [("top_gru", 1usize), ("top_gru", 10), ("quickdraw_lstm", 1)]
+        {
+            let model = runtime.model(key, batch).unwrap();
+            let xs = vec![0.1f32; batch * model.seq_len * model.input_size];
+            let stats = bench_for(Duration::from_millis(500), || {
+                std::hint::black_box(model.run_batch(&xs, batch).unwrap());
+            });
+            report_row(&format!("pjrt/{key}_b{batch}"), &stats);
+        }
+    } else {
+        println!("(skip pjrt benches: no artifacts)");
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: Table 1 — model-zoo construction + weight loading.
+//!
+//! Regenerates the Table 1 parameter counts (asserted against the paper)
+//! and times the cold path a coordinator pays at startup: parsing and
+//! validating a full weights JSON.
+
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::util::timing::{bench, report_row};
+
+fn main() {
+    println!("=== Table 1: hyperparameters + parameter counts ===");
+    let paper = [
+        ("top", 1409usize, 2160usize, 1680usize),
+        ("flavor", 6593, 60960, 46080),
+        ("quickdraw", 66565, 67584, 51072),
+    ];
+    for (name, non_rnn, lstm, gru) in paper {
+        let al = zoo::arch(name, Cell::Lstm).unwrap();
+        let ag = zoo::arch(name, Cell::Gru).unwrap();
+        assert_eq!(al.non_rnn_param_count(), non_rnn, "{name} non-rnn");
+        assert_eq!(al.rnn_param_count(), lstm, "{name} lstm");
+        assert_eq!(ag.rnn_param_count(), gru, "{name} gru");
+        println!(
+            "{name:<10} non-RNN {non_rnn:>6}  LSTM {lstm:>6}  GRU {gru:>6}  (matches paper)"
+        );
+    }
+
+    let stats = bench(2, 50, || {
+        let archs = zoo::all_archs();
+        assert_eq!(archs.len(), 6);
+        let total: usize = archs.iter().map(|a| a.param_count()).sum();
+        std::hint::black_box(total);
+    });
+    report_row("zoo/param_count_all6", &stats);
+
+    let artifacts = rnn_hls::runtime::manifest::default_artifacts_dir();
+    for key in ["top_gru", "quickdraw_lstm"] {
+        let path = artifacts.join(format!("weights/{key}.json"));
+        if !path.exists() {
+            println!("(skip weight-load bench: {} missing)", path.display());
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stats = bench(1, 10, || {
+            let w = Weights::from_json(&text).unwrap();
+            std::hint::black_box(w.param_count());
+        });
+        report_row(&format!("weights/parse+validate {key}"), &stats);
+    }
+}

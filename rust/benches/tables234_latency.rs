@@ -1,0 +1,43 @@
+//! Bench: Tables 2–4 — latency bands per reuse factor, model vs paper.
+//!
+//! Regenerates all three latency tables, reports the worst relative
+//! error against the paper's minimum-latency columns, and times the
+//! scheduler.
+
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::hls::{latency, HlsConfig, ReuseFactor};
+use rnn_hls::model::{zoo, Cell};
+use rnn_hls::report::tables;
+use rnn_hls::util::timing::{bench, report_row};
+
+fn main() {
+    println!("=== scheduler micro-cost ===");
+    let arch = zoo::arch("flavor", Cell::Gru).unwrap();
+    let cfg = HlsConfig::paper_default(
+        FixedSpec::new(16, 6),
+        ReuseFactor::new(90, 60),
+    );
+    let stats = bench(100, 10_000, || {
+        std::hint::black_box(latency::schedule(&arch, &cfg).unwrap());
+    });
+    report_row("latency/schedule flavor_gru", &stats);
+
+    println!("\n=== Tables 2-4 (model vs paper) ===");
+    let mut worst: f64 = 0.0;
+    let mut worst_at = String::new();
+    for benchmark in ["top", "flavor", "quickdraw"] {
+        let rows = tables::latency_tables(benchmark, None).unwrap();
+        for row in rows {
+            if row.min_rel_err() > worst {
+                worst = row.min_rel_err();
+                worst_at =
+                    format!("{benchmark} {} R={}", row.key, row.reuse.label());
+            }
+        }
+    }
+    println!(
+        "worst min-latency deviation vs paper: {:.1}% ({worst_at})",
+        worst * 100.0
+    );
+    assert!(worst < 0.20, "latency model drifted from the paper");
+}

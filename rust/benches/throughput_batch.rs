@@ -1,0 +1,35 @@
+//! Bench: §5.2 throughput — FPGA estimate vs batched engine (GPU analog).
+//!
+//! Reproduces the paper's QuickDraw-LSTM comparison: the analytical FPGA
+//! throughput band from the scheduler's II, against the measured PJRT
+//! batch-1/10/100 throughput (the dense-pipeline engine standing in for
+//! the V100).  The *shape* requirements — monotone batch scaling, large
+//! batch-100 amortization, FPGA band in the paper's 4300–9700 ev/s
+//! regime — are asserted.
+
+use rnn_hls::report::throughput;
+use rnn_hls::runtime::manifest;
+
+fn main() {
+    let artifacts = manifest::default_artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let report = throughput::run(&artifacts, 2_000, None).unwrap();
+    match throughput::shape_check(&report) {
+        Ok(()) => println!("shape check OK"),
+        Err(e) => {
+            println!("shape check FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+    // Paper's headline: batch-1 FPGA ≈ 10× batch-1 GPU.  Our analog:
+    // the FPGA band must dominate the engine's batch-1 rate.
+    let fpga_min = report.get("fpga_model_min").unwrap();
+    let b1 = report.get("engine_batch1").unwrap();
+    println!(
+        "batch-1 advantage (fpga_min / engine_b1): {:.1}x (paper ~6.5-15x)",
+        fpga_min / b1
+    );
+}

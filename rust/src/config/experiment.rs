@@ -1,0 +1,106 @@
+//! Typed experiment configuration shared by the CLI and the benches.
+
+use std::time::Duration;
+
+/// Fig. 2 quantization-scan configuration.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    /// Model keys to scan (default: all six).
+    pub keys: Vec<String>,
+    /// Evaluation samples per model (the frozen test set is truncated to
+    /// this; smaller = faster, noisier).
+    pub samples: usize,
+    /// Integer-bit grid (paper: 6, 8, 10, 12).
+    pub integer_bits: Vec<u32>,
+    /// Fractional-bit grid (paper: 2..=14).
+    pub fractional_bits: Vec<u32>,
+    /// Worker threads for the scan.
+    pub workers: usize,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Self {
+            keys: vec![
+                "top_lstm".into(),
+                "top_gru".into(),
+                "flavor_lstm".into(),
+                "flavor_gru".into(),
+                "quickdraw_lstm".into(),
+                "quickdraw_gru".into(),
+            ],
+            samples: 1000,
+            integer_bits: crate::hls::paper::FIG2_INTEGER_BITS.to_vec(),
+            fractional_bits: crate::hls::paper::FIG2_FRACTIONAL_BITS
+                .clone()
+                .collect(),
+            workers: crate::util::threads::default_workers(),
+        }
+    }
+}
+
+/// Resource/latency design-space sweep configuration (Figs. 3–6).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub benchmark: String,
+    /// Total widths to scan (figures' x-axis).
+    pub widths: Vec<u32>,
+}
+
+impl SweepConfig {
+    pub fn paper(benchmark: &str) -> Self {
+        Self {
+            benchmark: benchmark.to_string(),
+            widths: (8..=26).step_by(2).collect(),
+        }
+    }
+}
+
+/// `serve` subcommand configuration (mapped onto the coordinator).
+#[derive(Debug, Clone)]
+pub struct ServeCliConfig {
+    pub model_key: String,
+    pub engine: String, // "pjrt" | "fixed" | "float"
+    pub rate_hz: f64,
+    pub n_events: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeCliConfig {
+    fn default() -> Self {
+        Self {
+            model_key: "top_gru".into(),
+            engine: "pjrt".into(),
+            rate_hz: 20_000.0,
+            n_events: 50_000,
+            workers: 2,
+            max_batch: 10,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 4096,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_defaults_match_paper_grid() {
+        let cfg = Fig2Config::default();
+        assert_eq!(cfg.integer_bits, vec![6, 8, 10, 12]);
+        assert_eq!(cfg.fractional_bits.first(), Some(&2));
+        assert_eq!(cfg.fractional_bits.last(), Some(&14));
+        assert_eq!(cfg.keys.len(), 6);
+    }
+
+    #[test]
+    fn sweep_covers_widths() {
+        let s = SweepConfig::paper("top");
+        assert_eq!(s.widths.first(), Some(&8));
+        assert_eq!(s.widths.last(), Some(&26));
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment configuration: typed descriptors for the CLI sweeps
+//! (filled by `report::experiments`).
+
+pub mod experiment;
+
+pub use experiment::{Fig2Config, ServeCliConfig, SweepConfig};

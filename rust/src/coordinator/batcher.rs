@@ -1,0 +1,210 @@
+//! Dynamic batching policy: flush on size OR deadline, whichever first.
+//!
+//! The paper's §5.2 throughput study is batch-sensitive (batch-1 FPGA vs
+//! batched GPU); the batcher is where the serving system chooses its
+//! point on that curve.  Policy: collect up to `max_batch` requests; if
+//! the oldest waiting request has been held `max_wait`, flush what we
+//! have.  `max_wait = 0` degenerates to batch-1 serving (the trigger
+//! regime: never trade latency for throughput).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+use super::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// Longest a request may wait for co-batching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 10,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// A formed batch ready for an engine worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Pack features into one flat buffer (row-major, request order).
+    pub fn packed_features(&self) -> Vec<f32> {
+        let mut out =
+            Vec::with_capacity(self.requests.iter().map(|r| r.features.len()).sum());
+        for r in &self.requests {
+            out.extend_from_slice(&r.features);
+        }
+        out
+    }
+}
+
+/// Pull one batch from the queue under the policy.  Returns `None` when
+/// the queue is closed and drained.
+pub fn next_batch(
+    queue: &Arc<BoundedQueue<Request>>,
+    cfg: &BatcherConfig,
+) -> Option<Batch> {
+    // Block for the first request.
+    let first = queue.pop_timeout(Duration::from_millis(50))?;
+    let mut requests = vec![first];
+    let deadline = requests[0].enqueued_at + cfg.max_wait;
+
+    while requests.len() < cfg.max_batch {
+        // Fast path: take whatever is already waiting.
+        let more = queue.drain_up_to(cfg.max_batch - requests.len());
+        if !more.is_empty() {
+            requests.extend(more);
+            continue;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match queue.pop_timeout(deadline - now) {
+            Some(r) => requests.push(r),
+            None => break, // deadline or close
+        }
+    }
+    Some(Batch {
+        requests,
+        formed_at: Instant::now(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            features: vec![id as f32; 4],
+            label: 0,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    fn queue_with(n: u64) -> Arc<BoundedQueue<Request>> {
+        let q = Arc::new(BoundedQueue::new(1024));
+        for i in 0..n {
+            q.push(req(i)).unwrap();
+        }
+        q
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let q = queue_with(25);
+        let cfg = BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::from_secs(10),
+        };
+        let b = next_batch(&q, &cfg).unwrap();
+        assert_eq!(b.len(), 10);
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(q.len(), 15);
+    }
+
+    #[test]
+    fn flushes_on_deadline_with_partial_batch() {
+        let q = queue_with(3);
+        let cfg = BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::from_millis(5),
+        };
+        let t0 = Instant::now();
+        let b = next_batch(&q, &cfg).unwrap();
+        assert_eq!(b.len(), 3);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn zero_wait_gives_immediate_partial_batches() {
+        let q = queue_with(3);
+        let cfg = BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::ZERO,
+        };
+        // All three are already queued, so one drain picks them up.
+        let b = next_batch(&q, &cfg).unwrap();
+        assert_eq!(b.len(), 3);
+        // But an empty queue + zero wait returns a singleton immediately.
+        let q2 = queue_with(1);
+        let b2 = next_batch(&q2, &cfg).unwrap();
+        assert_eq!(b2.len(), 1);
+    }
+
+    #[test]
+    fn closed_and_drained_returns_none() {
+        let q = queue_with(2);
+        q.close();
+        let cfg = BatcherConfig::default();
+        assert_eq!(next_batch(&q, &cfg).unwrap().len(), 2);
+        assert!(next_batch(&q, &cfg).is_none());
+    }
+
+    #[test]
+    fn packed_features_concatenate_in_order() {
+        let b = Batch {
+            requests: vec![req(1), req(2)],
+            formed_at: Instant::now(),
+        };
+        let packed = b.packed_features();
+        assert_eq!(packed.len(), 8);
+        assert_eq!(&packed[..4], &[1.0; 4]);
+        assert_eq!(&packed[4..], &[2.0; 4]);
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrent_batching() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let q = Arc::new(BoundedQueue::new(4096));
+        let seen = Arc::new(Mutex::new(HashSet::new()));
+        let cfg = BatcherConfig {
+            max_batch: 7,
+            max_wait: Duration::from_micros(100),
+        };
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let q = q.clone();
+                let seen = seen.clone();
+                let cfg = cfg;
+                s.spawn(move || {
+                    while let Some(b) = next_batch(&q, &cfg) {
+                        let mut set = seen.lock().unwrap();
+                        for r in &b.requests {
+                            assert!(set.insert(r.id), "duplicate {}", r.id);
+                        }
+                    }
+                });
+            }
+            for i in 0..2000u64 {
+                while q.push(req(i)).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            q.close();
+        });
+        assert_eq!(seen.lock().unwrap().len(), 2000);
+    }
+}

@@ -1,0 +1,166 @@
+//! Lock-free serving metrics: counters + a log-bucketed latency
+//! histogram (atomics only on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency histogram from 1 µs to ~17 s (64 buckets, ×1.5).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    bounds_us: Vec<f64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        let mut bounds_us = Vec::new();
+        let mut b = 1.0f64;
+        while bounds_us.len() < 40 {
+            bounds_us.push(b);
+            b *= 1.5;
+        }
+        let buckets = (0..=bounds_us.len()).map(|_| AtomicU64::new(0)).collect();
+        Self { buckets, bounds_us }
+    }
+
+    #[inline]
+    pub fn record(&self, latency: Duration) {
+        let us = latency.as_secs_f64() * 1e6;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us < b)
+            .unwrap_or(self.bounds_us.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile (upper bucket bound), `q ∈ [0, 1]`.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.bounds_us[self.bounds_us.len() - 1] * 1.5
+                };
+            }
+        }
+        self.bounds_us[self.bounds_us.len() - 1]
+    }
+}
+
+/// All counters for one server run.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub generated: AtomicU64,
+    pub dropped: AtomicU64,
+    pub completed: AtomicU64,
+    pub correct: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_samples: AtomicU64,
+    pub queue_latency: LatencyHistogram,
+    pub total_latency: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            queue_latency: LatencyHistogram::new(),
+            total_latency: LatencyHistogram::new(),
+            ..Default::default()
+        }
+    }
+
+    #[inline]
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.batch_samples.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    pub fn drop_fraction(&self) -> f64 {
+        let gen = self.generated.load(Ordering::Relaxed);
+        if gen == 0 {
+            return 0.0;
+        }
+        self.dropped.load(Ordering::Relaxed) as f64 / gen as f64
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let done = self.completed.load(Ordering::Relaxed);
+        if done == 0 {
+            return 0.0;
+        }
+        self.correct.load(Ordering::Relaxed) as f64 / done as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 50, 100, 200, 500, 1000, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 9);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99, "p50 {p50} p99 {p99}");
+        assert!(p50 >= 30.0 && p50 <= 200.0, "p50 {p50}");
+        assert!(p99 >= 1000.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn extreme_latencies_clamp_to_edge_buckets() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1)); // below first bound
+        h.record(Duration::from_secs(3600)); // above last bound
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn metrics_ratios() {
+        let m = ServerMetrics::new();
+        m.generated.store(100, Ordering::Relaxed);
+        m.dropped.store(25, Ordering::Relaxed);
+        m.completed.store(75, Ordering::Relaxed);
+        m.correct.store(60, Ordering::Relaxed);
+        m.batches.store(15, Ordering::Relaxed);
+        m.batch_samples.store(75, Ordering::Relaxed);
+        assert!((m.drop_fraction() - 0.25).abs() < 1e-12);
+        assert!((m.accuracy() - 0.8).abs() < 1e-12);
+        assert!((m.mean_batch_size() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,54 @@
+//! Trigger-style serving coordinator — the L3 request path.
+//!
+//! The paper's deployment scenario is the LHC trigger: events arrive at a
+//! fixed, unforgiving rate and each must be classified within a latency
+//! budget or dropped (§1).  This module is that scenario as a software
+//! system:
+//!
+//! ```text
+//! EventSource ──► bounded queue ──► Batcher ──► engine worker threads
+//!  (Poisson /      (backpressure:    (size +      (each owns a PJRT
+//!   fixed rate)     drop + count)     deadline)     executable set)
+//!                                                       │
+//!                        Metrics ◄──────────────────────┘
+//!            (drop rate, p50/p99 latency, throughput)
+//! ```
+//!
+//! Design notes:
+//!
+//! * The PJRT client is `Rc`-based (not `Send`), so executables cannot be
+//!   shared across threads.  Each worker thread *constructs* its own
+//!   engine via a factory closure — the same pattern as one-engine-per-
+//!   accelerator in a GPU serving stack, and it mirrors the paper's
+//!   replicated-FPGA-kernel deployment.
+//! * Batch buckets mirror the AOT artifacts (1/10/100): the batcher packs
+//!   up to `max_batch` requests or flushes on `max_wait`, the worker picks
+//!   the smallest bucket ≥ the batch.
+//! * The queue is bounded; when full, new events are **dropped and
+//!   counted** — exactly what a trigger does when the downstream is
+//!   saturated (it never blocks the detector).
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+pub mod source;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use queue::BoundedQueue;
+pub use server::{BatchRunner, Server, ServerConfig, ServerReport};
+pub use source::SourceConfig;
+
+use std::time::Instant;
+
+/// One inference request in flight.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Flat `[seq_len * input_size]` features.
+    pub features: Vec<f32>,
+    /// Ground-truth label carried through for online accuracy accounting.
+    pub label: u32,
+    pub enqueued_at: Instant,
+}

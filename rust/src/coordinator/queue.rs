@@ -1,0 +1,169 @@
+//! Bounded MPMC queue with trigger-style overflow: when full, `push`
+//! fails immediately (the caller counts a drop) instead of blocking the
+//! producer — a detector never waits for the DAQ.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; `Err(item)` when full or closed (drop + count).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        if inner.closed || inner.items.len() >= self.capacity {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop one item, waiting up to `timeout`.  `None` on timeout, or when
+    /// the queue is closed AND drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            let (guard, result) = self
+                .not_empty
+                .wait_timeout(inner, timeout)
+                .expect("queue wait");
+            inner = guard;
+            if result.timed_out() {
+                return inner.items.pop_front();
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher top-up).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        let take = max.min(inner.items.len());
+        inner.items.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock").closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(i));
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn overflow_rejects_instead_of_blocking() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_but_drains() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(2));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.drain_up_to(3), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.drain_up_to(10), vec![3, 4]);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(1024));
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..1000 {
+                    while q.push(i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        while let Some(v) = q.pop_timeout(Duration::from_millis(100)) {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

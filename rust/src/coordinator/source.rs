@@ -1,0 +1,121 @@
+//! Event source: generates benchmark events at a configured arrival rate
+//! (Poisson or fixed-interval), pushing into the bounded queue; overflow
+//! is dropped and counted — trigger semantics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::generators::Generator;
+use crate::util::rng::Rng;
+
+use super::metrics::ServerMetrics;
+use super::queue::BoundedQueue;
+use super::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SourceConfig {
+    /// Mean arrival rate in events/second.
+    pub rate_hz: f64,
+    /// Poisson arrivals (exponential gaps) vs fixed interval.
+    pub poisson: bool,
+    /// Total events to emit.
+    pub n_events: usize,
+}
+
+impl Default for SourceConfig {
+    fn default() -> Self {
+        Self {
+            rate_hz: 20_000.0,
+            poisson: true,
+            n_events: 50_000,
+        }
+    }
+}
+
+/// Run the source to completion on the current thread (callers spawn it).
+/// Returns the number of generated events.
+pub fn run(
+    mut generator: Box<dyn Generator>,
+    cfg: SourceConfig,
+    queue: &Arc<BoundedQueue<Request>>,
+    metrics: &Arc<ServerMetrics>,
+    seed: u64,
+) -> usize {
+    let mut rng = Rng::new(seed);
+    let interval = Duration::from_secs_f64(1.0 / cfg.rate_hz.max(1e-9));
+    let start = Instant::now();
+    let mut next_emit = start;
+    for id in 0..cfg.n_events {
+        // Pace: spin/sleep until the scheduled arrival instant.
+        let now = Instant::now();
+        if next_emit > now {
+            let wait = next_emit - now;
+            if wait > Duration::from_micros(200) {
+                std::thread::sleep(wait - Duration::from_micros(100));
+            }
+            while Instant::now() < next_emit {
+                std::hint::spin_loop();
+            }
+        }
+        let gap = if cfg.poisson {
+            Duration::from_secs_f64(rng.exponential(interval.as_secs_f64()))
+        } else {
+            interval
+        };
+        next_emit += gap;
+
+        let event = generator.generate();
+        metrics.generated.fetch_add(1, Ordering::Relaxed);
+        let request = Request {
+            id: id as u64,
+            features: event.features,
+            label: event.label,
+            enqueued_at: Instant::now(),
+        };
+        if queue.push(request).is_err() {
+            metrics.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    cfg.n_events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::TopTagging;
+
+    #[test]
+    fn source_emits_all_events_and_paces() {
+        let queue = Arc::new(BoundedQueue::new(100_000));
+        let metrics = Arc::new(ServerMetrics::new());
+        let cfg = SourceConfig {
+            rate_hz: 50_000.0,
+            poisson: false,
+            n_events: 500,
+        };
+        let t0 = Instant::now();
+        let n = run(Box::new(TopTagging::new(1)), cfg, &queue, &metrics, 2);
+        let elapsed = t0.elapsed();
+        assert_eq!(n, 500);
+        assert_eq!(metrics.generated.load(Ordering::Relaxed), 500);
+        assert_eq!(queue.len(), 500);
+        // 500 events at 50 kHz ≈ 10 ms; generation cost may stretch it.
+        assert!(elapsed >= Duration::from_millis(9), "{elapsed:?}");
+    }
+
+    #[test]
+    fn overflow_counts_drops() {
+        let queue = Arc::new(BoundedQueue::new(10));
+        let metrics = Arc::new(ServerMetrics::new());
+        let cfg = SourceConfig {
+            rate_hz: 1e9, // as fast as possible
+            poisson: false,
+            n_events: 100,
+        };
+        run(Box::new(TopTagging::new(3)), cfg, &queue, &metrics, 4);
+        assert_eq!(metrics.generated.load(Ordering::Relaxed), 100);
+        assert_eq!(metrics.dropped.load(Ordering::Relaxed), 90);
+        assert_eq!(queue.len(), 10);
+    }
+}

@@ -1,0 +1,180 @@
+//! Binary test-set container (format documented in
+//! `python/compile/data.py`): magic `RNNDAT01`, four u32 LE header words
+//! (n, seq, feat, classes), f32 LE data, u32 LE labels.
+
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RNNDAT01";
+
+/// A loaded evaluation set.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub seq_len: usize,
+    pub n_feat: usize,
+    /// 1 => binary task (sigmoid output), else the class count.
+    pub n_classes: usize,
+    /// Row-major `[sample][step][feature]`.
+    data: Vec<f32>,
+    labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(bytes.len() >= 24, "dataset too short");
+        anyhow::ensure!(
+            &bytes[..8] == MAGIC,
+            "bad magic {:?} (want RNNDAT01)",
+            &bytes[..8]
+        );
+        let word = |i: usize| -> usize {
+            u32::from_le_bytes(bytes[8 + 4 * i..12 + 4 * i].try_into().unwrap())
+                as usize
+        };
+        let (n, seq_len, n_feat, n_classes) = (word(0), word(1), word(2), word(3));
+        let data_bytes = n * seq_len * n_feat * 4;
+        let want = 24 + data_bytes + n * 4;
+        anyhow::ensure!(
+            bytes.len() == want,
+            "dataset length {} != expected {want} (n={n}, seq={seq_len}, feat={n_feat})",
+            bytes.len()
+        );
+        let mut data = Vec::with_capacity(n * seq_len * n_feat);
+        for chunk in bytes[24..24 + data_bytes].chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let mut labels = Vec::with_capacity(n);
+        for chunk in bytes[24 + data_bytes..].chunks_exact(4) {
+            labels.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        anyhow::ensure!(
+            data.iter().all(|v| v.is_finite()),
+            "dataset contains non-finite features"
+        );
+        Ok(Self {
+            n,
+            seq_len,
+            n_feat,
+            n_classes,
+            data,
+            labels,
+        })
+    }
+
+    /// One sample as a flat `[seq_len * n_feat]` slice.
+    #[inline]
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let stride = self.seq_len * self.n_feat;
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> u32 {
+        self.labels[i]
+    }
+
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Restrict to the first `n` samples (cheap evaluation subsets).
+    pub fn truncated(&self, n: usize) -> Dataset {
+        let n = n.min(self.n);
+        let stride = self.seq_len * self.n_feat;
+        Dataset {
+            n,
+            seq_len: self.seq_len,
+            n_feat: self.n_feat,
+            n_classes: self.n_classes,
+            data: self.data[..n * stride].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    /// Serialize a dataset in the container format (mirror of the python
+    /// writer, for tests).
+    pub fn encode(
+        seq: usize,
+        feat: usize,
+        classes: usize,
+        samples: &[(Vec<f32>, u32)],
+    ) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"RNNDAT01");
+        for v in [samples.len() as u32, seq as u32, feat as u32, classes as u32] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for (x, _) in samples {
+            assert_eq!(x.len(), seq * feat);
+            for f in x {
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        for (_, y) in samples {
+            out.extend_from_slice(&y.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::encode;
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let samples = vec![
+            (vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 1u32),
+            (vec![-1.0, -2.0, -3.0, -4.0, -5.0, -6.0], 0u32),
+        ];
+        let bytes = encode(3, 2, 1, &samples);
+        let ds = Dataset::from_bytes(&bytes).unwrap();
+        assert_eq!((ds.n, ds.seq_len, ds.n_feat, ds.n_classes), (2, 3, 2, 1));
+        assert_eq!(ds.sample(0), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(ds.label(1), 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = encode(1, 1, 1, &[(vec![0.0], 0)]);
+        bytes[0] = b'X';
+        assert!(Dataset::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
+        assert!(Dataset::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_nan_features() {
+        let bytes = encode(1, 1, 1, &[(vec![f32::NAN], 0)]);
+        assert!(Dataset::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_keeps_prefix() {
+        let samples = vec![
+            (vec![1.0], 0u32),
+            (vec![2.0], 1u32),
+            (vec![3.0], 2u32),
+        ];
+        let ds = Dataset::from_bytes(&encode(1, 1, 3, &samples)).unwrap();
+        let t = ds.truncated(2);
+        assert_eq!(t.n, 2);
+        assert_eq!(t.sample(1), &[2.0]);
+        assert_eq!(ds.truncated(99).n, 3);
+    }
+}

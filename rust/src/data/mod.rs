@@ -1,0 +1,17 @@
+//! Datasets and metrics.
+//!
+//! * [`dataset`] — reader for the frozen binary test sets written by
+//!   `python/compile/data.py` (`artifacts/data/*_test.bin`); these drive
+//!   the Fig. 2 quantization scan bit-reproducibly.
+//! * [`generators`] — rust-side synthetic generators mirroring the python
+//!   algorithms (top-tagging jets, flavor-tagging tracks, QuickDraw
+//!   strokes); these feed the live event source of the serving demo.
+//! * [`metrics`] — ROC AUC (binary via the Mann–Whitney rank statistic,
+//!   multi-class one-vs-rest), matching `python/compile/train.py`.
+
+pub mod dataset;
+pub mod generators;
+pub mod metrics;
+
+pub use dataset::Dataset;
+pub use metrics::{binary_auc, mean_auc, multiclass_auc};

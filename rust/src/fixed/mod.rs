@@ -1,0 +1,32 @@
+//! Software substrate for Vivado HLS `ap_fixed<W,I>` arithmetic.
+//!
+//! The paper quantizes every input, weight, bias, partial sum and output to
+//! a fixed-point type `ap_fixed<W,I>` (W total bits, I integer bits
+//! including sign; see §5.1).  We have no Vivado, so this module is the
+//! substitution: a bit-accurate software model of that arithmetic, used by
+//! the [`crate::nn`] engine to reproduce the post-training-quantization
+//! scan of Fig. 2.
+//!
+//! What is modelled:
+//!
+//! * two's-complement storage in `W` bits with `F = W - I` fractional bits
+//!   ([`FixedSpec`]);
+//! * quantization (f32 → raw) with HLS rounding modes `AP_TRN` (truncate
+//!   toward −∞, the Vivado default) and `AP_RND` (round to nearest, ties
+//!   toward +∞), and overflow modes `AP_WRAP` (Vivado default) and
+//!   `AP_SAT` ([`RoundMode`], [`OverflowMode`]);
+//! * exact integer products with `2F` fractional bits and wide (i64)
+//!   accumulators, then requantization — matching hls4ml's wider
+//!   `accum_t` default;
+//! * hls4ml's LUT-based activations ([`tables`]): sigmoid/tanh/exp/inv
+//!   lookup tables with configurable size and table precision, including
+//!   the paper's note that the softmax LUT needs higher precision for the
+//!   flavor-tagging and QuickDraw models.
+
+pub mod spec;
+pub mod tables;
+pub mod value;
+
+pub use spec::{FixedSpec, OverflowMode, QuantConfig, RoundMode};
+pub use tables::{ActTables, SoftmaxTables, TableConfig};
+pub use value::{dequantize, quantize, quantize_vec, requantize};

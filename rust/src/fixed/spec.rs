@@ -1,0 +1,176 @@
+//! Fixed-point type descriptors: the software `ap_fixed<W,I>`.
+
+/// Rounding mode applied when discarding fractional bits.
+///
+/// Mirrors Vivado HLS quantization modes (UG902): `AP_TRN` is the default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoundMode {
+    /// `AP_TRN`: truncate toward negative infinity (drop bits). Default.
+    Trn,
+    /// `AP_RND`: round to nearest, ties toward +∞.
+    Rnd,
+}
+
+/// Overflow mode applied when a value exceeds the representable range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OverflowMode {
+    /// `AP_WRAP`: two's-complement wraparound (Vivado default).
+    Wrap,
+    /// `AP_SAT`: saturate to the representable extremes.
+    Sat,
+}
+
+/// `ap_fixed<W,I>`: signed fixed point, `width` total bits of which
+/// `integer` are integer bits (sign included), so `width - integer`
+/// fractional bits.
+///
+/// The paper's Fig. 2 scans `integer ∈ {6, 8, 10, 12}` and fractional
+/// `∈ [2, 14]`; Figs. 3–6 scan the *total* width at fixed integer bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedSpec {
+    /// Total bits W, `1..=48`.
+    pub width: u32,
+    /// Integer bits I (including sign), `1..=width`.
+    pub integer: u32,
+}
+
+impl FixedSpec {
+    /// Construct, panicking on invalid combinations (programming errors).
+    pub fn new(width: u32, integer: u32) -> Self {
+        assert!(
+            (1..=48).contains(&width),
+            "fixed width {width} out of range 1..=48"
+        );
+        assert!(
+            (1..=width).contains(&integer),
+            "integer bits {integer} out of range 1..={width}"
+        );
+        Self { width, integer }
+    }
+
+    /// hls4ml's default layer type: `ap_fixed<16,6>`.
+    pub fn default16_6() -> Self {
+        Self::new(16, 6)
+    }
+
+    /// Number of fractional bits `F = W - I`.
+    #[inline]
+    pub fn frac(&self) -> u32 {
+        self.width - self.integer
+    }
+
+    /// Smallest representable increment, `2^-F`.
+    #[inline]
+    pub fn lsb(&self) -> f64 {
+        (2.0f64).powi(-(self.frac() as i32))
+    }
+
+    /// Largest representable raw value, `2^(W-1) - 1`.
+    #[inline]
+    pub fn raw_max(&self) -> i64 {
+        (1i64 << (self.width - 1)) - 1
+    }
+
+    /// Smallest representable raw value, `-2^(W-1)`.
+    #[inline]
+    pub fn raw_min(&self) -> i64 {
+        -(1i64 << (self.width - 1))
+    }
+
+    /// Largest representable real value.
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        self.raw_max() as f64 * self.lsb()
+    }
+
+    /// Smallest (most negative) representable real value.
+    #[inline]
+    pub fn min_value(&self) -> f64 {
+        self.raw_min() as f64 * self.lsb()
+    }
+
+    /// Display as the paper writes it, e.g. `<16,6>`.
+    pub fn label(&self) -> String {
+        format!("<{},{}>", self.width, self.integer)
+    }
+}
+
+/// Full quantization configuration for an engine run: the data type plus
+/// rounding/overflow behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub spec: FixedSpec,
+    pub round: RoundMode,
+    pub overflow: OverflowMode,
+}
+
+impl QuantConfig {
+    /// The configuration used for the Fig. 2 reproduction: truncation (the
+    /// Vivado default) with saturation.  Saturation rather than wrap is
+    /// deliberate: with the paper's small integer widths an `AP_WRAP`
+    /// accumulator overflow flips sign and produces AUC cliffs, while the
+    /// paper's curves degrade smoothly — practical hls4ml deployments set
+    /// `AP_SAT` on the output types for exactly this reason.
+    pub fn ptq(spec: FixedSpec) -> Self {
+        Self {
+            spec,
+            round: RoundMode::Trn,
+            overflow: OverflowMode::Sat,
+        }
+    }
+
+    /// Vivado's literal defaults (`AP_TRN`, `AP_WRAP`).
+    pub fn vivado_default(spec: FixedSpec) -> Self {
+        Self {
+            spec,
+            round: RoundMode::Trn,
+            overflow: OverflowMode::Wrap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frac_and_lsb() {
+        let s = FixedSpec::new(16, 6);
+        assert_eq!(s.frac(), 10);
+        assert!((s.lsb() - 1.0 / 1024.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn range_16_6() {
+        let s = FixedSpec::new(16, 6);
+        assert_eq!(s.raw_max(), 32767);
+        assert_eq!(s.raw_min(), -32768);
+        assert!((s.max_value() - 31.9990234375).abs() < 1e-9);
+        assert!((s.min_value() + 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_bit_types() {
+        let s = FixedSpec::new(1, 1);
+        assert_eq!(s.frac(), 0);
+        assert_eq!(s.raw_max(), 0);
+        assert_eq!(s.raw_min(), -1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn integer_cannot_exceed_width() {
+        FixedSpec::new(8, 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_zero_rejected() {
+        FixedSpec::new(0, 0);
+    }
+
+    #[test]
+    fn label_matches_paper_notation() {
+        assert_eq!(FixedSpec::new(16, 6).label(), "<16,6>");
+    }
+}

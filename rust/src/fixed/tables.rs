@@ -1,0 +1,358 @@
+//! hls4ml-style lookup-table activations.
+//!
+//! hls4ml does not compute `sigmoid`/`tanh`/`exp` in logic; it indexes
+//! precomputed tables (default 1024 entries, `ap_fixed<18,8>` entries) over
+//! a fixed input range.  The quantization of *the table itself* is a real
+//! contributor to the Fig. 2 AUC degradation, so we reproduce the scheme:
+//! left-edge sampled tables, range ±8 for sigmoid, ±4 for tanh, and the
+//! two-table (exp + reciprocal) construction for softmax.
+//!
+//! The paper (§5.1) notes the softmax LUT needs a size/precision bump for
+//! the flavor-tagging and QuickDraw models; [`TableConfig::softmax_high`]
+//! is that bump.
+
+use super::spec::{FixedSpec, QuantConfig};
+use super::value::{dequantize, overflow, quantize};
+
+/// Size / precision / range of one activation table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TableConfig {
+    /// Number of entries (hls4ml default 1024).
+    pub size: usize,
+    /// Fixed-point type of the table entries (hls4ml `table_t`, default
+    /// `ap_fixed<18,8>`).
+    pub spec: FixedSpec,
+    /// Input half-range: the table covers `[-range, +range)`.
+    pub range: f64,
+}
+
+impl TableConfig {
+    pub fn sigmoid_default() -> Self {
+        Self {
+            size: 1024,
+            spec: FixedSpec::new(18, 8),
+            range: 8.0,
+        }
+    }
+
+    pub fn tanh_default() -> Self {
+        Self {
+            size: 1024,
+            spec: FixedSpec::new(18, 8),
+            range: 4.0,
+        }
+    }
+
+    pub fn softmax_default() -> Self {
+        Self {
+            size: 1024,
+            spec: FixedSpec::new(18, 8),
+            range: 8.0,
+        }
+    }
+
+    /// The enlarged softmax table the paper uses for the flavor-tagging
+    /// and QuickDraw models (bigger + more fractional bits).
+    pub fn softmax_high() -> Self {
+        Self {
+            size: 4096,
+            spec: FixedSpec::new(24, 10),
+            range: 8.0,
+        }
+    }
+}
+
+/// Build a bin-center-sampled table of `f` over `[-range, range)`,
+/// quantized to the table spec.  Center sampling (vs hls4ml's historical
+/// left-edge) halves the systematic bias per lookup, which matters for
+/// the LSTM where lookup errors compound across the recurrence.
+fn build_table(cfg: TableConfig, f: impl Fn(f64) -> f64) -> Vec<i64> {
+    let q = QuantConfig::ptq(cfg.spec);
+    let dx = 2.0 * cfg.range / cfg.size as f64;
+    (0..cfg.size)
+        .map(|i| quantize(f(-cfg.range + dx * (i as f64 + 0.5)), q))
+        .collect()
+}
+
+/// Index into a table for a real-valued input (clamping at the edges,
+/// exactly as the generated HLS does).
+#[inline]
+fn table_index(x: f64, cfg: &TableConfig) -> usize {
+    let pos = (x + cfg.range) * cfg.size as f64 / (2.0 * cfg.range);
+    (pos.floor().max(0.0) as usize).min(cfg.size - 1)
+}
+
+/// Integer-only index for a raw fixed-point input (§Perf: the f64
+/// dequantize+floor on the activation hot path costs ~3× the shift).
+/// Valid because table ranges and sizes are powers of two; falls back to
+/// the f64 path otherwise.  `idx = (raw + range·2^F) >> (F + log2(2·range) − log2(size))`.
+#[inline]
+fn table_index_raw(raw: i64, in_frac: u32, cfg: &TableConfig) -> usize {
+    debug_assert!(cfg.range.fract() == 0.0);
+    let range_i = cfg.range as i64;
+    if range_i <= 0 || !(range_i as u64).is_power_of_two() || !cfg.size.is_power_of_two() {
+        return table_index(super::value::dequantize(raw, FixedSpec::new(48, 48 - in_frac)), cfg);
+    }
+    let log_2range = (2 * range_i).trailing_zeros();
+    let log_size = cfg.size.trailing_zeros();
+    let shifted = raw + (range_i << in_frac);
+    if shifted <= 0 {
+        return 0;
+    }
+    let total_shift = in_frac as i32 + log_2range as i32 - log_size as i32;
+    let idx = if total_shift >= 0 {
+        (shifted >> total_shift) as usize
+    } else {
+        (shifted << (-total_shift)) as usize
+    };
+    idx.min(cfg.size - 1)
+}
+
+/// Sigmoid + tanh tables for one layer output type.
+#[derive(Debug, Clone)]
+pub struct ActTables {
+    out: QuantConfig,
+    sig_cfg: TableConfig,
+    tanh_cfg: TableConfig,
+    sigmoid: Vec<i64>,
+    tanh: Vec<i64>,
+}
+
+impl ActTables {
+    /// Build tables whose looked-up values are cast to `out`.
+    pub fn new(out: QuantConfig) -> Self {
+        let sig_cfg = TableConfig::sigmoid_default();
+        let tanh_cfg = TableConfig::tanh_default();
+        Self {
+            out,
+            sig_cfg,
+            tanh_cfg,
+            sigmoid: build_table(sig_cfg, |x| 1.0 / (1.0 + (-x).exp())),
+            tanh: build_table(tanh_cfg, f64::tanh),
+        }
+    }
+
+    /// LUT sigmoid: raw in (spec `in_spec`) → raw out (engine type).
+    #[inline]
+    pub fn sigmoid_raw(&self, raw: i64, in_spec: FixedSpec) -> i64 {
+        let entry =
+            self.sigmoid[table_index_raw(raw, in_spec.frac(), &self.sig_cfg)];
+        cast(entry, self.sig_cfg.spec, self.out)
+    }
+
+    /// LUT tanh: raw in → raw out.
+    #[inline]
+    pub fn tanh_raw(&self, raw: i64, in_spec: FixedSpec) -> i64 {
+        let entry =
+            self.tanh[table_index_raw(raw, in_spec.frac(), &self.tanh_cfg)];
+        cast(entry, self.tanh_cfg.spec, self.out)
+    }
+
+    pub fn output_config(&self) -> QuantConfig {
+        self.out
+    }
+}
+
+/// Softmax via exp- and reciprocal-tables (hls4ml's "stable" variant:
+/// subtract the row max before exponentiating).
+#[derive(Debug, Clone)]
+pub struct SoftmaxTables {
+    out: QuantConfig,
+    exp_cfg: TableConfig,
+    inv_cfg: TableConfig,
+    exp: Vec<i64>,
+    /// Reciprocal table over `(0, inv_range]`.
+    inv: Vec<i64>,
+    inv_range: f64,
+}
+
+impl SoftmaxTables {
+    pub fn new(out: QuantConfig, cfg: TableConfig) -> Self {
+        let inv_range = 64.0;
+        let inv_cfg = cfg;
+        Self {
+            out,
+            exp_cfg: cfg,
+            inv_cfg,
+            exp: build_table(cfg, f64::exp),
+            inv: (0..cfg.size)
+                .map(|i| {
+                    // left-edge over (0, inv_range]; entry 0 guards /0.
+                    let x = inv_range * (i as f64) / cfg.size as f64;
+                    let v = if x <= 0.0 { cfg.spec.max_value() } else { 1.0 / x };
+                    quantize(v, QuantConfig::ptq(cfg.spec))
+                })
+                .collect(),
+            inv_range,
+        }
+    }
+
+    /// Softmax over one row of raw logits.
+    pub fn softmax_raw(&self, logits: &[i64], in_spec: FixedSpec) -> Vec<i64> {
+        let xs: Vec<f64> = logits.iter().map(|&r| dequantize(r, in_spec)).collect();
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        // exp(x - max) through the table (inputs in [-2*range, 0], clamped).
+        let exps: Vec<i64> = xs
+            .iter()
+            .map(|&x| self.exp[table_index(x - max, &self.exp_cfg)])
+            .collect();
+        let sum_raw: i64 = exps.iter().sum();
+        let sum = dequantize(sum_raw, self.exp_cfg.spec);
+        let inv_idx = ((sum / self.inv_range * self.inv_cfg.size as f64).floor()
+            as usize)
+            .min(self.inv_cfg.size - 1);
+        let inv = self.inv[inv_idx];
+        // product carries 2x table frac bits; cast down to the output type.
+        let prod_frac = 2 * self.exp_cfg.spec.frac();
+        exps.iter()
+            .map(|&e| super::value::requantize(e * inv, prod_frac, self.out))
+            .collect()
+    }
+}
+
+/// Cast a raw value between specs (requantize + overflow handling).
+#[inline]
+fn cast(raw: i64, from: FixedSpec, to: QuantConfig) -> i64 {
+    let v = super::value::requantize(raw, from.frac(), to);
+    overflow(v, to.spec, to.overflow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out16() -> QuantConfig {
+        QuantConfig::ptq(FixedSpec::new(16, 6))
+    }
+
+    #[test]
+    fn sigmoid_table_accuracy() {
+        let t = ActTables::new(out16());
+        let in_spec = FixedSpec::new(16, 6);
+        for &x in &[-6.0, -2.0, -0.5, 0.0, 0.5, 2.0, 6.0] {
+            let raw = quantize(x, QuantConfig::ptq(in_spec));
+            let got = dequantize(t.sigmoid_raw(raw, in_spec), in_spec);
+            let want = 1.0 / (1.0 + (-x as f64).exp());
+            // table step is 16/1024 ≈ 0.016 in x; sigmoid' ≤ 1/4.
+            assert!((got - want).abs() < 0.006, "x={x} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_saturates_at_range_edges() {
+        let t = ActTables::new(out16());
+        let s = FixedSpec::new(16, 6);
+        let lo = t.sigmoid_raw(quantize(-20.0, QuantConfig::ptq(s)), s);
+        let hi = t.sigmoid_raw(quantize(20.0, QuantConfig::ptq(s)), s);
+        assert!(dequantize(lo, s) < 0.001);
+        assert!(dequantize(hi, s) > 0.999);
+    }
+
+    #[test]
+    fn tanh_table_accuracy_and_sign() {
+        let t = ActTables::new(out16());
+        let s = FixedSpec::new(16, 6);
+        for &x in &[-3.0, -1.0, -0.25, 0.25, 1.0, 3.0] {
+            let raw = quantize(x, QuantConfig::ptq(s));
+            let got = dequantize(t.tanh_raw(raw, s), s);
+            assert!((got - (x as f64).tanh()).abs() < 0.01, "x={x} got={got}");
+            assert_eq!(got > 0.0, x > 0.0);
+        }
+    }
+
+    #[test]
+    fn low_precision_table_is_coarse() {
+        // With a 4-bit output type the LUT output collapses to few levels —
+        // the mechanism behind Fig. 2's low-width AUC loss.
+        let out = QuantConfig::ptq(FixedSpec::new(4, 2));
+        let t = ActTables::new(out);
+        let s = FixedSpec::new(16, 6);
+        let distinct: std::collections::HashSet<i64> = (-40..40)
+            .map(|i| t.sigmoid_raw(quantize(i as f64 * 0.2, QuantConfig::ptq(s)), s))
+            .collect();
+        assert!(distinct.len() <= 4, "got {} levels", distinct.len());
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let sm = SoftmaxTables::new(out16(), TableConfig::softmax_default());
+        let s = FixedSpec::new(16, 6);
+        let q = QuantConfig::ptq(s);
+        let logits: Vec<i64> = [2.0, 0.5, -1.0]
+            .iter()
+            .map(|&x| quantize(x, q))
+            .collect();
+        let probs = sm.softmax_raw(&logits, s);
+        let vals: Vec<f64> = probs.iter().map(|&p| dequantize(p, s)).collect();
+        let sum: f64 = vals.iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "sum={sum}");
+        assert!(vals[0] > vals[1] && vals[1] > vals[2]);
+    }
+
+    #[test]
+    fn softmax_high_precision_is_closer() {
+        let s = FixedSpec::new(16, 6);
+        let q = QuantConfig::ptq(s);
+        let logits: Vec<i64> = [1.3, 0.9, 0.2, -0.4, -2.0]
+            .iter()
+            .map(|&x| quantize(x, q))
+            .collect();
+        let want: Vec<f64> = {
+            let xs = [1.3f64, 0.9, 0.2, -0.4, -2.0];
+            let m = 1.3;
+            let es: Vec<f64> = xs.iter().map(|x| (x - m).exp()).collect();
+            let sum: f64 = es.iter().sum();
+            es.iter().map(|e| e / sum).collect()
+        };
+        let err = |cfg: TableConfig| -> f64 {
+            let sm = SoftmaxTables::new(q, cfg);
+            sm.softmax_raw(&logits, s)
+                .iter()
+                .zip(&want)
+                .map(|(&p, &w)| (dequantize(p, s) - w).abs())
+                .fold(0.0, f64::max)
+        };
+        let e_def = err(TableConfig::softmax_default());
+        let e_high = err(TableConfig::softmax_high());
+        assert!(e_high <= e_def + 1e-12, "high {e_high} vs default {e_def}");
+    }
+
+    #[test]
+    fn integer_index_matches_f64_index() {
+        // §Perf opt 1 correctness: the shift-based index must agree with
+        // the f64 reference for every table config and input spec.
+        for cfg in [
+            TableConfig::sigmoid_default(),
+            TableConfig::tanh_default(),
+            TableConfig::softmax_high(),
+        ] {
+            for in_spec in [
+                FixedSpec::new(16, 6),
+                FixedSpec::new(8, 6),
+                FixedSpec::new(24, 10),
+                FixedSpec::new(12, 2),
+            ] {
+                for raw in (-40_000i64..40_000).step_by(997) {
+                    let raw = raw.clamp(in_spec.raw_min(), in_spec.raw_max());
+                    let x = dequantize(raw, in_spec);
+                    assert_eq!(
+                        table_index_raw(raw, in_spec.frac(), &cfg),
+                        table_index(x, &cfg),
+                        "cfg range {} size {} spec {} raw {raw}",
+                        cfg.range,
+                        cfg.size,
+                        in_spec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_index_clamps() {
+        let cfg = TableConfig::sigmoid_default();
+        assert_eq!(table_index(-100.0, &cfg), 0);
+        assert_eq!(table_index(100.0, &cfg), cfg.size - 1);
+        assert_eq!(table_index(-8.0, &cfg), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Raw fixed-point value conversion and requantization.
+//!
+//! A *raw* value is an `i64` holding a two's-complement `W`-bit pattern in
+//! units of `2^-F`.  All arithmetic in the engine keeps products exact
+//! (`2F` fractional bits in i64) and only requantizes at the points where
+//! the HLS design would: after the accumulator, and after activations.
+
+use super::spec::{FixedSpec, OverflowMode, QuantConfig, RoundMode};
+
+/// Apply the overflow mode to an arbitrary raw value, returning a raw value
+/// representable in `spec.width` bits.
+#[inline]
+pub fn overflow(raw: i64, spec: FixedSpec, mode: OverflowMode) -> i64 {
+    let (lo, hi) = (spec.raw_min(), spec.raw_max());
+    match mode {
+        OverflowMode::Sat => raw.clamp(lo, hi),
+        OverflowMode::Wrap => {
+            // Keep the low W bits, sign-extended: two's-complement wrap.
+            let w = spec.width;
+            let mask = if w >= 64 { !0u64 } else { (1u64 << w) - 1 };
+            let bits = (raw as u64) & mask;
+            let sign_bit = 1u64 << (w - 1);
+            if bits & sign_bit != 0 {
+                (bits | !mask) as i64
+            } else {
+                bits as i64
+            }
+        }
+    }
+}
+
+/// Shift a raw value right by `shift` fractional bits with the given
+/// rounding mode (the fixed-point "drop bits" primitive).
+#[inline]
+pub fn shift_round(raw: i64, shift: u32, round: RoundMode) -> i64 {
+    if shift == 0 {
+        return raw;
+    }
+    debug_assert!(shift < 63, "shift {shift} too large");
+    match round {
+        // Arithmetic right shift == floor division by 2^shift (AP_TRN).
+        RoundMode::Trn => raw >> shift,
+        // AP_RND: add half an LSB then truncate => nearest, ties toward +∞.
+        RoundMode::Rnd => (raw + (1i64 << (shift - 1))) >> shift,
+    }
+}
+
+/// Quantize a real value into a raw fixed-point value under `cfg`.
+#[inline]
+pub fn quantize(x: f64, cfg: QuantConfig) -> i64 {
+    let scaled = x * (1i64 << cfg.spec.frac()) as f64;
+    let raw = match cfg.round {
+        RoundMode::Trn => scaled.floor(),
+        RoundMode::Rnd => (scaled + 0.5).floor(),
+    };
+    // f64 -> i64 cast saturates in rust for out-of-range values, but guard
+    // against NaN explicitly (quantizes to 0 like HLS x-propagation won't,
+    // but the engine never produces NaN from finite inputs).
+    let raw = if raw.is_nan() { 0 } else { raw as i64 };
+    overflow(raw, cfg.spec, cfg.overflow)
+}
+
+/// Recover the real value of a raw fixed-point number.
+#[inline]
+pub fn dequantize(raw: i64, spec: FixedSpec) -> f64 {
+    raw as f64 * spec.lsb()
+}
+
+/// Quantize a slice (used for weights/inputs at engine-load time).
+pub fn quantize_vec(xs: &[f32], cfg: QuantConfig) -> Vec<i64> {
+    xs.iter().map(|&x| quantize(x as f64, cfg)).collect()
+}
+
+/// Requantize a raw value that currently carries `from_frac` fractional
+/// bits into `cfg` (dropping or adding fractional bits, then applying
+/// overflow handling).  This is the "cast" at the output of an
+/// accumulator.
+#[inline]
+pub fn requantize(raw: i64, from_frac: u32, cfg: QuantConfig) -> i64 {
+    let to_frac = cfg.spec.frac();
+    let shifted = if from_frac > to_frac {
+        shift_round(raw, from_frac - to_frac, cfg.round)
+    } else {
+        raw << (to_frac - from_frac)
+    };
+    overflow(shifted, cfg.spec, cfg.overflow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(w: u32, i: u32) -> QuantConfig {
+        QuantConfig::ptq(FixedSpec::new(w, i))
+    }
+
+    #[test]
+    fn quantize_exact_values() {
+        let c = cfg(16, 6); // F = 10
+        assert_eq!(quantize(0.0, c), 0);
+        assert_eq!(quantize(1.0, c), 1024);
+        assert_eq!(quantize(-1.0, c), -1024);
+        assert_eq!(quantize(0.125, c), 128);
+    }
+
+    #[test]
+    fn truncation_rounds_toward_neg_inf() {
+        let c = cfg(8, 6); // F = 2, lsb 0.25
+        assert_eq!(quantize(0.3, c), 1); // 0.25
+        assert_eq!(quantize(-0.3, c), -2); // -0.5, floor
+        assert_eq!(dequantize(quantize(-0.3, c), c.spec), -0.5);
+    }
+
+    #[test]
+    fn rnd_rounds_to_nearest() {
+        let mut c = cfg(8, 6);
+        c.round = RoundMode::Rnd;
+        assert_eq!(quantize(0.3, c), 1); // 0.25 nearest
+        assert_eq!(quantize(-0.3, c), -1); // -0.25 nearest
+        assert_eq!(quantize(0.375, c), 2); // tie -> +inf -> 0.5
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let c = cfg(8, 4); // range [-8, 7.9375]
+        assert_eq!(dequantize(quantize(100.0, c), c.spec), 7.9375);
+        assert_eq!(dequantize(quantize(-100.0, c), c.spec), -8.0);
+    }
+
+    #[test]
+    fn wrap_wraps_two_complement() {
+        let c = QuantConfig::vivado_default(FixedSpec::new(8, 4)); // F=4
+        // 8.0 -> raw 128 -> wraps to -128 -> -8.0
+        assert_eq!(dequantize(quantize(8.0, c), c.spec), -8.0);
+        // 16.0 -> raw 256 -> wraps to 0
+        assert_eq!(quantize(16.0, c), 0);
+    }
+
+    #[test]
+    fn nan_quantizes_to_zero() {
+        assert_eq!(quantize(f64::NAN, cfg(16, 6)), 0);
+    }
+
+    #[test]
+    fn requantize_down_truncates() {
+        let c = cfg(16, 6); // to F=10
+        // raw with F=20: value 1.5 = 1.5 * 2^20
+        let raw20 = (1.5 * (1 << 20) as f64) as i64;
+        assert_eq!(requantize(raw20, 20, c), 1536); // 1.5 * 1024
+    }
+
+    #[test]
+    fn requantize_up_shifts_left() {
+        let c = cfg(16, 6);
+        assert_eq!(requantize(3, 2, c), 3 << 8); // F=2 -> F=10
+    }
+
+    #[test]
+    fn roundtrip_within_lsb() {
+        let c = cfg(16, 6);
+        for &x in &[0.0, 0.1, -0.1, 3.14159, -31.9, 14.2857] {
+            let err = (dequantize(quantize(x, c), c.spec) - x).abs();
+            assert!(err < c.spec.lsb() + 1e-12, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn product_semantics_are_exact() {
+        // (a * b) with raw i64: fracs add; requantize once at the end.
+        let c = cfg(16, 6);
+        let a = quantize(1.5, c);
+        let b = quantize(-2.25, c);
+        let prod = a * b; // F = 20
+        let back = requantize(prod, 20, c);
+        assert_eq!(dequantize(back, c.spec), -3.375);
+    }
+}

@@ -1,0 +1,128 @@
+//! Design roll-up: architecture + configuration → full synthesis report.
+
+use crate::model::Arch;
+
+use super::device::Device;
+use super::latency::{self, DesignTiming};
+use super::resource::{self, ResourceEstimate};
+use super::HlsConfig;
+
+/// One "synthesis run" of the analytical model.
+#[derive(Debug, Clone)]
+pub struct HlsDesign {
+    pub arch: Arch,
+    pub config: HlsConfig,
+}
+
+/// The analogue of a Vivado HLS synthesis report.
+#[derive(Debug, Clone)]
+pub struct SynthesisReport {
+    pub arch_key: String,
+    pub config: HlsConfig,
+    pub timing: DesignTiming,
+    pub resources: ResourceEstimate,
+    pub device: Device,
+    pub fits_device: bool,
+}
+
+impl HlsDesign {
+    pub fn new(arch: Arch, config: HlsConfig) -> Self {
+        Self { arch, config }
+    }
+
+    /// Run the scheduler + binder; errors on unsynthesizable configs.
+    pub fn synthesize(&self) -> anyhow::Result<SynthesisReport> {
+        self.synthesize_for(Device::for_benchmark(&self.arch.name))
+    }
+
+    /// Synthesize against an explicit target device.
+    pub fn synthesize_for(
+        &self,
+        device: Device,
+    ) -> anyhow::Result<SynthesisReport> {
+        let timing = latency::schedule(&self.arch, &self.config)?;
+        let resources = resource::estimate(&self.arch, &self.config);
+        Ok(SynthesisReport {
+            arch_key: self.arch.key(),
+            config: self.config,
+            timing,
+            resources,
+            device,
+            fits_device: device.fits(&resources),
+        })
+    }
+}
+
+impl SynthesisReport {
+    /// Compact one-line summary (used by the CLI sweep output).
+    pub fn summary(&self) -> String {
+        let (lut_u, ff_u, dsp_u, _b) = self.device.utilization(&self.resources);
+        format!(
+            "{} {} R={} {} {}: latency {:.2} µs, II {} cyc, \
+             DSP {} ({:.0}%), LUT {} ({:.0}%), FF {} ({:.0}%), BRAM {}{}",
+            self.arch_key,
+            self.config.spec.label(),
+            self.config.reuse.label(),
+            self.config.strategy.label(),
+            self.config.mode.label(),
+            self.timing.latency_us,
+            self.timing.ii_cycles,
+            self.resources.dsp,
+            dsp_u * 100.0,
+            self.resources.lut,
+            lut_u * 100.0,
+            self.resources.ff,
+            ff_u * 100.0,
+            self.resources.bram_18k,
+            if self.fits_device { "" } else { "  [DOES NOT FIT]" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::hls::{ReuseFactor, RnnMode, Strategy};
+    use crate::model::{zoo, Cell};
+
+    #[test]
+    fn synthesize_produces_consistent_report() {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        let cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(6, 5),
+        );
+        let report = HlsDesign::new(arch, cfg).synthesize().unwrap();
+        assert_eq!(report.arch_key, "top_gru");
+        assert_eq!(report.device.name, "KU115");
+        assert!(report.fits_device);
+        assert!(report.timing.ii_cycles <= report.timing.latency_cycles);
+        assert!(report.summary().contains("top_gru"));
+    }
+
+    #[test]
+    fn unsynthesizable_config_errors() {
+        let arch = zoo::arch("quickdraw", Cell::Lstm).unwrap();
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::fully_parallel(),
+        );
+        cfg.strategy = Strategy::Latency;
+        assert!(HlsDesign::new(arch, cfg).synthesize().is_err());
+    }
+
+    #[test]
+    fn nonfitting_design_is_flagged_not_erred() {
+        let arch = zoo::arch("top", Cell::Lstm).unwrap();
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::fully_parallel(),
+        );
+        cfg.strategy = Strategy::Latency;
+        cfg.mode = RnnMode::NonStatic;
+        let report = HlsDesign::new(arch, cfg).synthesize().unwrap();
+        assert!(!report.fits_device);
+        assert!(report.summary().contains("DOES NOT FIT"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Target-device database: the three Xilinx parts of the paper's §5.
+
+/// Resource budget of one FPGA (or one SLR of it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub part: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// BRAM expressed in 18 Kb blocks.
+    pub bram_18k: u64,
+}
+
+impl Device {
+    /// Xilinx Kintex UltraScale KU115 — target for the top-tagging and
+    /// flavor-tagging models (§5).
+    pub const KU115: Device = Device {
+        name: "KU115",
+        part: "xcku115-flvb2104-2-i",
+        luts: 663_360,
+        ffs: 1_326_720,
+        dsps: 5_520,
+        bram_18k: 4_320,
+    };
+
+    /// Xilinx Alveo U250 — target for the QuickDraw models (§5).
+    pub const U250: Device = Device {
+        name: "U250",
+        part: "xcu250-figd2104-2-e",
+        luts: 1_728_000,
+        ffs: 3_456_000,
+        dsps: 12_288,
+        bram_18k: 5_376,
+    };
+
+    /// One SLR of a Virtex UltraScale+ VU9P — the CMS L1T Phase-2 upgrade
+    /// device the paper checks the small models against (§5.2).
+    pub const VU9P_SLR: Device = Device {
+        name: "VU9P (1 SLR)",
+        part: "xcvu9p (1/3)",
+        luts: 394_080,
+        ffs: 788_160,
+        dsps: 2_280,
+        bram_18k: 1_440,
+    };
+
+    pub fn by_name(name: &str) -> anyhow::Result<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "ku115" => Ok(Self::KU115),
+            "u250" => Ok(Self::U250),
+            "vu9p" | "vu9p_slr" | "vu9p-slr" => Ok(Self::VU9P_SLR),
+            other => anyhow::bail!(
+                "unknown device {other:?} (want ku115|u250|vu9p_slr)"
+            ),
+        }
+    }
+
+    /// The paper's device assignment per benchmark (§5).
+    pub fn for_benchmark(benchmark: &str) -> Device {
+        match benchmark {
+            "quickdraw" => Self::U250,
+            _ => Self::KU115,
+        }
+    }
+
+    /// Does an estimate fit this device?
+    pub fn fits(&self, est: &super::ResourceEstimate) -> bool {
+        est.dsp <= self.dsps
+            && est.lut <= self.luts
+            && est.ff <= self.ffs
+            && est.bram_18k <= self.bram_18k
+    }
+
+    /// Utilization fractions `(lut, ff, dsp, bram)` of an estimate.
+    pub fn utilization(
+        &self,
+        est: &super::ResourceEstimate,
+    ) -> (f64, f64, f64, f64) {
+        (
+            est.lut as f64 / self.luts as f64,
+            est.ff as f64 / self.ffs as f64,
+            est.dsp as f64 / self.dsps as f64,
+            est.bram_18k as f64 / self.bram_18k as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("KU115").unwrap().dsps, 5_520);
+        assert_eq!(Device::by_name("u250").unwrap().name, "U250");
+        assert!(Device::by_name("vu13p").is_err());
+    }
+
+    #[test]
+    fn paper_benchmark_assignment() {
+        assert_eq!(Device::for_benchmark("top").name, "KU115");
+        assert_eq!(Device::for_benchmark("flavor").name, "KU115");
+        assert_eq!(Device::for_benchmark("quickdraw").name, "U250");
+    }
+
+    #[test]
+    fn slr_is_a_third_of_vu9p_ballpark() {
+        // VU9P has ~1.18M LUTs, 6840 DSPs over 3 SLRs.
+        assert!(Device::VU9P_SLR.dsps * 3 == 6_840);
+        assert!(Device::VU9P_SLR.luts * 3 > 1_100_000);
+    }
+}

@@ -1,0 +1,514 @@
+//! Cycle-level latency / initiation-interval scheduler.
+//!
+//! Implements the scaling laws the paper states and the anchor points it
+//! reports (see module docs on [`crate::hls`]).  The unit is clock cycles
+//! at the configured synthesis clock (paper: 200 MHz → 5 ns).
+//!
+//! The per-step recurrence cannot be pipelined across steps in static
+//! mode (h_t depends on h_{t-1}), so:
+//!
+//! ```text
+//! II(static)       = seq_len × cell_II          (§3: "II equals latency")
+//! latency(static)  = II(static) + head
+//! II(non-static)   = II of ONE block            (§3, Table 5)
+//! ```
+//!
+//! with `cell_II = reuse.max() + pipeline_depth + width_penalty` under
+//! resource strategy (DSPs are time-multiplexed `R` times per step) and
+//! `cell_II = pipeline_depth − 2` under latency strategy (fully unrolled
+//! multiplier array, II limited only by the state feedback).
+
+use crate::model::Arch;
+
+use super::{HlsConfig, ReuseFactor, RnnMode};
+
+/// hls4ml synthesis strategy (§5.2 "Parallelization").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Strategy {
+    /// Minimize latency (fully parallel).  Only synthesizable for small
+    /// models — the paper: "for large models with 40k or more trainable
+    /// parameters ... resource strategy must be used".
+    Latency,
+    /// Minimize resources by time-multiplexing DSPs (reuse factor).
+    Resource,
+}
+
+impl Strategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Latency => "latency",
+            Strategy::Resource => "resource",
+        }
+    }
+}
+
+/// Parameter-count threshold above which latency strategy fails to
+/// synthesize (paper §5.2: "models with 40k or more trainable
+/// parameters").
+pub const LATENCY_STRATEGY_PARAM_LIMIT: usize = 40_000;
+
+/// Width band scanned by the paper's evaluation; min/max latencies in
+/// Tables 2–4 correspond to the ends of this band.
+pub const WIDTH_LO: u32 = 8;
+pub const WIDTH_HI: u32 = 26;
+
+// ---- calibrated scheduler constants (see module docs) -------------------
+
+/// Pipelined DSP multiplier latency (cycles).
+pub const DSP_LATENCY: u64 = 4;
+/// Activation LUT lookup + cast (cycles).
+pub const ACT_LATENCY: u64 = 3;
+/// State-update chain: two Hadamards + adds + state write (cycles).
+pub const STATE_LATENCY: u64 = 6;
+
+/// Adder-tree depth for a fan-in of `n` (⌈log₂ n⌉).
+#[inline]
+pub fn adder_tree_depth(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let mut depth = 0;
+    let mut size = n - 1;
+    while size > 0 {
+        size >>= 1;
+        depth += 1;
+    }
+    depth
+}
+
+/// Pipeline depth of one RNN state update, excluding DSP reuse: multiply,
+/// reduce (fan-in `I + H` — kernel and recurrent products reduce in one
+/// tree), activation, state math.
+pub fn cell_pipeline_depth(arch: &Arch) -> u64 {
+    DSP_LATENCY
+        + adder_tree_depth(arch.input_size + arch.hidden_size + 1)
+        + ACT_LATENCY
+        + STATE_LATENCY
+}
+
+/// Extra cycles/step from wide datatypes: above `WIDTH_LO` bits, wide
+/// accumulation and elementwise chains serialize with the hidden size.
+/// Calibrated to the paper's min–max latency bands (≈ `2·H` cycles/step
+/// across the full width sweep for all three benchmarks).
+pub fn width_penalty(arch: &Arch, width: u32) -> u64 {
+    let over = width.saturating_sub(WIDTH_LO) as u64;
+    let span = (WIDTH_HI - WIDTH_LO) as u64;
+    (2 * arch.hidden_size as u64 * over).div_ceil(span)
+}
+
+/// II of a single RNN block (one state update).
+pub fn cell_ii(arch: &Arch, cfg: &HlsConfig) -> u64 {
+    match cfg.strategy {
+        Strategy::Latency => cell_pipeline_depth(arch) - 2,
+        Strategy::Resource => {
+            cfg.reuse.max_factor() as u64
+                + cell_pipeline_depth(arch)
+                + width_penalty(arch, cfg.spec.width)
+        }
+    }
+}
+
+/// Cycles through the dense head (hidden → dense stack → output), with
+/// its activations; resource strategy time-multiplexes each dense layer
+/// with a fan-in-proportional reuse.
+pub fn head_latency(arch: &Arch, cfg: &HlsConfig) -> u64 {
+    let mut cycles = 0u64;
+    let mut fan_in = arch.hidden_size;
+    for &size in arch
+        .dense_sizes
+        .iter()
+        .chain(std::iter::once(&arch.output_size))
+    {
+        let reuse_head = match cfg.strategy {
+            Strategy::Latency => 1,
+            Strategy::Resource => (fan_in as u64).div_ceil(4),
+        };
+        cycles += DSP_LATENCY + adder_tree_depth(fan_in + 1) + reuse_head + 1;
+        fan_in = size;
+    }
+    cycles += match arch.output_activation {
+        crate::model::OutputActivation::Sigmoid => ACT_LATENCY,
+        // hls4ml softmax: exp LUT + sum + reciprocal LUT + multiply.
+        crate::model::OutputActivation::Softmax => 30,
+    };
+    cycles
+}
+
+/// Full timing report for one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignTiming {
+    pub latency_cycles: u64,
+    pub ii_cycles: u64,
+    pub latency_us: f64,
+    pub ii_us: f64,
+    /// Inferences per second at the synthesis clock, `clock / II`.
+    pub throughput_hz: f64,
+}
+
+/// Schedule one design.  Errors if the configuration is unsynthesizable
+/// (latency strategy on a ≥ 40k-parameter model, §5.2).
+pub fn schedule(arch: &Arch, cfg: &HlsConfig) -> anyhow::Result<DesignTiming> {
+    if cfg.strategy == Strategy::Latency
+        && arch.param_count() >= LATENCY_STRATEGY_PARAM_LIMIT
+    {
+        anyhow::bail!(
+            "{}: latency strategy does not synthesize for models with >= \
+             {LATENCY_STRATEGY_PARAM_LIMIT} parameters ({} here) — use \
+             resource strategy (paper §5.2)",
+            arch.key(),
+            arch.param_count()
+        );
+    }
+    let seq = arch.seq_len as u64;
+    let cell = cell_ii(arch, cfg);
+    let head = head_latency(arch, cfg);
+    let (latency_cycles, ii_cycles) = match cfg.mode {
+        RnnMode::Static => (seq * cell + head, seq * cell),
+        RnnMode::NonStatic => {
+            // Blocks stream: the state hop between blocks saves the
+            // feedback cycle; a new inference enters once block 0 frees.
+            let latency = seq * (cell - 1) + head;
+            let ii = match cfg.strategy {
+                Strategy::Latency => 1,
+                Strategy::Resource => cfg.reuse.max_factor() as u64,
+            };
+            (latency, ii)
+        }
+    };
+    let cycle_us = cfg.cycle_us();
+    Ok(DesignTiming {
+        latency_cycles,
+        ii_cycles,
+        latency_us: latency_cycles as f64 * cycle_us,
+        ii_us: ii_cycles as f64 * cycle_us,
+        throughput_hz: cfg.clock_mhz * 1e6 / ii_cycles as f64,
+    })
+}
+
+/// §3's *unimplemented* future-work option, built here as an extension:
+/// "multiple inferences can be cached during static mode when the
+/// initiation interval of a single RNN block is less than its latency,
+/// thus allowing for higher throughput."
+///
+/// A single block's own II is bounded by DSP reuse (`R` under resource
+/// strategy, 1 under latency strategy) while its *latency* is the full
+/// `cell_II`; the gap lets `cell_II / block_II` distinct inferences
+/// time-share the block.  Returns the improved timing plus the number of
+/// in-flight inferences the block state cache must hold.
+pub fn schedule_cached_static(
+    arch: &Arch,
+    cfg: &HlsConfig,
+) -> anyhow::Result<(DesignTiming, u64)> {
+    anyhow::ensure!(
+        cfg.mode == RnnMode::Static,
+        "inference caching applies to static mode only"
+    );
+    let base = schedule(arch, cfg)?;
+    let cell = cell_ii(arch, cfg);
+    let block_ii = match cfg.strategy {
+        Strategy::Latency => 1,
+        Strategy::Resource => cfg.reuse.max_factor() as u64,
+    };
+    let in_flight = (cell / block_ii).max(1);
+    let ii_cycles = (arch.seq_len as u64 * cell).div_ceil(in_flight);
+    let cycle_us = cfg.cycle_us();
+    Ok((
+        DesignTiming {
+            latency_cycles: base.latency_cycles, // per-inference latency unchanged
+            ii_cycles,
+            latency_us: base.latency_us,
+            ii_us: ii_cycles as f64 * cycle_us,
+            throughput_hz: cfg.clock_mhz * 1e6 / ii_cycles as f64,
+        },
+        in_flight,
+    ))
+}
+
+/// Min/max latency in µs over the paper's width band (the format of
+/// Tables 2–4).
+pub fn latency_band(
+    arch: &Arch,
+    reuse: ReuseFactor,
+    strategy: Strategy,
+) -> anyhow::Result<(f64, f64)> {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for width in [WIDTH_LO, WIDTH_HI] {
+        let integer = 6.min(width - 1).max(1);
+        let mut cfg = HlsConfig::paper_default(
+            crate::fixed::FixedSpec::new(width, integer),
+            reuse,
+        );
+        cfg.strategy = strategy;
+        let t = schedule(arch, &cfg)?;
+        lo = lo.min(t.latency_us);
+        hi = hi.max(t.latency_us);
+    }
+    Ok((lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::model::{zoo, Cell};
+
+    fn cfg(
+        spec: FixedSpec,
+        reuse: ReuseFactor,
+        strategy: Strategy,
+        mode: RnnMode,
+    ) -> HlsConfig {
+        HlsConfig {
+            spec,
+            reuse,
+            strategy,
+            mode,
+            clock_mhz: 200.0,
+        }
+    }
+
+    #[test]
+    fn adder_tree_depths() {
+        assert_eq!(adder_tree_depth(1), 0);
+        assert_eq!(adder_tree_depth(2), 1);
+        assert_eq!(adder_tree_depth(26), 5);
+        assert_eq!(adder_tree_depth(127), 7);
+        assert_eq!(adder_tree_depth(128), 7);
+        assert_eq!(adder_tree_depth(129), 8);
+    }
+
+    /// Table 5 anchor: top-tagging static II ≈ 315 cycles (GRU) with
+    /// latency strategy; latency ≈ 1.7 µs.
+    #[test]
+    fn top_static_ii_near_paper() {
+        let a = zoo::arch("top", Cell::Gru).unwrap();
+        let c = cfg(
+            FixedSpec::new(16, 6),
+            ReuseFactor::fully_parallel(),
+            Strategy::Latency,
+            RnnMode::Static,
+        );
+        let t = schedule(&a, &c).unwrap();
+        // paper: II 315, latency 340 (1.7 µs)
+        assert!(
+            (t.ii_cycles as i64 - 315).abs() <= 16,
+            "II {} vs paper 315",
+            t.ii_cycles
+        );
+        assert!(
+            (t.latency_us - 1.7).abs() < 0.2,
+            "latency {} vs paper 1.7",
+            t.latency_us
+        );
+    }
+
+    /// Table 5: non-static II collapses to 1 with latency strategy.
+    #[test]
+    fn top_nonstatic_ii_is_one() {
+        let a = zoo::arch("top", Cell::Lstm).unwrap();
+        let c = cfg(
+            FixedSpec::new(10, 6),
+            ReuseFactor::fully_parallel(),
+            Strategy::Latency,
+            RnnMode::NonStatic,
+        );
+        let t = schedule(&a, &c).unwrap();
+        assert_eq!(t.ii_cycles, 1);
+        // >300x throughput win over static (paper: "more than 300").
+        let stat = schedule(
+            &a,
+            &cfg(
+                FixedSpec::new(10, 6),
+                ReuseFactor::fully_parallel(),
+                Strategy::Latency,
+                RnnMode::Static,
+            ),
+        )
+        .unwrap();
+        assert!(stat.ii_cycles / t.ii_cycles > 300);
+    }
+
+    /// Table 2 anchors: top-tagging resource-strategy minimum latencies
+    /// grow ≈ 1 cycle/step per reuse unit: 2.4 µs @ (6,5) → 8.0 @ (60,60).
+    #[test]
+    fn top_resource_latency_tracks_reuse() {
+        let a = zoo::arch("top", Cell::Gru).unwrap();
+        let paper = [
+            (ReuseFactor::new(6, 5), 2.4),
+            (ReuseFactor::new(12, 10), 3.2),
+            (ReuseFactor::new(30, 20), 5.0),
+            (ReuseFactor::new(60, 60), 8.0),
+        ];
+        for (reuse, want_us) in paper {
+            let c = cfg(
+                FixedSpec::new(8, 6),
+                reuse,
+                Strategy::Resource,
+                RnnMode::Static,
+            );
+            let got = schedule(&a, &c).unwrap().latency_us;
+            let err = (got - want_us).abs() / want_us;
+            assert!(
+                err < 0.15,
+                "R={} got {got:.2} µs vs paper {want_us} µs",
+                reuse.label()
+            );
+        }
+    }
+
+    /// Table 4 anchors: QuickDraw minimum latencies.
+    #[test]
+    fn quickdraw_resource_latency_matches_table4() {
+        let a = zoo::arch("quickdraw", Cell::Gru).unwrap();
+        let paper = [
+            (ReuseFactor::new(48, 32), 35.4),
+            (ReuseFactor::new(96, 64), 59.4),
+            (ReuseFactor::new(192, 128), 107.0),
+            (ReuseFactor::new(384, 384), 203.0),
+        ];
+        for (reuse, want_us) in paper {
+            let c = cfg(
+                FixedSpec::new(8, 6),
+                reuse,
+                Strategy::Resource,
+                RnnMode::Static,
+            );
+            let got = schedule(&a, &c).unwrap().latency_us;
+            let err = (got - want_us).abs() / want_us;
+            assert!(
+                err < 0.1,
+                "R={} got {got:.2} µs vs paper {want_us} µs",
+                reuse.label()
+            );
+        }
+    }
+
+    /// Table 3 anchors: flavor tagging (±20% — the head model is coarser).
+    #[test]
+    fn flavor_resource_latency_near_table3() {
+        let a = zoo::arch("flavor", Cell::Gru).unwrap();
+        let paper = [
+            (ReuseFactor::new(48, 40), 6.7),
+            (ReuseFactor::new(90, 60), 9.8),
+            (ReuseFactor::new(120, 120), 11.5),
+            (ReuseFactor::new(240, 240), 20.5),
+        ];
+        for (reuse, want_us) in paper {
+            let c = cfg(
+                FixedSpec::new(8, 6),
+                reuse,
+                Strategy::Resource,
+                RnnMode::Static,
+            );
+            let got = schedule(&a, &c).unwrap().latency_us;
+            let err = (got - want_us).abs() / want_us;
+            assert!(
+                err < 0.2,
+                "R={} got {got:.2} µs vs paper {want_us} µs",
+                reuse.label()
+            );
+        }
+    }
+
+    #[test]
+    fn latency_strategy_rejected_for_large_models() {
+        let a = zoo::arch("flavor", Cell::Lstm).unwrap(); // 67k params
+        let c = cfg(
+            FixedSpec::new(16, 6),
+            ReuseFactor::fully_parallel(),
+            Strategy::Latency,
+            RnnMode::Static,
+        );
+        assert!(schedule(&a, &c).is_err());
+    }
+
+    #[test]
+    fn width_increases_latency_in_resource_strategy() {
+        let a = zoo::arch("top", Cell::Lstm).unwrap();
+        let narrow = cfg(
+            FixedSpec::new(8, 6),
+            ReuseFactor::new(6, 5),
+            Strategy::Resource,
+            RnnMode::Static,
+        );
+        let wide = cfg(
+            FixedSpec::new(26, 6),
+            ReuseFactor::new(6, 5),
+            Strategy::Resource,
+            RnnMode::Static,
+        );
+        let t_n = schedule(&a, &narrow).unwrap();
+        let t_w = schedule(&a, &wide).unwrap();
+        assert!(t_w.latency_cycles > t_n.latency_cycles);
+        // Table 2 band: max − min ≈ 4.1 µs for top tagging.
+        let band = t_w.latency_us - t_n.latency_us;
+        assert!((band - 4.1).abs() < 0.6, "band {band:.2} µs vs paper 4.1");
+    }
+
+    #[test]
+    fn ii_never_exceeds_latency() {
+        for a in zoo::all_archs() {
+            for mode in [RnnMode::Static, RnnMode::NonStatic] {
+                let c = cfg(
+                    FixedSpec::new(16, 6),
+                    ReuseFactor::new(12, 10),
+                    Strategy::Resource,
+                    mode,
+                );
+                let t = schedule(&a, &c).unwrap();
+                assert!(t.ii_cycles <= t.latency_cycles, "{} {mode:?}", a.key());
+            }
+        }
+    }
+
+    /// Extension (§3 future work): cached static mode must improve II
+    /// without changing per-inference latency, bounded by non-static II.
+    #[test]
+    fn cached_static_between_static_and_nonstatic() {
+        for a in zoo::all_archs() {
+            let c = cfg(
+                FixedSpec::new(16, 6),
+                ReuseFactor::new(12, 10),
+                Strategy::Resource,
+                RnnMode::Static,
+            );
+            let plain = schedule(&a, &c).unwrap();
+            let (cached, in_flight) = schedule_cached_static(&a, &c).unwrap();
+            assert!(in_flight >= 1);
+            assert_eq!(cached.latency_cycles, plain.latency_cycles);
+            assert!(cached.ii_cycles <= plain.ii_cycles, "{}", a.key());
+            let mut nc = c;
+            nc.mode = RnnMode::NonStatic;
+            let non = schedule(&a, &nc).unwrap();
+            assert!(
+                cached.ii_cycles >= non.ii_cycles,
+                "{}: cached {} vs non-static {}",
+                a.key(),
+                cached.ii_cycles,
+                non.ii_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn cached_static_rejects_nonstatic_mode() {
+        let a = zoo::arch("top", Cell::Gru).unwrap();
+        let c = cfg(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(6, 5),
+            Strategy::Resource,
+            RnnMode::NonStatic,
+        );
+        assert!(schedule_cached_static(&a, &c).is_err());
+    }
+
+    #[test]
+    fn latency_band_is_ordered() {
+        let a = zoo::arch("top", Cell::Gru).unwrap();
+        let (lo, hi) =
+            latency_band(&a, ReuseFactor::new(6, 5), Strategy::Resource).unwrap();
+        assert!(lo <= hi);
+        assert!(lo > 0.0);
+    }
+}

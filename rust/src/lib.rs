@@ -1,0 +1,33 @@
+//! # rnn-hls — ultra-low-latency RNN inference, reproduced in software
+//!
+//! Reproduction of *"Ultra-low latency recurrent neural network inference
+//! on FPGAs for physics applications with hls4ml"* (Khoda et al., 2022) as
+//! a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the request-path system: a trigger-style
+//!   serving coordinator ([`coordinator`]), a PJRT runtime that executes
+//!   the AOT-compiled JAX/Pallas models ([`runtime`]), a bit-accurate
+//!   `ap_fixed` engine that plays the role of the synthesized FPGA
+//!   datapath ([`fixed`], [`nn`]), and the analytical HLS
+//!   latency/resource model standing in for Vivado HLS ([`hls`]).
+//! * **L2 (python/compile)** — the benchmark models in JAX, trained at
+//!   build time and AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — fused Pallas LSTM/GRU kernels.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! step that invokes it.
+//!
+//! See `DESIGN.md` for the experiment index (every table and figure of
+//! the paper mapped to a module and bench target) and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod hls;
+pub mod model;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod util;

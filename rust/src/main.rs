@@ -1,0 +1,434 @@
+//! `rnn-hls` launcher: serve | report | sweep | golden | list.
+//!
+//! ```text
+//! rnn-hls report all                    # regenerate every table + figure
+//! rnn-hls report fig2 --samples 500
+//! rnn-hls serve --model top_gru --engine pjrt --rate 20000
+//! rnn-hls sweep --benchmark top --width 16
+//! rnn-hls golden                        # PJRT vs python golden outputs
+//! ```
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use rnn_hls::config::{Fig2Config, SweepConfig};
+use rnn_hls::coordinator::{
+    BatcherConfig, Server, ServerConfig, SourceConfig,
+};
+use rnn_hls::data::generators;
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::hls::{paper, HlsConfig, HlsDesign, ReuseFactor, RnnMode};
+use rnn_hls::model::Weights;
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+use rnn_hls::report::{fig2, resources, tables, throughput};
+use rnn_hls::runtime::{manifest, Runtime};
+use rnn_hls::util::cli::Command;
+
+fn main() {
+    if let Err(err) = run() {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, rest)) => (s.as_str(), rest.to_vec()),
+        None => {
+            println!("{}", usage());
+            return Ok(());
+        }
+    };
+    match sub {
+        "report" => cmd_report(&rest),
+        "serve" => cmd_serve(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "golden" => cmd_golden(&rest),
+        "list" => cmd_list(&rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n\n{}", usage()),
+    }
+}
+
+fn usage() -> String {
+    "rnn-hls — ultra-low-latency RNN inference (hls4ml paper reproduction)\n\
+     \n\
+     Subcommands:\n\
+       report <what>   regenerate paper tables/figures\n\
+                       what: table1|table2|table3|table4|table5|fig2|\n\
+                             fig345|fig6|throughput|all\n\
+       serve           run the trigger-style serving coordinator\n\
+       sweep           design-space sweep over the HLS model\n\
+       golden          cross-check PJRT outputs vs python goldens\n\
+       list            list models available in the artifacts manifest\n\
+     \n\
+     Run `rnn-hls <subcommand> --help` for options."
+        .to_string()
+}
+
+fn artifacts_from(args: &rnn_hls::util::cli::Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(manifest::default_artifacts_dir)
+}
+
+// ---------------------------------------------------------------- report
+
+fn cmd_report(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("report", "regenerate paper tables/figures")
+        .opt("artifacts", "artifacts directory", None)
+        .opt("out", "directory for CSV output", Some("reports"))
+        .opt("samples", "Fig.2 evaluation samples per model", Some("600"))
+        .opt("only", "Fig.2: single model key", None)
+        .flag("no-csv", "skip CSV files");
+    let args = cmd.parse(rest)?;
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let artifacts = artifacts_from(&args);
+    let out_dir = if args.has("no-csv") {
+        None
+    } else {
+        Some(PathBuf::from(args.get_or("out", "reports")))
+    };
+    let out = out_dir.as_deref();
+
+    let run_fig2 = |keys: Option<Vec<String>>| -> anyhow::Result<()> {
+        let mut cfg = Fig2Config {
+            samples: args.parse_num("samples", 600usize)?,
+            ..Default::default()
+        };
+        if let Some(keys) = keys {
+            cfg.keys = keys;
+        }
+        let points = fig2::run(&artifacts, &cfg, out)?;
+        for key in &cfg.keys {
+            match fig2::shape_check(&points, key) {
+                Ok(()) => println!("fig2 shape check OK: {key}"),
+                Err(e) => println!("fig2 shape check WARN: {e}"),
+            }
+        }
+        Ok(())
+    };
+
+    match what {
+        "table1" => {
+            tables::table1(out)?;
+        }
+        "table2" => {
+            tables::latency_tables("top", out)?;
+        }
+        "table3" => {
+            tables::latency_tables("flavor", out)?;
+        }
+        "table4" => {
+            tables::latency_tables("quickdraw", out)?;
+        }
+        "table5" => {
+            tables::table5(out)?;
+        }
+        "fig2" => {
+            let keys = args.get("only").map(|k| vec![k.to_string()]);
+            run_fig2(keys)?;
+        }
+        "fig345" | "fig3" | "fig4" | "fig5" => {
+            for benchmark in ["top", "flavor", "quickdraw"] {
+                resources::figs345(&SweepConfig::paper(benchmark), out)?;
+            }
+        }
+        "fig6" => {
+            resources::fig6(out)?;
+        }
+        "throughput" => {
+            let report = throughput::run(&artifacts, 2_000, out)?;
+            match throughput::shape_check(&report) {
+                Ok(()) => println!("throughput shape check OK"),
+                Err(e) => println!("throughput shape check WARN: {e}"),
+            }
+        }
+        "all" => {
+            tables::table1(out)?;
+            tables::latency_tables("top", out)?;
+            tables::latency_tables("flavor", out)?;
+            tables::latency_tables("quickdraw", out)?;
+            tables::table5(out)?;
+            for benchmark in ["top", "flavor", "quickdraw"] {
+                resources::figs345(&SweepConfig::paper(benchmark), out)?;
+            }
+            resources::fig6(out)?;
+            run_fig2(None)?;
+            let report = throughput::run(&artifacts, 2_000, out)?;
+            match throughput::shape_check(&report) {
+                Ok(()) => println!("throughput shape check OK"),
+                Err(e) => println!("throughput shape check WARN: {e}"),
+            }
+        }
+        other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- serve
+
+struct PjrtRunner {
+    runtime: Runtime,
+    key: String,
+    buckets: Vec<usize>,
+}
+
+impl rnn_hls::coordinator::BatchRunner for PjrtRunner {
+    fn max_batch(&self) -> usize {
+        *self.buckets.last().expect("non-empty buckets")
+    }
+    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let bucket = self
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(self.max_batch());
+        let model = self.runtime.model(&self.key, bucket)?;
+        model.run_batch(xs, n)
+    }
+}
+
+struct EngineRunner {
+    engine: Box<dyn Engine>,
+    stride: usize,
+}
+
+impl rnn_hls::coordinator::BatchRunner for EngineRunner {
+    fn max_batch(&self) -> usize {
+        100
+    }
+    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok((0..n)
+            .map(|i| {
+                self.engine
+                    .forward(&xs[i * self.stride..(i + 1) * self.stride])
+            })
+            .collect())
+    }
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "trigger-style serving demo")
+        .opt("artifacts", "artifacts directory", None)
+        .opt("model", "model key", Some("top_gru"))
+        .opt("engine", "pjrt | fixed | float", Some("pjrt"))
+        .opt("rate", "event rate (events/s)", Some("20000"))
+        .opt("events", "number of events", Some("50000"))
+        .opt("workers", "engine worker threads", Some("2"))
+        .opt("max-batch", "dynamic batcher size cap", Some("10"))
+        .opt("max-wait-us", "batching deadline (µs)", Some("200"))
+        .opt("queue", "queue capacity (drop beyond)", Some("4096"))
+        .opt("width", "fixed engine: total bits", Some("16"))
+        .opt("integer", "fixed engine: integer bits", Some("6"))
+        .flag("fixed-interval", "fixed (non-Poisson) arrivals");
+    let args = cmd.parse(rest)?;
+    let artifacts = artifacts_from(&args);
+    let key = args.get_or("model", "top_gru").to_string();
+    let engine_kind = args.get_or("engine", "pjrt").to_string();
+    let width: u32 = args.parse_num("width", 16)?;
+    let integer: u32 = args.parse_num("integer", 6)?;
+
+    let benchmark = key.split('_').next().unwrap_or(&key).to_string();
+    let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
+    let cfg = ServerConfig {
+        workers: args.parse_num("workers", 2usize)?,
+        queue_capacity: args.parse_num("queue", 4096usize)?,
+        batcher: BatcherConfig {
+            max_batch: args.parse_num("max-batch", 10usize)?,
+            max_wait: Duration::from_micros(args.parse_num("max-wait-us", 200u64)?),
+        },
+        source: SourceConfig {
+            rate_hz: args.parse_num("rate", 20_000.0f64)?,
+            poisson: !args.has("fixed-interval"),
+            n_events: args.parse_num("events", 50_000usize)?,
+        },
+    };
+    println!(
+        "serving {key} via {engine_kind} engine: rate {} ev/s, {} events, \
+         {} workers, batch<= {}, wait {} µs",
+        cfg.source.rate_hz,
+        cfg.source.n_events,
+        cfg.workers,
+        cfg.batcher.max_batch,
+        cfg.batcher.max_wait.as_micros()
+    );
+
+    let report = match engine_kind.as_str() {
+        "pjrt" => {
+            let artifacts = artifacts.clone();
+            let key2 = key.clone();
+            Server::run(cfg, generator, move || {
+                let runtime = Runtime::new(&artifacts)?;
+                let buckets = runtime.manifest().batch_buckets(&key2)?;
+                // Precompile every bucket before signalling ready (§Perf:
+                // keeps lazy compilation out of the serving percentiles).
+                for &b in &buckets {
+                    runtime.model(&key2, b)?;
+                }
+                Ok(Box::new(PjrtRunner {
+                    runtime,
+                    key: key2.clone(),
+                    buckets,
+                }) as Box<dyn rnn_hls::coordinator::BatchRunner>)
+            })?
+        }
+        "fixed" | "float" => {
+            let weights = Weights::load(
+                artifacts.join("weights").join(format!("{key}.json")),
+            )?;
+            let stride = weights.arch.seq_len * weights.arch.input_size;
+            let fixed = engine_kind == "fixed";
+            Server::run(cfg, generator, move || {
+                let engine: Box<dyn Engine> = if fixed {
+                    Box::new(FixedEngine::new(
+                        &weights,
+                        QuantConfig::ptq(FixedSpec::new(width, integer)),
+                    )?)
+                } else {
+                    Box::new(FloatEngine::new(&weights)?)
+                };
+                Ok(Box::new(EngineRunner { engine, stride })
+                    as Box<dyn rnn_hls::coordinator::BatchRunner>)
+            })?
+        }
+        other => anyhow::bail!("unknown engine {other:?} (pjrt|fixed|float)"),
+    };
+    println!("{}", report.render());
+    Ok(())
+}
+
+// ----------------------------------------------------------------- sweep
+
+fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("sweep", "HLS design-space sweep")
+        .opt("benchmark", "top | flavor | quickdraw", Some("top"))
+        .opt("cell", "lstm | gru | both", Some("both"))
+        .opt("width", "total bits", Some("16"))
+        .opt("integer", "integer bits", Some("6"))
+        .opt("mode", "static | nonstatic | both", Some("static"));
+    let args = cmd.parse(rest)?;
+    let benchmark = args.get_or("benchmark", "top").to_string();
+    let width: u32 = args.parse_num("width", 16)?;
+    let integer: u32 = args.parse_num("integer", 6)?;
+    let cells: Vec<rnn_hls::model::Cell> = match args.get_or("cell", "both") {
+        "lstm" => vec![rnn_hls::model::Cell::Lstm],
+        "gru" => vec![rnn_hls::model::Cell::Gru],
+        _ => vec![rnn_hls::model::Cell::Gru, rnn_hls::model::Cell::Lstm],
+    };
+    let modes: Vec<RnnMode> = match args.get_or("mode", "static") {
+        "nonstatic" => vec![RnnMode::NonStatic],
+        "both" => vec![RnnMode::Static, RnnMode::NonStatic],
+        _ => vec![RnnMode::Static],
+    };
+    for cell in cells {
+        let arch = rnn_hls::model::zoo::arch(&benchmark, cell)?;
+        for mode in &modes {
+            for reuse in paper::reuse_grid(&benchmark, cell) {
+                let mut cfg = HlsConfig::paper_default(
+                    FixedSpec::new(width, integer.min(width - 1)),
+                    reuse,
+                );
+                cfg.mode = *mode;
+                let report = HlsDesign::new(arch.clone(), cfg).synthesize()?;
+                println!("{}", report.summary());
+            }
+            // Latency strategy where synthesizable.
+            let mut cfg = HlsConfig::paper_default(
+                FixedSpec::new(width, integer.min(width - 1)),
+                ReuseFactor::fully_parallel(),
+            );
+            cfg.strategy = rnn_hls::hls::Strategy::Latency;
+            cfg.mode = *mode;
+            match HlsDesign::new(arch.clone(), cfg).synthesize() {
+                Ok(report) => println!("{}", report.summary()),
+                Err(e) => println!("{}: {e}", arch.key()),
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- golden
+
+fn cmd_golden(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("golden", "PJRT vs python golden outputs")
+        .opt("artifacts", "artifacts directory", None)
+        .opt("tol", "max abs deviation", Some("1e-4"));
+    let args = cmd.parse(rest)?;
+    let artifacts = artifacts_from(&args);
+    let tol: f64 = args.parse_num("tol", 1e-4f64)?;
+    let runtime = Runtime::new(&artifacts)?;
+
+    let mut worst: f64 = 0.0;
+    let entries = runtime.manifest().models.clone();
+    for entry in &entries {
+        let golden_text =
+            std::fs::read_to_string(runtime.manifest().path(&entry.golden))?;
+        let golden = rnn_hls::util::json::parse(&golden_text)?;
+        let n = golden.req("n")?.as_usize()?;
+        let expected: Vec<Vec<f32>> = golden
+            .req("outputs")?
+            .as_array()?
+            .iter()
+            .map(|row| row.as_f32_vec())
+            .collect::<Result<_, _>>()?;
+        let ds = rnn_hls::data::Dataset::load(
+            runtime.manifest().path(&entry.dataset),
+        )?;
+        let model = runtime.model(&entry.key, 10)?;
+        let mut xs = Vec::new();
+        for i in 0..n {
+            xs.extend_from_slice(ds.sample(i));
+        }
+        let got = model.run_batch(&xs, n)?;
+        let mut max_dev: f64 = 0.0;
+        for (g_row, e_row) in got.iter().zip(&expected) {
+            for (g, e) in g_row.iter().zip(e_row) {
+                max_dev = max_dev.max((g - e).abs() as f64);
+            }
+        }
+        println!(
+            "{:<16} max |pjrt - golden| = {max_dev:.2e} {}",
+            entry.key,
+            if max_dev < tol { "OK" } else { "FAIL" }
+        );
+        worst = worst.max(max_dev);
+    }
+    anyhow::ensure!(
+        worst < tol,
+        "golden check failed: worst deviation {worst:.2e} >= {tol:.2e}"
+    );
+    println!("golden check passed (worst {worst:.2e})");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ list
+
+fn cmd_list(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("list", "list models in the manifest")
+        .opt("artifacts", "artifacts directory", None);
+    let args = cmd.parse(rest)?;
+    let m = rnn_hls::runtime::Manifest::load(artifacts_from(&args))?;
+    for model in &m.models {
+        println!(
+            "{:<16} seq {:>3} in {:>2} hidden {:>3} out {} batches {:?}",
+            model.key,
+            model.seq_len,
+            model.input_size,
+            model.hidden_size,
+            model.output_size,
+            model.hlo.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

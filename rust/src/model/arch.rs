@@ -1,0 +1,188 @@
+//! Architecture descriptors, mirroring `python/compile/model.py::Arch`.
+
+use crate::util::json::Value;
+
+/// Recurrent cell type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Cell {
+    Lstm,
+    Gru,
+}
+
+impl Cell {
+    /// Number of packed gates: the 4 matmuls of Eq. 1 for LSTM, 3 for GRU
+    /// — the source of the paper's "GRU uses ~1/4 less resources".
+    pub fn gates(&self) -> usize {
+        match self {
+            Cell::Lstm => 4,
+            Cell::Gru => 3,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Cell::Lstm => "lstm",
+            Cell::Gru => "gru",
+        }
+    }
+}
+
+impl std::str::FromStr for Cell {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "lstm" => Ok(Cell::Lstm),
+            "gru" => Ok(Cell::Gru),
+            other => anyhow::bail!("unknown cell {other:?} (want lstm|gru)"),
+        }
+    }
+}
+
+/// Final-layer activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputActivation {
+    /// Binary classifier (top tagging).
+    Sigmoid,
+    /// Multi-class (flavor tagging, QuickDraw).
+    Softmax,
+}
+
+impl std::str::FromStr for OutputActivation {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sigmoid" => Ok(OutputActivation::Sigmoid),
+            "softmax" => Ok(OutputActivation::Softmax),
+            other => anyhow::bail!("unknown output activation {other:?}"),
+        }
+    }
+}
+
+/// One benchmark model: a row of Table 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arch {
+    /// Benchmark name: "top" | "flavor" | "quickdraw".
+    pub name: String,
+    pub cell: Cell,
+    pub seq_len: usize,
+    pub input_size: usize,
+    pub hidden_size: usize,
+    /// Hidden dense-head layer sizes (Table 1 "Dense layer sizes").
+    pub dense_sizes: Vec<usize>,
+    pub output_size: usize,
+    pub output_activation: OutputActivation,
+}
+
+impl Arch {
+    /// `"{name}_{cell}"`, e.g. `top_gru` — the artifact key.
+    pub fn key(&self) -> String {
+        format!("{}_{}", self.name, self.cell.label())
+    }
+
+    /// Parse from the `"arch"` object of the weights/manifest JSON.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            cell: v.req("cell")?.as_str()?.parse()?,
+            seq_len: v.req("seq_len")?.as_usize()?,
+            input_size: v.req("input_size")?.as_usize()?,
+            hidden_size: v.req("hidden_size")?.as_usize()?,
+            dense_sizes: v.req("dense_sizes")?.as_usize_vec()?,
+            output_size: v.req("output_size")?.as_usize()?,
+            output_activation: v.req("output_activation")?.as_str()?.parse()?,
+        })
+    }
+
+    /// Trainable parameters in the recurrent layer (Table 1 LSTM/GRU
+    /// columns).  The GRU follows Keras `reset_after=True`, whose two
+    /// bias rows give the paper's 1680/46080/51072 counts.
+    pub fn rnn_param_count(&self) -> usize {
+        let (i, h) = (self.input_size, self.hidden_size);
+        match self.cell {
+            Cell::Lstm => 4 * (i * h + h * h + h),
+            Cell::Gru => 3 * (i * h + h * h) + 2 * 3 * h,
+        }
+    }
+
+    /// Trainable parameters in the dense head (Table 1 "Non-RNN layers").
+    pub fn non_rnn_param_count(&self) -> usize {
+        let mut total = 0;
+        let mut prev = self.hidden_size;
+        for &size in self.dense_sizes.iter().chain([self.output_size].iter()) {
+            total += prev * size + size;
+            prev = size;
+        }
+        total
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.rnn_param_count() + self.non_rnn_param_count()
+    }
+
+    /// Multiplications in one recurrent state update: the kernel matmul
+    /// (`I×gH`) and the recurrent-kernel matmul (`H×gH`), reported
+    /// separately because hls4ml gives each its own reuse factor
+    /// (the `R = (X, Y)` pairs of Tables 2–4).
+    pub fn rnn_mults_per_step(&self) -> (usize, usize) {
+        let g = self.cell.gates();
+        (
+            self.input_size * g * self.hidden_size,
+            self.hidden_size * g * self.hidden_size,
+        )
+    }
+
+    /// Number of classes for dataset purposes (1 == binary/sigmoid).
+    pub fn n_classes(&self) -> usize {
+        self.output_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn key_format() {
+        assert_eq!(zoo::arch("top", Cell::Gru).unwrap().key(), "top_gru");
+    }
+
+    #[test]
+    fn cell_from_str() {
+        assert_eq!("LSTM".parse::<Cell>().unwrap(), Cell::Lstm);
+        assert_eq!("gru".parse::<Cell>().unwrap(), Cell::Gru);
+        assert!("rnn".parse::<Cell>().is_err());
+    }
+
+    #[test]
+    fn gates_ratio_is_3_to_4() {
+        assert_eq!(Cell::Gru.gates(), 3);
+        assert_eq!(Cell::Lstm.gates(), 4);
+    }
+
+    #[test]
+    fn mults_per_step_top() {
+        let a = zoo::arch("top", Cell::Lstm).unwrap();
+        let (k, r) = a.rnn_mults_per_step();
+        assert_eq!(k, 6 * 80); // 480
+        assert_eq!(r, 20 * 80); // 1600
+    }
+
+    #[test]
+    fn arch_from_json() {
+        let v = crate::util::json::parse(
+            r#"{"name":"top","cell":"gru","seq_len":20,"input_size":6,
+                "hidden_size":20,"dense_sizes":[64],"output_size":1,
+                "output_activation":"sigmoid"}"#,
+        )
+        .unwrap();
+        let a = Arch::from_json(&v).unwrap();
+        assert_eq!(a, zoo::arch("top", Cell::Gru).unwrap());
+    }
+
+    #[test]
+    fn arch_from_json_rejects_missing() {
+        let v = crate::util::json::parse(r#"{"name":"top"}"#).unwrap();
+        assert!(Arch::from_json(&v).is_err());
+    }
+}

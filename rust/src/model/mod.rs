@@ -1,0 +1,11 @@
+//! Model zoo: the six benchmark architectures of Table 1 and their
+//! trained weights (loaded from `artifacts/weights/*.json`, written by
+//! `python/compile/train.py`).
+
+pub mod arch;
+pub mod weights;
+pub mod zoo;
+
+pub use arch::{Arch, Cell, OutputActivation};
+pub use weights::{Tensor, Weights};
+pub use zoo::{all_archs, arch, BENCHMARKS};

@@ -1,0 +1,232 @@
+//! Trained-weight loading from the JSON interchange format written by
+//! `python/compile/model.py::params_to_json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{parse, Value};
+
+use super::arch::Arch;
+
+/// A dense tensor: row-major f32 data + shape.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// 2-D accessor (row-major).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let shape = v.req("shape")?.as_usize_vec()?;
+        let data = v.req("data")?.as_f32_vec()?;
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "tensor shape {:?} != data length {}",
+            shape,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+}
+
+/// A trained model: architecture + named weight tensors.
+///
+/// Layer names: `rnn` (tensors `w`, `u`, `b`), `dense0..N` (`w`, `b`),
+/// `out` (`w`, `b`) — the layout asserted by `test_params_json_roundtrip`
+/// on the python side.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub arch: Arch,
+    layers: BTreeMap<String, BTreeMap<String, Tensor>>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading weights {}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let doc = parse(text)?;
+        let arch = Arch::from_json(doc.req("arch")?)?;
+        let declared = doc.req("param_count")?.as_usize()?;
+        let mut layers: BTreeMap<String, BTreeMap<String, Tensor>> =
+            BTreeMap::new();
+        for entry in doc.req("layers")?.as_array()? {
+            let name = entry.req("name")?.as_str()?.to_string();
+            let mut tensors = BTreeMap::new();
+            for (key, val) in entry.as_object()? {
+                if key == "name" {
+                    continue;
+                }
+                tensors.insert(key.clone(), Tensor::from_json(val)?);
+            }
+            anyhow::ensure!(
+                layers.insert(name.clone(), tensors).is_none(),
+                "duplicate layer {name:?}"
+            );
+        }
+        let w = Self { arch, layers };
+        let counted = w.param_count();
+        anyhow::ensure!(
+            counted == declared,
+            "weights param count {counted} != declared {declared}"
+        );
+        anyhow::ensure!(
+            counted == w.arch.param_count(),
+            "weights param count {counted} != arch {} count {}",
+            w.arch.key(),
+            w.arch.param_count()
+        );
+        w.validate_shapes()?;
+        Ok(w)
+    }
+
+    /// Fetch one tensor; layer/tensor names are a typed API error if wrong.
+    pub fn tensor(&self, layer: &str, name: &str) -> anyhow::Result<&Tensor> {
+        self.layers
+            .get(layer)
+            .and_then(|l| l.get(name))
+            .ok_or_else(|| anyhow::anyhow!("no tensor {layer}/{name}"))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .values()
+            .flat_map(|l| l.values())
+            .map(Tensor::numel)
+            .sum()
+    }
+
+    fn validate_shapes(&self) -> anyhow::Result<()> {
+        let a = &self.arch;
+        let g = a.cell.gates();
+        let (i, h) = (a.input_size, a.hidden_size);
+        let w = self.tensor("rnn", "w")?;
+        anyhow::ensure!(w.shape == [i, g * h], "rnn/w shape {:?}", w.shape);
+        let u = self.tensor("rnn", "u")?;
+        anyhow::ensure!(u.shape == [h, g * h], "rnn/u shape {:?}", u.shape);
+        let b = self.tensor("rnn", "b")?;
+        let want_b: &[usize] = match a.cell {
+            super::arch::Cell::Lstm => &[4 * h],
+            super::arch::Cell::Gru => &[2, 3 * h],
+        };
+        anyhow::ensure!(b.shape == want_b, "rnn/b shape {:?}", b.shape);
+
+        let mut prev = h;
+        for (idx, &size) in a.dense_sizes.iter().enumerate() {
+            let w = self.tensor(&format!("dense{idx}"), "w")?;
+            anyhow::ensure!(w.shape == [prev, size], "dense{idx}/w {:?}", w.shape);
+            prev = size;
+        }
+        let ow = self.tensor("out", "w")?;
+        anyhow::ensure!(
+            ow.shape == [prev, a.output_size],
+            "out/w shape {:?}",
+            ow.shape
+        );
+        Ok(())
+    }
+
+    /// Dynamic range of all weights — drives Fig. 2 commentary (how many
+    /// integer bits the weights themselves need).
+    pub fn weight_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for t in self.layers.values().flat_map(|l| l.values()) {
+            for &v in &t.data {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    /// A hand-built consistent scaled-down model doc used across the nn /
+    /// integration tests: I=2, H=1, dense [2], out 1.
+    /// LSTM params: 4*(2+1+1)=16; head: 1*2+2 + 2*1+1 = 7 → 23.
+    pub fn tiny_lstm_json() -> String {
+        r#"{
+            "arch": {
+                "name": "top", "cell": "lstm", "seq_len": 3,
+                "input_size": 2, "hidden_size": 1, "dense_sizes": [2],
+                "output_size": 1, "output_activation": "sigmoid"
+            },
+            "param_count": 23,
+            "layers": [
+                {"name": "rnn",
+                 "w": {"shape": [2, 4],
+                       "data": [0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1]},
+                 "u": {"shape": [1, 4], "data": [0.2, 0.2, 0.2, 0.2]},
+                 "b": {"shape": [4], "data": [0.0, 1.0, 0.0, 0.0]}},
+                {"name": "dense0",
+                 "w": {"shape": [1, 2], "data": [0.3, -0.3]},
+                 "b": {"shape": [2], "data": [0.0, 0.0]}},
+                {"name": "out",
+                 "w": {"shape": [2, 1], "data": [0.5, -0.5]},
+                 "b": {"shape": [1], "data": [0.1]}}
+            ]
+        }"#
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::tiny_lstm_json;
+    use super::*;
+
+    #[test]
+    fn loads_consistent_doc() {
+        let w = Weights::from_json(&tiny_lstm_json()).unwrap();
+        assert_eq!(w.param_count(), 23);
+        assert_eq!(w.tensor("rnn", "b").unwrap().data[1], 1.0);
+        assert_eq!(w.tensor("out", "w").unwrap().at2(1, 0), -0.5);
+    }
+
+    #[test]
+    fn rejects_wrong_declared_count() {
+        let bad = tiny_lstm_json().replace("\"param_count\": 23", "\"param_count\": 99");
+        assert!(Weights::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_data_mismatch() {
+        let bad = tiny_lstm_json().replace(
+            "\"b\": {\"shape\": [1], \"data\": [0.1]}",
+            "\"b\": {\"shape\": [2], \"data\": [0.1]}",
+        );
+        assert!(Weights::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_tensor() {
+        let w = Weights::from_json(&tiny_lstm_json()).unwrap();
+        assert!(w.tensor("rnn", "nope").is_err());
+        assert!(w.tensor("dense7", "w").is_err());
+    }
+
+    #[test]
+    fn weight_range_covers_extremes() {
+        let w = Weights::from_json(&tiny_lstm_json()).unwrap();
+        let (lo, hi) = w.weight_range();
+        assert_eq!(lo, -0.5);
+        assert_eq!(hi, 1.0);
+    }
+}

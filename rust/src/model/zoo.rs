@@ -1,0 +1,93 @@
+//! The six benchmark configurations of Table 1.
+
+use super::arch::{Arch, Cell, OutputActivation};
+
+/// Benchmark names in paper order.
+pub const BENCHMARKS: [&str; 3] = ["top", "flavor", "quickdraw"];
+
+/// Construct one of the six benchmark architectures.
+pub fn arch(name: &str, cell: Cell) -> anyhow::Result<Arch> {
+    let a = match name {
+        "top" => Arch {
+            name: "top".into(),
+            cell,
+            seq_len: 20,
+            input_size: 6,
+            hidden_size: 20,
+            dense_sizes: vec![64],
+            output_size: 1,
+            output_activation: OutputActivation::Sigmoid,
+        },
+        "flavor" => Arch {
+            name: "flavor".into(),
+            cell,
+            seq_len: 15,
+            input_size: 6,
+            hidden_size: 120,
+            dense_sizes: vec![50, 10],
+            output_size: 3,
+            output_activation: OutputActivation::Softmax,
+        },
+        "quickdraw" => Arch {
+            name: "quickdraw".into(),
+            cell,
+            seq_len: 100,
+            input_size: 3,
+            hidden_size: 128,
+            dense_sizes: vec![256, 128],
+            output_size: 5,
+            output_activation: OutputActivation::Softmax,
+        },
+        other => anyhow::bail!("unknown benchmark {other:?} (want one of {BENCHMARKS:?})"),
+    };
+    Ok(a)
+}
+
+/// All six variants, paper order (top, flavor, quickdraw) × (lstm, gru).
+pub fn all_archs() -> Vec<Arch> {
+    BENCHMARKS
+        .iter()
+        .flat_map(|name| {
+            [Cell::Lstm, Cell::Gru]
+                .into_iter()
+                .map(move |cell| arch(name, cell).expect("static zoo"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 + §4 text: exact trainable-parameter counts.
+    #[test]
+    fn param_counts_match_table1() {
+        let cases = [
+            ("top", Cell::Lstm, 2160, 1409, 3569),
+            ("top", Cell::Gru, 1680, 1409, 3089),
+            ("flavor", Cell::Lstm, 60960, 6593, 67553),
+            ("flavor", Cell::Gru, 46080, 6593, 52673),
+            ("quickdraw", Cell::Lstm, 67584, 66565, 134149),
+            ("quickdraw", Cell::Gru, 51072, 66565, 117637),
+        ];
+        for (name, cell, rnn, non_rnn, total) in cases {
+            let a = arch(name, cell).unwrap();
+            assert_eq!(a.rnn_param_count(), rnn, "{name} {cell:?} rnn");
+            assert_eq!(a.non_rnn_param_count(), non_rnn, "{name} {cell:?} head");
+            assert_eq!(a.param_count(), total, "{name} {cell:?} total");
+        }
+    }
+
+    #[test]
+    fn all_archs_has_six() {
+        let archs = all_archs();
+        assert_eq!(archs.len(), 6);
+        let keys: Vec<String> = archs.iter().map(|a| a.key()).collect();
+        assert!(keys.contains(&"quickdraw_gru".to_string()));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(arch("higgs", Cell::Lstm).is_err());
+    }
+}

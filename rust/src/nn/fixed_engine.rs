@@ -1,0 +1,461 @@
+//! Bit-accurate `ap_fixed` inference engine — the FPGA-datapath stand-in.
+//!
+//! Reproduces what the generated HLS computes (§5.1): every input, weight,
+//! bias, layer output and activation is an `ap_fixed<W,I>`; products are
+//! exact (2F fractional bits) and accumulated in a wide integer (hls4ml's
+//! `accum_t`), then cast back to the layer type; sigmoid/tanh/softmax go
+//! through lookup tables.  Running this engine over the frozen test sets
+//! at different `(W, I)` regenerates the PTQ scan of Fig. 2.
+
+use crate::fixed::{
+    dequantize, quantize, requantize, ActTables, QuantConfig,
+    SoftmaxTables, TableConfig,
+};
+use crate::model::{Arch, Cell, OutputActivation, Weights};
+
+use super::Engine;
+
+/// Maximum supported total width: products carry `2W` bits and the widest
+/// accumulation fan-in here is 512 (quickdraw dense head, 2^9), so
+/// `2 * 26 + 9 = 61 < 63` keeps i64 accumulation exact.
+pub const MAX_WIDTH: u32 = 26;
+
+/// Transposed integer matrix: raw weights at the engine's F, `[out][in]`.
+struct MatTI {
+    rows_out: usize,
+    cols_in: usize,
+    data: Vec<i64>,
+}
+
+impl MatTI {
+    fn from_keras(shape: &[usize], data: &[f32], cfg: QuantConfig) -> Self {
+        let (i, o) = (shape[0], shape[1]);
+        let mut t = vec![0i64; i * o];
+        for r in 0..i {
+            for c in 0..o {
+                t[c * i + r] = quantize(data[r * o + c] as f64, cfg);
+            }
+        }
+        Self {
+            rows_out: o,
+            cols_in: i,
+            data: t,
+        }
+    }
+
+    /// `y[o] += Σ_i x[i] * w[o,i]` — accumulator carries 2F fractional bits.
+    #[inline]
+    fn matvec_acc(&self, x: &[i64], y: &mut [i64]) {
+        debug_assert_eq!(x.len(), self.cols_in);
+        debug_assert_eq!(y.len(), self.rows_out);
+        for (o, yo) in y.iter_mut().enumerate() {
+            let row = &self.data[o * self.cols_in..(o + 1) * self.cols_in];
+            let mut acc = 0i64;
+            for (xi, wi) in x.iter().zip(row) {
+                acc += xi * wi;
+            }
+            *yo += acc;
+        }
+    }
+}
+
+struct DenseLayerI {
+    w: MatTI,
+    /// Bias pre-shifted to 2F (accumulator units).
+    b2f: Vec<i64>,
+}
+
+impl DenseLayerI {
+    fn new(
+        wshape: &[usize],
+        wdata: &[f32],
+        bdata: &[f32],
+        cfg: QuantConfig,
+    ) -> Self {
+        let f = cfg.spec.frac();
+        Self {
+            w: MatTI::from_keras(wshape, wdata, cfg),
+            b2f: bdata
+                .iter()
+                .map(|&v| quantize(v as f64, cfg) << f)
+                .collect(),
+        }
+    }
+}
+
+/// The quantized engine.
+pub struct FixedEngine {
+    arch: Arch,
+    cfg: QuantConfig,
+    rnn_w: MatTI,
+    rnn_u: MatTI,
+    /// LSTM: full 4H bias; GRU: input-bias row, both pre-shifted to 2F.
+    rnn_b2f: Vec<i64>,
+    /// GRU only: recurrent-bias row at 2F.
+    rnn_b_rec2f: Option<Vec<i64>>,
+    dense: Vec<DenseLayerI>,
+    out: DenseLayerI,
+    act: ActTables,
+    softmax: Option<SoftmaxTables>,
+}
+
+impl FixedEngine {
+    /// Build with the paper's table policy: default LUTs, with the
+    /// enlarged softmax table for the flavor/quickdraw models (§5.1).
+    pub fn new(weights: &Weights, cfg: QuantConfig) -> anyhow::Result<Self> {
+        let table = if weights.arch.name == "top" {
+            TableConfig::softmax_default()
+        } else {
+            TableConfig::softmax_high()
+        };
+        Self::with_softmax_table(weights, cfg, table)
+    }
+
+    /// Build with an explicit softmax table configuration (used by the
+    /// ablation bench comparing default vs enlarged softmax LUTs).
+    pub fn with_softmax_table(
+        weights: &Weights,
+        cfg: QuantConfig,
+        softmax_table: TableConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            cfg.spec.width <= MAX_WIDTH,
+            "width {} exceeds engine maximum {MAX_WIDTH} (i64 accumulator)",
+            cfg.spec.width
+        );
+        let a = weights.arch.clone();
+        let f = cfg.spec.frac();
+        let w = weights.tensor("rnn", "w")?;
+        let u = weights.tensor("rnn", "u")?;
+        let b = weights.tensor("rnn", "b")?;
+        let quant_shift =
+            |xs: &[f32]| -> Vec<i64> { xs.iter().map(|&v| quantize(v as f64, cfg) << f).collect() };
+        let (rnn_b2f, rnn_b_rec2f) = match a.cell {
+            Cell::Lstm => (quant_shift(&b.data), None),
+            Cell::Gru => {
+                let gh = 3 * a.hidden_size;
+                (
+                    quant_shift(&b.data[..gh]),
+                    Some(quant_shift(&b.data[gh..])),
+                )
+            }
+        };
+        let mut dense = Vec::new();
+        for idx in 0..a.dense_sizes.len() {
+            let lw = weights.tensor(&format!("dense{idx}"), "w")?;
+            let lb = weights.tensor(&format!("dense{idx}"), "b")?;
+            dense.push(DenseLayerI::new(&lw.shape, &lw.data, &lb.data, cfg));
+        }
+        let ow = weights.tensor("out", "w")?;
+        let ob = weights.tensor("out", "b")?;
+        let softmax = match a.output_activation {
+            OutputActivation::Softmax => {
+                Some(SoftmaxTables::new(cfg, softmax_table))
+            }
+            OutputActivation::Sigmoid => None,
+        };
+        Ok(Self {
+            arch: a,
+            cfg,
+            rnn_w: MatTI::from_keras(&w.shape, &w.data, cfg),
+            rnn_u: MatTI::from_keras(&u.shape, &u.data, cfg),
+            rnn_b2f,
+            rnn_b_rec2f,
+            dense,
+            out: DenseLayerI::new(&ow.shape, &ow.data, &ob.data, cfg),
+            act: ActTables::new(cfg),
+            softmax,
+        })
+    }
+
+    pub fn config(&self) -> QuantConfig {
+        self.cfg
+    }
+
+    /// Cast an accumulator value (2F fractional bits) to the engine type.
+    #[inline]
+    fn cast_acc(&self, acc: i64) -> i64 {
+        requantize(acc, 2 * self.cfg.spec.frac(), self.cfg)
+    }
+
+    /// Hadamard product of two engine-type raws, cast back to engine type.
+    #[inline]
+    fn had(&self, a: i64, b: i64) -> i64 {
+        requantize(a * b, 2 * self.cfg.spec.frac(), self.cfg)
+    }
+
+    fn lstm_forward(&self, x_raw: &[i64]) -> Vec<i64> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let spec = self.cfg.spec;
+        let mut h = vec![0i64; h_sz];
+        let mut c = vec![0i64; h_sz];
+        let mut z = vec![0i64; 4 * h_sz];
+        for t in 0..self.arch.seq_len {
+            let x_t = &x_raw[t * i_sz..(t + 1) * i_sz];
+            z.copy_from_slice(&self.rnn_b2f);
+            self.rnn_w.matvec_acc(x_t, &mut z);
+            self.rnn_u.matvec_acc(&h, &mut z);
+            for j in 0..h_sz {
+                let zi = self.cast_acc(z[j]);
+                let zf = self.cast_acc(z[h_sz + j]);
+                let zc = self.cast_acc(z[2 * h_sz + j]);
+                let zo = self.cast_acc(z[3 * h_sz + j]);
+                let i_g = self.act.sigmoid_raw(zi, spec);
+                let f_g = self.act.sigmoid_raw(zf, spec);
+                let g = self.act.tanh_raw(zc, spec);
+                let o_g = self.act.sigmoid_raw(zo, spec);
+                c[j] = self.had(f_g, c[j]) + self.had(i_g, g);
+                // c re-enters the representable range via the cast in had();
+                // clamp the sum as the output cast of the cell-state adder.
+                c[j] = crate::fixed::value::overflow(c[j], spec, self.cfg.overflow);
+                let tc = self.act.tanh_raw(c[j], spec);
+                h[j] = self.had(o_g, tc);
+            }
+        }
+        h
+    }
+
+    fn gru_forward(&self, x_raw: &[i64]) -> Vec<i64> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let spec = self.cfg.spec;
+        let b_rec = self.rnn_b_rec2f.as_ref().expect("gru recurrent bias");
+        let one = 1i64 << spec.frac(); // 1.0 in engine units
+        let mut h = vec![0i64; h_sz];
+        let mut xm = vec![0i64; 3 * h_sz];
+        let mut hm = vec![0i64; 3 * h_sz];
+        for t in 0..self.arch.seq_len {
+            let x_t = &x_raw[t * i_sz..(t + 1) * i_sz];
+            xm.copy_from_slice(&self.rnn_b2f);
+            self.rnn_w.matvec_acc(x_t, &mut xm);
+            hm.copy_from_slice(b_rec);
+            self.rnn_u.matvec_acc(&h, &mut hm);
+            for j in 0..h_sz {
+                let z_pre = self.cast_acc(xm[j] + hm[j]);
+                let r_pre = self.cast_acc(xm[h_sz + j] + hm[h_sz + j]);
+                let z_g = self.act.sigmoid_raw(z_pre, spec);
+                let r_g = self.act.sigmoid_raw(r_pre, spec);
+                // reset_after Hadamard on the recurrent half (paper §3).
+                let rec = self.had(r_g, self.cast_acc(hm[2 * h_sz + j]));
+                let g_pre = crate::fixed::value::overflow(
+                    self.cast_acc(xm[2 * h_sz + j]) + rec,
+                    spec,
+                    self.cfg.overflow,
+                );
+                let g = self.act.tanh_raw(g_pre, spec);
+                let keep = self.had(z_g, h[j]);
+                let new = self.had(one - z_g, g);
+                h[j] = crate::fixed::value::overflow(
+                    keep + new,
+                    spec,
+                    self.cfg.overflow,
+                );
+            }
+        }
+        h
+    }
+}
+
+impl Engine for FixedEngine {
+    fn forward(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.arch.seq_len * self.arch.input_size);
+        let spec = self.cfg.spec;
+        let x_raw: Vec<i64> =
+            x.iter().map(|&v| quantize(v as f64, self.cfg)).collect();
+        let mut h = match self.arch.cell {
+            Cell::Lstm => self.lstm_forward(&x_raw),
+            Cell::Gru => self.gru_forward(&x_raw),
+        };
+        for layer in &self.dense {
+            let mut y = layer.b2f.clone();
+            layer.w.matvec_acc(&h, &mut y);
+            h = y
+                .iter()
+                .map(|&acc| self.cast_acc(acc).max(0)) // ReLU is exact
+                .collect();
+        }
+        let mut y = self.out.b2f.clone();
+        self.out.w.matvec_acc(&h, &mut y);
+        let logits: Vec<i64> = y.iter().map(|&acc| self.cast_acc(acc)).collect();
+        match self.arch.output_activation {
+            OutputActivation::Sigmoid => logits
+                .iter()
+                .map(|&z| dequantize(self.act.sigmoid_raw(z, spec), spec) as f32)
+                .collect(),
+            OutputActivation::Softmax => {
+                let sm = self.softmax.as_ref().expect("softmax tables");
+                sm.softmax_raw(&logits, spec)
+                    .iter()
+                    .map(|&p| dequantize(p, spec) as f32)
+                    .collect()
+            }
+        }
+    }
+
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::nn::float_engine::FloatEngine;
+
+    /// Small deterministic weights for a scaled-down "top"-like model.
+    fn tiny_weights(cell: &str) -> Weights {
+        let h = 4usize;
+        let i = 3usize;
+        let g = if cell == "lstm" { 4 } else { 3 };
+        let mut w = Vec::new();
+        for r in 0..i {
+            for c in 0..g * h {
+                w.push((((r * 7 + c * 3) % 13) as f32 - 6.0) / 13.0);
+            }
+        }
+        let mut u = Vec::new();
+        for r in 0..h {
+            for c in 0..g * h {
+                u.push((((r * 5 + c * 11) % 17) as f32 - 8.0) / 17.0);
+            }
+        }
+        let b: Vec<f32> = if cell == "lstm" {
+            (0..4 * h)
+                .map(|j| if (h..2 * h).contains(&j) { 1.0 } else { 0.0 })
+                .collect()
+        } else {
+            vec![0.05; 2 * 3 * h]
+        };
+        let b_shape = if cell == "lstm" {
+            vec![4 * h]
+        } else {
+            vec![2, 3 * h]
+        };
+        let dw: Vec<f32> = (0..h * 5).map(|k| ((k % 9) as f32 - 4.0) / 9.0).collect();
+        let ow: Vec<f32> = (0..5).map(|k| ((k % 3) as f32 - 1.0) / 2.0).collect();
+        let count = if cell == "lstm" {
+            4 * (i * h + h * h + h) + (h * 5 + 5) + (5 + 1)
+        } else {
+            3 * (i * h + h * h) + 6 * h + (h * 5 + 5) + (5 + 1)
+        };
+        let farr = |xs: &[f32]| -> String {
+            let items: Vec<String> = xs.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", items.join(","))
+        };
+        let uarr = |xs: &[usize]| -> String {
+            let items: Vec<String> = xs.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", items.join(","))
+        };
+        let doc = format!(
+            r#"{{
+            "arch": {{
+                "name": "top", "cell": "{cell}", "seq_len": 5,
+                "input_size": {i}, "hidden_size": {h}, "dense_sizes": [5],
+                "output_size": 1, "output_activation": "sigmoid"
+            }},
+            "param_count": {count},
+            "layers": [
+                {{"name": "rnn",
+                 "w": {{"shape": [{i}, {gh}], "data": {w}}},
+                 "u": {{"shape": [{h}, {gh}], "data": {u}}},
+                 "b": {{"shape": {b_shape}, "data": {b}}}}},
+                {{"name": "dense0",
+                 "w": {{"shape": [{h}, 5], "data": {dw}}},
+                 "b": {{"shape": [5], "data": [0.1, -0.1, 0.0, 0.2, 0.0]}}}},
+                {{"name": "out",
+                 "w": {{"shape": [5, 1], "data": {ow}}},
+                 "b": {{"shape": [1], "data": [0.05]}}}}
+            ]
+        }}"#,
+            gh = g * h,
+            w = farr(&w),
+            u = farr(&u),
+            b_shape = uarr(&b_shape),
+            b = farr(&b),
+            dw = farr(&dw),
+            ow = farr(&ow),
+        );
+        Weights::from_json(&doc).unwrap()
+    }
+
+    fn sample_input(len: usize) -> Vec<f32> {
+        (0..len).map(|k| ((k * 37 % 21) as f32 - 10.0) / 10.0).collect()
+    }
+
+    #[test]
+    fn high_precision_matches_float_lstm() {
+        let w = tiny_weights("lstm");
+        let fl = FloatEngine::new(&w).unwrap();
+        let fx = FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(26, 8))).unwrap();
+        let x = sample_input(15);
+        let yf = fl.forward(&x);
+        let yq = fx.forward(&x);
+        assert!(
+            (yf[0] - yq[0]).abs() < 0.01,
+            "float {} vs fixed {}",
+            yf[0],
+            yq[0]
+        );
+    }
+
+    #[test]
+    fn high_precision_matches_float_gru() {
+        let w = tiny_weights("gru");
+        let fl = FloatEngine::new(&w).unwrap();
+        let fx = FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(26, 8))).unwrap();
+        let x = sample_input(15);
+        let yf = fl.forward(&x);
+        let yq = fx.forward(&x);
+        assert!(
+            (yf[0] - yq[0]).abs() < 0.01,
+            "float {} vs fixed {}",
+            yf[0],
+            yq[0]
+        );
+    }
+
+    #[test]
+    fn precision_ladder_converges_monotonically_on_average() {
+        // Error vs float should shrink as fractional bits grow (Fig. 2's
+        // mechanism).  Averaged over inputs to tolerate per-point noise.
+        let w = tiny_weights("lstm");
+        let fl = FloatEngine::new(&w).unwrap();
+        let mut errs = Vec::new();
+        for frac in [2u32, 6, 10, 14] {
+            let cfg = QuantConfig::ptq(FixedSpec::new(6 + frac, 6));
+            let fx = FixedEngine::new(&w, cfg).unwrap();
+            let mut e = 0.0f32;
+            for s in 0..8 {
+                let x: Vec<f32> = (0..15)
+                    .map(|k| (((k + s * 3) * 37 % 21) as f32 - 10.0) / 10.0)
+                    .collect();
+                e += (fl.forward(&x)[0] - fx.forward(&x)[0]).abs();
+            }
+            errs.push(e / 8.0);
+        }
+        assert!(errs[3] < errs[0], "errors {errs:?}");
+        assert!(errs[3] < 0.02, "errors {errs:?}");
+    }
+
+    #[test]
+    fn rejects_overwide_type() {
+        let w = tiny_weights("lstm");
+        assert!(
+            FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(32, 8))).is_err()
+        );
+    }
+
+    #[test]
+    fn output_is_valid_probability() {
+        let w = tiny_weights("gru");
+        for width in [8u32, 12, 16, 20] {
+            let fx =
+                FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(width, 6)))
+                    .unwrap();
+            let y = fx.forward(&sample_input(15));
+            assert!(y[0] >= -0.01 && y[0] <= 1.01, "w={width} y={}", y[0]);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! f32 reference engine — the rust twin of `python/compile/kernels/ref.py`.
+
+use crate::model::{Arch, Cell, OutputActivation, Weights};
+
+use super::Engine;
+
+/// Row-major matrix with Keras orientation `(in, out)`, stored transposed
+/// `(out, in)` so each output's dot product is a contiguous scan.
+#[derive(Debug, Clone)]
+pub(crate) struct MatT {
+    pub rows_out: usize,
+    pub cols_in: usize,
+    pub data: Vec<f32>, // [out][in]
+}
+
+impl MatT {
+    pub fn from_keras(shape: &[usize], data: &[f32]) -> Self {
+        let (i, o) = (shape[0], shape[1]);
+        let mut t = vec![0.0f32; i * o];
+        for r in 0..i {
+            for c in 0..o {
+                t[c * i + r] = data[r * o + c];
+            }
+        }
+        Self {
+            rows_out: o,
+            cols_in: i,
+            data: t,
+        }
+    }
+
+    /// `y[o] += Σ_i x[i] * w[o, i]`
+    #[inline]
+    pub fn matvec_acc(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols_in);
+        debug_assert_eq!(y.len(), self.rows_out);
+        for (o, yo) in y.iter_mut().enumerate() {
+            let row = &self.data[o * self.cols_in..(o + 1) * self.cols_in];
+            let mut acc = 0.0f32;
+            for (xi, wi) in x.iter().zip(row) {
+                acc += xi * wi;
+            }
+            *yo += acc;
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+struct DenseLayer {
+    w: MatT,
+    b: Vec<f32>,
+}
+
+/// f32 inference engine.
+pub struct FloatEngine {
+    arch: Arch,
+    rnn_w: MatT,
+    rnn_u: MatT,
+    rnn_b: Vec<f32>,
+    /// GRU only: recurrent bias row (`b[1]`); `rnn_b` is then `b[0]`.
+    rnn_b_rec: Option<Vec<f32>>,
+    dense: Vec<DenseLayer>,
+    out: DenseLayer,
+}
+
+impl FloatEngine {
+    pub fn new(weights: &Weights) -> anyhow::Result<Self> {
+        let a = weights.arch.clone();
+        let w = weights.tensor("rnn", "w")?;
+        let u = weights.tensor("rnn", "u")?;
+        let b = weights.tensor("rnn", "b")?;
+        let (rnn_b, rnn_b_rec) = match a.cell {
+            Cell::Lstm => (b.data.clone(), None),
+            Cell::Gru => {
+                let gh = 3 * a.hidden_size;
+                (b.data[..gh].to_vec(), Some(b.data[gh..].to_vec()))
+            }
+        };
+        let mut dense = Vec::new();
+        for idx in 0..a.dense_sizes.len() {
+            let lw = weights.tensor(&format!("dense{idx}"), "w")?;
+            let lb = weights.tensor(&format!("dense{idx}"), "b")?;
+            dense.push(DenseLayer {
+                w: MatT::from_keras(&lw.shape, &lw.data),
+                b: lb.data.clone(),
+            });
+        }
+        let ow = weights.tensor("out", "w")?;
+        let ob = weights.tensor("out", "b")?;
+        Ok(Self {
+            arch: a,
+            rnn_w: MatT::from_keras(&w.shape, &w.data),
+            rnn_u: MatT::from_keras(&u.shape, &u.data),
+            rnn_b,
+            rnn_b_rec,
+            dense,
+            out: DenseLayer {
+                w: MatT::from_keras(&ow.shape, &ow.data),
+                b: ob.data.clone(),
+            },
+        })
+    }
+
+    fn lstm_forward(&self, x: &[f32]) -> Vec<f32> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let mut h = vec![0.0f32; h_sz];
+        let mut c = vec![0.0f32; h_sz];
+        let mut z = vec![0.0f32; 4 * h_sz];
+        for t in 0..self.arch.seq_len {
+            let x_t = &x[t * i_sz..(t + 1) * i_sz];
+            z.copy_from_slice(&self.rnn_b);
+            self.rnn_w.matvec_acc(x_t, &mut z);
+            self.rnn_u.matvec_acc(&h, &mut z);
+            for j in 0..h_sz {
+                let i_g = sigmoid(z[j]);
+                let f_g = sigmoid(z[h_sz + j]);
+                let g = z[2 * h_sz + j].tanh();
+                let o_g = sigmoid(z[3 * h_sz + j]);
+                c[j] = f_g * c[j] + i_g * g;
+                h[j] = o_g * c[j].tanh();
+            }
+        }
+        h
+    }
+
+    fn gru_forward(&self, x: &[f32]) -> Vec<f32> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let b_rec = self.rnn_b_rec.as_ref().expect("gru has recurrent bias");
+        let mut h = vec![0.0f32; h_sz];
+        let mut xm = vec![0.0f32; 3 * h_sz];
+        let mut hm = vec![0.0f32; 3 * h_sz];
+        for t in 0..self.arch.seq_len {
+            let x_t = &x[t * i_sz..(t + 1) * i_sz];
+            xm.copy_from_slice(&self.rnn_b);
+            self.rnn_w.matvec_acc(x_t, &mut xm);
+            hm.copy_from_slice(b_rec);
+            self.rnn_u.matvec_acc(&h, &mut hm);
+            for j in 0..h_sz {
+                let z_g = sigmoid(xm[j] + hm[j]);
+                let r_g = sigmoid(xm[h_sz + j] + hm[h_sz + j]);
+                // reset_after: r gates the post-matmul recurrent term.
+                let g = (xm[2 * h_sz + j] + r_g * hm[2 * h_sz + j]).tanh();
+                h[j] = z_g * h[j] + (1.0 - z_g) * g;
+            }
+        }
+        h
+    }
+}
+
+impl Engine for FloatEngine {
+    fn forward(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.arch.seq_len * self.arch.input_size);
+        let mut h = match self.arch.cell {
+            Cell::Lstm => self.lstm_forward(x),
+            Cell::Gru => self.gru_forward(x),
+        };
+        for layer in &self.dense {
+            let mut y = layer.b.clone();
+            layer.w.matvec_acc(&h, &mut y);
+            for v in &mut y {
+                *v = v.max(0.0); // ReLU head (paper §4)
+            }
+            h = y;
+        }
+        let mut y = self.out.b.clone();
+        self.out.w.matvec_acc(&h, &mut y);
+        match self.arch.output_activation {
+            OutputActivation::Sigmoid => y.iter().map(|&v| sigmoid(v)).collect(),
+            OutputActivation::Softmax => {
+                let max = y.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = y.iter().map(|&v| (v - max).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                exps.iter().map(|&e| e / sum).collect()
+            }
+        }
+    }
+
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_transpose_is_consistent() {
+        // keras (2,3): [[1,2,3],[4,5,6]]; y = x @ w for x=[1,1] -> [5,7,9]
+        let m = MatT::from_keras(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let mut y = vec![0.0; 3];
+        m.matvec_acc(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+    }
+}

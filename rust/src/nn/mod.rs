@@ -1,0 +1,34 @@
+//! Inference engines over the benchmark models.
+//!
+//! * [`FloatEngine`] — f32 reference implementation, numerically identical
+//!   to the python `ref.py` oracle (cross-validated against the golden
+//!   outputs in `artifacts/golden/`).
+//! * [`FixedEngine`] — the bit-accurate `ap_fixed` datapath: quantized
+//!   weights, integer matvecs with wide accumulators, LUT activations.
+//!   This is the software stand-in for the synthesized FPGA design and
+//!   produces the quantized AUCs of Fig. 2.
+//!
+//! Both implement [`Engine`], so the evaluation/serving layers are
+//! engine-agnostic.
+
+pub mod fixed_engine;
+pub mod float_engine;
+
+pub use fixed_engine::FixedEngine;
+pub use float_engine::FloatEngine;
+
+use crate::model::Arch;
+
+/// A model that maps one input sequence to output probabilities.
+pub trait Engine: Send + Sync {
+    /// Forward one sample.  `x` is row-major `[seq_len][input_size]`,
+    /// returns `output_size` probabilities (sigmoid/softmax applied).
+    fn forward(&self, x: &[f32]) -> Vec<f32>;
+
+    fn arch(&self) -> &Arch;
+
+    /// Forward a batch (default: sequential; engines may parallelize).
+    fn forward_batch(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.forward(x)).collect()
+    }
+}

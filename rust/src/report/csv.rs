@@ -1,0 +1,69 @@
+//! CSV emission for plots (one file per reproduced figure/table).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A CSV writer that creates its parent directory.
+pub struct CsvWriter {
+    path: PathBuf,
+    lines: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn new(path: impl AsRef<Path>, header: &[&str]) -> Self {
+        Self {
+            path: path.as_ref().to_path_buf(),
+            lines: vec![header.join(",")],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.lines.push(
+            cells
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+    }
+
+    /// Write the file, returning its path.
+    pub fn finish(self) -> anyhow::Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(&self.path)?;
+        for line in &self.lines {
+            writeln!(file, "{line}")?;
+        }
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join(format!(
+            "rnnhls-csv-test-{}",
+            std::process::id()
+        ));
+        let path = dir.join("sub/out.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(&["1".into(), "plain".into()]);
+        w.row(&["2".into(), "has,comma \"q\"".into()]);
+        let written = w.finish().unwrap();
+        let text = std::fs::read_to_string(written).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("2,\"has,comma \"\"q\"\"\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,223 @@
+//! Fig. 2 reproduction: post-training-quantization scan.
+//!
+//! For each benchmark model, evaluate the bit-accurate [`FixedEngine`]
+//! over the frozen test set at every (integer, fractional) bit
+//! combination of the paper's grid and report the ratio of the quantized
+//! AUC to the float AUC — the exact quantity plotted in Fig. 2.
+
+use std::path::Path;
+
+use crate::config::Fig2Config;
+use crate::data::{metrics, Dataset};
+use crate::fixed::{FixedSpec, QuantConfig};
+use crate::model::Weights;
+use crate::nn::{Engine, FixedEngine, FloatEngine};
+use crate::runtime::Manifest;
+use crate::util::threads::parallel_map;
+
+use super::csv::CsvWriter;
+use super::table::AsciiTable;
+
+/// One scan point.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub key: String,
+    pub integer_bits: u32,
+    pub fractional_bits: u32,
+    pub auc_fixed: f64,
+    pub auc_float: f64,
+}
+
+impl Fig2Point {
+    pub fn ratio(&self) -> f64 {
+        if self.auc_float <= 0.0 {
+            return 0.0;
+        }
+        self.auc_fixed / self.auc_float
+    }
+}
+
+/// Evaluate an engine over a dataset, in parallel over samples.
+pub fn eval_probs(
+    engine: &dyn Engine,
+    ds: &Dataset,
+    workers: usize,
+) -> Vec<Vec<f32>> {
+    parallel_map(ds.n, workers, |i| engine.forward(ds.sample(i)))
+}
+
+/// AUC of an engine over a dataset.
+pub fn eval_auc(engine: &dyn Engine, ds: &Dataset, workers: usize) -> f64 {
+    let probs = eval_probs(engine, ds, workers);
+    metrics::mean_auc(&probs, ds.labels(), ds.n_classes)
+}
+
+/// Run the scan for every requested model.  Prints a summary table and
+/// writes `fig2_<key>.csv` per model when `out_dir` is given.
+pub fn run(
+    artifacts: &Path,
+    cfg: &Fig2Config,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<Vec<Fig2Point>> {
+    let manifest = Manifest::load(artifacts)?;
+    let mut all_points = Vec::new();
+
+    for key in &cfg.keys {
+        let entry = manifest.model(key)?;
+        let weights = Weights::load(manifest.path(&entry.weights))?;
+        let ds = Dataset::load(manifest.path(&entry.dataset))?
+            .truncated(cfg.samples);
+
+        let float_engine = FloatEngine::new(&weights)?;
+        let auc_float = eval_auc(&float_engine, &ds, cfg.workers);
+
+        // Grid of (integer, fractional) pairs, engine-width capped.
+        let grid: Vec<(u32, u32)> = cfg
+            .integer_bits
+            .iter()
+            .flat_map(|&i| {
+                cfg.fractional_bits.iter().filter_map(move |&f| {
+                    if i + f <= crate::nn::fixed_engine::MAX_WIDTH {
+                        Some((i, f))
+                    } else {
+                        None
+                    }
+                })
+            })
+            .collect();
+
+        // One engine per grid point; points are independent, so
+        // parallelize across points and keep per-point eval serial.
+        let aucs = parallel_map(grid.len(), cfg.workers, |g| {
+            let (int_bits, frac_bits) = grid[g];
+            let spec = FixedSpec::new(int_bits + frac_bits, int_bits);
+            let engine = FixedEngine::new(&weights, QuantConfig::ptq(spec))
+                .expect("grid width within engine max");
+            eval_auc(&engine, &ds, 1)
+        });
+
+        let mut table = AsciiTable::new(
+            format!(
+                "Fig. 2 ({key}): AUC(fixed)/AUC(float), float AUC {auc_float:.4}, {} samples",
+                ds.n
+            ),
+            &["int\\frac", "2", "4", "6", "8", "10", "12", "14"],
+        );
+        for &int_bits in &cfg.integer_bits {
+            let mut cells = vec![format!("{int_bits}")];
+            for frac in [2u32, 4, 6, 8, 10, 12, 14] {
+                let cell = grid
+                    .iter()
+                    .position(|&(i, f)| i == int_bits && f == frac)
+                    .map(|idx| {
+                        format!("{:.3}", aucs[idx] / auc_float.max(1e-12))
+                    })
+                    .unwrap_or_else(|| "-".into());
+                cells.push(cell);
+            }
+            table.row(cells);
+        }
+        println!("{}", table.render());
+
+        let mut points = Vec::new();
+        for (g, &(int_bits, frac_bits)) in grid.iter().enumerate() {
+            points.push(Fig2Point {
+                key: key.clone(),
+                integer_bits: int_bits,
+                fractional_bits: frac_bits,
+                auc_fixed: aucs[g],
+                auc_float,
+            });
+        }
+        if let Some(dir) = out_dir {
+            let mut csv = CsvWriter::new(
+                dir.join(format!("fig2_{key}.csv")),
+                &["integer_bits", "fractional_bits", "auc_fixed", "auc_float", "ratio"],
+            );
+            for p in &points {
+                csv.row(&[
+                    p.integer_bits.to_string(),
+                    p.fractional_bits.to_string(),
+                    format!("{:.6}", p.auc_fixed),
+                    format!("{:.6}", p.auc_float),
+                    format!("{:.6}", p.ratio()),
+                ]);
+            }
+            let path = csv.finish()?;
+            println!("wrote {}", path.display());
+        }
+        all_points.extend(points);
+    }
+    Ok(all_points)
+}
+
+/// Paper-shape checks on a completed scan (used by the integration test
+/// and EXPERIMENTS.md): at ≥10 fractional bits and the chosen integer
+/// width, the ratio must be ≥ the low-precision ratios and near 1.
+pub fn shape_check(points: &[Fig2Point], key: &str) -> anyhow::Result<()> {
+    let benchmark = key.split('_').next().unwrap_or(key);
+    let int_bits = crate::hls::paper::chosen_integer_bits(benchmark);
+    let at = |frac: u32| -> Option<f64> {
+        points
+            .iter()
+            .find(|p| {
+                p.key == key
+                    && p.integer_bits == int_bits
+                    && p.fractional_bits == frac
+            })
+            .map(|p| p.ratio())
+    };
+    let lo = at(2).ok_or_else(|| anyhow::anyhow!("{key}: no frac=2 point"))?;
+    let hi = at(12).or_else(|| at(10)).ok_or_else(|| {
+        anyhow::anyhow!("{key}: no frac=10/12 point")
+    })?;
+    anyhow::ensure!(
+        hi >= lo - 1e-9,
+        "{key}: ratio at high precision ({hi:.4}) < at 2 frac bits ({lo:.4})"
+    );
+    anyhow::ensure!(
+        hi > 0.95,
+        "{key}: ratio at >=10 fractional bits only {hi:.4} (paper: ~1)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(key: &str, i: u32, f_bits: u32, fixed: f64, float: f64) -> Fig2Point {
+        Fig2Point {
+            key: key.into(),
+            integer_bits: i,
+            fractional_bits: f_bits,
+            auc_fixed: fixed,
+            auc_float: float,
+        }
+    }
+
+    #[test]
+    fn ratio_handles_degenerate_float() {
+        assert_eq!(pt("k", 6, 2, 0.5, 0.0).ratio(), 0.0);
+        assert!((pt("k", 6, 10, 0.99, 0.99).ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_check_accepts_saturating_curve() {
+        let points = vec![
+            pt("top_gru", 6, 2, 0.70, 0.99),
+            pt("top_gru", 6, 10, 0.985, 0.99),
+            pt("top_gru", 6, 12, 0.99, 0.99),
+        ];
+        shape_check(&points, "top_gru").unwrap();
+    }
+
+    #[test]
+    fn shape_check_rejects_broken_curve() {
+        let points = vec![
+            pt("top_gru", 6, 2, 0.99, 0.99),
+            pt("top_gru", 6, 12, 0.60, 0.99),
+        ];
+        assert!(shape_check(&points, "top_gru").is_err());
+    }
+}

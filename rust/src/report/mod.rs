@@ -1,0 +1,20 @@
+//! Report emitters: regenerate every table and figure of the paper's
+//! evaluation as ASCII tables (stdout) + CSV files (for plotting).
+//!
+//! | paper artifact | function |
+//! |---|---|
+//! | Table 1 (hyperparameters/params)    | [`tables::table1`] |
+//! | Fig. 2 (PTQ AUC ratio scan)         | [`fig2::run`] |
+//! | Figs. 3–5 (DSP/FF/LUT vs width)     | [`resources::figs345`] |
+//! | Tables 2–4 (latency bands)          | [`tables::latency_tables`] |
+//! | Fig. 6 + Table 5 (static/non-static)| [`resources::fig6`], [`tables::table5`] |
+//! | §5.2 throughput (FPGA vs GPU-analog)| [`throughput::run`] |
+
+pub mod csv;
+pub mod fig2;
+pub mod resources;
+pub mod table;
+pub mod tables;
+pub mod throughput;
+
+pub use table::AsciiTable;

@@ -1,0 +1,269 @@
+//! Figs. 3–6 reproduction: resource utilization vs total bit width.
+
+use std::path::Path;
+
+use crate::config::SweepConfig;
+use crate::fixed::FixedSpec;
+use crate::hls::latency::Strategy;
+use crate::hls::{paper, resource, Device, HlsConfig, ReuseFactor, RnnMode};
+use crate::model::{zoo, Cell};
+
+use super::csv::CsvWriter;
+use super::table::AsciiTable;
+
+/// One point of a resource figure.
+#[derive(Debug, Clone)]
+pub struct ResourcePoint {
+    pub key: String,
+    pub reuse: ReuseFactor,
+    pub strategy: Strategy,
+    pub mode: RnnMode,
+    pub width: u32,
+    pub dsp: u64,
+    pub ff: u64,
+    pub lut: u64,
+    pub bram: u64,
+}
+
+fn scan(
+    benchmark: &str,
+    cell: Cell,
+    widths: &[u32],
+    reuse_set: &[ReuseFactor],
+    strategy: Strategy,
+    mode: RnnMode,
+) -> anyhow::Result<Vec<ResourcePoint>> {
+    let arch = zoo::arch(benchmark, cell)?;
+    let mut out = Vec::new();
+    for &reuse in reuse_set {
+        for &width in widths {
+            let integer = paper::chosen_integer_bits(benchmark).min(width - 1).max(1);
+            let mut cfg =
+                HlsConfig::paper_default(FixedSpec::new(width, integer), reuse);
+            cfg.strategy = strategy;
+            cfg.mode = mode;
+            let est = resource::estimate(&arch, &cfg);
+            out.push(ResourcePoint {
+                key: arch.key(),
+                reuse,
+                strategy,
+                mode,
+                width,
+                dsp: est.dsp,
+                ff: est.ff,
+                lut: est.lut,
+                bram: est.bram_18k,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Figs. 3, 4, 5: DSP/FF/LUT vs total width for every benchmark × cell ×
+/// reuse column, plus the latency-strategy line for top tagging.
+pub fn figs345(
+    cfg: &SweepConfig,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<Vec<ResourcePoint>> {
+    let mut all = Vec::new();
+    for cell in [Cell::Gru, Cell::Lstm] {
+        let grid = paper::reuse_grid(&cfg.benchmark, cell);
+        all.extend(scan(
+            &cfg.benchmark,
+            cell,
+            &cfg.widths,
+            &grid,
+            Strategy::Resource,
+            RnnMode::Static,
+        )?);
+        // Latency-strategy line exists only for the top-tagging models.
+        if cfg.benchmark == "top" {
+            all.extend(scan(
+                &cfg.benchmark,
+                cell,
+                &cfg.widths,
+                &[ReuseFactor::fully_parallel()],
+                Strategy::Latency,
+                RnnMode::Static,
+            )?);
+        }
+    }
+    let device = Device::for_benchmark(&cfg.benchmark);
+    for (figure, pick) in [
+        ("fig3_dsp", 0usize),
+        ("fig4_ff", 1),
+        ("fig5_lut", 2),
+    ] {
+        let mut table = AsciiTable::new(
+            format!(
+                "{figure} ({}), device {} (available: dsp {}, ff {}, lut {})",
+                cfg.benchmark, device.name, device.dsps, device.ffs, device.luts
+            ),
+            &["model", "strategy", "R", "W=8", "W=14", "W=20", "W=26"],
+        );
+        for point_key in all
+            .iter()
+            .map(|p| (p.key.clone(), p.strategy, p.reuse))
+            .collect::<std::collections::BTreeSet<_>>()
+        {
+            let (key, strategy, reuse) = &point_key;
+            let mut cells = vec![
+                key.clone(),
+                strategy.label().to_string(),
+                reuse.label(),
+            ];
+            for w in [8u32, 14, 20, 26] {
+                let cell = all
+                    .iter()
+                    .find(|p| {
+                        &p.key == key
+                            && p.strategy == *strategy
+                            && p.reuse == *reuse
+                            && p.width == w
+                    })
+                    .map(|p| match pick {
+                        0 => p.dsp.to_string(),
+                        1 => p.ff.to_string(),
+                        _ => p.lut.to_string(),
+                    })
+                    .unwrap_or_else(|| "-".into());
+                cells.push(cell);
+            }
+            table.row(cells);
+        }
+        println!("{}", table.render());
+        if let Some(dir) = out_dir {
+            let mut csv = CsvWriter::new(
+                dir.join(format!("{figure}_{}.csv", cfg.benchmark)),
+                &["model", "strategy", "reuse", "width", "dsp", "ff", "lut", "bram"],
+            );
+            for p in &all {
+                csv.row(&[
+                    p.key.clone(),
+                    p.strategy.label().into(),
+                    p.reuse.label(),
+                    p.width.to_string(),
+                    p.dsp.to_string(),
+                    p.ff.to_string(),
+                    p.lut.to_string(),
+                    p.bram.to_string(),
+                ]);
+            }
+            println!("wrote {}", csv.finish()?.display());
+        }
+    }
+    Ok(all)
+}
+
+/// Fig. 6: static vs non-static resources for the top-tagging models.
+pub fn fig6(out_dir: Option<&Path>) -> anyhow::Result<Vec<ResourcePoint>> {
+    let widths: Vec<u32> = (6..=20).step_by(2).collect();
+    let mut all = Vec::new();
+    for cell in [Cell::Gru, Cell::Lstm] {
+        for mode in [RnnMode::Static, RnnMode::NonStatic] {
+            all.extend(scan(
+                "top",
+                cell,
+                &widths,
+                &[ReuseFactor::fully_parallel()],
+                Strategy::Latency,
+                mode,
+            )?);
+        }
+    }
+    let device = Device::for_benchmark("top");
+    let mut table = AsciiTable::new(
+        format!(
+            "Fig. 6: top tagging static vs non-static (device {}: dsp {}, ff {}, lut {})",
+            device.name, device.dsps, device.ffs, device.luts
+        ),
+        &["model", "mode", "W", "DSP", "FF", "LUT", "fits"],
+    );
+    for p in &all {
+        let fits = device.fits(&crate::hls::ResourceEstimate {
+            dsp: p.dsp,
+            lut: p.lut,
+            ff: p.ff,
+            bram_18k: p.bram,
+        });
+        table.row(vec![
+            p.key.clone(),
+            p.mode.label().into(),
+            p.width.to_string(),
+            p.dsp.to_string(),
+            p.ff.to_string(),
+            p.lut.to_string(),
+            if fits { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    println!("{}", table.render());
+    if let Some(dir) = out_dir {
+        let mut csv = CsvWriter::new(
+            dir.join("fig6_modes.csv"),
+            &["model", "mode", "width", "dsp", "ff", "lut", "bram"],
+        );
+        for p in &all {
+            csv.row(&[
+                p.key.clone(),
+                p.mode.label().into(),
+                p.width.to_string(),
+                p.dsp.to_string(),
+                p.ff.to_string(),
+                p.lut.to_string(),
+                p.bram.to_string(),
+            ]);
+        }
+        println!("wrote {}", csv.finish()?.display());
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figs345_cover_grid() {
+        let cfg = SweepConfig {
+            benchmark: "top".into(),
+            widths: vec![8, 16],
+        };
+        let points = figs345(&cfg, None).unwrap();
+        // 2 cells × (4 resource-reuse + 1 latency) × 2 widths
+        assert_eq!(points.len(), 2 * 5 * 2);
+        // monotone in width per series
+        for p8 in points.iter().filter(|p| p.width == 8) {
+            let p16 = points
+                .iter()
+                .find(|q| {
+                    q.width == 16
+                        && q.key == p8.key
+                        && q.reuse == p8.reuse
+                        && q.strategy == p8.strategy
+                })
+                .unwrap();
+            assert!(p16.lut > p8.lut);
+            assert!(p16.ff > p8.ff);
+        }
+    }
+
+    #[test]
+    fn fig6_nonstatic_dominates_static() {
+        let points = fig6(None).unwrap();
+        for cell in ["top_gru", "top_lstm"] {
+            let stat: u64 = points
+                .iter()
+                .filter(|p| p.key == cell && p.mode == RnnMode::Static && p.width == 10)
+                .map(|p| p.dsp)
+                .sum();
+            let non: u64 = points
+                .iter()
+                .filter(|p| {
+                    p.key == cell && p.mode == RnnMode::NonStatic && p.width == 10
+                })
+                .map(|p| p.dsp)
+                .sum();
+            assert!(non > 10 * stat, "{cell}: non-static {non} vs static {stat}");
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Tables 1–5 reproduction (paper-vs-model side by side).
+
+use std::path::Path;
+
+use crate::fixed::FixedSpec;
+use crate::hls::latency::{self, Strategy};
+use crate::hls::{paper, HlsConfig, ReuseFactor, RnnMode};
+use crate::model::{zoo, Cell};
+
+use super::csv::CsvWriter;
+use super::table::AsciiTable;
+
+/// Table 1: hyperparameters and trainable-parameter counts.
+pub fn table1(out_dir: Option<&Path>) -> anyhow::Result<AsciiTable> {
+    let mut table = AsciiTable::new(
+        "Table 1: network hyperparameters and trainable parameters",
+        &[
+            "benchmark", "seq", "input", "hidden", "dense", "out",
+            "non-RNN", "LSTM", "GRU",
+        ],
+    );
+    let mut csv = out_dir.map(|dir| {
+        CsvWriter::new(
+            dir.join("table1_params.csv"),
+            &["benchmark", "non_rnn", "lstm", "gru"],
+        )
+    });
+    for name in zoo::BENCHMARKS {
+        let lstm = zoo::arch(name, Cell::Lstm)?;
+        let gru = zoo::arch(name, Cell::Gru)?;
+        let dense = lstm
+            .dense_sizes
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        table.row(vec![
+            name.to_string(),
+            lstm.seq_len.to_string(),
+            lstm.input_size.to_string(),
+            lstm.hidden_size.to_string(),
+            dense,
+            lstm.output_size.to_string(),
+            lstm.non_rnn_param_count().to_string(),
+            lstm.rnn_param_count().to_string(),
+            gru.rnn_param_count().to_string(),
+        ]);
+        if let Some(csv) = csv.as_mut() {
+            csv.row(&[
+                name.to_string(),
+                lstm.non_rnn_param_count().to_string(),
+                lstm.rnn_param_count().to_string(),
+                gru.rnn_param_count().to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    if let Some(csv) = csv {
+        println!("wrote {}", csv.finish()?.display());
+    }
+    Ok(table)
+}
+
+/// One row of a latency-table comparison.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub key: String,
+    pub reuse: ReuseFactor,
+    pub model_min_us: f64,
+    pub model_max_us: f64,
+    pub paper_min_us: f64,
+    pub paper_max_us: f64,
+}
+
+impl LatencyRow {
+    /// Relative error of the model's minimum latency vs the paper's.
+    pub fn min_rel_err(&self) -> f64 {
+        (self.model_min_us - self.paper_min_us).abs() / self.paper_min_us
+    }
+}
+
+/// Tables 2–4: min/max latency per reuse factor, model vs paper.
+pub fn latency_tables(
+    benchmark: &str,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<Vec<LatencyRow>> {
+    let table_no = match benchmark {
+        "top" => 2,
+        "flavor" => 3,
+        "quickdraw" => 4,
+        other => anyhow::bail!("no latency table for {other:?}"),
+    };
+    let mut rows = Vec::new();
+    let mut table = AsciiTable::new(
+        format!("Table {table_no}: {benchmark} latencies (model vs paper, µs)"),
+        &["model", "R", "model min-max", "paper min-max", "err(min)"],
+    );
+    for cell in [Cell::Gru, Cell::Lstm] {
+        let arch = zoo::arch(benchmark, cell)?;
+        // Latency-strategy column (top tagging only, Table 2).
+        if benchmark == "top" {
+            let (lo, hi) = latency::latency_band(
+                &arch,
+                ReuseFactor::fully_parallel(),
+                Strategy::Latency,
+            )?;
+            table.row(vec![
+                arch.key(),
+                "latency".into(),
+                format!("{lo:.1}-{hi:.1}"),
+                format!(
+                    "{:.1}-{:.1}",
+                    paper::TOP_LATENCY_STRATEGY_US,
+                    paper::TOP_LATENCY_STRATEGY_US
+                ),
+                format!(
+                    "{:.0}%",
+                    100.0 * (lo - paper::TOP_LATENCY_STRATEGY_US).abs()
+                        / paper::TOP_LATENCY_STRATEGY_US
+                ),
+            ]);
+        }
+        for paper_row in paper::latency_table(benchmark, cell) {
+            let (lo, hi) = latency::latency_band(
+                &arch,
+                paper_row.reuse,
+                Strategy::Resource,
+            )?;
+            let row = LatencyRow {
+                key: arch.key(),
+                reuse: paper_row.reuse,
+                model_min_us: lo,
+                model_max_us: hi,
+                paper_min_us: paper_row.min_us,
+                paper_max_us: paper_row.max_us,
+            };
+            table.row(vec![
+                row.key.clone(),
+                row.reuse.label(),
+                format!("{:.1}-{:.1}", row.model_min_us, row.model_max_us),
+                format!("{:.1}-{:.1}", row.paper_min_us, row.paper_max_us),
+                format!("{:.0}%", 100.0 * row.min_rel_err()),
+            ]);
+            rows.push(row);
+        }
+    }
+    println!("{}", table.render());
+    if let Some(dir) = out_dir {
+        let mut csv = CsvWriter::new(
+            dir.join(format!("table{table_no}_latency_{benchmark}.csv")),
+            &[
+                "model", "reuse_kernel", "reuse_recurrent",
+                "model_min_us", "model_max_us", "paper_min_us", "paper_max_us",
+            ],
+        );
+        for r in &rows {
+            csv.row(&[
+                r.key.clone(),
+                r.reuse.kernel.to_string(),
+                r.reuse.recurrent.to_string(),
+                format!("{:.2}", r.model_min_us),
+                format!("{:.2}", r.model_max_us),
+                format!("{:.2}", r.paper_min_us),
+                format!("{:.2}", r.paper_max_us),
+            ]);
+        }
+        println!("wrote {}", csv.finish()?.display());
+    }
+    Ok(rows)
+}
+
+/// Table 5: static vs non-static latency and II for the top-tagging
+/// models (latency strategy, the paper's configuration).
+pub fn table5(out_dir: Option<&Path>) -> anyhow::Result<AsciiTable> {
+    let mut table = AsciiTable::new(
+        "Table 5: top tagging static vs non-static (model vs paper)",
+        &[
+            "model", "static lat µs (paper)", "non-static lat µs (paper)",
+            "static II (paper)", "non-static II (paper)",
+        ],
+    );
+    let mut csv = out_dir.map(|dir| {
+        CsvWriter::new(
+            dir.join("table5_modes.csv"),
+            &["model", "mode", "latency_us", "ii_cycles"],
+        )
+    });
+    for paper_row in paper::TABLE5 {
+        let arch = zoo::arch("top", paper_row.cell)?;
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(10, 6),
+            ReuseFactor::fully_parallel(),
+        );
+        cfg.strategy = Strategy::Latency;
+        let stat = latency::schedule(&arch, &cfg)?;
+        cfg.mode = RnnMode::NonStatic;
+        let non = latency::schedule(&arch, &cfg)?;
+        table.row(vec![
+            arch.key(),
+            format!("{:.1} ({:.1})", stat.latency_us, paper_row.static_latency_us),
+            format!(
+                "{:.1} ({:.1})",
+                non.latency_us, paper_row.nonstatic_latency_us
+            ),
+            format!("{} ({})", stat.ii_cycles, paper_row.static_ii),
+            format!("{} ({})", non.ii_cycles, paper_row.nonstatic_ii),
+        ]);
+        if let Some(csv) = csv.as_mut() {
+            csv.row(&[
+                arch.key(),
+                "static".into(),
+                format!("{:.2}", stat.latency_us),
+                stat.ii_cycles.to_string(),
+            ]);
+            csv.row(&[
+                arch.key(),
+                "non-static".into(),
+                format!("{:.2}", non.latency_us),
+                non.ii_cycles.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    if let Some(csv) = csv {
+        println!("wrote {}", csv.finish()?.display());
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_three_benchmarks() {
+        let t = table1(None).unwrap();
+        assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn latency_tables_match_paper_within_tolerance() {
+        for (benchmark, tol) in [("top", 0.15), ("flavor", 0.20), ("quickdraw", 0.10)]
+        {
+            let rows = latency_tables(benchmark, None).unwrap();
+            assert_eq!(rows.len(), 8); // 4 reuse × 2 cells
+            for row in rows {
+                assert!(
+                    row.min_rel_err() < tol,
+                    "{benchmark} {} R={}: {:.2} vs paper {:.2}",
+                    row.key,
+                    row.reuse.label(),
+                    row.model_min_us,
+                    row.paper_min_us
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table5_builds() {
+        let t = table5(None).unwrap();
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn unknown_benchmark_rejected() {
+        assert!(latency_tables("higgs", None).is_err());
+    }
+}

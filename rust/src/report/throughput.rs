@@ -1,0 +1,202 @@
+//! §5.2 throughput comparison: FPGA (analytical, from II) vs the batched
+//! dense-pipeline engine (PJRT CPU — the stand-in for the paper's V100).
+//!
+//! The paper's claim has two parts: (a) the FPGA design's batch-1
+//! throughput (4300–9700 ev/s for the QuickDraw LSTM) beats the GPU at
+//! batch 1 (660 ev/s) by ~10×, and (b) the GPU catches up only at large
+//! batch (7700 @ 10, ~30000 @ 100).  Part (a) reproduces analytically
+//! from the scheduler's II; part (b) reproduces as a *relative batch
+//! scaling* on the PJRT engine: batched executables amortize dispatch
+//! exactly the way the GPU amortizes kernel launches.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::fixed::FixedSpec;
+use crate::hls::latency::{self, Strategy};
+use crate::hls::{paper, HlsConfig, ReuseFactor, RnnMode};
+use crate::model::{zoo, Cell};
+use crate::runtime::Runtime;
+use crate::util::timing;
+
+use super::csv::CsvWriter;
+use super::table::AsciiTable;
+
+/// Measured/estimated throughput rows.
+#[derive(Debug, Clone)]
+pub struct ThroughputReport {
+    /// (label, events/sec) — FPGA estimates then engine measurements.
+    pub rows: Vec<(String, f64)>,
+}
+
+impl ThroughputReport {
+    pub fn get(&self, label: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|&(_, v)| v)
+    }
+}
+
+/// FPGA-side throughput band from the scheduler's II over the width band,
+/// at the reuse column whose latency range matches the paper's quoted
+/// 4300–9700 ev/s (R = (192, 128)).
+pub fn fpga_band(cell: Cell) -> anyhow::Result<(f64, f64)> {
+    let arch = zoo::arch("quickdraw", cell)?;
+    let reuse = ReuseFactor::new(192, 128);
+    let mut lo = f64::INFINITY;
+    let mut hi: f64 = 0.0;
+    for width in [latency::WIDTH_LO, latency::WIDTH_HI] {
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(width, 10.min(width - 1)),
+            reuse,
+        );
+        cfg.strategy = Strategy::Resource;
+        cfg.mode = RnnMode::Static;
+        let t = latency::schedule(&arch, &cfg)?;
+        lo = lo.min(t.throughput_hz);
+        hi = hi.max(t.throughput_hz);
+    }
+    Ok((lo, hi))
+}
+
+/// Full comparison.  `artifacts` must exist for the engine measurements.
+pub fn run(
+    artifacts: &Path,
+    events_per_batch_point: usize,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<ThroughputReport> {
+    let mut rows = Vec::new();
+
+    let (lo, hi) = fpga_band(Cell::Lstm)?;
+    rows.push(("fpga_model_min".to_string(), lo));
+    rows.push(("fpga_model_max".to_string(), hi));
+
+    // Engine (GPU-analog) side: quickdraw LSTM at batch 1 / 10 / 100.
+    let runtime = Runtime::new(artifacts)?;
+    for batch in [1usize, 10, 100] {
+        let model = runtime.model("quickdraw_lstm", batch)?;
+        let stride = model.seq_len * model.input_size;
+        let xs = vec![0.1f32; batch * stride];
+        let budget_ms =
+            (events_per_batch_point as u64).clamp(200, 3_000);
+        let stats = timing::bench_for(Duration::from_millis(budget_ms), || {
+            model.run_batch(&xs, batch).expect("pjrt batch");
+        });
+        rows.push((
+            format!("engine_batch{batch}"),
+            stats.throughput(batch),
+        ));
+    }
+
+    let p = &paper::QUICKDRAW_THROUGHPUT;
+    let mut table = AsciiTable::new(
+        "§5.2 throughput: QuickDraw LSTM, events/sec (paper values in parens)",
+        &["source", "events/s", "paper"],
+    );
+    let paper_vals = [
+        ("fpga_model_min", p.fpga_min),
+        ("fpga_model_max", p.fpga_max),
+        ("engine_batch1", p.gpu_batch1),
+        ("engine_batch10", p.gpu_batch10),
+        ("engine_batch100", p.gpu_batch100),
+    ];
+    for (label, paper_val) in paper_vals {
+        let got = rows
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|&(_, v)| v)
+            .unwrap_or(0.0);
+        table.row(vec![
+            label.to_string(),
+            format!("{got:.0}"),
+            format!("{paper_val:.0}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    if let Some(dir) = out_dir {
+        let mut csv = CsvWriter::new(
+            dir.join("throughput_quickdraw.csv"),
+            &["source", "events_per_sec"],
+        );
+        for (label, v) in &rows {
+            csv.row(&[label.clone(), format!("{v:.1}")]);
+        }
+        println!("wrote {}", csv.finish()?.display());
+    }
+    Ok(ThroughputReport { rows })
+}
+
+/// Shape checks for EXPERIMENTS.md: batch scaling must be monotone with
+/// measurable amortization.  The paper's GPU shows ~45× from batch 1 to
+/// 100 because GPU batch-1 is *launch-bound*; the PJRT CPU analog is
+/// already compute-bound at batch 1, so its amortization is modest —
+/// we require monotone scaling and ≥1.15× (documented substitution
+/// limit in EXPERIMENTS.md §Deviations).
+pub fn shape_check(report: &ThroughputReport) -> anyhow::Result<()> {
+    let b1 = report
+        .get("engine_batch1")
+        .ok_or_else(|| anyhow::anyhow!("no batch-1 row"))?;
+    let b10 = report
+        .get("engine_batch10")
+        .ok_or_else(|| anyhow::anyhow!("no batch-10 row"))?;
+    let b100 = report
+        .get("engine_batch100")
+        .ok_or_else(|| anyhow::anyhow!("no batch-100 row"))?;
+    anyhow::ensure!(
+        b10 > b1 && b100 > b10,
+        "batch scaling not monotone: {b1:.0} / {b10:.0} / {b100:.0}"
+    );
+    anyhow::ensure!(
+        b100 / b1 >= 1.15,
+        "batch-100 amortization only {:.2}x",
+        b100 / b1
+    );
+    let fpga_min = report.get("fpga_model_min").unwrap_or(0.0);
+    let fpga_max = report.get("fpga_model_max").unwrap_or(0.0);
+    anyhow::ensure!(
+        fpga_min > 3_000.0 && fpga_max < 12_000.0,
+        "FPGA band {fpga_min:.0}-{fpga_max:.0} out of the paper's regime"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The analytical FPGA band must straddle the paper's 4300–9700 ev/s.
+    #[test]
+    fn fpga_band_matches_paper_regime() {
+        let (lo, hi) = fpga_band(Cell::Lstm).unwrap();
+        assert!(lo < hi);
+        // paper: 4300 (max width) to 9700 (min width)
+        assert!((lo - 4_300.0).abs() / 4_300.0 < 0.25, "lo {lo:.0}");
+        assert!((hi - 9_700.0).abs() / 9_700.0 < 0.25, "hi {hi:.0}");
+    }
+
+    #[test]
+    fn shape_check_logic() {
+        let good = ThroughputReport {
+            rows: vec![
+                ("fpga_model_min".into(), 4500.0),
+                ("fpga_model_max".into(), 9500.0),
+                ("engine_batch1".into(), 1600.0),
+                ("engine_batch10".into(), 1800.0),
+                ("engine_batch100".into(), 2200.0),
+            ],
+        };
+        shape_check(&good).unwrap();
+        let bad = ThroughputReport {
+            rows: vec![
+                ("fpga_model_min".into(), 4500.0),
+                ("fpga_model_max".into(), 9500.0),
+                ("engine_batch1".into(), 700.0),
+                ("engine_batch10".into(), 500.0),
+                ("engine_batch100".into(), 400.0),
+            ],
+        };
+        assert!(shape_check(&bad).is_err());
+    }
+}

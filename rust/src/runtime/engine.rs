@@ -1,0 +1,174 @@
+//! PJRT execution engine: compiled executables + resident weight buffers.
+//!
+//! One [`PjrtModel`] wraps one HLO module (model × batch bucket) compiled
+//! on the PJRT CPU client.  Weights are uploaded to device buffers once
+//! at load time; the per-request hot path only transfers the input batch
+//! (`buffer_from_host_buffer`) and runs `execute_b` — no Python, no
+//! recompilation, no weight copies.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::model::Weights;
+
+use super::manifest::{Manifest, ManifestModel};
+
+/// One compiled (model × batch) executable with resident weights.
+pub struct PjrtModel {
+    pub key: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub input_size: usize,
+    pub output_size: usize,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl PjrtModel {
+    /// Flat input length expected by [`Self::run_batch`] when full.
+    pub fn input_len(&self) -> usize {
+        self.batch * self.seq_len * self.input_size
+    }
+
+    /// Execute on up to `batch` samples.  `xs` holds `n` samples row-major
+    /// (`n * seq_len * input_size` floats); if `n < batch` the batch is
+    /// zero-padded and only the first `n` outputs are returned.
+    pub fn run_batch(&self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let stride = self.seq_len * self.input_size;
+        anyhow::ensure!(n >= 1 && n <= self.batch, "n={n} vs batch {}", self.batch);
+        anyhow::ensure!(xs.len() == n * stride, "xs len {} != {}", xs.len(), n * stride);
+
+        let input_buf = if n == self.batch {
+            self.client.buffer_from_host_buffer(
+                xs,
+                &[self.batch, self.seq_len, self.input_size],
+                None,
+            )?
+        } else {
+            let mut padded = vec![0f32; self.input_len()];
+            padded[..xs.len()].copy_from_slice(xs);
+            self.client.buffer_from_host_buffer(
+                &padded,
+                &[self.batch, self.seq_len, self.input_size],
+                None,
+            )?
+        };
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&input_buf);
+        args.extend(self.weight_bufs.iter());
+        let result = self.exe.execute_b(&args)?;
+        // return_tuple=True → single tuple output on device 0.
+        let literal = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let flat = literal.to_vec::<f32>()?;
+        anyhow::ensure!(
+            flat.len() == self.batch * self.output_size,
+            "output length {} != {}",
+            flat.len(),
+            self.batch * self.output_size
+        );
+        Ok(flat
+            .chunks_exact(self.output_size)
+            .take(n)
+            .map(|row| row.to_vec())
+            .collect())
+    }
+}
+
+/// PJRT client + executable cache over a manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), Arc<PjrtModel>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (or fetch cached) the executable for `key` at `batch`.
+    pub fn model(&self, key: &str, batch: usize) -> anyhow::Result<Arc<PjrtModel>> {
+        if let Some(hit) = self
+            .cache
+            .lock()
+            .expect("runtime cache")
+            .get(&(key.to_string(), batch))
+        {
+            return Ok(hit.clone());
+        }
+        let model = Arc::new(self.compile(key, batch)?);
+        self.cache
+            .lock()
+            .expect("runtime cache")
+            .insert((key.to_string(), batch), model.clone());
+        Ok(model)
+    }
+
+    /// Smallest batch bucket that fits `n` samples (or the largest bucket).
+    pub fn bucket_for(&self, key: &str, n: usize) -> anyhow::Result<usize> {
+        let buckets = self.manifest.batch_buckets(key)?;
+        anyhow::ensure!(!buckets.is_empty(), "no HLO artifacts for {key}");
+        Ok(buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(*buckets.last().expect("non-empty")))
+    }
+
+    fn compile(&self, key: &str, batch: usize) -> anyhow::Result<PjrtModel> {
+        let entry: &ManifestModel = self.manifest.model(key)?;
+        let rel = entry.hlo.get(&batch).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no HLO for {key} at batch {batch} (have {:?})",
+                entry.hlo.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let hlo_path = self.manifest.path(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        // Upload weights once, in the manifest's parameter order.
+        let weights = Weights::load(self.manifest.path(&entry.weights))?;
+        let mut weight_bufs = Vec::with_capacity(entry.param_order.len());
+        for (layer, tensor) in &entry.param_order {
+            let t = weights.tensor(layer, tensor)?;
+            weight_bufs.push(self.client.buffer_from_host_buffer(
+                &t.data,
+                &t.shape,
+                None,
+            )?);
+        }
+        Ok(PjrtModel {
+            key: key.to_string(),
+            batch,
+            seq_len: entry.seq_len,
+            input_size: entry.input_size,
+            output_size: entry.output_size,
+            exe,
+            client: self.client.clone(),
+            weight_bufs,
+        })
+    }
+}
+
+// NOTE: integration tests for this module live in rust/tests/pjrt.rs —
+// they need the real artifacts directory (built by `make artifacts`).

@@ -1,0 +1,166 @@
+//! Artifact registry: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::parse;
+
+/// One model entry of the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub key: String,
+    pub benchmark: String,
+    pub cell: String,
+    pub seq_len: usize,
+    pub input_size: usize,
+    pub hidden_size: usize,
+    pub output_size: usize,
+    /// Relative paths.
+    pub weights: String,
+    pub dataset: String,
+    pub golden: String,
+    /// batch size → relative HLO path.
+    pub hlo: BTreeMap<usize, String>,
+    /// HLO parameter order (parameters 1..N): (layer, tensor).
+    pub param_order: Vec<(String, String)>,
+}
+
+/// Parsed manifest + its root directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ManifestModel>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} (run `make artifacts` first?): {e}",
+                path.display()
+            )
+        })?;
+        Self::from_json(root, &text)
+    }
+
+    pub fn from_json(root: PathBuf, text: &str) -> anyhow::Result<Self> {
+        let doc = parse(text)?;
+        let format = doc.req("format")?.as_str()?;
+        anyhow::ensure!(
+            format == "hlo-text-v1",
+            "unsupported manifest format {format:?}"
+        );
+        let mut models = Vec::new();
+        for entry in doc.req("models")?.as_array()? {
+            let mut hlo = BTreeMap::new();
+            for (batch, path) in entry.req("hlo")?.as_object()? {
+                hlo.insert(
+                    batch.parse::<usize>().map_err(|e| {
+                        anyhow::anyhow!("bad batch key {batch:?}: {e}")
+                    })?,
+                    path.as_str()?.to_string(),
+                );
+            }
+            let mut param_order = Vec::new();
+            for pair in entry.req("param_order")?.as_array()? {
+                let pair = pair.as_array()?;
+                anyhow::ensure!(pair.len() == 2, "param_order pair");
+                param_order.push((
+                    pair[0].as_str()?.to_string(),
+                    pair[1].as_str()?.to_string(),
+                ));
+            }
+            models.push(ManifestModel {
+                key: entry.req("key")?.as_str()?.to_string(),
+                benchmark: entry.req("benchmark")?.as_str()?.to_string(),
+                cell: entry.req("cell")?.as_str()?.to_string(),
+                seq_len: entry.req("seq_len")?.as_usize()?,
+                input_size: entry.req("input_size")?.as_usize()?,
+                hidden_size: entry.req("hidden_size")?.as_usize()?,
+                output_size: entry.req("output_size")?.as_usize()?,
+                weights: entry.req("weights")?.as_str()?.to_string(),
+                dataset: entry.req("dataset")?.as_str()?.to_string(),
+                golden: entry.req("golden")?.as_str()?.to_string(),
+                hlo,
+                param_order,
+            });
+        }
+        Ok(Self { root, models })
+    }
+
+    pub fn model(&self, key: &str) -> anyhow::Result<&ManifestModel> {
+        self.models.iter().find(|m| m.key == key).ok_or_else(|| {
+            let keys: Vec<&str> =
+                self.models.iter().map(|m| m.key.as_str()).collect();
+            anyhow::anyhow!("no model {key:?} in manifest (have {keys:?})")
+        })
+    }
+
+    /// Absolute path for a manifest-relative path.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// The batch buckets available for a model (ascending).
+    pub fn batch_buckets(&self, key: &str) -> anyhow::Result<Vec<usize>> {
+        Ok(self.model(key)?.hlo.keys().copied().collect())
+    }
+}
+
+/// Find the artifacts directory: `$RNN_HLS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("RNN_HLS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "format": "hlo-text-v1",
+          "models": [{
+            "key": "top_gru", "benchmark": "top", "cell": "gru",
+            "seq_len": 20, "input_size": 6, "hidden_size": 20,
+            "output_size": 1,
+            "weights": "weights/top_gru.json",
+            "dataset": "data/top_test.bin",
+            "golden": "golden/top_gru.json",
+            "hlo": {"1": "hlo/top_gru_b1.hlo.txt", "10": "hlo/top_gru_b10.hlo.txt"},
+            "param_order": [["dense0","b"],["rnn","w"]]
+          }]
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(PathBuf::from("/x"), sample()).unwrap();
+        let model = m.model("top_gru").unwrap();
+        assert_eq!(model.hlo[&10], "hlo/top_gru_b10.hlo.txt");
+        assert_eq!(model.param_order[1], ("rnn".into(), "w".into()));
+        assert_eq!(m.batch_buckets("top_gru").unwrap(), vec![1, 10]);
+        assert_eq!(
+            m.path("weights/top_gru.json"),
+            PathBuf::from("/x/weights/top_gru.json")
+        );
+    }
+
+    #[test]
+    fn unknown_key_lists_options() {
+        let m = Manifest::from_json(PathBuf::from("/x"), sample()).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("top_gru"));
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let bad = sample().replace("hlo-text-v1", "hlo-proto-v9");
+        assert!(Manifest::from_json(PathBuf::from("/x"), &bad).is_err());
+    }
+}

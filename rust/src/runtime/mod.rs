@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts` and
+//! execute them on the request path — Python is never involved.
+//!
+//! * [`manifest`] — registry of compiled models (`artifacts/manifest.json`).
+//! * [`engine`] — [`engine::PjrtModel`]: one compiled executable per
+//!   (model, batch bucket), weights resident as device buffers, plus
+//!   [`engine::Runtime`], the client + executable cache.
+//!
+//! The interchange is HLO **text** (see `python/compile/aot.py` for the
+//! 64-bit-proto-id rationale) loaded via `HloModuleProto::from_text_file`
+//! and compiled with the PJRT CPU client.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{PjrtModel, Runtime};
+pub use manifest::{Manifest, ManifestModel};

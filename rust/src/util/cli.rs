@@ -1,0 +1,228 @@
+//! Declarative flag parsing for the launcher (the clap slice we need).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and trailing
+//! positionals.  Unknown flags are errors; `--help` text is generated from
+//! the declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(text) => text
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {text:?}: {e}")),
+        }
+    }
+}
+
+/// A subcommand spec: name, summary, options.
+pub struct Command {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, summary: &'static str) -> Self {
+        Self {
+            name,
+            summary,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default,
+            takes_value: true,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.name, self.summary);
+        for opt in &self.opts {
+            let default = opt
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let value = if opt.takes_value { " <value>" } else { "" };
+            out.push_str(&format!(
+                "  --{}{}\n        {}{}\n",
+                opt.name, value, opt.help, default
+            ));
+        }
+        out
+    }
+
+    /// Parse a raw arg list (without the binary/subcommand names).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for opt in &self.opts {
+            if let Some(default) = opt.default {
+                values.insert(opt.name.to_string(), default.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let arg = &raw[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                if name == "help" {
+                    anyhow::bail!("{}", self.usage());
+                }
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown option --{name}\n\n{}",
+                            self.usage()
+                        )
+                    })?;
+                if !opt.takes_value {
+                    anyhow::ensure!(
+                        inline.is_none(),
+                        "--{name} takes no value"
+                    );
+                    flags.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("--{name} needs a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    values.insert(name.to_string(), value);
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the server")
+            .opt("model", "model key", Some("top_gru"))
+            .opt("rate", "events/sec", None)
+            .flag("verbose", "log more")
+    }
+
+    fn strs(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let args = cmd().parse(&[]).unwrap();
+        assert_eq!(args.get("model"), Some("top_gru"));
+        assert_eq!(args.get("rate"), None);
+        assert!(!args.has("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let args = cmd()
+            .parse(&strs(&["--model=flavor_lstm", "--rate", "5000", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(args.get("model"), Some("flavor_lstm"));
+        assert_eq!(args.parse_num::<u64>("rate", 0).unwrap(), 5000);
+        assert!(args.has("verbose"));
+        assert_eq!(args.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(cmd().parse(&strs(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&strs(&["--rate"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let args = cmd().parse(&strs(&["--rate", "abc"])).unwrap();
+        assert!(args.parse_num::<u64>("rate", 0).is_err());
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let err = cmd().parse(&strs(&["--help"])).unwrap_err();
+        assert!(err.to_string().contains("Options:"));
+    }
+}

@@ -1,0 +1,449 @@
+//! Minimal JSON: recursive-descent parser and compact writer.
+//!
+//! Handles the full JSON grammar (RFC 8259) minus exotic corner cases we
+//! never produce (no `\u` surrogate-pair validation beyond replacement).
+//! Numbers parse as f64 — adequate for f32 weights and integer metadata.
+//! Object order is preserved (`Vec<(String, Value)>`), matching the
+//! python side's insertion order.
+
+use std::fmt::Write as _;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Typed accessors returning anyhow errors with a path hint.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing key {key:?}"))
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => anyhow::bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> anyhow::Result<usize> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(
+            n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64,
+            "expected unsigned integer, got {n}"
+        );
+        Ok(n as usize)
+    }
+
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> anyhow::Result<&[Value]> {
+        match self {
+            Value::Array(items) => Ok(items),
+            other => anyhow::bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_object(&self) -> anyhow::Result<&[(String, Value)]> {
+        match self {
+            Value::Object(pairs) => Ok(pairs),
+            other => anyhow::bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// Array of numbers → Vec<f32> (the weights fast path).
+    pub fn as_f32_vec(&self) -> anyhow::Result<Vec<f32>> {
+        let items = self.as_array()?;
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            out.push(item.as_f64()? as f32);
+        }
+        Ok(out)
+    }
+
+    pub fn as_usize_vec(&self) -> anyhow::Result<Vec<usize>> {
+        self.as_array()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    /// Serialize compactly.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => write_escaped(s, out),
+            Value::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Value::Object(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience constructors for report emission.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn arr(items: Vec<Value>) -> Value {
+    Value::Array(items)
+}
+
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+
+pub fn s(text: &str) -> Value {
+    Value::Str(text.to_string())
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> anyhow::Result<Value> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(
+        p.pos == bytes.len(),
+        "trailing garbage at byte {} of {}",
+        p.pos,
+        bytes.len()
+    );
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    #[inline]
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    #[inline]
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek() == Some(b),
+            "expected {:?} at byte {}, found {:?}",
+            b as char,
+            self.pos,
+            self.peek().map(|c| c as char)
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Value> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(_) => self.number(),
+            None => anyhow::bail!("unexpected end of input"),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Value) -> anyhow::Result<Value> {
+        let end = self.pos + lit.len();
+        anyhow::ensure!(
+            self.bytes.get(self.pos..end) == Some(lit.as_bytes()),
+            "invalid literal at byte {}",
+            self.pos
+        );
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> anyhow::Result<Value> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            match b {
+                b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9' => self.pos += 1,
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad number {text:?} at {start}: {e}"))?;
+        Ok(Value::Num(n))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => anyhow::bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| anyhow::anyhow!("dangling escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow::anyhow!("short \\u"))?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)?,
+                                16,
+                            )?;
+                            self.pos += 4;
+                            out.push(
+                                char::from_u32(code).unwrap_or('\u{fffd}'),
+                            );
+                        }
+                        other => {
+                            anyhow::bail!("bad escape \\{}", other as char)
+                        }
+                    }
+                }
+                Some(_) => {
+                    // Copy a run of plain bytes at once (fast path for the
+                    // multi-megabyte weights files).
+                    let start = self.pos;
+                    while let Some(b) = self.peek() {
+                        if b == b'"' || b == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(
+                        &self.bytes[start..self.pos],
+                    )?);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Array(items));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or ']' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Object(pairs));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or '}}' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("-3.25e2").unwrap(), Value::Num(-325.0));
+        assert_eq!(parse("\"hi\\n\"").unwrap(), Value::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).unwrap();
+        assert_eq!(
+            v.get("a").unwrap().as_array().unwrap()[2]
+                .get("b")
+                .unwrap(),
+            &Value::Bool(false)
+        );
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn roundtrip_through_writer() {
+        let src = r#"{"name":"rnn","shape":[2,3],"data":[0.5,-1.25,0,3,1e-3,12345678],"ok":true,"none":null}"#;
+        let v = parse(src).unwrap();
+        let v2 = parse(&v.to_json()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("02a").is_err());
+        assert!(parse("{\"a\":1} extra").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let v = Value::Str("a\"b\\c\nd\te\u{1}".into());
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_escape() {
+        assert_eq!(
+            parse(r#""é""#).unwrap(),
+            Value::Str("é".into())
+        );
+    }
+
+    #[test]
+    fn typed_accessors_error_cleanly() {
+        let v = parse(r#"{"n": 1.5}"#).unwrap();
+        assert!(v.req("missing").is_err());
+        assert!(v.get("n").unwrap().as_usize().is_err());
+        assert!(v.get("n").unwrap().as_str().is_err());
+        assert_eq!(v.get("n").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn f32_vec_fast_path() {
+        let v = parse("[1, 2.5, -3]").unwrap();
+        assert_eq!(v.as_f32_vec().unwrap(), vec![1.0, 2.5, -3.0]);
+    }
+}

@@ -1,0 +1,26 @@
+//! In-tree substrates for facilities that are normally crates.
+//!
+//! This build environment resolves only the crates vendored for the XLA
+//! reference example (`xla`, `anyhow` and their build closure), so the
+//! usual ecosystem picks — serde/serde_json, clap, tokio, rayon,
+//! criterion, proptest — are unavailable.  Per the substitution rule we
+//! implement the slices we need in-tree:
+//!
+//! * [`json`]    — recursive-descent JSON parser + writer (weights,
+//!   manifest, reports).
+//! * [`rng`]     — splitmix64/xoshiro256** PRNG + distributions
+//!   (generators, property tests; deterministic by seed).
+//! * [`threads`] — scoped parallel-map over a worker pool (the rayon
+//!   slice we use).
+//! * [`timing`]  — measurement harness with warmup and percentile stats
+//!   (the criterion slice we use; benches are `harness = false` mains).
+//! * [`prop`]    — miniature property-testing loop (the proptest slice we
+//!   use: seeded random cases + failure reporting, no shrinking).
+//! * [`cli`]     — declarative flag parsing for the launcher.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;
+pub mod timing;

@@ -1,0 +1,58 @@
+//! Miniature property-testing harness (the proptest slice we need).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure over `cases` seeded
+//! random inputs; on failure it re-raises with the failing case index and
+//! seed so the case reproduces exactly.  No shrinking — failures print
+//! the seed, and generators are cheap enough to debug directly.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` seeded random cases.  The closure returns
+/// `Err(msg)` (or panics) to signal a counterexample.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-reverse", 50, |rng| {
+            let v: Vec<u64> = (0..rng.below(20)).map(|_| rng.next_u64()).collect();
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            prop_assert!(r == v, "double reverse changed {v:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_rng| Err("nope".to_string()));
+    }
+}

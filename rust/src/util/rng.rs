@@ -1,0 +1,237 @@
+//! Deterministic PRNG + distributions (the `rand` slice we need).
+//!
+//! xoshiro256** seeded via splitmix64.  Used by the rust-side data
+//! generators (live event sources for serving) and the property tests.
+//! Deterministic across platforms: same seed → same stream.
+
+/// xoshiro256** generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion of the seed into the 256-bit state.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire rejection-free is overkill; modulo bias is < 2^-53 here.
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity — generators are not on the hot path).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Exponential with the given scale (mean).
+    pub fn exponential(&mut self, scale: f64) -> f64 {
+        -scale * (1.0 - self.uniform()).ln()
+    }
+
+    /// Poisson via inversion (fine for the small means we use).
+    pub fn poisson(&mut self, mean: f64) -> usize {
+        let limit = (-mean).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.uniform();
+            if p <= limit || k > 1000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Dirichlet over `n` categories with symmetric concentration `alpha`,
+    /// via normalized Gamma(alpha) draws (Marsaglia–Tsang).
+    pub fn dirichlet(&mut self, n: usize, alpha: f64) -> Vec<f64> {
+        let mut draws: Vec<f64> =
+            (0..n).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = draws.iter().sum();
+        if sum <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        for d in &mut draws {
+            *d /= sum;
+        }
+        draws
+    }
+
+    fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Johnk boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.uniform().max(1e-12);
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal(0.0, 1.0);
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Weighted choice over probabilities summing to ~1.
+    pub fn choice_weighted(&mut self, probs: &[f64]) -> usize {
+        let r = self.uniform();
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if r < acc {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_with_sane_mean() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(2);
+        let n = 40_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal(3.0, 2.0);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(3);
+        let n = 40_000;
+        let mean: f64 =
+            (0..n).map(|_| rng.exponential(0.25)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Rng::new(4);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| rng.poisson(3.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let d = rng.dirichlet(3, 3.0);
+            assert_eq!(d.len(), 3);
+            assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut rng = Rng::new(6);
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            seen[rng.below(5)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weighted_choice_tracks_weights() {
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.choice_weighted(&[0.6, 0.3, 0.1])] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+        assert!((counts[0] as f64 / 30_000.0 - 0.6).abs() < 0.02);
+    }
+}

@@ -1,0 +1,134 @@
+//! Measurement harness for the `harness = false` benches (the criterion
+//! slice we need): warmup, repeated timed runs, percentile statistics,
+//! and aligned table output.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of per-iteration durations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_durations(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((iters as f64 * p) as usize).min(iters - 1)];
+        Self {
+            iters,
+            mean: total / iters as u32,
+            p50: pct(0.50),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[iters - 1],
+        }
+    }
+
+    /// Throughput in items/sec given items per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<Duration> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    Stats::from_durations(samples)
+}
+
+/// Time `f` adaptively: run batches until ~`budget` of wall time is spent.
+pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    Stats::from_durations(samples)
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// One result row for bench output; `cargo bench` prints these.
+pub fn report_row(name: &str, stats: &Stats) {
+    println!(
+        "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
+        fmt_duration(stats.mean),
+        fmt_duration(stats.p50),
+        fmt_duration(stats.p99),
+        stats.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_durations(vec![
+            Duration::from_micros(10),
+            Duration::from_micros(20),
+            Duration::from_micros(30),
+        ]);
+        assert_eq!(s.min, Duration::from_micros(10));
+        assert_eq!(s.max, Duration::from_micros(30));
+        assert_eq!(s.mean, Duration::from_micros(20));
+        assert!(s.p50 >= s.min && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0usize;
+        let s = bench(2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats::from_durations(vec![Duration::from_millis(10)]);
+        let tput = s.throughput(100);
+        assert!((tput - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains(" s"));
+    }
+}

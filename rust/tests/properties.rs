@@ -1,0 +1,321 @@
+//! Property-based tests (seeded-random cases via `util::prop` — the
+//! in-tree proptest substitute) over the substrate invariants.
+
+use rnn_hls::fixed::{
+    dequantize, quantize, requantize, FixedSpec, OverflowMode, QuantConfig,
+    RoundMode,
+};
+use rnn_hls::hls::latency::{self, Strategy};
+use rnn_hls::hls::{resource, HlsConfig, ReuseFactor, RnnMode};
+use rnn_hls::model::zoo;
+use rnn_hls::prop_assert;
+use rnn_hls::util::prop::check;
+use rnn_hls::util::rng::Rng;
+
+fn random_spec(rng: &mut Rng) -> FixedSpec {
+    let width = 2 + rng.below(24) as u32; // 2..=25
+    let integer = 1 + rng.below(width as usize - 1) as u32;
+    FixedSpec::new(width, integer)
+}
+
+// ------------------------------------------------------------- fixed point
+
+#[test]
+fn prop_quantize_roundtrip_error_below_lsb() {
+    check("quantize-roundtrip", 500, |rng| {
+        let spec = random_spec(rng);
+        let cfg = QuantConfig::ptq(spec);
+        // Values inside the representable range.
+        let x = rng.range(spec.min_value(), spec.max_value());
+        let back = dequantize(quantize(x, cfg), spec);
+        let err = (back - x).abs();
+        prop_assert!(
+            err < spec.lsb() + 1e-12,
+            "{}: x={x} back={back} err={err}",
+            spec.label()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_saturation_bounds_any_input() {
+    check("saturation-bounds", 500, |rng| {
+        let spec = random_spec(rng);
+        let cfg = QuantConfig::ptq(spec);
+        let x = rng.normal(0.0, 1e6); // wildly out of range
+        let raw = quantize(x, cfg);
+        prop_assert!(
+            raw >= spec.raw_min() && raw <= spec.raw_max(),
+            "{}: raw {raw} outside [{}, {}]",
+            spec.label(),
+            spec.raw_min(),
+            spec.raw_max()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_monotone() {
+    check("quantize-monotone", 300, |rng| {
+        let spec = random_spec(rng);
+        let cfg = QuantConfig::ptq(spec);
+        let a = rng.range(spec.min_value(), spec.max_value());
+        let b = rng.range(spec.min_value(), spec.max_value());
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        prop_assert!(
+            quantize(lo, cfg) <= quantize(hi, cfg),
+            "{}: monotonicity violated at {lo} vs {hi}",
+            spec.label()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rnd_no_worse_than_trn() {
+    check("rnd-beats-trn", 300, |rng| {
+        let spec = random_spec(rng);
+        let x = rng.range(spec.min_value(), spec.max_value());
+        let trn = dequantize(
+            quantize(
+                x,
+                QuantConfig {
+                    spec,
+                    round: RoundMode::Trn,
+                    overflow: OverflowMode::Sat,
+                },
+            ),
+            spec,
+        );
+        let rnd = dequantize(
+            quantize(
+                x,
+                QuantConfig {
+                    spec,
+                    round: RoundMode::Rnd,
+                    overflow: OverflowMode::Sat,
+                },
+            ),
+            spec,
+        );
+        prop_assert!(
+            (rnd - x).abs() <= (trn - x).abs() + 1e-12,
+            "{}: x={x} rnd err {} > trn err {}",
+            spec.label(),
+            (rnd - x).abs(),
+            (trn - x).abs()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_requantize_identity_when_same_spec() {
+    check("requantize-identity", 300, |rng| {
+        let spec = random_spec(rng);
+        let cfg = QuantConfig::ptq(spec);
+        let x = rng.range(spec.min_value(), spec.max_value());
+        let raw = quantize(x, cfg);
+        prop_assert!(
+            requantize(raw, spec.frac(), cfg) == raw,
+            "identity requantize changed raw"
+        );
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- scheduler
+
+fn random_reuse(rng: &mut Rng) -> ReuseFactor {
+    ReuseFactor::new(1 + rng.below(256), 1 + rng.below(256))
+}
+
+#[test]
+fn prop_ii_never_exceeds_latency() {
+    check("ii<=latency", 300, |rng| {
+        let archs = zoo::all_archs();
+        let arch = &archs[rng.below(archs.len())];
+        let mode = if rng.uniform() < 0.5 {
+            RnnMode::Static
+        } else {
+            RnnMode::NonStatic
+        };
+        let mut cfg = HlsConfig::paper_default(random_spec(rng), random_reuse(rng));
+        cfg.mode = mode;
+        let t = latency::schedule(arch, &cfg).map_err(|e| e.to_string())?;
+        prop_assert!(
+            t.ii_cycles <= t.latency_cycles,
+            "{} {:?}: II {} > latency {}",
+            arch.key(),
+            mode,
+            t.ii_cycles,
+            t.latency_cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonstatic_ii_never_above_static() {
+    check("nonstatic-ii<=static-ii", 300, |rng| {
+        let archs = zoo::all_archs();
+        let arch = &archs[rng.below(archs.len())];
+        let mut cfg = HlsConfig::paper_default(random_spec(rng), random_reuse(rng));
+        cfg.mode = RnnMode::Static;
+        let stat = latency::schedule(arch, &cfg).map_err(|e| e.to_string())?;
+        cfg.mode = RnnMode::NonStatic;
+        let non = latency::schedule(arch, &cfg).map_err(|e| e.to_string())?;
+        prop_assert!(
+            non.ii_cycles <= stat.ii_cycles,
+            "{}: non-static II {} > static II {}",
+            arch.key(),
+            non.ii_cycles,
+            stat.ii_cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_monotone_in_reuse() {
+    check("latency-monotone-reuse", 300, |rng| {
+        let archs = zoo::all_archs();
+        let arch = &archs[rng.below(archs.len())];
+        let spec = random_spec(rng);
+        let r1 = 1 + rng.below(128);
+        let r2 = r1 + 1 + rng.below(128);
+        let cfg1 = HlsConfig::paper_default(spec, ReuseFactor::new(r1, r1));
+        let cfg2 = HlsConfig::paper_default(spec, ReuseFactor::new(r2, r2));
+        let t1 = latency::schedule(arch, &cfg1).map_err(|e| e.to_string())?;
+        let t2 = latency::schedule(arch, &cfg2).map_err(|e| e.to_string())?;
+        prop_assert!(
+            t2.latency_cycles >= t1.latency_cycles,
+            "{}: latency not monotone in reuse ({r1} -> {r2})",
+            arch.key()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resources_antimonotone_in_reuse_monotone_in_width() {
+    check("resource-monotonicity", 200, |rng| {
+        let archs = zoo::all_archs();
+        let arch = &archs[rng.below(archs.len())];
+        let w1 = 4 + rng.below(20) as u32;
+        let w2 = w1 + 1 + rng.below(4) as u32;
+        let integer = 1 + rng.below((w1 - 1) as usize) as u32;
+        let r1 = 1 + rng.below(64);
+        let r2 = r1 * 2;
+        let mk = |w: u32, r: usize| {
+            HlsConfig::paper_default(
+                FixedSpec::new(w, integer.min(w - 1).max(1)),
+                ReuseFactor::new(r, r),
+            )
+        };
+        let wide = resource::estimate(arch, &mk(w2, r1));
+        let narrow = resource::estimate(arch, &mk(w1, r1));
+        prop_assert!(
+            wide.lut >= narrow.lut && wide.ff >= narrow.ff,
+            "{}: fabric not monotone in width {w1}->{w2}",
+            arch.key()
+        );
+        let low_r = resource::estimate(arch, &mk(w1, r1));
+        let high_r = resource::estimate(arch, &mk(w1, r2));
+        prop_assert!(
+            high_r.dsp <= low_r.dsp && high_r.lut <= low_r.lut,
+            "{}: resources not anti-monotone in reuse {r1}->{r2}",
+            arch.key()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gru_cheaper_than_lstm_everywhere() {
+    check("gru<=lstm", 200, |rng| {
+        use rnn_hls::model::Cell;
+        let names = ["top", "flavor", "quickdraw"];
+        let name = names[rng.below(3)];
+        let gru = zoo::arch(name, Cell::Gru).map_err(|e| e.to_string())?;
+        let lstm = zoo::arch(name, Cell::Lstm).map_err(|e| e.to_string())?;
+        let cfg = HlsConfig::paper_default(random_spec(rng), random_reuse(rng));
+        let eg = resource::estimate(&gru, &cfg);
+        let el = resource::estimate(&lstm, &cfg);
+        prop_assert!(
+            eg.dsp <= el.dsp && eg.lut <= el.lut && eg.ff <= el.ff,
+            "{name}: GRU not cheaper (dsp {} vs {})",
+            eg.dsp,
+            el.dsp
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ nn engines
+
+#[test]
+fn prop_fixed_engine_tracks_float_at_high_precision() {
+    use rnn_hls::model::Weights;
+    use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+
+    check("fixed-tracks-float", 20, |rng| {
+        // Random small GRU model via the JSON path.
+        let h = 2 + rng.below(6);
+        let i = 1 + rng.below(4);
+        let seq = 2 + rng.below(6);
+        let gh = 3 * h;
+        let mut rand_vec = |n: usize, scale: f64| -> String {
+            let items: Vec<String> = (0..n)
+                .map(|_| format!("{:.4}", rng.normal(0.0, scale)))
+                .collect();
+            format!("[{}]", items.join(","))
+        };
+        let w = rand_vec(i * gh, 0.4);
+        let u = rand_vec(h * gh, 0.4);
+        let b = rand_vec(2 * gh, 0.1);
+        let dw = rand_vec(h * 4, 0.4);
+        let db = rand_vec(4, 0.1);
+        let ow = rand_vec(4, 0.4);
+        let count = 3 * (i * h + h * h) + 6 * h + (h * 4 + 4) + (4 + 1);
+        let doc = format!(
+            r#"{{"arch": {{"name": "top", "cell": "gru", "seq_len": {seq},
+                "input_size": {i}, "hidden_size": {h}, "dense_sizes": [4],
+                "output_size": 1, "output_activation": "sigmoid"}},
+              "param_count": {count},
+              "layers": [
+                {{"name": "rnn",
+                  "w": {{"shape": [{i}, {gh}], "data": {w}}},
+                  "u": {{"shape": [{h}, {gh}], "data": {u}}},
+                  "b": {{"shape": [2, {gh}], "data": {b}}}}},
+                {{"name": "dense0",
+                  "w": {{"shape": [{h}, 4], "data": {dw}}},
+                  "b": {{"shape": [4], "data": {db}}}}},
+                {{"name": "out",
+                  "w": {{"shape": [4, 1], "data": {ow}}},
+                  "b": {{"shape": [1], "data": [0.02]}}}}
+              ]}}"#
+        );
+        let weights = Weights::from_json(&doc).map_err(|e| e.to_string())?;
+        let fl = FloatEngine::new(&weights).map_err(|e| e.to_string())?;
+        let fx = FixedEngine::new(
+            &weights,
+            QuantConfig::ptq(FixedSpec::new(26, 8)),
+        )
+        .map_err(|e| e.to_string())?;
+        let x: Vec<f32> = (0..seq * i)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let yf = fl.forward(&x);
+        let yq = fx.forward(&x);
+        prop_assert!(
+            (yf[0] - yq[0]).abs() < 0.02,
+            "h={h} i={i} seq={seq}: float {} vs fixed {}",
+            yf[0],
+            yq[0]
+        );
+        Ok(())
+    });
+}
