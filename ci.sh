@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verify + lint gates.  Invoked by .github/workflows/ci.yml and
+# runnable locally: ./ci.sh
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+# Lint gates: run when the components are installed (rustfmt/clippy are
+# rustup components and may be absent in minimal toolchains).
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt --check == (skipped: rustfmt not installed)"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy == (skipped: clippy not installed)"
+fi
+
+echo "ci.sh: all gates passed"

@@ -10,6 +10,8 @@ use std::time::Duration;
 use rnn_hls::coordinator::{batcher, BatcherConfig, BoundedQueue, Request};
 use rnn_hls::data::generators;
 use rnn_hls::fixed::{ActTables, FixedSpec, QuantConfig};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
 use rnn_hls::runtime::manifest;
 use rnn_hls::util::timing::{bench, bench_for, report_row};
 
@@ -69,6 +71,47 @@ fn main() {
         std::hint::black_box(batch.packed_features());
     });
     report_row("batcher/form_batch10+pack", &stats);
+
+    // Batched engine datapath: sequential vs lockstep vs parallel
+    // (synthetic weights — exercises the serving hot path end to end).
+    {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        let weights = Weights::synthetic(&arch, 0x707);
+        let mut generator = generators::for_benchmark("top", 5).unwrap();
+        let samples: Vec<Vec<f32>> =
+            (0..64).map(|_| generator.generate().features).collect();
+        let xs: Vec<&[f32]> =
+            samples.iter().map(|v| v.as_slice()).collect();
+
+        let mut float_engine = FloatEngine::new(&weights).unwrap();
+        let stats = bench_for(Duration::from_millis(200), || {
+            for x in &xs {
+                std::hint::black_box(float_engine.forward(x));
+            }
+        });
+        report_row("float/top_gru b64 sequential", &stats);
+        for workers in [1usize, 4] {
+            float_engine.set_parallelism(workers);
+            let stats = bench_for(Duration::from_millis(200), || {
+                std::hint::black_box(float_engine.forward_batch(&xs));
+            });
+            report_row(&format!("float/top_gru b64 batch w={workers}"), &stats);
+        }
+
+        let mut fixed_engine =
+            FixedEngine::new(&weights, q16).unwrap();
+        let stats = bench_for(Duration::from_millis(200), || {
+            for x in &xs {
+                std::hint::black_box(fixed_engine.forward(x));
+            }
+        });
+        report_row("fixed<16,6>/top_gru b64 sequential", &stats);
+        fixed_engine.set_parallelism(4);
+        let stats = bench_for(Duration::from_millis(200), || {
+            std::hint::black_box(fixed_engine.forward_batch(&xs));
+        });
+        report_row("fixed<16,6>/top_gru b64 batch w=4", &stats);
+    }
 
     // PJRT dispatch (needs artifacts).
     let artifacts = manifest::default_artifacts_dir();

@@ -1,19 +1,165 @@
-//! Bench: §5.2 throughput — FPGA estimate vs batched engine (GPU analog).
+//! Bench: §5.2 throughput — batch scaling of the serving engines.
 //!
-//! Reproduces the paper's QuickDraw-LSTM comparison: the analytical FPGA
-//! throughput band from the scheduler's II, against the measured PJRT
-//! batch-1/10/100 throughput (the dense-pipeline engine standing in for
-//! the V100).  The *shape* requirements — monotone batch scaling, large
-//! batch-100 amortization, FPGA band in the paper's 4300–9700 ev/s
-//! regime — are asserted.
+//! Two parts:
+//!
+//! 1. **Engine batch × worker scaling** (no artifacts needed): the
+//!    parallel `forward_batch` runtime vs the sequential per-sample
+//!    baseline, swept over batch size × worker count for a small
+//!    (top-tagging GRU) and a heavy (QuickDraw LSTM) model.  This is the
+//!    measurable form of the paper's batched-GPU-serving comparison: the
+//!    batcher+engine pair must turn batch size into throughput.  The
+//!    acceptance bar — ≥2× over sequential at batch ≥ 64 with ≥ 4
+//!    workers — is asserted on the heavy model.
+//! 2. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//!    original QuickDraw-LSTM comparison against the scheduler's II.
 
+use std::time::Duration;
+
+use rnn_hls::data::generators;
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
 use rnn_hls::report::throughput;
 use rnn_hls::runtime::manifest;
+use rnn_hls::util::timing::bench_for;
+
+fn scaling_for_engine(
+    label: &str,
+    engine: &mut FloatEngine,
+    samples: &[Vec<f32>],
+    budget: Duration,
+) -> f64 {
+    let mut best_speedup_b64_w4 = 0.0f64;
+    println!("  {label}: events/s (speedup vs sequential per-sample loop)");
+    println!("  {:>7} {:>12} {:>24} {:>24} {:>24} {:>24}",
+        "batch", "sequential", "w=1", "w=2", "w=4", "w=8");
+    for &batch in &[1usize, 16, 64, 256] {
+        let batch = batch.min(samples.len());
+        let xs: Vec<&[f32]> =
+            samples[..batch].iter().map(|v| v.as_slice()).collect();
+        let seq_stats = bench_for(budget, || {
+            for x in &xs {
+                std::hint::black_box(engine.forward(x));
+            }
+        });
+        let seq_tput = seq_stats.throughput(batch);
+        let mut cells = Vec::new();
+        for &workers in &[1usize, 2, 4, 8] {
+            engine.set_parallelism(workers);
+            let stats = bench_for(budget, || {
+                std::hint::black_box(engine.forward_batch(&xs));
+            });
+            let tput = stats.throughput(batch);
+            let speedup = tput / seq_tput;
+            if batch >= 64 && workers == 4 {
+                best_speedup_b64_w4 = best_speedup_b64_w4.max(speedup);
+            }
+            cells.push(format!("{tput:>12.0} ({speedup:>4.2}x)"));
+        }
+        println!(
+            "  {batch:>7} {seq_tput:>12.0} {:>24} {:>24} {:>24} {:>24}",
+            cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+    engine.set_parallelism(1);
+    best_speedup_b64_w4
+}
+
+fn engine_scaling() {
+    println!("=== engine batch × worker scaling (synthetic weights) ===");
+
+    // Small model: spawn overhead is visible, scaling is informational.
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 0xBA7C4);
+    let mut generator = generators::for_benchmark("top", 99).unwrap();
+    let samples: Vec<Vec<f32>> =
+        (0..256).map(|_| generator.generate().features).collect();
+    let mut engine = FloatEngine::new(&weights).unwrap();
+    scaling_for_engine(
+        "float/top_gru",
+        &mut engine,
+        &samples,
+        Duration::from_millis(150),
+    );
+
+    // Correctness spot-check: batched output identical to sequential.
+    engine.set_parallelism(4);
+    let xs: Vec<&[f32]> = samples[..64].iter().map(|v| v.as_slice()).collect();
+    let want: Vec<Vec<f32>> = xs.iter().map(|x| engine.forward(x)).collect();
+    assert_eq!(engine.forward_batch(&xs), want, "batched != sequential");
+    engine.set_parallelism(1);
+
+    // Heavy model: this is where the acceptance bar applies.
+    let arch = zoo::arch("quickdraw", Cell::Lstm).unwrap();
+    let weights = Weights::synthetic(&arch, 0xD0D0);
+    let mut generator = generators::for_benchmark("quickdraw", 7).unwrap();
+    let samples: Vec<Vec<f32>> =
+        (0..256).map(|_| generator.generate().features).collect();
+    let mut engine = FloatEngine::new(&weights).unwrap();
+    let speedup = scaling_for_engine(
+        "float/quickdraw_lstm",
+        &mut engine,
+        &samples,
+        Duration::from_millis(250),
+    );
+    println!(
+        "  quickdraw_lstm speedup at batch>=64, 4 workers: {speedup:.2}x \
+         (bar: >= 2x)"
+    );
+    // Only enforce the bar where 4 workers can actually run in parallel;
+    // on smaller machines print the shortfall instead of aborting the
+    // remaining bench sections.
+    let cores = rnn_hls::util::threads::default_workers();
+    if cores >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "parallel forward_batch only {speedup:.2}x over sequential at \
+             batch>=64 with 4 workers ({cores} cores)"
+        );
+    } else if speedup < 2.0 {
+        println!(
+            "  (bar not enforced: only {cores} cores available; \
+             measured {speedup:.2}x)"
+        );
+    }
+
+    // Fixed engine: the bit-accurate datapath scales the same way.
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 0xF1C5);
+    let mut generator = generators::for_benchmark("top", 3).unwrap();
+    let samples: Vec<Vec<f32>> =
+        (0..64).map(|_| generator.generate().features).collect();
+    let xs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+    let mut fixed =
+        FixedEngine::new(&weights, QuantConfig::ptq(FixedSpec::new(16, 6)))
+            .unwrap();
+    let seq = bench_for(Duration::from_millis(150), || {
+        for x in &xs {
+            std::hint::black_box(fixed.forward(x));
+        }
+    });
+    println!("  fixed<16,6>/top_gru batch 64:");
+    println!("    sequential: {:>10.0} ev/s", seq.throughput(64));
+    for workers in [1usize, 4] {
+        fixed.set_parallelism(workers);
+        let stats = bench_for(Duration::from_millis(150), || {
+            std::hint::black_box(fixed.forward_batch(&xs));
+        });
+        println!(
+            "    batched w={workers}: {:>9.0} ev/s ({:.2}x)",
+            stats.throughput(64),
+            stats.throughput(64) / seq.throughput(64)
+        );
+    }
+}
 
 fn main() {
+    engine_scaling();
+
+    println!("\n=== PJRT vs analytical FPGA band ===");
     let artifacts = manifest::default_artifacts_dir();
     if !artifacts.join("manifest.json").exists() {
-        println!("no artifacts — run `make artifacts` first");
+        println!("no artifacts — skipping the PJRT comparison");
         return;
     }
     let report = throughput::run(&artifacts, 2_000, None).unwrap();

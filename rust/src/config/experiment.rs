@@ -63,7 +63,12 @@ pub struct ServeCliConfig {
     pub engine: String, // "pjrt" | "fixed" | "float"
     pub rate_hz: f64,
     pub n_events: usize,
+    /// Engine-worker threads (each owns one engine replica).
     pub workers: usize,
+    /// Per-batch parallelism *inside* each rust engine (`forward_batch`
+    /// worker pool; 1 = single-threaded engine).  Total thread budget is
+    /// `workers × engine_parallelism`.
+    pub engine_parallelism: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
@@ -77,6 +82,7 @@ impl Default for ServeCliConfig {
             rate_hz: 20_000.0,
             n_events: 50_000,
             workers: 2,
+            engine_parallelism: 1,
             max_batch: 10,
             max_wait: Duration::from_micros(200),
             queue_capacity: 4096,
@@ -95,6 +101,14 @@ mod tests {
         assert_eq!(cfg.fractional_bits.first(), Some(&2));
         assert_eq!(cfg.fractional_bits.last(), Some(&14));
         assert_eq!(cfg.keys.len(), 6);
+    }
+
+    #[test]
+    fn serve_defaults_are_single_threaded_engines() {
+        let cfg = ServeCliConfig::default();
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.engine_parallelism, 1);
+        assert_eq!(cfg.max_batch, 10);
     }
 
     #[test]

@@ -65,7 +65,12 @@ pub fn next_batch(
     // Block for the first request.
     let first = queue.pop_timeout(Duration::from_millis(50))?;
     let mut requests = vec![first];
-    let deadline = requests[0].enqueued_at + cfg.max_wait;
+    // Anchor the flush deadline to *pop* time, not the first request's
+    // enqueue time: under backlog an aged request would otherwise carry
+    // an already-expired deadline and force degenerate batch-1 flushes —
+    // exactly when batching matters most.  `max_wait = 0` still means
+    // the trigger regime: drain whatever is already queued, never wait.
+    let deadline = Instant::now() + cfg.max_wait;
 
     while requests.len() < cfg.max_batch {
         // Fast path: take whatever is already waiting.
@@ -151,6 +156,33 @@ mod tests {
         let q2 = queue_with(1);
         let b2 = next_batch(&q2, &cfg).unwrap();
         assert_eq!(b2.len(), 1);
+    }
+
+    /// Regression: the flush deadline must anchor to pop time.  A request
+    /// that already sat in the queue longer than `max_wait` used to yield
+    /// an expired deadline and a degenerate batch-1 flush under backlog.
+    #[test]
+    fn deadline_anchors_to_pop_time_not_enqueue_time() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let mut stale = req(0);
+        stale.enqueued_at = Instant::now() - Duration::from_millis(50);
+        q.push(stale).unwrap();
+        let cfg = BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(250),
+        };
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(req(1)).unwrap();
+        });
+        let b = next_batch(&q, &cfg).unwrap();
+        producer.join().unwrap();
+        assert_eq!(
+            b.len(),
+            2,
+            "stale first request must not collapse the batching window"
+        );
     }
 
     #[test]

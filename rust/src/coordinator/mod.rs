@@ -27,6 +27,28 @@
 //! * The queue is bounded; when full, new events are **dropped and
 //!   counted** — exactly what a trigger does when the downstream is
 //!   saturated (it never blocks the detector).
+//!
+//! ## Parallelism knobs
+//!
+//! Throughput is governed by three independent levers:
+//!
+//! * **`ServerConfig::workers`** — engine-worker threads, each owning its
+//!   own runner (engine replica) and pulling whole batches off the queue.
+//! * **`BatcherConfig::max_batch` / `max_wait`** — the batch-vs-latency
+//!   trade: how many requests a worker takes per pull and how long the
+//!   batcher holds a partial batch.  The deadline anchors to *pop* time,
+//!   so aged requests under backlog do not collapse the batching window;
+//!   `max_wait = 0` is the trigger regime (batch-1, never wait).
+//! * **engine parallelism** — *within* one batch, the rust engines fan
+//!   samples across a worker pool (`FloatEngine::with_parallelism`,
+//!   `FixedEngine::with_parallelism`; CLI `--engine-parallelism`).
+//!   Whole batches reach the engine via [`server::EngineRunner`] and the
+//!   packed buffers of [`Batch::packed_features`], so the batcher is a
+//!   real throughput lever, not just queueing policy.
+//!
+//! `workers × engine-parallelism` should not exceed the core count;
+//! prefer `workers` for many small batches (small models) and engine
+//! parallelism for large batches on heavy models.
 
 pub mod batcher;
 pub mod metrics;
@@ -37,7 +59,7 @@ pub mod source;
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{LatencyHistogram, ServerMetrics};
 pub use queue::BoundedQueue;
-pub use server::{BatchRunner, Server, ServerConfig, ServerReport};
+pub use server::{BatchRunner, EngineRunner, Server, ServerConfig, ServerReport};
 pub use source::SourceConfig;
 
 use std::time::Instant;

@@ -348,6 +348,74 @@ mod tests {
         }
     }
 
+    /// Satellite property test: the shift-based fast path must agree with
+    /// the f64 reference for **every** raw value across the table range —
+    /// including the `shifted <= 0` early-out, the negative-total-shift
+    /// (left-shift) branch, and the non-power-of-two fallback path.
+    #[test]
+    fn integer_index_matches_f64_index_exhaustively() {
+        let cfgs = [
+            // positive shift (the common case)
+            TableConfig::sigmoid_default(),
+            TableConfig::tanh_default(),
+            // 4096 entries: with a 2-fractional-bit input spec the total
+            // shift goes negative (left-shift branch)
+            TableConfig::softmax_high(),
+            TableConfig {
+                size: 4096,
+                spec: FixedSpec::new(18, 8),
+                range: 8.0,
+            },
+            // non-power-of-two size: must take the f64 fallback
+            TableConfig {
+                size: 1000,
+                spec: FixedSpec::new(18, 8),
+                range: 8.0,
+            },
+        ];
+        let in_specs = [
+            FixedSpec::new(16, 6),  // F = 10
+            FixedSpec::new(8, 6),   // F = 2 → negative shift vs size 4096
+            FixedSpec::new(12, 4),  // F = 8
+            FixedSpec::new(10, 9),  // F = 1, wide integer range
+        ];
+        for cfg in &cfgs {
+            for in_spec in in_specs {
+                for raw in in_spec.raw_min()..=in_spec.raw_max() {
+                    let x = dequantize(raw, in_spec);
+                    assert_eq!(
+                        table_index_raw(raw, in_spec.frac(), cfg),
+                        table_index(x, cfg),
+                        "cfg size {} range {} spec {}, raw {raw}",
+                        cfg.size,
+                        cfg.range,
+                        in_spec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_index_raw_branch_coverage() {
+        // `shifted <= 0`: raw at/below -range*2^F indexes bin 0.
+        let cfg = TableConfig::sigmoid_default(); // range 8, input F = 10
+        let edge = -(8i64 << 10);
+        assert_eq!(table_index_raw(edge, 10, &cfg), 0);
+        assert_eq!(table_index_raw(edge - 1, 10, &cfg), 0);
+        assert_eq!(table_index_raw(i64::from(i16::MIN), 10, &cfg), 0);
+        // negative total shift: F=2, 2·range=16, size=4096 → shift -6.
+        let big = TableConfig {
+            size: 4096,
+            spec: FixedSpec::new(18, 8),
+            range: 8.0,
+        };
+        let spec2 = FixedSpec::new(8, 6); // F = 2
+        let raw = 5i64; // x = 1.25 → pos = (1.25+8)*4096/16 = 2368
+        assert_eq!(table_index_raw(raw, spec2.frac(), &big), 2368);
+        assert_eq!(table_index(dequantize(raw, spec2), &big), 2368);
+    }
+
     #[test]
     fn table_index_clamps() {
         let cfg = TableConfig::sigmoid_default();

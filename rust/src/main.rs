@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use rnn_hls::config::{Fig2Config, SweepConfig};
+use rnn_hls::config::{Fig2Config, ServeCliConfig, SweepConfig};
 use rnn_hls::coordinator::{
     BatcherConfig, Server, ServerConfig, SourceConfig,
 };
@@ -198,25 +198,6 @@ impl rnn_hls::coordinator::BatchRunner for PjrtRunner {
     }
 }
 
-struct EngineRunner {
-    engine: Box<dyn Engine>,
-    stride: usize,
-}
-
-impl rnn_hls::coordinator::BatchRunner for EngineRunner {
-    fn max_batch(&self) -> usize {
-        100
-    }
-    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
-        Ok((0..n)
-            .map(|i| {
-                self.engine
-                    .forward(&xs[i * self.stride..(i + 1) * self.stride])
-            })
-            .collect())
-    }
-}
-
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("serve", "trigger-style serving demo")
         .opt("artifacts", "artifacts directory", None)
@@ -225,6 +206,11 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("rate", "event rate (events/s)", Some("20000"))
         .opt("events", "number of events", Some("50000"))
         .opt("workers", "engine worker threads", Some("2"))
+        .opt(
+            "engine-parallelism",
+            "per-batch threads inside each rust engine",
+            Some("1"),
+        )
         .opt("max-batch", "dynamic batcher size cap", Some("10"))
         .opt("max-wait-us", "batching deadline (µs)", Some("200"))
         .opt("queue", "queue capacity (drop beyond)", Some("4096"))
@@ -233,29 +219,48 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .flag("fixed-interval", "fixed (non-Poisson) arrivals");
     let args = cmd.parse(rest)?;
     let artifacts = artifacts_from(&args);
-    let key = args.get_or("model", "top_gru").to_string();
-    let engine_kind = args.get_or("engine", "pjrt").to_string();
     let width: u32 = args.parse_num("width", 16)?;
     let integer: u32 = args.parse_num("integer", 6)?;
+
+    // Single source of truth for serve defaults: ServeCliConfig::default.
+    let d = ServeCliConfig::default();
+    let cli = ServeCliConfig {
+        model_key: args.get_or("model", &d.model_key).to_string(),
+        engine: args.get_or("engine", &d.engine).to_string(),
+        rate_hz: args.parse_num("rate", d.rate_hz)?,
+        n_events: args.parse_num("events", d.n_events)?,
+        workers: args.parse_num("workers", d.workers)?,
+        engine_parallelism: args
+            .parse_num("engine-parallelism", d.engine_parallelism)?,
+        max_batch: args.parse_num("max-batch", d.max_batch)?,
+        max_wait: Duration::from_micros(
+            args.parse_num("max-wait-us", d.max_wait.as_micros() as u64)?,
+        ),
+        queue_capacity: args.parse_num("queue", d.queue_capacity)?,
+    };
+    let key = cli.model_key.clone();
+    let engine_kind = cli.engine.clone();
+    let engine_parallelism = cli.engine_parallelism;
 
     let benchmark = key.split('_').next().unwrap_or(&key).to_string();
     let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
     let cfg = ServerConfig {
-        workers: args.parse_num("workers", 2usize)?,
-        queue_capacity: args.parse_num("queue", 4096usize)?,
+        workers: cli.workers,
+        queue_capacity: cli.queue_capacity,
         batcher: BatcherConfig {
-            max_batch: args.parse_num("max-batch", 10usize)?,
-            max_wait: Duration::from_micros(args.parse_num("max-wait-us", 200u64)?),
+            max_batch: cli.max_batch,
+            max_wait: cli.max_wait,
         },
         source: SourceConfig {
-            rate_hz: args.parse_num("rate", 20_000.0f64)?,
+            rate_hz: cli.rate_hz,
             poisson: !args.has("fixed-interval"),
-            n_events: args.parse_num("events", 50_000usize)?,
+            n_events: cli.n_events,
         },
     };
     println!(
         "serving {key} via {engine_kind} engine: rate {} ev/s, {} events, \
-         {} workers, batch<= {}, wait {} µs",
+         {} workers × {engine_parallelism} engine threads, batch<= {}, \
+         wait {} µs",
         cfg.source.rate_hz,
         cfg.source.n_events,
         cfg.workers,
@@ -286,18 +291,26 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             let weights = Weights::load(
                 artifacts.join("weights").join(format!("{key}.json")),
             )?;
-            let stride = weights.arch.seq_len * weights.arch.input_size;
+            let max_batch = cfg.batcher.max_batch;
             let fixed = engine_kind == "fixed";
             Server::run(cfg, generator, move || {
                 let engine: Box<dyn Engine> = if fixed {
-                    Box::new(FixedEngine::new(
-                        &weights,
-                        QuantConfig::ptq(FixedSpec::new(width, integer)),
-                    )?)
+                    Box::new(
+                        FixedEngine::new(
+                            &weights,
+                            QuantConfig::ptq(FixedSpec::new(width, integer)),
+                        )?
+                        .with_parallelism(engine_parallelism),
+                    )
                 } else {
-                    Box::new(FloatEngine::new(&weights)?)
+                    Box::new(
+                        FloatEngine::new(&weights)?
+                            .with_parallelism(engine_parallelism),
+                    )
                 };
-                Ok(Box::new(EngineRunner { engine, stride })
+                Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
+                    engine, max_batch,
+                ))
                     as Box<dyn rnn_hls::coordinator::BatchRunner>)
             })?
         }

@@ -141,6 +141,86 @@ impl Weights {
         Ok(())
     }
 
+    /// Deterministic pseudo-random weights for an architecture — for
+    /// benches and tests that need a real-shaped model without the
+    /// trained artifacts.  Xavier-style `N(0, 1/fan_in)` scaling keeps
+    /// activations in range (LSTM forget-gate bias set to 1.0, the usual
+    /// initialization); same seed → same model, on every platform.
+    pub fn synthetic(arch: &Arch, seed: u64) -> Self {
+        use crate::util::rng::Rng;
+
+        fn tensor(rng: &mut Rng, shape: Vec<usize>, fan_in: usize) -> Tensor {
+            let n: usize = shape.iter().product();
+            let scale = (1.0 / fan_in.max(1) as f64).sqrt();
+            Tensor {
+                shape,
+                data: (0..n).map(|_| rng.normal(0.0, scale) as f32).collect(),
+            }
+        }
+
+        let mut rng = Rng::new(seed);
+        let g = arch.cell.gates();
+        let (i, h) = (arch.input_size, arch.hidden_size);
+        let mut layers: BTreeMap<String, BTreeMap<String, Tensor>> =
+            BTreeMap::new();
+
+        let mut rnn = BTreeMap::new();
+        rnn.insert("w".to_string(), tensor(&mut rng, vec![i, g * h], i));
+        rnn.insert("u".to_string(), tensor(&mut rng, vec![h, g * h], h));
+        let bias = match arch.cell {
+            super::arch::Cell::Lstm => Tensor {
+                shape: vec![4 * h],
+                data: (0..4 * h)
+                    .map(|j| if (h..2 * h).contains(&j) { 1.0 } else { 0.0 })
+                    .collect(),
+            },
+            super::arch::Cell::Gru => Tensor {
+                shape: vec![2, 3 * h],
+                data: vec![0.0; 2 * 3 * h],
+            },
+        };
+        rnn.insert("b".to_string(), bias);
+        layers.insert("rnn".to_string(), rnn);
+
+        let mut prev = h;
+        for (idx, &size) in arch.dense_sizes.iter().enumerate() {
+            let mut layer = BTreeMap::new();
+            layer.insert(
+                "w".to_string(),
+                tensor(&mut rng, vec![prev, size], prev),
+            );
+            layer.insert(
+                "b".to_string(),
+                Tensor {
+                    shape: vec![size],
+                    data: vec![0.0; size],
+                },
+            );
+            layers.insert(format!("dense{idx}"), layer);
+            prev = size;
+        }
+        let mut out = BTreeMap::new();
+        out.insert(
+            "w".to_string(),
+            tensor(&mut rng, vec![prev, arch.output_size], prev),
+        );
+        out.insert(
+            "b".to_string(),
+            Tensor {
+                shape: vec![arch.output_size],
+                data: vec![0.0; arch.output_size],
+            },
+        );
+        layers.insert("out".to_string(), out);
+
+        let w = Self {
+            arch: arch.clone(),
+            layers,
+        };
+        debug_assert_eq!(w.param_count(), arch.param_count());
+        w
+    }
+
     /// Dynamic range of all weights — drives Fig. 2 commentary (how many
     /// integer bits the weights themselves need).
     pub fn weight_range(&self) -> (f32, f32) {
@@ -220,6 +300,28 @@ mod tests {
         let w = Weights::from_json(&tiny_lstm_json()).unwrap();
         assert!(w.tensor("rnn", "nope").is_err());
         assert!(w.tensor("dense7", "w").is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_are_consistent_and_deterministic() {
+        use crate::model::zoo;
+        for arch in zoo::all_archs() {
+            let w = Weights::synthetic(&arch, 42);
+            assert_eq!(w.param_count(), arch.param_count(), "{}", arch.key());
+            w.validate_shapes().unwrap();
+        }
+        let arch = zoo::arch("top", crate::model::Cell::Gru).unwrap();
+        let a = Weights::synthetic(&arch, 7);
+        let b = Weights::synthetic(&arch, 7);
+        assert_eq!(
+            a.tensor("rnn", "w").unwrap().data,
+            b.tensor("rnn", "w").unwrap().data
+        );
+        let c = Weights::synthetic(&arch, 8);
+        assert_ne!(
+            a.tensor("rnn", "w").unwrap().data,
+            c.tensor("rnn", "w").unwrap().data
+        );
     }
 
     #[test]

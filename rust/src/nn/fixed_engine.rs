@@ -12,6 +12,7 @@ use crate::fixed::{
     SoftmaxTables, TableConfig,
 };
 use crate::model::{Arch, Cell, OutputActivation, Weights};
+use crate::util::threads::WorkerPool;
 
 use super::Engine;
 
@@ -57,6 +58,24 @@ impl MatTI {
             *yo += acc;
         }
     }
+
+    /// Batched `matvec_acc` over packed `[batch][cols_in]` inputs into
+    /// packed `[batch][rows_out]` accumulators; the weight row streams
+    /// across the whole batch.  Integer arithmetic is exact, so this is
+    /// trivially identical to the per-sample path.
+    fn matmul_acc(&self, xs: &[i64], batch: usize, ys: &mut [i64]) {
+        debug_assert_eq!(xs.len(), batch * self.cols_in);
+        debug_assert_eq!(ys.len(), batch * self.rows_out);
+        for (o, row) in self.data.chunks_exact(self.cols_in).enumerate() {
+            for (b, x) in xs.chunks_exact(self.cols_in).enumerate() {
+                let mut acc = 0i64;
+                for (xi, wi) in x.iter().zip(row) {
+                    acc += xi * wi;
+                }
+                ys[b * self.rows_out + o] += acc;
+            }
+        }
+    }
 }
 
 struct DenseLayerI {
@@ -97,6 +116,8 @@ pub struct FixedEngine {
     out: DenseLayerI,
     act: ActTables,
     softmax: Option<SoftmaxTables>,
+    /// Batch-level parallelism for `forward_batch` (default 1 = inline).
+    pool: WorkerPool,
 }
 
 impl FixedEngine {
@@ -165,11 +186,27 @@ impl FixedEngine {
             out: DenseLayerI::new(&ow.shape, &ow.data, &ob.data, cfg),
             act: ActTables::new(cfg),
             softmax,
+            pool: WorkerPool::new(1),
         })
     }
 
     pub fn config(&self) -> QuantConfig {
         self.cfg
+    }
+
+    /// Set the number of worker threads `forward_batch` may use.
+    pub fn set_parallelism(&mut self, workers: usize) {
+        self.pool = WorkerPool::new(workers);
+    }
+
+    /// Builder form of [`Self::set_parallelism`].
+    pub fn with_parallelism(mut self, workers: usize) -> Self {
+        self.set_parallelism(workers);
+        self
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Cast an accumulator value (2F fractional bits) to the engine type.
@@ -255,12 +292,174 @@ impl FixedEngine {
         }
         h
     }
+
+    /// Final-layer LUT activation for one raw-logit row.
+    fn output_probs(&self, logits: &[i64]) -> Vec<f32> {
+        let spec = self.cfg.spec;
+        match self.arch.output_activation {
+            OutputActivation::Sigmoid => logits
+                .iter()
+                .map(|&z| dequantize(self.act.sigmoid_raw(z, spec), spec) as f32)
+                .collect(),
+            OutputActivation::Softmax => {
+                let sm = self.softmax.as_ref().expect("softmax tables");
+                sm.softmax_raw(logits, spec)
+                    .iter()
+                    .map(|&p| dequantize(p, spec) as f32)
+                    .collect()
+            }
+        }
+    }
+
+    // ---- lockstep batched path (bit-exact integer datapath) ------------
+
+    /// Tile a 2F-bias row across the batch into a packed buffer.
+    fn tile_bias(bias: &[i64], batch: usize) -> Vec<i64> {
+        let mut out = Vec::with_capacity(batch * bias.len());
+        for _ in 0..batch {
+            out.extend_from_slice(bias);
+        }
+        out
+    }
+
+    /// Lockstep LSTM over packed raw inputs `[b][seq*i]`; returns `[b][h]`.
+    fn lstm_forward_batch(&self, x_raw: &[i64], b: usize) -> Vec<i64> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let stride = self.arch.seq_len * i_sz;
+        let spec = self.cfg.spec;
+        let mut h = vec![0i64; b * h_sz];
+        let mut c = vec![0i64; b * h_sz];
+        let mut z = vec![0i64; b * 4 * h_sz];
+        let mut xt = vec![0i64; b * i_sz];
+        for t in 0..self.arch.seq_len {
+            for bi in 0..b {
+                xt[bi * i_sz..(bi + 1) * i_sz].copy_from_slice(
+                    &x_raw[bi * stride + t * i_sz..bi * stride + (t + 1) * i_sz],
+                );
+                z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
+                    .copy_from_slice(&self.rnn_b2f);
+            }
+            self.rnn_w.matmul_acc(&xt, b, &mut z);
+            self.rnn_u.matmul_acc(&h, b, &mut z);
+            for bi in 0..b {
+                let zb = &z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
+                for j in 0..h_sz {
+                    let zi = self.cast_acc(zb[j]);
+                    let zf = self.cast_acc(zb[h_sz + j]);
+                    let zc = self.cast_acc(zb[2 * h_sz + j]);
+                    let zo = self.cast_acc(zb[3 * h_sz + j]);
+                    let i_g = self.act.sigmoid_raw(zi, spec);
+                    let f_g = self.act.sigmoid_raw(zf, spec);
+                    let g = self.act.tanh_raw(zc, spec);
+                    let o_g = self.act.sigmoid_raw(zo, spec);
+                    let cj = &mut c[bi * h_sz + j];
+                    *cj = self.had(f_g, *cj) + self.had(i_g, g);
+                    *cj = crate::fixed::value::overflow(
+                        *cj,
+                        spec,
+                        self.cfg.overflow,
+                    );
+                    let tc = self.act.tanh_raw(*cj, spec);
+                    h[bi * h_sz + j] = self.had(o_g, tc);
+                }
+            }
+        }
+        h
+    }
+
+    /// Lockstep GRU over packed raw inputs `[b][seq*i]`; returns `[b][h]`.
+    fn gru_forward_batch(&self, x_raw: &[i64], b: usize) -> Vec<i64> {
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let stride = self.arch.seq_len * i_sz;
+        let spec = self.cfg.spec;
+        let b_rec = self.rnn_b_rec2f.as_ref().expect("gru recurrent bias");
+        let one = 1i64 << spec.frac();
+        let mut h = vec![0i64; b * h_sz];
+        let mut xm = vec![0i64; b * 3 * h_sz];
+        let mut hm = vec![0i64; b * 3 * h_sz];
+        let mut xt = vec![0i64; b * i_sz];
+        for t in 0..self.arch.seq_len {
+            for bi in 0..b {
+                xt[bi * i_sz..(bi + 1) * i_sz].copy_from_slice(
+                    &x_raw[bi * stride + t * i_sz..bi * stride + (t + 1) * i_sz],
+                );
+                xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
+                    .copy_from_slice(&self.rnn_b2f);
+                hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz].copy_from_slice(b_rec);
+            }
+            self.rnn_w.matmul_acc(&xt, b, &mut xm);
+            self.rnn_u.matmul_acc(&h, b, &mut hm);
+            for bi in 0..b {
+                let xb = &xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let hb = &hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                for j in 0..h_sz {
+                    let z_pre = self.cast_acc(xb[j] + hb[j]);
+                    let r_pre = self.cast_acc(xb[h_sz + j] + hb[h_sz + j]);
+                    let z_g = self.act.sigmoid_raw(z_pre, spec);
+                    let r_g = self.act.sigmoid_raw(r_pre, spec);
+                    let rec = self.had(r_g, self.cast_acc(hb[2 * h_sz + j]));
+                    let g_pre = crate::fixed::value::overflow(
+                        self.cast_acc(xb[2 * h_sz + j]) + rec,
+                        spec,
+                        self.cfg.overflow,
+                    );
+                    let g = self.act.tanh_raw(g_pre, spec);
+                    let hj = &mut h[bi * h_sz + j];
+                    let keep = self.had(z_g, *hj);
+                    let new = self.had(one - z_g, g);
+                    *hj = crate::fixed::value::overflow(
+                        keep + new,
+                        spec,
+                        self.cfg.overflow,
+                    );
+                }
+            }
+        }
+        h
+    }
+
+    /// One worker's share of a batch: quantize the chunk's inputs once,
+    /// run the lockstep recurrence, then the batched dense head.
+    fn forward_chunk(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let b = xs.len();
+        let stride = self.arch.seq_len * self.arch.input_size;
+        // Input quantization once per chunk into one packed buffer.
+        let mut x_raw = vec![0i64; b * stride];
+        for (bi, x) in xs.iter().enumerate() {
+            for (k, &v) in x.iter().enumerate() {
+                x_raw[bi * stride + k] = quantize(v as f64, self.cfg);
+            }
+        }
+        let mut h = match self.arch.cell {
+            Cell::Lstm => self.lstm_forward_batch(&x_raw, b),
+            Cell::Gru => self.gru_forward_batch(&x_raw, b),
+        };
+        for layer in &self.dense {
+            let mut y = Self::tile_bias(&layer.b2f, b);
+            layer.w.matmul_acc(&h, b, &mut y);
+            h = y
+                .iter()
+                .map(|&acc| self.cast_acc(acc).max(0)) // ReLU is exact
+                .collect();
+        }
+        let mut y = Self::tile_bias(&self.out.b2f, b);
+        self.out.w.matmul_acc(&h, b, &mut y);
+        let out_sz = self.out.b2f.len();
+        y.chunks_exact(out_sz)
+            .map(|row| {
+                let logits: Vec<i64> =
+                    row.iter().map(|&acc| self.cast_acc(acc)).collect();
+                self.output_probs(&logits)
+            })
+            .collect()
+    }
 }
 
 impl Engine for FixedEngine {
     fn forward(&self, x: &[f32]) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.arch.seq_len * self.arch.input_size);
-        let spec = self.cfg.spec;
         let x_raw: Vec<i64> =
             x.iter().map(|&v| quantize(v as f64, self.cfg)).collect();
         let mut h = match self.arch.cell {
@@ -278,23 +477,21 @@ impl Engine for FixedEngine {
         let mut y = self.out.b2f.clone();
         self.out.w.matvec_acc(&h, &mut y);
         let logits: Vec<i64> = y.iter().map(|&acc| self.cast_acc(acc)).collect();
-        match self.arch.output_activation {
-            OutputActivation::Sigmoid => logits
-                .iter()
-                .map(|&z| dequantize(self.act.sigmoid_raw(z, spec), spec) as f32)
-                .collect(),
-            OutputActivation::Softmax => {
-                let sm = self.softmax.as_ref().expect("softmax tables");
-                sm.softmax_raw(&logits, spec)
-                    .iter()
-                    .map(|&p| dequantize(p, spec) as f32)
-                    .collect()
-            }
-        }
+        self.output_probs(&logits)
     }
 
     fn arch(&self) -> &Arch {
         &self.arch
+    }
+
+    /// Parallel batched forward: the integer datapath is exact, so any
+    /// chunking/worker count reproduces per-sample `forward` bit-for-bit.
+    fn forward_batch(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.pool
+            .map_chunks(xs.len(), |range| self.forward_chunk(&xs[range]))
     }
 }
 
@@ -437,6 +634,33 @@ mod tests {
         }
         assert!(errs[3] < errs[0], "errors {errs:?}");
         assert!(errs[3] < 0.02, "errors {errs:?}");
+    }
+
+    #[test]
+    fn forward_batch_is_bitwise_identical() {
+        for cell in ["lstm", "gru"] {
+            let w = tiny_weights(cell);
+            let mut fx =
+                FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(16, 6)))
+                    .unwrap();
+            let samples: Vec<Vec<f32>> = (0..5)
+                .map(|s| {
+                    (0..15)
+                        .map(|k| {
+                            (((k + s * 7) * 37 % 21) as f32 - 10.0) / 10.0
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[f32]> =
+                samples.iter().map(|v| v.as_slice()).collect();
+            let want: Vec<Vec<f32>> =
+                refs.iter().map(|x| fx.forward(x)).collect();
+            for workers in [1usize, 2, 8] {
+                fx.set_parallelism(workers);
+                assert_eq!(fx.forward_batch(&refs), want, "{cell} w{workers}");
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! f32 reference engine — the rust twin of `python/compile/kernels/ref.py`.
+//!
+//! `forward_batch` runs the paper's batched-GPU-serving analog (§5.2): the
+//! batch is split into contiguous chunks across a [`WorkerPool`], and each
+//! chunk runs the recurrence in lockstep over its samples so every weight
+//! row is streamed across the whole chunk ([`MatT::matmul_acc`]) instead
+//! of being re-fetched per sample.  Per-sample arithmetic order is
+//! unchanged, so batched outputs are bitwise-identical to `forward`.
 
 use crate::model::{Arch, Cell, OutputActivation, Weights};
+use crate::util::threads::WorkerPool;
 
 use super::Engine;
 
@@ -43,6 +51,27 @@ impl MatT {
             *yo += acc;
         }
     }
+
+    /// Batched `matvec_acc` over packed row-major buffers:
+    /// `ys[b][o] += Σ_i xs[b][i] * w[o, i]` for every sample `b`.
+    ///
+    /// The weight row is loaded once per output and streamed across the
+    /// whole batch (cache blocking on the batch axis); the per-(sample,
+    /// output) accumulation order is exactly `matvec_acc`'s, so results
+    /// are bitwise-equal to the per-sample path.
+    pub fn matmul_acc(&self, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        debug_assert_eq!(xs.len(), batch * self.cols_in);
+        debug_assert_eq!(ys.len(), batch * self.rows_out);
+        for (o, row) in self.data.chunks_exact(self.cols_in).enumerate() {
+            for (b, x) in xs.chunks_exact(self.cols_in).enumerate() {
+                let mut acc = 0.0f32;
+                for (xi, wi) in x.iter().zip(row) {
+                    acc += xi * wi;
+                }
+                ys[b * self.rows_out + o] += acc;
+            }
+        }
+    }
 }
 
 #[inline]
@@ -65,6 +94,8 @@ pub struct FloatEngine {
     rnn_b_rec: Option<Vec<f32>>,
     dense: Vec<DenseLayer>,
     out: DenseLayer,
+    /// Batch-level parallelism for `forward_batch` (default 1 = inline).
+    pool: WorkerPool,
 }
 
 impl FloatEngine {
@@ -102,7 +133,23 @@ impl FloatEngine {
                 w: MatT::from_keras(&ow.shape, &ow.data),
                 b: ob.data.clone(),
             },
+            pool: WorkerPool::new(1),
         })
+    }
+
+    /// Set the number of worker threads `forward_batch` may use.
+    pub fn set_parallelism(&mut self, workers: usize) {
+        self.pool = WorkerPool::new(workers);
+    }
+
+    /// Builder form of [`Self::set_parallelism`].
+    pub fn with_parallelism(mut self, workers: usize) -> Self {
+        self.set_parallelism(workers);
+        self
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.pool.workers()
     }
 
     fn lstm_forward(&self, x: &[f32]) -> Vec<f32> {
@@ -151,6 +198,133 @@ impl FloatEngine {
         }
         h
     }
+
+    /// Final-layer activation for one logit row.
+    fn output_probs(&self, y: &[f32]) -> Vec<f32> {
+        match self.arch.output_activation {
+            OutputActivation::Sigmoid => y.iter().map(|&v| sigmoid(v)).collect(),
+            OutputActivation::Softmax => {
+                let max = y.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = y.iter().map(|&v| (v - max).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                exps.iter().map(|&e| e / sum).collect()
+            }
+        }
+    }
+
+    // ---- lockstep batched path (bitwise-identical per sample) ----------
+
+    /// Gather timestep `t` of every sample into a packed `[b][i_sz]` buffer.
+    fn gather_step(xs: &[&[f32]], t: usize, i_sz: usize, xt: &mut [f32]) {
+        for (bi, x) in xs.iter().enumerate() {
+            xt[bi * i_sz..(bi + 1) * i_sz]
+                .copy_from_slice(&x[t * i_sz..(t + 1) * i_sz]);
+        }
+    }
+
+    /// Tile a bias row across the batch into a packed `[b][len]` buffer.
+    fn tile_bias(bias: &[f32], batch: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(batch * bias.len());
+        for _ in 0..batch {
+            out.extend_from_slice(bias);
+        }
+        out
+    }
+
+    /// Lockstep LSTM over a chunk of samples; returns packed `[b][h]`.
+    fn lstm_forward_batch(&self, xs: &[&[f32]]) -> Vec<f32> {
+        let b = xs.len();
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let mut h = vec![0.0f32; b * h_sz];
+        let mut c = vec![0.0f32; b * h_sz];
+        let mut z = vec![0.0f32; b * 4 * h_sz];
+        let mut xt = vec![0.0f32; b * i_sz];
+        for t in 0..self.arch.seq_len {
+            Self::gather_step(xs, t, i_sz, &mut xt);
+            for bi in 0..b {
+                z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
+                    .copy_from_slice(&self.rnn_b);
+            }
+            self.rnn_w.matmul_acc(&xt, b, &mut z);
+            self.rnn_u.matmul_acc(&h, b, &mut z);
+            for bi in 0..b {
+                let zb = &z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
+                for j in 0..h_sz {
+                    let i_g = sigmoid(zb[j]);
+                    let f_g = sigmoid(zb[h_sz + j]);
+                    let g = zb[2 * h_sz + j].tanh();
+                    let o_g = sigmoid(zb[3 * h_sz + j]);
+                    let cj = &mut c[bi * h_sz + j];
+                    *cj = f_g * *cj + i_g * g;
+                    h[bi * h_sz + j] = o_g * cj.tanh();
+                }
+            }
+        }
+        h
+    }
+
+    /// Lockstep GRU over a chunk of samples; returns packed `[b][h]`.
+    fn gru_forward_batch(&self, xs: &[&[f32]]) -> Vec<f32> {
+        let b = xs.len();
+        let h_sz = self.arch.hidden_size;
+        let i_sz = self.arch.input_size;
+        let b_rec = self.rnn_b_rec.as_ref().expect("gru has recurrent bias");
+        let mut h = vec![0.0f32; b * h_sz];
+        let mut xm = vec![0.0f32; b * 3 * h_sz];
+        let mut hm = vec![0.0f32; b * 3 * h_sz];
+        let mut xt = vec![0.0f32; b * i_sz];
+        for t in 0..self.arch.seq_len {
+            Self::gather_step(xs, t, i_sz, &mut xt);
+            for bi in 0..b {
+                xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
+                    .copy_from_slice(&self.rnn_b);
+                hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz].copy_from_slice(b_rec);
+            }
+            self.rnn_w.matmul_acc(&xt, b, &mut xm);
+            self.rnn_u.matmul_acc(&h, b, &mut hm);
+            for bi in 0..b {
+                let xb = &xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let hb = &hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                for j in 0..h_sz {
+                    let z_g = sigmoid(xb[j] + hb[j]);
+                    let r_g = sigmoid(xb[h_sz + j] + hb[h_sz + j]);
+                    let g = (xb[2 * h_sz + j] + r_g * hb[2 * h_sz + j]).tanh();
+                    let hj = &mut h[bi * h_sz + j];
+                    *hj = z_g * *hj + (1.0 - z_g) * g;
+                }
+            }
+        }
+        h
+    }
+
+    /// Dense head + output activation over a packed `[b][h]` state.
+    fn head_forward_batch(&self, mut h: Vec<f32>, b: usize) -> Vec<Vec<f32>> {
+        for layer in &self.dense {
+            let mut y = Self::tile_bias(&layer.b, b);
+            layer.w.matmul_acc(&h, b, &mut y);
+            for v in &mut y {
+                *v = v.max(0.0); // ReLU head (paper §4)
+            }
+            h = y;
+        }
+        let mut y = Self::tile_bias(&self.out.b, b);
+        self.out.w.matmul_acc(&h, b, &mut y);
+        let out_sz = self.out.b.len();
+        y.chunks_exact(out_sz)
+            .map(|row| self.output_probs(row))
+            .collect()
+    }
+
+    /// One worker's share of a batch: lockstep recurrence + batched head.
+    fn forward_chunk(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let b = xs.len();
+        let h = match self.arch.cell {
+            Cell::Lstm => self.lstm_forward_batch(xs),
+            Cell::Gru => self.gru_forward_batch(xs),
+        };
+        self.head_forward_batch(h, b)
+    }
 }
 
 impl Engine for FloatEngine {
@@ -170,19 +344,22 @@ impl Engine for FloatEngine {
         }
         let mut y = self.out.b.clone();
         self.out.w.matvec_acc(&h, &mut y);
-        match self.arch.output_activation {
-            OutputActivation::Sigmoid => y.iter().map(|&v| sigmoid(v)).collect(),
-            OutputActivation::Softmax => {
-                let max = y.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let exps: Vec<f32> = y.iter().map(|&v| (v - max).exp()).collect();
-                let sum: f32 = exps.iter().sum();
-                exps.iter().map(|&e| e / sum).collect()
-            }
-        }
+        self.output_probs(&y)
     }
 
     fn arch(&self) -> &Arch {
         &self.arch
+    }
+
+    /// Parallel batched forward: contiguous chunks across the worker
+    /// pool, lockstep recurrence inside each chunk.  Bitwise-identical
+    /// to per-sample [`Engine::forward`] for any worker count.
+    fn forward_batch(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.pool
+            .map_chunks(xs.len(), |range| self.forward_chunk(&xs[range]))
     }
 }
 
@@ -197,6 +374,19 @@ mod tests {
         let mut y = vec![0.0; 3];
         m.matvec_acc(&[1.0, 1.0], &mut y);
         assert_eq!(y, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matmul_acc_matches_matvec_per_sample() {
+        let m = MatT::from_keras(&[3, 2], &[1., 2., 3., 4., 5., 6.]);
+        let xs = [0.5f32, -1.0, 2.0, 1.5, 0.25, -0.75];
+        let mut packed = vec![0.0f32; 2 * 2];
+        m.matmul_acc(&xs, 2, &mut packed);
+        for b in 0..2 {
+            let mut y = vec![0.0f32; 2];
+            m.matvec_acc(&xs[b * 3..(b + 1) * 3], &mut y);
+            assert_eq!(&packed[b * 2..(b + 1) * 2], &y[..], "sample {b}");
+        }
     }
 
     #[test]

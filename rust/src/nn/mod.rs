@@ -28,7 +28,23 @@ pub trait Engine: Send + Sync {
     fn arch(&self) -> &Arch;
 
     /// Forward a batch (default: sequential; engines may parallelize).
+    ///
+    /// Contract: the output must be **bitwise identical** to calling
+    /// [`Engine::forward`] per sample, for any worker count — batching
+    /// and chunking may only change memory layout and scheduling, never
+    /// per-sample arithmetic order.  `tests/batch_equivalence.rs` holds
+    /// both engines to this.
     fn forward_batch(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         xs.iter().map(|x| self.forward(x)).collect()
+    }
+
+    /// Forward `n` samples packed row-major in one flat buffer
+    /// (`[n * seq_len * input_size]`) — the coordinator's batch layout
+    /// (see `coordinator::Batch::packed_features`).
+    fn forward_packed(&self, xs: &[f32], n: usize) -> Vec<Vec<f32>> {
+        let stride = self.arch().seq_len * self.arch().input_size;
+        debug_assert_eq!(xs.len(), n * stride);
+        let refs: Vec<&[f32]> = xs.chunks_exact(stride).take(n).collect();
+        self.forward_batch(&refs)
     }
 }

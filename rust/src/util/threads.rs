@@ -1,4 +1,18 @@
 //! Scoped parallel map over a worker pool (the rayon slice we need).
+//!
+//! Two execution shapes:
+//!
+//! * [`parallel_map`] — per-item fan-out with an atomic work counter;
+//!   best when item costs are uneven (the Fig. 2 grid scan).
+//! * [`WorkerPool::map_chunks`] — contiguous-chunk fan-out used by the
+//!   batched inference path: each worker owns a contiguous slice of the
+//!   batch, so per-sample state buffers stay worker-local and results
+//!   concatenate in order.  Threads are scoped (spawned per call, no
+//!   `unsafe` lifetime erasure); the spawn cost is amortized over a whole
+//!   batch of forwards, which is the granularity the serving coordinator
+//!   hands us anyway.
+
+use std::ops::Range;
 
 /// Apply `f` to `0..n` across `workers` OS threads, collecting results in
 /// index order.  Work is distributed by atomic counter, so uneven item
@@ -42,6 +56,73 @@ pub fn default_workers() -> usize {
         .unwrap_or(4)
 }
 
+/// A sized pool of batch workers.  `workers == 1` (the default for the
+/// inference engines) runs inline on the caller's thread — zero overhead
+/// and bitwise-deterministic ordering either way, since chunking never
+/// changes per-sample arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Pool sized to the machine.
+    pub fn per_core() -> Self {
+        Self::new(default_workers())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Split `0..n` into at most `workers` contiguous chunks, run
+    /// `chunk_fn` on each across scoped threads, and concatenate the
+    /// per-chunk results in index order.
+    pub fn map_chunks<T, F>(&self, n: usize, chunk_fn: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> Vec<T> + Sync,
+    {
+        let workers = self.workers.clamp(1, n.max(1));
+        if workers <= 1 {
+            return chunk_fn(0..n);
+        }
+        let base = n / workers;
+        let rem = n % workers;
+        let mut ranges = Vec::with_capacity(workers);
+        let mut start = 0usize;
+        for k in 0..workers {
+            let len = base + usize::from(k < rem);
+            if len == 0 {
+                continue;
+            }
+            ranges.push(start..start + len);
+            start += len;
+        }
+        let mut results: Vec<Option<Vec<T>>> =
+            ranges.iter().map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (slot, range) in results.iter_mut().zip(&ranges) {
+                let chunk_fn = &chunk_fn;
+                let range = range.clone();
+                scope.spawn(move || {
+                    *slot = Some(chunk_fn(range));
+                });
+            }
+        });
+        results
+            .into_iter()
+            .flat_map(|chunk| chunk.expect("chunk completed"))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,6 +143,43 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(parallel_map(2, 64, |i| i + 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn map_chunks_preserves_order_and_coverage() {
+        for workers in [1usize, 2, 3, 8, 64] {
+            for n in [0usize, 1, 2, 9, 100] {
+                let pool = WorkerPool::new(workers);
+                let got = pool.map_chunks(n, |r| r.map(|i| i * 3).collect());
+                let want: Vec<usize> = (0..n).map(|i| i * 3).collect();
+                assert_eq!(got, want, "workers={workers} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_chunks_gives_contiguous_ranges() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        let pool = WorkerPool::new(4);
+        pool.map_chunks(10, |r| {
+            seen.lock().unwrap().push(r.clone());
+            r.map(|_| ()).collect()
+        });
+        let mut ranges = seen.into_inner().unwrap();
+        ranges.sort_by_key(|r| r.start);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges[0].start, 0);
+        assert_eq!(ranges.last().unwrap().end, 10);
+        for pair in ranges.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start);
+        }
+    }
+
+    #[test]
+    fn pool_clamps_to_at_least_one_worker() {
+        assert_eq!(WorkerPool::new(0).workers(), 1);
+        assert!(WorkerPool::per_core().workers() >= 1);
     }
 
     #[test]

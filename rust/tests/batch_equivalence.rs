@@ -1,0 +1,131 @@
+//! Batched-inference equivalence suite: `forward_batch` (and the packed
+//! variant the coordinator uses) must be **bitwise identical** to calling
+//! `forward` per sample — for both engines, across LSTM/GRU cells,
+//! sigmoid/softmax heads, and worker counts 1/2/8.
+//!
+//! This is the contract that makes the parallel batch runtime safe to
+//! wire into the serving path: batching is a pure throughput lever with
+//! zero numerical footprint.
+
+use rnn_hls::data::generators;
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+/// Deliberately not divisible by 2 or 8: exercises uneven chunk splits.
+const BATCH: usize = 9;
+
+/// Realistic inputs from the benchmark's own generator.
+fn sample_inputs(benchmark: &str, n: usize) -> Vec<Vec<f32>> {
+    let mut generator = generators::for_benchmark(benchmark, 0xFEED).unwrap();
+    (0..n).map(|_| generator.generate().features).collect()
+}
+
+fn refs(samples: &[Vec<f32>]) -> Vec<&[f32]> {
+    samples.iter().map(|v| v.as_slice()).collect()
+}
+
+/// The four (cell × head) combinations from the paper's model zoo:
+/// top = sigmoid head, flavor = softmax head.
+fn cases() -> Vec<(&'static str, Cell)> {
+    vec![
+        ("top", Cell::Lstm),
+        ("top", Cell::Gru),
+        ("flavor", Cell::Lstm),
+        ("flavor", Cell::Gru),
+    ]
+}
+
+#[test]
+fn float_forward_batch_bitwise_identical_across_workers() {
+    for (benchmark, cell) in cases() {
+        let arch = zoo::arch(benchmark, cell).unwrap();
+        let weights = Weights::synthetic(&arch, 0xA11CE);
+        let samples = sample_inputs(benchmark, BATCH);
+        let xs = refs(&samples);
+        let mut engine = FloatEngine::new(&weights).unwrap();
+        let want: Vec<Vec<f32>> = xs.iter().map(|x| engine.forward(x)).collect();
+        for workers in WORKER_COUNTS {
+            engine.set_parallelism(workers);
+            let got = engine.forward_batch(&xs);
+            assert_eq!(
+                got,
+                want,
+                "{} float: batch output differs at {workers} workers",
+                arch.key()
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_forward_batch_bitwise_identical_across_workers() {
+    for (benchmark, cell) in cases() {
+        let arch = zoo::arch(benchmark, cell).unwrap();
+        let weights = Weights::synthetic(&arch, 0xB0B);
+        let samples = sample_inputs(benchmark, BATCH);
+        let xs = refs(&samples);
+        for spec in [FixedSpec::new(16, 6), FixedSpec::new(24, 8)] {
+            let mut engine =
+                FixedEngine::new(&weights, QuantConfig::ptq(spec)).unwrap();
+            let want: Vec<Vec<f32>> =
+                xs.iter().map(|x| engine.forward(x)).collect();
+            for workers in WORKER_COUNTS {
+                engine.set_parallelism(workers);
+                let got = engine.forward_batch(&xs);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} fixed{}: batch output differs at {workers} workers",
+                    arch.key(),
+                    spec.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_batch_matches_slice_batch() {
+    // The coordinator feeds engines through `forward_packed` on the
+    // batcher's flat buffer; it must agree with the slice API (and hence
+    // with per-sample `forward`).
+    for (benchmark, cell) in [("top", Cell::Gru), ("flavor", Cell::Lstm)] {
+        let arch = zoo::arch(benchmark, cell).unwrap();
+        let weights = Weights::synthetic(&arch, 0xCAFE);
+        let samples = sample_inputs(benchmark, BATCH);
+        let xs = refs(&samples);
+        let mut packed = Vec::new();
+        for s in &samples {
+            packed.extend_from_slice(s);
+        }
+        let engine = FloatEngine::new(&weights).unwrap().with_parallelism(4);
+        assert_eq!(
+            engine.forward_packed(&packed, BATCH),
+            engine.forward_batch(&xs),
+            "{}",
+            arch.key()
+        );
+        let fixed = FixedEngine::new(&weights, QuantConfig::ptq(FixedSpec::new(16, 6)))
+            .unwrap()
+            .with_parallelism(4);
+        assert_eq!(
+            fixed.forward_packed(&packed, BATCH),
+            fixed.forward_batch(&xs),
+            "{} fixed",
+            arch.key()
+        );
+    }
+}
+
+#[test]
+fn empty_and_singleton_batches() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 1);
+    let engine = FloatEngine::new(&weights).unwrap().with_parallelism(8);
+    assert!(engine.forward_batch(&[]).is_empty());
+    let samples = sample_inputs("top", 1);
+    let xs = refs(&samples);
+    assert_eq!(engine.forward_batch(&xs), vec![engine.forward(xs[0])]);
+}

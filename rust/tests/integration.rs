@@ -207,29 +207,12 @@ fn bucket_selection() {
 #[test]
 fn serving_e2e_with_fixed_engine() {
     // Full coordinator pipeline with the bit-accurate engine as the
-    // backend: no event lost (completed + dropped == generated), online
-    // accuracy well above chance.
+    // backend, consuming whole batches through the parallel
+    // `forward_batch` datapath (EngineRunner): no event lost
+    // (completed + dropped == generated), online accuracy well above
+    // chance.
     let Some(dir) = artifacts() else { return };
     let weights = Weights::load(dir.join("weights/top_gru.json")).unwrap();
-    let stride = weights.arch.seq_len * weights.arch.input_size;
-
-    struct FixedRunner {
-        engine: FixedEngine,
-        stride: usize,
-    }
-    impl rnn_hls::coordinator::BatchRunner for FixedRunner {
-        fn max_batch(&self) -> usize {
-            10
-        }
-        fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
-            Ok((0..n)
-                .map(|i| {
-                    self.engine
-                        .forward(&xs[i * self.stride..(i + 1) * self.stride])
-                })
-                .collect())
-        }
-    }
 
     let cfg = ServerConfig {
         workers: 2,
@@ -247,13 +230,15 @@ fn serving_e2e_with_fixed_engine() {
     let generator = generators::for_benchmark("top", 42).unwrap();
     let weights2 = weights.clone();
     let report = Server::run(cfg, generator, move || {
-        Ok(Box::new(FixedRunner {
-            engine: FixedEngine::new(
-                &weights2,
-                QuantConfig::ptq(FixedSpec::new(16, 6)),
-            )?,
-            stride,
-        }) as Box<dyn rnn_hls::coordinator::BatchRunner>)
+        let engine = FixedEngine::new(
+            &weights2,
+            QuantConfig::ptq(FixedSpec::new(16, 6)),
+        )?
+        .with_parallelism(2);
+        Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
+            Box::new(engine),
+            10,
+        )) as Box<dyn rnn_hls::coordinator::BatchRunner>)
     })
     .unwrap();
     assert_eq!(report.generated, 5_000);

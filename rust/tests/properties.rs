@@ -5,7 +5,7 @@ use rnn_hls::fixed::{
     dequantize, quantize, requantize, FixedSpec, OverflowMode, QuantConfig,
     RoundMode,
 };
-use rnn_hls::hls::latency::{self, Strategy};
+use rnn_hls::hls::latency;
 use rnn_hls::hls::{resource, HlsConfig, ReuseFactor, RnnMode};
 use rnn_hls::model::zoo;
 use rnn_hls::prop_assert;
@@ -315,6 +315,58 @@ fn prop_fixed_engine_tracks_float_at_high_precision() {
             "h={h} i={i} seq={seq}: float {} vs fixed {}",
             yf[0],
             yq[0]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_batch_bitwise_equals_forward_on_random_models() {
+    use rnn_hls::model::{zoo, Weights};
+    use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+
+    check("batch-equals-forward", 12, |rng| {
+        // top + flavor cover lstm/gru × sigmoid/softmax; quickdraw is
+        // excluded only to keep debug-mode test time in check.
+        let archs: Vec<_> = zoo::all_archs()
+            .into_iter()
+            .filter(|a| a.name != "quickdraw")
+            .collect();
+        let arch = &archs[rng.below(archs.len())];
+        let weights = Weights::synthetic(arch, rng.next_u64());
+        let batch = 1 + rng.below(7);
+        let stride = arch.seq_len * arch.input_size;
+        let samples: Vec<Vec<f32>> = (0..batch)
+            .map(|_| {
+                (0..stride)
+                    .map(|_| rng.normal(0.0, 1.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+        let workers = 1 + rng.below(8);
+
+        let fl = FloatEngine::new(&weights)
+            .map_err(|e| e.to_string())?
+            .with_parallelism(workers);
+        let want_f: Vec<Vec<f32>> = refs.iter().map(|x| fl.forward(x)).collect();
+        prop_assert!(
+            fl.forward_batch(&refs) == want_f,
+            "{} float batch != forward (b={batch}, w={workers})",
+            arch.key()
+        );
+
+        let fx = FixedEngine::new(
+            &weights,
+            QuantConfig::ptq(FixedSpec::new(16, 6)),
+        )
+        .map_err(|e| e.to_string())?
+        .with_parallelism(workers);
+        let want_q: Vec<Vec<f32>> = refs.iter().map(|x| fx.forward(x)).collect();
+        prop_assert!(
+            fx.forward_batch(&refs) == want_q,
+            "{} fixed batch != forward (b={batch}, w={workers})",
+            arch.key()
         );
         Ok(())
     });

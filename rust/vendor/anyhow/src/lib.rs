@@ -1,0 +1,141 @@
+//! In-tree minimal substitute for the `anyhow` crate.
+//!
+//! This build environment resolves no registry crates, so the slice of
+//! `anyhow` the codebase actually uses is implemented here:
+//!
+//! * [`Error`] — an opaque, message-carrying error (`Send + Sync`).
+//! * [`Result`] — `Result<T, Error>` alias with a defaulted error type.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — the formatting macros.
+//! * A blanket `From<E: std::error::Error>` so `?` converts any std
+//!   error (io, parse, utf8, the stub `xla::Error`, …).
+//!
+//! Deliberately *not* implemented (unused in this tree): context chains,
+//! downcasting, backtraces.  Like the real crate, [`Error`] does not
+//! implement `std::error::Error` itself — that is what makes the blanket
+//! `From` coherent.
+
+use std::fmt;
+
+/// An opaque error carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (alternate) renders the same: there is no cause chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error::msg(&err)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[allow(unused_imports)]
+    use super::*;
+
+    fn parse_num(s: &str) -> crate::Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError>
+        crate::ensure!(n < 100, "too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+        assert!(parse_num("abc").is_err());
+        assert_eq!(parse_num("200").unwrap_err().to_string(), "too big: 200");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("x = {}, y = {y}", 1, y = 2);
+        assert_eq!(e.to_string(), "x = 1, y = 2");
+        let e2 = crate::anyhow!("plain");
+        assert_eq!(format!("{e2}"), "plain");
+        assert_eq!(format!("{e2:#}"), "plain");
+        assert_eq!(format!("{e2:?}"), "plain");
+    }
+
+    fn bails() -> crate::Result<()> {
+        crate::bail!("bailed with {}", "detail")
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        assert_eq!(bails().unwrap_err().to_string(), "bailed with detail");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<crate::Error>();
+    }
+}

@@ -1,0 +1,135 @@
+//! Interface stub for the XLA/PJRT bindings.
+//!
+//! The real `xla` crate links the PJRT CPU plugin; that native dependency
+//! is not available in this build environment.  This stub mirrors exactly
+//! the API subset `rnn_hls::runtime::engine` uses, so the crate compiles
+//! and every PJRT-dependent path fails *at runtime* with a clear message
+//! (the serving stack falls back to the pure-rust `fixed`/`float`
+//! engines, which is also what `--engine fixed|float` selects).
+//!
+//! Entry point for reinstating the real backend: implement
+//! [`PjRtClient::cpu`] against the actual bindings — every other method
+//! is only reachable once `cpu()` succeeds.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "XLA/PJRT backend is not available in this build \
+     (stub `xla` crate): use the `fixed` or `float` engines, or rebuild \
+     with the real PJRT bindings";
+
+/// Stub error: always "backend unavailable".
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Self(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (never successfully constructed by the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real crate spins up the PJRT CPU plugin here; the stub reports
+    /// the backend missing.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A host-side literal value.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (text interchange).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn hlo_load_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}
