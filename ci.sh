@@ -1,8 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verify + lint gates.  Invoked by .github/workflows/ci.yml and
-# runnable locally: ./ci.sh
+# runnable locally:
+#   ./ci.sh                # full gates: build, test, fmt, clippy, doc
+#   ./ci.sh --bench-smoke  # reduced-iteration serving bench; emits
+#                          # BENCH_serving.json (CI uploads it as an
+#                          # artifact to track the perf trajectory)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    echo "== bench-smoke: throughput_batch --smoke =="
+    # Absolute path: cargo runs bench binaries with cwd at the package
+    # root (rust/), not the workspace root this script checks from.
+    cargo bench --bench throughput_batch -- --smoke --json "$PWD/BENCH_serving.json"
+    echo "== bench-smoke: BENCH_serving.json =="
+    test -s BENCH_serving.json
+    cat BENCH_serving.json
+    exit 0
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -25,5 +40,8 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "== cargo clippy == (skipped: clippy not installed)"
 fi
+
+echo "== cargo doc --no-deps (rustdoc warnings gate) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p rnn-hls
 
 echo "ci.sh: all gates passed"

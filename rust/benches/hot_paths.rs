@@ -43,6 +43,7 @@ fn main() {
         id: 0,
         features: vec![0.0f32; 120],
         label: 0,
+        route_key: 0,
         enqueued_at: std::time::Instant::now(),
     };
     let stats = bench(100, 100_000, || {
@@ -59,6 +60,7 @@ fn main() {
                     id: i,
                     features: vec![0.0f32; 120],
                     label: 0,
+                    route_key: 0,
                     enqueued_at: std::time::Instant::now(),
                 })
                 .unwrap();

@@ -1,6 +1,6 @@
 //! Bench: §5.2 throughput — batch scaling of the serving engines.
 //!
-//! Two parts:
+//! Three parts:
 //!
 //! 1. **Engine batch × worker scaling** (no artifacts needed): the
 //!    parallel `forward_batch` runtime vs the sequential per-sample
@@ -10,11 +10,21 @@
 //!    batcher+engine pair must turn batch size into throughput.  The
 //!    acceptance bar — ≥2× over sequential at batch ≥ 64 with ≥ 4
 //!    workers — is asserted on the heavy model.
-//! 2. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//! 2. **Shards × workers serving sweep** (no artifacts needed): full
+//!    `ShardedServer` sessions over shard counts and routing policies,
+//!    reported as samples/s and p50/p99 latency per config.
+//! 3. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
 //!    original QuickDraw-LSTM comparison against the scheduler's II.
+//!
+//! Flags (after `--`): `--smoke` runs the reduced-iteration CI variant
+//! (shorter budgets, fewer events, no hard perf assertion — machines
+//! vary); `--json PATH` writes the serving sweep as machine-readable
+//! `BENCH_serving.json` (the CI bench-smoke artifact).
 
+use std::path::PathBuf;
 use std::time::Duration;
 
+use rnn_hls::coordinator::ShardPolicy;
 use rnn_hls::data::generators;
 use rnn_hls::fixed::{FixedSpec, QuantConfig};
 use rnn_hls::model::{zoo, Cell, Weights};
@@ -22,6 +32,31 @@ use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
 use rnn_hls::report::throughput;
 use rnn_hls::runtime::manifest;
 use rnn_hls::util::timing::bench_for;
+
+struct BenchOpts {
+    smoke: bool,
+    json: Option<PathBuf>,
+}
+
+fn parse_opts() -> BenchOpts {
+    let mut opts = BenchOpts {
+        smoke: false,
+        json: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => {
+                let path = args.next().expect("--json needs a path");
+                opts.json = Some(PathBuf::from(path));
+            }
+            // `cargo bench` forwards its own flags (e.g. --bench); ignore.
+            _ => {}
+        }
+    }
+    opts
+}
 
 fn scaling_for_engine(
     label: &str,
@@ -65,8 +100,14 @@ fn scaling_for_engine(
     best_speedup_b64_w4
 }
 
-fn engine_scaling() {
+fn engine_scaling(smoke: bool) {
     println!("=== engine batch × worker scaling (synthetic weights) ===");
+    // Smoke mode trades statistical tightness for CI turnaround.
+    let (budget_small, budget_heavy) = if smoke {
+        (Duration::from_millis(40), Duration::from_millis(60))
+    } else {
+        (Duration::from_millis(150), Duration::from_millis(250))
+    };
 
     // Small model: spawn overhead is visible, scaling is informational.
     let arch = zoo::arch("top", Cell::Gru).unwrap();
@@ -75,12 +116,7 @@ fn engine_scaling() {
     let samples: Vec<Vec<f32>> =
         (0..256).map(|_| generator.generate().features).collect();
     let mut engine = FloatEngine::new(&weights).unwrap();
-    scaling_for_engine(
-        "float/top_gru",
-        &mut engine,
-        &samples,
-        Duration::from_millis(150),
-    );
+    scaling_for_engine("float/top_gru", &mut engine, &samples, budget_small);
 
     // Correctness spot-check: batched output identical to sequential.
     engine.set_parallelism(4);
@@ -100,17 +136,17 @@ fn engine_scaling() {
         "float/quickdraw_lstm",
         &mut engine,
         &samples,
-        Duration::from_millis(250),
+        budget_heavy,
     );
     println!(
         "  quickdraw_lstm speedup at batch>=64, 4 workers: {speedup:.2}x \
          (bar: >= 2x)"
     );
-    // Only enforce the bar where 4 workers can actually run in parallel;
-    // on smaller machines print the shortfall instead of aborting the
-    // remaining bench sections.
+    // Only enforce the bar where 4 workers can actually run in parallel
+    // and we measured with full budgets; smoke runs (shared CI machines,
+    // short budgets) report the number without aborting the job.
     let cores = rnn_hls::util::threads::default_workers();
-    if cores >= 4 {
+    if cores >= 4 && !smoke {
         assert!(
             speedup >= 2.0,
             "parallel forward_batch only {speedup:.2}x over sequential at \
@@ -118,7 +154,7 @@ fn engine_scaling() {
         );
     } else if speedup < 2.0 {
         println!(
-            "  (bar not enforced: only {cores} cores available; \
+            "  (bar not enforced: smoke={smoke}, {cores} cores; \
              measured {speedup:.2}x)"
         );
     }
@@ -133,7 +169,7 @@ fn engine_scaling() {
     let mut fixed =
         FixedEngine::new(&weights, QuantConfig::ptq(FixedSpec::new(16, 6)))
             .unwrap();
-    let seq = bench_for(Duration::from_millis(150), || {
+    let seq = bench_for(budget_small, || {
         for x in &xs {
             std::hint::black_box(fixed.forward(x));
         }
@@ -142,7 +178,7 @@ fn engine_scaling() {
     println!("    sequential: {:>10.0} ev/s", seq.throughput(64));
     for workers in [1usize, 4] {
         fixed.set_parallelism(workers);
-        let stats = bench_for(Duration::from_millis(150), || {
+        let stats = bench_for(budget_small, || {
             std::hint::black_box(fixed.forward_batch(&xs));
         });
         println!(
@@ -153,8 +189,46 @@ fn engine_scaling() {
     }
 }
 
+/// Full serving sessions over shards × policy: the horizontal-scaling
+/// counterpart to the per-engine sweep above, and the source of the
+/// `BENCH_serving.json` rows CI tracks.
+fn shard_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
+    println!("\n=== shards × workers serving sweep (float/top_gru) ===");
+    let n_events = if smoke { 4_000 } else { 20_000 };
+    let shard_counts = [1usize, 2, 4];
+    let policies = [ShardPolicy::HashId, ShardPolicy::RoundRobin];
+    let rows = throughput::shard_sweep(&shard_counts, &policies, 2, n_events)
+        .expect("shard sweep");
+    println!(
+        "  {:>22} {:>12} {:>10} {:>10} {:>10} {:>9}",
+        "config", "samples/s", "p50 µs", "p99 µs", "completed", "dropped"
+    );
+    for r in &rows {
+        println!(
+            "  {:>22} {:>12.0} {:>10.1} {:>10.1} {:>10} {:>9}",
+            r.config, r.samples_per_sec, r.p50_us, r.p99_us, r.completed,
+            r.dropped
+        );
+        // Correctness, not speed: every event must be accounted for.
+        assert_eq!(
+            r.completed + r.dropped,
+            n_events as u64,
+            "{}: lost events",
+            r.config
+        );
+    }
+    rows
+}
+
 fn main() {
-    engine_scaling();
+    let opts = parse_opts();
+    engine_scaling(opts.smoke);
+    let rows = shard_scaling(opts.smoke);
+    if let Some(path) = &opts.json {
+        let written =
+            throughput::write_bench_json(path, &rows).expect("bench json");
+        println!("wrote {}", written.display());
+    }
 
     println!("\n=== PJRT vs analytical FPGA band ===");
     let artifacts = manifest::default_artifacts_dir();

@@ -63,14 +63,22 @@ pub struct ServeCliConfig {
     pub engine: String, // "pjrt" | "fixed" | "float"
     pub rate_hz: f64,
     pub n_events: usize,
-    /// Engine-worker threads (each owns one engine replica).
+    /// Coordinator shards: independent queue+batcher+worker pipelines the
+    /// request stream is partitioned across.  1 = the classic single
+    /// coordinator (bitwise-identical results to `Server`).
+    pub shards: usize,
+    /// Routing policy in front of the shards:
+    /// "hash" | "round-robin" | "model-key".
+    pub shard_policy: String,
+    /// Engine-worker threads *per shard* (each owns one engine replica).
     pub workers: usize,
     /// Per-batch parallelism *inside* each rust engine (`forward_batch`
     /// worker pool; 1 = single-threaded engine).  Total thread budget is
-    /// `workers × engine_parallelism`.
+    /// `shards × workers × engine_parallelism`.
     pub engine_parallelism: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Per-shard queue capacity (drop beyond).
     pub queue_capacity: usize,
 }
 
@@ -81,6 +89,8 @@ impl Default for ServeCliConfig {
             engine: "pjrt".into(),
             rate_hz: 20_000.0,
             n_events: 50_000,
+            shards: 1,
+            shard_policy: "hash".into(),
             workers: 2,
             engine_parallelism: 1,
             max_batch: 10,
@@ -109,6 +119,15 @@ mod tests {
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.engine_parallelism, 1);
         assert_eq!(cfg.max_batch, 10);
+    }
+
+    /// The default serve config must stay the single-coordinator setup so
+    /// existing invocations reproduce pre-sharding behavior exactly.
+    #[test]
+    fn serve_defaults_to_one_shard_hash_policy() {
+        let cfg = ServeCliConfig::default();
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.shard_policy, "hash");
     }
 
     #[test]

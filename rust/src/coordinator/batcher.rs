@@ -103,6 +103,7 @@ mod tests {
             id,
             features: vec![id as f32; 4],
             label: 0,
+            route_key: 0,
             enqueued_at: Instant::now(),
         }
     }

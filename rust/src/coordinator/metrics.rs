@@ -4,7 +4,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Log-spaced latency histogram from 1 µs to ~17 s (64 buckets, ×1.5).
+/// Log-spaced latency histogram: [`Self::N_BOUNDS`] bucket bounds at 1 µs
+/// × 1.5ᵏ (so the top bound is ≈ 1.5³⁹ µs ≈ 7.4 s), plus one overflow
+/// bucket — `N_BOUNDS + 1` buckets total.  Latencies below 1 µs land in
+/// the first bucket, above the top bound in the overflow bucket.
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     bounds_us: Vec<f64>,
@@ -17,15 +20,29 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Number of finite bucket bounds (one extra bucket holds overflow).
+    pub const N_BOUNDS: usize = 40;
+
     pub fn new() -> Self {
         let mut bounds_us = Vec::new();
         let mut b = 1.0f64;
-        while bounds_us.len() < 40 {
+        while bounds_us.len() < Self::N_BOUNDS {
             bounds_us.push(b);
             b *= 1.5;
         }
         let buckets = (0..=bounds_us.len()).map(|_| AtomicU64::new(0)).collect();
         Self { buckets, bounds_us }
+    }
+
+    /// Merge `other` into `self`, bucket-wise.  Both histograms share the
+    /// fixed bucket layout, so the merged quantiles are exactly what a
+    /// single histogram would have recorded — this is the cross-shard
+    /// metrics roll-up primitive.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
     }
 
     #[inline]
@@ -92,6 +109,24 @@ impl ServerMetrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Merge `other` into `self`: counters are summed and the latency
+    /// histograms merged bucket-wise.  Used by the sharded coordinator to
+    /// roll per-shard metrics up into one report.
+    pub fn merge(&self, other: &ServerMetrics) {
+        for (mine, theirs) in [
+            (&self.generated, &other.generated),
+            (&self.dropped, &other.dropped),
+            (&self.completed, &other.completed),
+            (&self.correct, &other.correct),
+            (&self.batches, &other.batches),
+            (&self.batch_samples, &other.batch_samples),
+        ] {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.queue_latency.merge(&other.queue_latency);
+        self.total_latency.merge(&other.total_latency);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let batches = self.batches.load(Ordering::Relaxed);
         if batches == 0 {
@@ -148,6 +183,70 @@ mod tests {
         h.record(Duration::from_nanos(1)); // below first bound
         h.record(Duration::from_secs(3600)); // above last bound
         assert_eq!(h.count(), 2);
+    }
+
+    /// The roll-up contract: merging two histograms is equivalent to
+    /// recording every sample into one histogram (same fixed buckets).
+    #[test]
+    fn histogram_merge_is_bucketwise_sum() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let combined = LatencyHistogram::new();
+        for us in [5u64, 50, 500] {
+            a.record(Duration::from_micros(us));
+            combined.record(Duration::from_micros(us));
+        }
+        for us in [10u64, 100, 1000, 10_000] {
+            b.record(Duration::from_micros(us));
+            combined.record(Duration::from_micros(us));
+        }
+        let merged = LatencyHistogram::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.count(), 7);
+        assert_eq!(merged.count(), combined.count());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                merged.quantile_us(q),
+                combined.quantile_us(q),
+                "quantile {q} differs from single-histogram recording"
+            );
+        }
+        // Merging an empty histogram is a no-op.
+        merged.merge(&LatencyHistogram::new());
+        assert_eq!(merged.count(), 7);
+    }
+
+    #[test]
+    fn server_metrics_merge_sums_counters_and_histograms() {
+        let a = ServerMetrics::new();
+        a.generated.store(60, Ordering::Relaxed);
+        a.dropped.store(10, Ordering::Relaxed);
+        a.completed.store(50, Ordering::Relaxed);
+        a.correct.store(40, Ordering::Relaxed);
+        a.batches.store(5, Ordering::Relaxed);
+        a.batch_samples.store(50, Ordering::Relaxed);
+        a.total_latency.record(Duration::from_micros(100));
+        let b = ServerMetrics::new();
+        b.generated.store(40, Ordering::Relaxed);
+        b.dropped.store(0, Ordering::Relaxed);
+        b.completed.store(40, Ordering::Relaxed);
+        b.correct.store(20, Ordering::Relaxed);
+        b.batches.store(5, Ordering::Relaxed);
+        b.batch_samples.store(40, Ordering::Relaxed);
+        b.queue_latency.record(Duration::from_micros(20));
+
+        let total = ServerMetrics::new();
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.generated.load(Ordering::Relaxed), 100);
+        assert_eq!(total.dropped.load(Ordering::Relaxed), 10);
+        assert_eq!(total.completed.load(Ordering::Relaxed), 90);
+        assert_eq!(total.correct.load(Ordering::Relaxed), 60);
+        assert!((total.mean_batch_size() - 9.0).abs() < 1e-12);
+        assert!((total.accuracy() - 60.0 / 90.0).abs() < 1e-12);
+        assert_eq!(total.total_latency.count(), 1);
+        assert_eq!(total.queue_latency.count(), 1);
     }
 
     #[test]

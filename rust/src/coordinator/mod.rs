@@ -49,17 +49,37 @@
 //! `workers × engine-parallelism` should not exceed the core count;
 //! prefer `workers` for many small batches (small models) and engine
 //! parallelism for large batches on heavy models.
+//!
+//! ## Horizontal scaling: coordinator shards
+//!
+//! One [`Server`] owns one queue, one batcher clock, and one metrics
+//! block — a single-coordinator ceiling.  [`ShardedServer`] goes
+//! horizontal the way parallel-IO duplication scales the paper's trigger
+//! designs: N independent shards (each its own `BoundedQueue` + batcher
+//! loop + engine workers), a [`Router`] in front (hash-of-id,
+//! round-robin, or model-key [`ShardPolicy`]), and a shared metrics
+//! roll-up ([`ServerMetrics::merge`] /
+//! [`LatencyHistogram::merge`]) that folds per-shard counters and
+//! histogram buckets into one [`ServerReport`].  A single-shard
+//! configuration reproduces [`Server`] exactly (the shard-equivalence
+//! suite asserts it), so `shards` is a fourth independent throughput
+//! lever on top of the three above.
 
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
 pub mod server;
+pub mod sharded;
 pub mod source;
 
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{LatencyHistogram, ServerMetrics};
 pub use queue::BoundedQueue;
 pub use server::{BatchRunner, EngineRunner, Server, ServerConfig, ServerReport};
+pub use sharded::{
+    Router, ShardPolicy, ShardStats, ShardedConfig, ShardedReport,
+    ShardedServer,
+};
 pub use source::SourceConfig;
 
 use std::time::Instant;
@@ -72,5 +92,11 @@ pub struct Request {
     pub features: Vec<f32>,
     /// Ground-truth label carried through for online accuracy accounting.
     pub label: u32,
+    /// Application routing key — [`ShardPolicy::ModelKey`] partitions the
+    /// stream on `route_key % shards`.  This is the multi-backend seam:
+    /// when one session mixes engines (ROADMAP), the key names the model/
+    /// backend a request wants and each shard owns one backend.  Sources
+    /// emit `0` today (single-model sessions).
+    pub route_key: u64,
     pub enqueued_at: Instant,
 }

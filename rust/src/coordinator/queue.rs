@@ -75,6 +75,11 @@ impl<T> BoundedQueue<T> {
         self.inner.lock().expect("queue lock").items.len()
     }
 
+    /// Capacity the queue was built with (push fails beyond it).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -110,6 +115,7 @@ mod tests {
     #[test]
     fn overflow_rejects_instead_of_blocking() {
         let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
         q.push(1).unwrap();
         q.push(2).unwrap();
         assert_eq!(q.push(3), Err(3));

@@ -94,6 +94,24 @@ pub struct ServerReport {
 }
 
 impl ServerReport {
+    /// Build a report from a (possibly merged) metrics block and the run's
+    /// wall time.  Shared by [`Server`] and the sharded roll-up.
+    pub(crate) fn from_metrics(metrics: &ServerMetrics, wall: f64) -> Self {
+        let completed = metrics.completed.load(Ordering::Relaxed);
+        Self {
+            generated: metrics.generated.load(Ordering::Relaxed),
+            dropped: metrics.dropped.load(Ordering::Relaxed),
+            completed,
+            accuracy: metrics.accuracy(),
+            mean_batch: metrics.mean_batch_size(),
+            p50_latency_us: metrics.total_latency.quantile_us(0.5),
+            p99_latency_us: metrics.total_latency.quantile_us(0.99),
+            p50_queue_us: metrics.queue_latency.quantile_us(0.5),
+            wall_seconds: wall,
+            throughput_hz: completed as f64 / wall,
+        }
+    }
+
     pub fn render(&self) -> String {
         format!(
             "events generated   {}\n\
@@ -117,6 +135,48 @@ impl ServerReport {
             self.throughput_hz,
         )
     }
+}
+
+/// One engine worker's serving loop: pull batches off `queue` under the
+/// batcher policy until the queue is closed and drained, run them on
+/// `runner`, record per-request metrics.  Shared by [`Server`] and
+/// [`super::ShardedServer`] — a shard's workers are exactly this loop on
+/// the shard's own queue and metrics block.
+pub(crate) fn worker_loop(
+    runner: &mut dyn BatchRunner,
+    queue: &Arc<BoundedQueue<Request>>,
+    metrics: &ServerMetrics,
+    batcher_cfg: &BatcherConfig,
+) -> anyhow::Result<()> {
+    let cap = runner.max_batch().min(batcher_cfg.max_batch);
+    let local_cfg = BatcherConfig {
+        max_batch: cap,
+        max_wait: batcher_cfg.max_wait,
+    };
+    while let Some(batch) = next_batch(queue, &local_cfg) {
+        let n = batch.len();
+        let packed = batch.packed_features();
+        for r in &batch.requests {
+            metrics
+                .queue_latency
+                .record(batch.formed_at - r.enqueued_at);
+        }
+        let outputs = runner.run(&packed, n)?;
+        anyhow::ensure!(outputs.len() == n, "runner output count");
+        let done = Instant::now();
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batch_samples
+            .fetch_add(n as u64, Ordering::Relaxed);
+        for (r, probs) in batch.requests.iter().zip(&outputs) {
+            metrics.total_latency.record(done - r.enqueued_at);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            if predicted_label(probs) == r.label {
+                metrics.correct.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    Ok(())
 }
 
 pub struct Server;
@@ -160,35 +220,7 @@ impl Server {
                     });
                     ready.fetch_add(1, Ordering::SeqCst);
                     let mut runner = runner_or?;
-                    let cap = runner.max_batch().min(batcher_cfg.max_batch);
-                    let local_cfg = BatcherConfig {
-                        max_batch: cap,
-                        max_wait: batcher_cfg.max_wait,
-                    };
-                    while let Some(batch) = next_batch(&queue, &local_cfg) {
-                        let n = batch.len();
-                        let packed = batch.packed_features();
-                        for r in &batch.requests {
-                            metrics
-                                .queue_latency
-                                .record(batch.formed_at - r.enqueued_at);
-                        }
-                        let outputs = runner.run(&packed, n)?;
-                        anyhow::ensure!(outputs.len() == n, "runner output count");
-                        let done = Instant::now();
-                        metrics.batches.fetch_add(1, Ordering::Relaxed);
-                        metrics
-                            .batch_samples
-                            .fetch_add(n as u64, Ordering::Relaxed);
-                        for (r, probs) in batch.requests.iter().zip(&outputs) {
-                            metrics.total_latency.record(done - r.enqueued_at);
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            if predicted_label(probs) == r.label {
-                                metrics.correct.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    }
-                    Ok(())
+                    worker_loop(runner.as_mut(), &queue, &metrics, &batcher_cfg)
                 }));
             }
 
@@ -212,20 +244,7 @@ impl Server {
         });
         report?;
 
-        let wall = t0.elapsed().as_secs_f64();
-        let completed = metrics.completed.load(Ordering::Relaxed);
-        Ok(ServerReport {
-            generated: metrics.generated.load(Ordering::Relaxed),
-            dropped: metrics.dropped.load(Ordering::Relaxed),
-            completed,
-            accuracy: metrics.accuracy(),
-            mean_batch: metrics.mean_batch_size(),
-            p50_latency_us: metrics.total_latency.quantile_us(0.5),
-            p99_latency_us: metrics.total_latency.quantile_us(0.99),
-            p50_queue_us: metrics.queue_latency.quantile_us(0.5),
-            wall_seconds: wall,
-            throughput_hz: completed as f64 / wall,
-        })
+        Ok(ServerReport::from_metrics(&metrics, t0.elapsed().as_secs_f64()))
     }
 }
 

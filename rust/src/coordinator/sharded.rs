@@ -1,0 +1,507 @@
+//! Sharded multi-coordinator serving: N independent coordinator shards
+//! behind a routing layer, with a shared metrics roll-up.
+//!
+//! ```text
+//!                      ┌► shard 0: queue ─ batcher ─ workers ─ metrics ┐
+//! EventSource ─ Router ┼► shard 1: queue ─ batcher ─ workers ─ metrics ┼─► roll-up
+//!                      └► shard N: queue ─ batcher ─ workers ─ metrics ┘
+//! ```
+//!
+//! One [`Server`](super::Server) owns one queue, one batcher deadline
+//! clock, one metrics block, and one shutdown signal; past a few workers
+//! every pull contends on that single queue lock.  Sharding converts each
+//! of those single-owner assumptions into a per-shard one — the software
+//! analog of the parallel-IO duplication used to scale sub-microsecond
+//! trigger designs: replicate the whole pipeline, split the input stream,
+//! and merge only the monitoring.
+//!
+//! Design notes:
+//!
+//! * **Routing** happens at admission, on the source thread.  Policies are
+//!   deliberately cheap and deterministic (no load feedback): a trigger
+//!   router cannot afford to inspect downstream state per event.
+//! * **Isolation**: a shard's queue, deadline clock, and metrics are
+//!   private to it, so shards never contend on locks; the only shared
+//!   state is the roll-up, which runs once after shutdown.
+//! * **Equivalence**: with `shards = 1` every policy routes to shard 0 and
+//!   the pipeline is exactly [`Server::run`](super::Server::run) — same
+//!   source seed, same worker loop, same drain-then-close shutdown.  The
+//!   shard-equivalence suite (`tests/shard_equivalence.rs`) asserts the
+//!   per-request outputs and merged totals match.
+//! * **Shutdown** is coordinated: the source finishes, then each shard is
+//!   allowed to drain (or declared dead if all its workers exited), then
+//!   all queues close together and every worker is joined.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::generators::Generator;
+
+use super::metrics::ServerMetrics;
+use super::queue::BoundedQueue;
+use super::server::{worker_loop, BatchRunner, ServerConfig, ServerReport};
+use super::source;
+use super::Request;
+
+/// How the router assigns an incoming request to a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// splitmix64 hash of the request id: stateless, uniform in
+    /// expectation, and sticky (the same id always lands on the same
+    /// shard — what a keyed production router gives you).
+    HashId,
+    /// Strict rotation over shards: perfectly balanced for a steady
+    /// stream, at the cost of carrying one counter of router state.
+    RoundRobin,
+    /// Route on [`Request::route_key`] (`key % shards`): the multi-backend
+    /// seam.  When one session mixes engines (fixed-point trigger tier +
+    /// float offline tier), the key names the backend and each shard owns
+    /// one engine kind.  Sources emit key 0 today, so this degenerates to
+    /// shard 0 until the multi-backend item lands.
+    ModelKey,
+}
+
+impl ShardPolicy {
+    /// Parse a CLI spelling (`hash | round-robin | model-key`).
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "hash" => Ok(Self::HashId),
+            "round-robin" | "rr" => Ok(Self::RoundRobin),
+            "model-key" => Ok(Self::ModelKey),
+            other => anyhow::bail!(
+                "unknown shard policy {other:?} (hash|round-robin|model-key)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::HashId => "hash",
+            Self::RoundRobin => "round-robin",
+            Self::ModelKey => "model-key",
+        }
+    }
+}
+
+/// One splitmix64 step from `state = id` — the same mix `util::rng` seeds
+/// with; enough to decorrelate sequential ids across shards.
+fn hash_id(id: u64) -> u64 {
+    let mut state = id;
+    crate::util::rng::splitmix64(&mut state)
+}
+
+/// The routing layer in front of the shard queues.  Runs on the source
+/// thread (single-threaded), so round-robin state is a plain counter.
+pub struct Router {
+    policy: ShardPolicy,
+    shards: usize,
+    rr_next: u64,
+}
+
+impl Router {
+    pub fn new(policy: ShardPolicy, shards: usize) -> Self {
+        assert!(shards >= 1, "router needs at least one shard");
+        Self {
+            policy,
+            shards,
+            rr_next: 0,
+        }
+    }
+
+    /// Shard index for `request`, in `0..shards`.
+    pub fn route(&mut self, request: &Request) -> usize {
+        match self.policy {
+            ShardPolicy::HashId => {
+                (hash_id(request.id) % self.shards as u64) as usize
+            }
+            ShardPolicy::RoundRobin => {
+                let shard = (self.rr_next % self.shards as u64) as usize;
+                self.rr_next += 1;
+                shard
+            }
+            ShardPolicy::ModelKey => {
+                (request.route_key % self.shards as u64) as usize
+            }
+        }
+    }
+}
+
+/// Sharded serving session configuration.  `server` holds the *per-shard*
+/// knobs (`workers`, `queue_capacity`, `batcher`) plus the shared source;
+/// total engine threads are `shards × server.workers`.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedConfig {
+    pub shards: usize,
+    pub policy: ShardPolicy,
+    pub server: ServerConfig,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            policy: ShardPolicy::HashId,
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+/// Per-shard slice of the final report (from that shard's own metrics).
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Events the router admitted to this shard (its `generated` count).
+    pub routed: u64,
+    pub dropped: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p99_latency_us: f64,
+}
+
+/// Roll-up of one sharded run: the merged cross-shard report (counters
+/// summed, histogram buckets merged bucket-wise — so merged percentiles
+/// are exact, not averages of percentiles) plus the per-shard breakdown.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub shards: usize,
+    pub policy: ShardPolicy,
+    pub merged: ServerReport,
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl ShardedReport {
+    pub fn render(&self) -> String {
+        let mut out = self.merged.render();
+        if self.shards > 1 {
+            out.push_str(&format!(
+                "\nshards             {} ({} routing)",
+                self.shards,
+                self.policy.name()
+            ));
+            for s in &self.per_shard {
+                out.push_str(&format!(
+                    "\n  shard {}: routed {} dropped {} completed {} \
+                     mean batch {:.2} p99 {:.1} µs",
+                    s.shard,
+                    s.routed,
+                    s.dropped,
+                    s.completed,
+                    s.mean_batch,
+                    s.p99_latency_us,
+                ));
+            }
+        }
+        out
+    }
+}
+
+pub struct ShardedServer;
+
+impl ShardedServer {
+    /// Run one sharded serving session to completion.
+    ///
+    /// `runner_factory` is invoked once per worker, *inside* that worker's
+    /// thread (non-`Send` engines stay legal), and receives the worker's
+    /// shard index — the hook where a multi-backend deployment hands each
+    /// shard a different engine.
+    pub fn run<F>(
+        cfg: ShardedConfig,
+        generator: Box<dyn Generator>,
+        runner_factory: F,
+    ) -> anyhow::Result<ShardedReport>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+    {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        anyhow::ensure!(
+            cfg.server.workers >= 1,
+            "need at least one worker per shard"
+        );
+        let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.shards)
+            .map(|_| Arc::new(BoundedQueue::new(cfg.server.queue_capacity)))
+            .collect();
+        let metrics: Vec<Arc<ServerMetrics>> = (0..cfg.shards)
+            .map(|_| Arc::new(ServerMetrics::new()))
+            .collect();
+        let t0 = Instant::now();
+
+        // Same readiness gate as `Server::run`: the tap opens only after
+        // every worker on every shard has built its engine.
+        let total_workers = cfg.shards * cfg.server.workers;
+        let ready = Arc::new(AtomicUsize::new(0));
+
+        let run = std::thread::scope(|scope| -> anyhow::Result<()> {
+            // handles[shard][worker]
+            let mut handles = Vec::with_capacity(cfg.shards);
+            for shard in 0..cfg.shards {
+                let mut shard_handles = Vec::with_capacity(cfg.server.workers);
+                for worker in 0..cfg.server.workers {
+                    let queue = queues[shard].clone();
+                    let shard_metrics = metrics[shard].clone();
+                    let factory = &runner_factory;
+                    let batcher_cfg = cfg.server.batcher;
+                    let ready = ready.clone();
+                    shard_handles.push(scope.spawn(
+                        move || -> anyhow::Result<()> {
+                            let runner_or = factory(shard).map_err(|e| {
+                                anyhow::anyhow!(
+                                    "shard {shard} worker {worker}: \
+                                     engine init: {e}"
+                                )
+                            });
+                            ready.fetch_add(1, Ordering::SeqCst);
+                            let mut runner = runner_or?;
+                            worker_loop(
+                                runner.as_mut(),
+                                &queue,
+                                &shard_metrics,
+                                &batcher_cfg,
+                            )
+                        },
+                    ));
+                }
+                handles.push(shard_handles);
+            }
+
+            while ready.load(Ordering::SeqCst) < total_workers {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+
+            // Source + router run on this thread.  Admission counts into
+            // the *target shard's* metrics so the roll-up stays a pure
+            // sum.  The source seed matches `Server::run`, so any shard
+            // count replays the identical request stream.
+            let mut router = Router::new(cfg.policy, cfg.shards);
+            source::run_with(generator, cfg.server.source, 0xEE77, |request| {
+                let shard = router.route(&request);
+                metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
+                if queues[shard].push(request).is_err() {
+                    metrics[shard].dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+
+            // Coordinated shutdown: a shard is settled once its queue is
+            // drained — or abandoned when all its workers have exited
+            // (e.g. engine-init failure), so one dead shard cannot wedge
+            // the rest.  Then close every queue and join every worker.
+            let settled = |shard: usize| {
+                queues[shard].is_empty()
+                    || handles[shard].iter().all(|w| w.is_finished())
+            };
+            while !(0..cfg.shards).all(settled) {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            for queue in &queues {
+                queue.close();
+            }
+            for shard_handles in handles {
+                for handle in shard_handles {
+                    handle.join().expect("worker panicked")?;
+                }
+            }
+            Ok(())
+        });
+        run?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        // Shared roll-up: counters summed, histogram buckets merged.
+        let merged = ServerMetrics::new();
+        for shard_metrics in &metrics {
+            merged.merge(shard_metrics);
+        }
+        let per_shard = metrics
+            .iter()
+            .enumerate()
+            .map(|(shard, m)| ShardStats {
+                shard,
+                routed: m.generated.load(Ordering::Relaxed),
+                dropped: m.dropped.load(Ordering::Relaxed),
+                completed: m.completed.load(Ordering::Relaxed),
+                batches: m.batches.load(Ordering::Relaxed),
+                mean_batch: m.mean_batch_size(),
+                p99_latency_us: m.total_latency.quantile_us(0.99),
+            })
+            .collect();
+        Ok(ShardedReport {
+            shards: cfg.shards,
+            policy: cfg.policy,
+            merged: ServerReport::from_metrics(&merged, wall),
+            per_shard,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, SourceConfig};
+    use crate::data::generators::TopTagging;
+    use std::time::Duration;
+
+    fn req(id: u64, route_key: u64) -> Request {
+        Request {
+            id,
+            features: vec![0.0; 4],
+            label: 0,
+            route_key,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for (text, want) in [
+            ("hash", ShardPolicy::HashId),
+            ("round-robin", ShardPolicy::RoundRobin),
+            ("rr", ShardPolicy::RoundRobin),
+            ("model-key", ShardPolicy::ModelKey),
+        ] {
+            assert_eq!(ShardPolicy::parse(text).unwrap(), want);
+        }
+        assert!(ShardPolicy::parse("nope").is_err());
+        assert_eq!(ShardPolicy::parse("hash").unwrap().name(), "hash");
+    }
+
+    #[test]
+    fn hash_routing_is_sticky_and_covers_shards() {
+        let mut router = Router::new(ShardPolicy::HashId, 4);
+        let mut seen = [false; 4];
+        for id in 0..256 {
+            let a = router.route(&req(id, 0));
+            let b = router.route(&req(id, 0));
+            assert_eq!(a, b, "hash routing must be sticky per id");
+            assert!(a < 4);
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "256 ids must hit all 4 shards");
+    }
+
+    #[test]
+    fn round_robin_is_perfectly_balanced() {
+        let mut router = Router::new(ShardPolicy::RoundRobin, 3);
+        let mut counts = [0u32; 3];
+        for id in 0..300 {
+            counts[router.route(&req(id, 0))] += 1;
+        }
+        assert_eq!(counts, [100, 100, 100]);
+    }
+
+    #[test]
+    fn model_key_routes_by_key_modulo_shards() {
+        let mut router = Router::new(ShardPolicy::ModelKey, 4);
+        for key in 0..16u64 {
+            assert_eq!(router.route(&req(0, key)), (key % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn every_policy_degenerates_to_shard_zero_with_one_shard() {
+        for policy in [
+            ShardPolicy::HashId,
+            ShardPolicy::RoundRobin,
+            ShardPolicy::ModelKey,
+        ] {
+            let mut router = Router::new(policy, 1);
+            for id in 0..32 {
+                assert_eq!(router.route(&req(id, id)), 0);
+            }
+        }
+    }
+
+    /// Mock runner mirroring the one in `server.rs` tests: output depends
+    /// only on the input features.
+    struct ConstRunner;
+    impl BatchRunner for ConstRunner {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn run(
+            &mut self,
+            xs: &[f32],
+            n: usize,
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            let stride = xs.len() / n.max(1);
+            Ok((0..n)
+                .map(|i| vec![if xs[i * stride] > 0.0 { 0.9 } else { 0.1 }])
+                .collect())
+        }
+    }
+
+    #[test]
+    fn sharded_end_to_end_accounts_for_every_event() {
+        for shards in [1usize, 3] {
+            let cfg = ShardedConfig {
+                shards,
+                policy: ShardPolicy::RoundRobin,
+                server: ServerConfig {
+                    workers: 2,
+                    queue_capacity: 8192,
+                    batcher: BatcherConfig {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(100),
+                    },
+                    source: SourceConfig {
+                        rate_hz: 300_000.0,
+                        poisson: true,
+                        n_events: 2000,
+                    },
+                },
+            };
+            let report =
+                ShardedServer::run(cfg, Box::new(TopTagging::new(3)), |_| {
+                    Ok(Box::new(ConstRunner))
+                })
+                .unwrap();
+            assert_eq!(report.merged.generated, 2000, "shards={shards}");
+            assert_eq!(
+                report.merged.completed + report.merged.dropped,
+                2000,
+                "shards={shards}"
+            );
+            assert!(report.merged.completed > 0);
+            assert_eq!(report.per_shard.len(), shards);
+            let routed: u64 = report.per_shard.iter().map(|s| s.routed).sum();
+            assert_eq!(routed, 2000);
+            let completed: u64 =
+                report.per_shard.iter().map(|s| s.completed).sum();
+            assert_eq!(completed, report.merged.completed);
+            if shards > 1 {
+                // Round-robin: every shard sees ~1/shards of the stream.
+                for s in &report.per_shard {
+                    assert!(
+                        s.routed > 0,
+                        "shard {} starved under round-robin",
+                        s.shard
+                    );
+                }
+                assert!(report.render().contains("shard 1:"));
+            }
+        }
+    }
+
+    #[test]
+    fn engine_init_failure_on_one_shard_propagates() {
+        let cfg = ShardedConfig {
+            shards: 2,
+            policy: ShardPolicy::HashId,
+            server: ServerConfig {
+                source: SourceConfig {
+                    rate_hz: 1e6,
+                    poisson: false,
+                    n_events: 50,
+                },
+                ..Default::default()
+            },
+        };
+        let result =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |shard| {
+                anyhow::ensure!(shard != 1, "shard 1 has no engine");
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            });
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("shard 1"), "error was: {err}");
+    }
+
+}

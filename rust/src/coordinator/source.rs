@@ -33,15 +33,22 @@ impl Default for SourceConfig {
     }
 }
 
-/// Run the source to completion on the current thread (callers spawn it).
+/// Run the source to completion on the current thread, handing each paced
+/// request to `sink` (which owns admission: queue push, drop counting,
+/// shard routing).  The generation order, ids, and arrival pacing depend
+/// only on `(generator, cfg, seed)` — never on the sink — so the same
+/// seed replays the identical request stream into any topology; this is
+/// what makes the 1-shard vs N-shard equivalence suite meaningful.
 /// Returns the number of generated events.
-pub fn run(
+pub fn run_with<F>(
     mut generator: Box<dyn Generator>,
     cfg: SourceConfig,
-    queue: &Arc<BoundedQueue<Request>>,
-    metrics: &Arc<ServerMetrics>,
     seed: u64,
-) -> usize {
+    mut sink: F,
+) -> usize
+where
+    F: FnMut(Request),
+{
     let mut rng = Rng::new(seed);
     let interval = Duration::from_secs_f64(1.0 / cfg.rate_hz.max(1e-9));
     let start = Instant::now();
@@ -66,18 +73,32 @@ pub fn run(
         next_emit += gap;
 
         let event = generator.generate();
-        metrics.generated.fetch_add(1, Ordering::Relaxed);
-        let request = Request {
+        sink(Request {
             id: id as u64,
             features: event.features,
             label: event.label,
+            route_key: 0,
             enqueued_at: Instant::now(),
-        };
+        });
+    }
+    cfg.n_events
+}
+
+/// Single-queue admission: count every generated event, push, and count
+/// overflow as a drop — trigger semantics.  Returns generated events.
+pub fn run(
+    generator: Box<dyn Generator>,
+    cfg: SourceConfig,
+    queue: &Arc<BoundedQueue<Request>>,
+    metrics: &Arc<ServerMetrics>,
+    seed: u64,
+) -> usize {
+    run_with(generator, cfg, seed, |request| {
+        metrics.generated.fetch_add(1, Ordering::Relaxed);
         if queue.push(request).is_err() {
             metrics.dropped.fetch_add(1, Ordering::Relaxed);
         }
-    }
-    cfg.n_events
+    })
 }
 
 #[cfg(test)]
@@ -102,6 +123,34 @@ mod tests {
         assert_eq!(queue.len(), 500);
         // 500 events at 50 kHz ≈ 10 ms; generation cost may stretch it.
         assert!(elapsed >= Duration::from_millis(9), "{elapsed:?}");
+    }
+
+    /// The stream replay contract behind the shard-equivalence suite:
+    /// generation is a pure function of (generator seed, cfg, source
+    /// seed), independent of what the sink does with each request.
+    #[test]
+    fn run_with_replays_identical_streams() {
+        let cfg = SourceConfig {
+            rate_hz: 1e9,
+            poisson: true,
+            n_events: 64,
+        };
+        let collect = |drop_odd: bool| {
+            let mut got: Vec<(u64, Vec<f32>, u32)> = Vec::new();
+            run_with(Box::new(TopTagging::new(9)), cfg, 77, |r| {
+                if !(drop_odd && r.id % 2 == 1) {
+                    got.push((r.id, r.features, r.label));
+                }
+            });
+            got
+        };
+        let all = collect(false);
+        let evens = collect(true);
+        assert_eq!(all.len(), 64);
+        assert_eq!(evens.len(), 32);
+        for (i, kept) in evens.iter().enumerate() {
+            assert_eq!(kept, &all[i * 2], "sink behavior leaked into stream");
+        }
     }
 
     #[test]

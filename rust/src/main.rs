@@ -4,16 +4,39 @@
 //! rnn-hls report all                    # regenerate every table + figure
 //! rnn-hls report fig2 --samples 500
 //! rnn-hls serve --model top_gru --engine pjrt --rate 20000
+//! rnn-hls serve --engine float --shards 4 --shard-policy round-robin
 //! rnn-hls sweep --benchmark top --width 16
 //! rnn-hls golden                        # PJRT vs python golden outputs
 //! ```
+//!
+//! ## Serving knobs
+//!
+//! * `--shards N` — partition the request stream across N independent
+//!   coordinator shards (own queue, batcher, and engine workers each);
+//!   per-shard metrics are rolled up into one report.  `--shards 1`
+//!   (default) is the classic single coordinator.
+//! * `--shard-policy hash|round-robin|model-key` — the routing layer in
+//!   front of the shards.  `hash` is sticky per request id, `round-robin`
+//!   is perfectly balanced, `model-key` routes on `Request::route_key`
+//!   (the multi-backend seam; sources emit key 0 today).
+//! * `--workers` / `--engine-parallelism` — threads per shard and per
+//!   batch; total budget is `shards × workers × engine-parallelism`.
+//!
+//! ## Bench smoke (CI)
+//!
+//! `./ci.sh --bench-smoke` runs a reduced-iteration
+//! `benches/throughput_batch.rs` — including the shards × workers sweep —
+//! and emits `BENCH_serving.json` (samples/s, p50/p99 µs per config),
+//! which the `bench-smoke` CI job uploads as an artifact so the perf
+//! trajectory is tracked per commit.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use rnn_hls::config::{Fig2Config, ServeCliConfig, SweepConfig};
 use rnn_hls::coordinator::{
-    BatcherConfig, Server, ServerConfig, SourceConfig,
+    BatcherConfig, ServerConfig, ShardPolicy, ShardedConfig, ShardedServer,
+    SourceConfig,
 };
 use rnn_hls::data::generators;
 use rnn_hls::fixed::{FixedSpec, QuantConfig};
@@ -62,6 +85,8 @@ fn usage() -> String {
                        what: table1|table2|table3|table4|table5|fig2|\n\
                              fig345|fig6|throughput|all\n\
        serve           run the trigger-style serving coordinator\n\
+                       (--shards N partitions the stream across N\n\
+                       coordinator shards; --shard-policy picks routing)\n\
        sweep           design-space sweep over the HLS model\n\
        golden          cross-check PJRT outputs vs python goldens\n\
        list            list models available in the artifacts manifest\n\
@@ -205,7 +230,17 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("engine", "pjrt | fixed | float", Some("pjrt"))
         .opt("rate", "event rate (events/s)", Some("20000"))
         .opt("events", "number of events", Some("50000"))
-        .opt("workers", "engine worker threads", Some("2"))
+        .opt(
+            "shards",
+            "coordinator shards (request-stream partitions)",
+            Some("1"),
+        )
+        .opt(
+            "shard-policy",
+            "routing: hash | round-robin | model-key",
+            Some("hash"),
+        )
+        .opt("workers", "engine worker threads per shard", Some("2"))
         .opt(
             "engine-parallelism",
             "per-batch threads inside each rust engine",
@@ -213,7 +248,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         )
         .opt("max-batch", "dynamic batcher size cap", Some("10"))
         .opt("max-wait-us", "batching deadline (µs)", Some("200"))
-        .opt("queue", "queue capacity (drop beyond)", Some("4096"))
+        .opt("queue", "per-shard queue capacity (drop beyond)", Some("4096"))
         .opt("width", "fixed engine: total bits", Some("16"))
         .opt("integer", "fixed engine: integer bits", Some("6"))
         .flag("fixed-interval", "fixed (non-Poisson) arrivals");
@@ -226,9 +261,15 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let d = ServeCliConfig::default();
     let cli = ServeCliConfig {
         model_key: args.get_or("model", &d.model_key).to_string(),
-        engine: args.get_or("engine", &d.engine).to_string(),
+        engine: args
+            .one_of("engine", &d.engine, &["pjrt", "fixed", "float"])?
+            .to_string(),
         rate_hz: args.parse_num("rate", d.rate_hz)?,
         n_events: args.parse_num("events", d.n_events)?,
+        shards: args.parse_num("shards", d.shards)?,
+        // Validated by ShardPolicy::parse below — the one source of truth
+        // for the accepted spellings (including the "rr" shorthand).
+        shard_policy: args.get_or("shard-policy", &d.shard_policy).to_string(),
         workers: args.parse_num("workers", d.workers)?,
         engine_parallelism: args
             .parse_num("engine-parallelism", d.engine_parallelism)?,
@@ -244,35 +285,41 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
 
     let benchmark = key.split('_').next().unwrap_or(&key).to_string();
     let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
-    let cfg = ServerConfig {
-        workers: cli.workers,
-        queue_capacity: cli.queue_capacity,
-        batcher: BatcherConfig {
-            max_batch: cli.max_batch,
-            max_wait: cli.max_wait,
-        },
-        source: SourceConfig {
-            rate_hz: cli.rate_hz,
-            poisson: !args.has("fixed-interval"),
-            n_events: cli.n_events,
+    let cfg = ShardedConfig {
+        shards: cli.shards,
+        policy: ShardPolicy::parse(&cli.shard_policy)?,
+        server: ServerConfig {
+            workers: cli.workers,
+            queue_capacity: cli.queue_capacity,
+            batcher: BatcherConfig {
+                max_batch: cli.max_batch,
+                max_wait: cli.max_wait,
+            },
+            source: SourceConfig {
+                rate_hz: cli.rate_hz,
+                poisson: !args.has("fixed-interval"),
+                n_events: cli.n_events,
+            },
         },
     };
     println!(
         "serving {key} via {engine_kind} engine: rate {} ev/s, {} events, \
-         {} workers × {engine_parallelism} engine threads, batch<= {}, \
-         wait {} µs",
-        cfg.source.rate_hz,
-        cfg.source.n_events,
-        cfg.workers,
-        cfg.batcher.max_batch,
-        cfg.batcher.max_wait.as_micros()
+         {} shards ({} routing) × {} workers × {engine_parallelism} engine \
+         threads, batch<= {}, wait {} µs",
+        cfg.server.source.rate_hz,
+        cfg.server.source.n_events,
+        cfg.shards,
+        cfg.policy.name(),
+        cfg.server.workers,
+        cfg.server.batcher.max_batch,
+        cfg.server.batcher.max_wait.as_micros()
     );
 
     let report = match engine_kind.as_str() {
         "pjrt" => {
             let artifacts = artifacts.clone();
             let key2 = key.clone();
-            Server::run(cfg, generator, move || {
+            ShardedServer::run(cfg, generator, move |_shard| {
                 let runtime = Runtime::new(&artifacts)?;
                 let buckets = runtime.manifest().batch_buckets(&key2)?;
                 // Precompile every bucket before signalling ready (§Perf:
@@ -291,9 +338,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             let weights = Weights::load(
                 artifacts.join("weights").join(format!("{key}.json")),
             )?;
-            let max_batch = cfg.batcher.max_batch;
+            let max_batch = cfg.server.batcher.max_batch;
             let fixed = engine_kind == "fixed";
-            Server::run(cfg, generator, move || {
+            ShardedServer::run(cfg, generator, move |_shard| {
                 let engine: Box<dyn Engine> = if fixed {
                     Box::new(
                         FixedEngine::new(
@@ -333,16 +380,18 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
     let benchmark = args.get_or("benchmark", "top").to_string();
     let width: u32 = args.parse_num("width", 16)?;
     let integer: u32 = args.parse_num("integer", 6)?;
-    let cells: Vec<rnn_hls::model::Cell> = match args.get_or("cell", "both") {
-        "lstm" => vec![rnn_hls::model::Cell::Lstm],
-        "gru" => vec![rnn_hls::model::Cell::Gru],
-        _ => vec![rnn_hls::model::Cell::Gru, rnn_hls::model::Cell::Lstm],
-    };
-    let modes: Vec<RnnMode> = match args.get_or("mode", "static") {
-        "nonstatic" => vec![RnnMode::NonStatic],
-        "both" => vec![RnnMode::Static, RnnMode::NonStatic],
-        _ => vec![RnnMode::Static],
-    };
+    let cells: Vec<rnn_hls::model::Cell> =
+        match args.one_of("cell", "both", &["lstm", "gru", "both"])? {
+            "lstm" => vec![rnn_hls::model::Cell::Lstm],
+            "gru" => vec![rnn_hls::model::Cell::Gru],
+            _ => vec![rnn_hls::model::Cell::Gru, rnn_hls::model::Cell::Lstm],
+        };
+    let modes: Vec<RnnMode> =
+        match args.one_of("mode", "static", &["static", "nonstatic", "both"])? {
+            "nonstatic" => vec![RnnMode::NonStatic],
+            "both" => vec![RnnMode::Static, RnnMode::NonStatic],
+            _ => vec![RnnMode::Static],
+        };
     for cell in cells {
         let arch = rnn_hls::model::zoo::arch(&benchmark, cell)?;
         for mode in &modes {

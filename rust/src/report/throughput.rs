@@ -9,15 +9,21 @@
 //! scaling* on the PJRT engine: batched executables amortize dispatch
 //! exactly the way the GPU amortizes kernel launches.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::coordinator::{
+    BatcherConfig, EngineRunner, ServerConfig, ShardPolicy, ShardedConfig,
+    ShardedServer, SourceConfig,
+};
+use crate::data::generators;
 use crate::fixed::FixedSpec;
 use crate::hls::latency::{self, Strategy};
 use crate::hls::{paper, HlsConfig, ReuseFactor, RnnMode};
-use crate::model::{zoo, Cell};
+use crate::model::{zoo, Cell, Weights};
+use crate::nn::FloatEngine;
 use crate::runtime::Runtime;
-use crate::util::timing;
+use crate::util::{json, timing};
 
 use super::csv::CsvWriter;
 use super::table::AsciiTable;
@@ -128,6 +134,128 @@ pub fn run(
     Ok(ThroughputReport { rows })
 }
 
+// ------------------------------------------------------------- shard sweep
+
+/// One measured serving configuration — a row of `BENCH_serving.json`.
+#[derive(Debug, Clone)]
+pub struct ServingBenchRow {
+    /// Stable config label, e.g. `shards2_hash_w2`.
+    pub config: String,
+    pub shards: usize,
+    pub policy: String,
+    pub workers_per_shard: usize,
+    pub samples_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub completed: u64,
+    pub dropped: u64,
+}
+
+/// Shards × policy serving sweep on the synthetic float engine (no
+/// artifacts needed): every config serves the *same* top-tagging stream
+/// at a saturating fixed-interval rate, so `samples_per_sec` measures
+/// coordinator capacity, not source pacing.  This is the measurement
+/// behind CI's `BENCH_serving.json` perf trajectory.
+pub fn shard_sweep(
+    shard_counts: &[usize],
+    policies: &[ShardPolicy],
+    workers_per_shard: usize,
+    n_events: usize,
+) -> anyhow::Result<Vec<ServingBenchRow>> {
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        for &policy in policies {
+            let cfg = ShardedConfig {
+                shards,
+                policy,
+                server: ServerConfig {
+                    workers: workers_per_shard,
+                    queue_capacity: 8192,
+                    batcher: BatcherConfig {
+                        max_batch: 32,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    source: SourceConfig {
+                        // Saturating arrivals: push the coordinator, let
+                        // the bounded queues shed what it can't serve.
+                        rate_hz: 2_000_000.0,
+                        poisson: false,
+                        n_events,
+                    },
+                },
+            };
+            let weights = weights.clone();
+            let generator = generators::for_benchmark("top", 0xBEEF)?;
+            let report = ShardedServer::run(cfg, generator, move |_shard| {
+                let engine = FloatEngine::new(&weights)?;
+                Ok(Box::new(EngineRunner::new(Box::new(engine), 32))
+                    as Box<dyn crate::coordinator::BatchRunner>)
+            })?;
+            rows.push(ServingBenchRow {
+                config: format!(
+                    "shards{shards}_{}_w{workers_per_shard}",
+                    policy.name()
+                ),
+                shards,
+                policy: policy.name().to_string(),
+                workers_per_shard,
+                samples_per_sec: report.merged.throughput_hz,
+                p50_us: report.merged.p50_latency_us,
+                p99_us: report.merged.p99_latency_us,
+                completed: report.merged.completed,
+                dropped: report.merged.dropped,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Emit the sweep as machine-readable JSON (the CI bench artifact).
+pub fn write_bench_json(
+    path: &Path,
+    rows: &[ServingBenchRow],
+) -> anyhow::Result<PathBuf> {
+    let doc = json::obj(vec![
+        ("bench", json::s("serving")),
+        ("schema_version", json::num(1.0)),
+        (
+            "rows",
+            json::arr(
+                rows.iter()
+                    .map(|r| {
+                        json::obj(vec![
+                            ("config", json::s(&r.config)),
+                            ("shards", json::num(r.shards as f64)),
+                            ("policy", json::s(&r.policy)),
+                            (
+                                "workers_per_shard",
+                                json::num(r.workers_per_shard as f64),
+                            ),
+                            (
+                                "samples_per_sec",
+                                json::num(r.samples_per_sec),
+                            ),
+                            ("p50_us", json::num(r.p50_us)),
+                            ("p99_us", json::num(r.p99_us)),
+                            ("completed", json::num(r.completed as f64)),
+                            ("dropped", json::num(r.dropped as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut text = doc.to_json();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(path.to_path_buf())
+}
+
 /// Shape checks for EXPERIMENTS.md: batch scaling must be monotone with
 /// measurable amortization.  The paper's GPU shows ~45× from batch 1 to
 /// 100 because GPU batch-1 is *launch-bound*; the PJRT CPU analog is
@@ -174,6 +302,40 @@ mod tests {
         // paper: 4300 (max width) to 9700 (min width)
         assert!((lo - 4_300.0).abs() / 4_300.0 < 0.25, "lo {lo:.0}");
         assert!((hi - 9_700.0).abs() / 9_700.0 < 0.25, "hi {hi:.0}");
+    }
+
+    /// Reduced shard sweep end to end: every config accounts for every
+    /// event, and the JSON artifact round-trips through our own parser.
+    #[test]
+    fn shard_sweep_rows_and_json_roundtrip() {
+        let rows = shard_sweep(&[1, 2], &[ShardPolicy::HashId], 1, 400)
+            .unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.completed + r.dropped, 400, "{}", r.config);
+            assert!(r.samples_per_sec > 0.0, "{}", r.config);
+            assert!(r.p50_us <= r.p99_us, "{}", r.config);
+        }
+        assert_eq!(rows[0].config, "shards1_hash_w1");
+        assert_eq!(rows[1].config, "shards2_hash_w1");
+
+        let dir = std::env::temp_dir().join(format!(
+            "rnnhls-bench-json-{}",
+            std::process::id()
+        ));
+        let path = dir.join("BENCH_serving.json");
+        write_bench_json(&path, &rows).unwrap();
+        let parsed =
+            json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "serving");
+        let json_rows = parsed.req("rows").unwrap().as_array().unwrap();
+        assert_eq!(json_rows.len(), 2);
+        assert_eq!(
+            json_rows[1].req("shards").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert!(json_rows[0].req("samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -47,6 +47,22 @@ impl Args {
                 .map_err(|e| anyhow::anyhow!("--{name} {text:?}: {e}")),
         }
     }
+
+    /// Value of `--name`, validated against an allowed set; the error
+    /// lists the choices.  Missing values fall back to `default`.
+    pub fn one_of<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        allowed: &[&str],
+    ) -> anyhow::Result<&'a str> {
+        let value = self.get_or(name, default);
+        anyhow::ensure!(
+            allowed.contains(&value),
+            "--{name} {value:?}: expected one of {allowed:?}"
+        );
+        Ok(value)
+    }
 }
 
 /// A subcommand spec: name, summary, options.
@@ -218,6 +234,24 @@ mod tests {
     fn bad_number_is_error() {
         let args = cmd().parse(&strs(&["--rate", "abc"])).unwrap();
         assert!(args.parse_num::<u64>("rate", 0).is_err());
+    }
+
+    #[test]
+    fn one_of_validates_against_choices() {
+        let args = cmd().parse(&strs(&["--model", "flavor_lstm"])).unwrap();
+        assert_eq!(
+            args.one_of("model", "top_gru", &["top_gru", "flavor_lstm"])
+                .unwrap(),
+            "flavor_lstm"
+        );
+        let err = args
+            .one_of("model", "top_gru", &["top_gru"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected one of"), "{err}");
+        // Unset option falls back to (and validates) the default.
+        let args = cmd().parse(&[]).unwrap();
+        assert_eq!(args.one_of("rate", "low", &["low", "high"]).unwrap(), "low");
     }
 
     #[test]

@@ -4,6 +4,18 @@
 //! generators (live event sources for serving) and the property tests.
 //! Deterministic across platforms: same seed → same stream.
 
+/// One splitmix64 step: advance `state` by the golden-ratio increment and
+/// return the avalanche-mixed output.  Seeds [`Rng`]'s 256-bit state and
+/// doubles as the coordinator's shard-routing hash (one step from
+/// `state = id`) — a single implementation so the two can't drift.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -14,14 +26,12 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed into the 256-bit state.
         let mut x = seed;
-        let mut next = || {
-            x = x.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = x;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
-        };
-        let s = [next(), next(), next(), next()];
+        let s = [
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+        ];
         Self { s }
     }
 
