@@ -16,6 +16,15 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     echo "== bench-smoke: BENCH_serving.json =="
     test -s BENCH_serving.json
     cat BENCH_serving.json
+    echo "== bench-smoke: per-backend schema check =="
+    # Schema, not perf: the artifact must carry per-backend rows (schema
+    # v2) so per-tier latency stays comparable across PRs.  The writer
+    # emits compact JSON (no spaces around ':').
+    grep -q '"schema_version":2' BENCH_serving.json
+    grep -q '"backend":"fixed"' BENCH_serving.json
+    grep -q '"backend":"float"' BENCH_serving.json
+    grep -q '"config":"mixed90_10_fixed_w2"' BENCH_serving.json
+    echo "per-backend rows present"
     exit 0
 fi
 

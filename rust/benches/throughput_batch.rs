@@ -1,6 +1,6 @@
 //! Bench: §5.2 throughput — batch scaling of the serving engines.
 //!
-//! Three parts:
+//! Four parts:
 //!
 //! 1. **Engine batch × worker scaling** (no artifacts needed): the
 //!    parallel `forward_batch` runtime vs the sequential per-sample
@@ -13,7 +13,11 @@
 //! 2. **Shards × workers serving sweep** (no artifacts needed): full
 //!    `ShardedServer` sessions over shard counts and routing policies,
 //!    reported as samples/s and p50/p99 latency per config.
-//! 3. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//! 3. **Mixed-backend serving sweep** (no artifacts needed): the
+//!    heterogeneous fixed+float session behind model-key tier routing
+//!    vs each backend serving alone, reported *per backend* so the
+//!    trigger and offline tiers track their own latency percentiles.
+//! 4. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
 //!    original QuickDraw-LSTM comparison against the scheduler's II.
 //!
 //! Flags (after `--`): `--smoke` runs the reduced-iteration CI variant
@@ -220,10 +224,51 @@ fn shard_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
     rows
 }
 
+/// Heterogeneous serving: fixed+float in one session, per-backend rows.
+fn backend_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
+    println!(
+        "\n=== mixed-backend serving sweep (fixed + float, model-key \
+         tier routing) ==="
+    );
+    let n_events = if smoke { 3_000 } else { 12_000 };
+    let rows = throughput::mixed_backend_sweep(2, n_events)
+        .expect("mixed-backend sweep");
+    println!(
+        "  {:>22} {:>8} {:>12} {:>10} {:>10} {:>10} {:>9}",
+        "config", "backend", "samples/s", "p50 µs", "p99 µs", "completed",
+        "dropped"
+    );
+    for r in &rows {
+        println!(
+            "  {:>22} {:>8} {:>12.0} {:>10.1} {:>10.1} {:>10} {:>9}",
+            r.config, r.backend, r.samples_per_sec, r.p50_us, r.p99_us,
+            r.completed, r.dropped
+        );
+    }
+    // Correctness, not speed: singles see the whole stream, the mixed
+    // tiers partition it exactly.
+    for r in rows.iter().filter(|r| r.config.starts_with("single_")) {
+        assert_eq!(
+            r.completed + r.dropped,
+            n_events as u64,
+            "{}: lost events",
+            r.config
+        );
+    }
+    let mixed: u64 = rows
+        .iter()
+        .filter(|r| r.config.starts_with("mixed"))
+        .map(|r| r.completed + r.dropped)
+        .sum();
+    assert_eq!(mixed, n_events as u64, "mixed tiers must partition");
+    rows
+}
+
 fn main() {
     let opts = parse_opts();
     engine_scaling(opts.smoke);
-    let rows = shard_scaling(opts.smoke);
+    let mut rows = shard_scaling(opts.smoke);
+    rows.extend(backend_scaling(opts.smoke));
     if let Some(path) = &opts.json {
         let written =
             throughput::write_bench_json(path, &rows).expect("bench json");

@@ -60,7 +60,21 @@ impl SweepConfig {
 #[derive(Debug, Clone)]
 pub struct ServeCliConfig {
     pub model_key: String,
-    pub engine: String, // "pjrt" | "fixed" | "float"
+    /// Homogeneous engine for every shard: "pjrt" | "fixed" | "float".
+    /// Ignored when `backends` is non-empty.
+    pub engine: String,
+    /// Heterogeneous session: comma-separated backend names, one per
+    /// shard (`"fixed,float"`), resolved through the `nn::BackendSpec`
+    /// registry.  Empty = homogeneous `engine` on every shard.
+    pub backends: String,
+    /// Traffic-class fractions, one per backend (`"0.9,0.1"`, summing to
+    /// 1), stamped onto `Request::route_key`; requires `backends` and the
+    /// `model-key` shard policy to steer tiers to their backends.  Empty
+    /// = uniform across `backends`.
+    pub tier_mix: String,
+    /// Seed of the tier-stamping hash (a pure function of (seed, id)):
+    /// same seed, same partition of the stream into tiers.
+    pub tier_seed: u64,
     pub rate_hz: f64,
     pub n_events: usize,
     /// Coordinator shards: independent queue+batcher+worker pipelines the
@@ -87,6 +101,9 @@ impl Default for ServeCliConfig {
         Self {
             model_key: "top_gru".into(),
             engine: "pjrt".into(),
+            backends: String::new(),
+            tier_mix: String::new(),
+            tier_seed: 0,
             rate_hz: 20_000.0,
             n_events: 50_000,
             shards: 1,
@@ -128,6 +145,16 @@ mod tests {
         let cfg = ServeCliConfig::default();
         assert_eq!(cfg.shards, 1);
         assert_eq!(cfg.shard_policy, "hash");
+    }
+
+    /// Likewise the default must stay the homogeneous single-class
+    /// session: no backend list, no tier mix.
+    #[test]
+    fn serve_defaults_to_homogeneous_session() {
+        let cfg = ServeCliConfig::default();
+        assert!(cfg.backends.is_empty());
+        assert!(cfg.tier_mix.is_empty());
+        assert_eq!(cfg.tier_seed, 0);
     }
 
     #[test]

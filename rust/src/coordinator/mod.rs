@@ -64,6 +64,32 @@
 //! configuration reproduces [`Server`] exactly (the shard-equivalence
 //! suite asserts it), so `shards` is a fourth independent throughput
 //! lever on top of the three above.
+//!
+//! ## Heterogeneous multi-backend serving
+//!
+//! Shards need not be clones: the paper's deployment is *two-tiered* —
+//! bit-accurate fixed-point designs on the trigger path, full-precision
+//! models for whatever tolerates latency.  [`ShardedServer`] serves both
+//! tiers in one session:
+//!
+//! * the source stamps every request with a traffic class from a
+//!   configurable [`TierMix`] (e.g. 90 % trigger-tier, 10 % offline-tier)
+//!   — a pure `(seed, id)` hash on [`Request::route_key`], so streams and
+//!   every tier sub-stream replay deterministically;
+//! * [`ShardPolicy::ModelKey`] routes tier `t` to shard `t % shards`,
+//!   and each shard's factory builds that shard's backend (resolved by
+//!   name through `nn::BackendSpec` — `fixed`, `float`, or the reserved
+//!   `pjrt` slot);
+//! * labelled shards ([`ShardedConfig::shard_backends`]) get a
+//!   per-backend metrics split in the roll-up
+//!   ([`sharded::BackendTierStats`]): per-tier p50/p99 and throughput
+//!   rather than a blended number.
+//!
+//! Mixing backends has zero semantic footprint: each request's output is
+//! bitwise identical to serving the same seeded stream through that
+//! backend's standalone [`Server`] (`tests/backend_routing.rs` asserts
+//! it), exactly as sharding and batching are semantics-free
+//! (`tests/shard_equivalence.rs`, `tests/batch_equivalence.rs`).
 
 pub mod batcher;
 pub mod metrics;
@@ -71,16 +97,18 @@ pub mod queue;
 pub mod server;
 pub mod sharded;
 pub mod source;
+pub mod tier;
 
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{LatencyHistogram, ServerMetrics};
 pub use queue::BoundedQueue;
 pub use server::{BatchRunner, EngineRunner, Server, ServerConfig, ServerReport};
 pub use sharded::{
-    Router, ShardPolicy, ShardStats, ShardedConfig, ShardedReport,
-    ShardedServer,
+    BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,
+    ShardedReport, ShardedServer,
 };
 pub use source::SourceConfig;
+pub use tier::TierMix;
 
 use std::time::Instant;
 
@@ -92,11 +120,12 @@ pub struct Request {
     pub features: Vec<f32>,
     /// Ground-truth label carried through for online accuracy accounting.
     pub label: u32,
-    /// Application routing key — [`ShardPolicy::ModelKey`] partitions the
-    /// stream on `route_key % shards`.  This is the multi-backend seam:
-    /// when one session mixes engines (ROADMAP), the key names the model/
-    /// backend a request wants and each shard owns one backend.  Sources
-    /// emit `0` today (single-model sessions).
+    /// Traffic-class key — [`ShardPolicy::ModelKey`] partitions the
+    /// stream on `route_key % shards`.  Sources stamp it from the
+    /// session's [`TierMix`] (a pure `(seed, id)` hash), so in a
+    /// heterogeneous session the key names the tier/backend a request
+    /// wants and each shard owns one backend.  The single-class mix
+    /// stamps every request `0` (homogeneous sessions).
     pub route_key: u64,
     pub enqueued_at: Instant,
 }

@@ -1,5 +1,9 @@
 //! Sharded multi-coordinator serving: N independent coordinator shards
-//! behind a routing layer, with a shared metrics roll-up.
+//! behind a routing layer, with a shared metrics roll-up.  Shards may be
+//! clones of one engine (horizontal scaling) or own *distinct backends*
+//! (heterogeneous serving: fixed-point trigger tier + float offline
+//! tier in one session), with the [`TierMix`] traffic classes steering
+//! each request to its tier's shard via [`ShardPolicy::ModelKey`].
 //!
 //! ```text
 //!                      ┌► shard 0: queue ─ batcher ─ workers ─ metrics ┐
@@ -31,6 +35,11 @@
 //! * **Shutdown** is coordinated: the source finishes, then each shard is
 //!   allowed to drain (or declared dead if all its workers exited), then
 //!   all queues close together and every worker is joined.
+//! * **Per-backend metrics**: when shards are labelled with backends
+//!   ([`ShardedConfig::shard_backends`]), the roll-up additionally merges
+//!   metrics per label ([`BackendTierStats`]) so a heterogeneous report
+//!   shows *per-tier* p50/p99 and throughput — a blended percentile over
+//!   a 2 µs trigger tier and a 200 µs offline tier describes neither.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -42,6 +51,7 @@ use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
 use super::server::{worker_loop, BatchRunner, ServerConfig, ServerReport};
 use super::source;
+use super::tier::TierMix;
 use super::Request;
 
 /// How the router assigns an incoming request to a shard.
@@ -55,10 +65,11 @@ pub enum ShardPolicy {
     /// stream, at the cost of carrying one counter of router state.
     RoundRobin,
     /// Route on [`Request::route_key`] (`key % shards`): the multi-backend
-    /// seam.  When one session mixes engines (fixed-point trigger tier +
-    /// float offline tier), the key names the backend and each shard owns
-    /// one engine kind.  Sources emit key 0 today, so this degenerates to
-    /// shard 0 until the multi-backend item lands.
+    /// policy.  Sources stamp the key from the session's [`TierMix`]
+    /// (trigger-tier requests get the fixed shard's tier index, offline
+    /// tier the float shard's, …), so each traffic class lands on the
+    /// shard owning its backend.  Under the single-class mix every key is
+    /// 0 and this degenerates to shard 0.
     ModelKey,
 }
 
@@ -130,10 +141,20 @@ impl Router {
 /// Sharded serving session configuration.  `server` holds the *per-shard*
 /// knobs (`workers`, `queue_capacity`, `batcher`) plus the shared source;
 /// total engine threads are `shards × server.workers`.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ShardedConfig {
     pub shards: usize,
     pub policy: ShardPolicy,
+    /// Traffic-class mix the source stamps onto [`Request::route_key`]
+    /// (see [`TierMix`]).  Meaningful with [`ShardPolicy::ModelKey`],
+    /// where tier `t` routes to shard `t % shards`; the default
+    /// single-class mix keys every request 0 (the pre-tier behavior).
+    pub tier_mix: TierMix,
+    /// Backend label per shard for heterogeneous sessions (one entry per
+    /// shard, e.g. `["fixed", "float"]`).  Labels drive the per-backend
+    /// metrics roll-up ([`BackendTierStats`]); shards sharing a label are
+    /// merged.  Empty = homogeneous session, no per-backend split.
+    pub shard_backends: Vec<String>,
     pub server: ServerConfig,
 }
 
@@ -142,6 +163,8 @@ impl Default for ShardedConfig {
         Self {
             shards: 1,
             policy: ShardPolicy::HashId,
+            tier_mix: TierMix::single(),
+            shard_backends: Vec::new(),
             server: ServerConfig::default(),
         }
     }
@@ -151,6 +174,8 @@ impl Default for ShardedConfig {
 #[derive(Debug, Clone)]
 pub struct ShardStats {
     pub shard: usize,
+    /// Backend label this shard serves (empty in homogeneous sessions).
+    pub backend: String,
     /// Events the router admitted to this shard (its `generated` count).
     pub routed: u64,
     pub dropped: u64,
@@ -160,15 +185,33 @@ pub struct ShardStats {
     pub p99_latency_us: f64,
 }
 
+/// Per-backend slice of a heterogeneous run: the metrics of every shard
+/// sharing one backend label, merged exactly (counters summed, histogram
+/// buckets merged bucket-wise), so each tier's p50/p99 and throughput are
+/// true percentiles of that tier — not a blend across backends.
+#[derive(Debug, Clone)]
+pub struct BackendTierStats {
+    /// Backend label (e.g. `"fixed"`).
+    pub backend: String,
+    /// Shard indices owning this backend.
+    pub shards: Vec<usize>,
+    /// Exact merged report over those shards' metrics.
+    pub report: ServerReport,
+}
+
 /// Roll-up of one sharded run: the merged cross-shard report (counters
 /// summed, histogram buckets merged bucket-wise — so merged percentiles
-/// are exact, not averages of percentiles) plus the per-shard breakdown.
+/// are exact, not averages of percentiles) plus the per-shard breakdown
+/// and, for heterogeneous sessions, the per-backend tier split.
 #[derive(Debug, Clone)]
 pub struct ShardedReport {
     pub shards: usize,
     pub policy: ShardPolicy,
     pub merged: ServerReport,
     pub per_shard: Vec<ShardStats>,
+    /// Per-backend roll-up; empty unless the session labelled its shards
+    /// ([`ShardedConfig::shard_backends`]).
+    pub per_backend: Vec<BackendTierStats>,
 }
 
 impl ShardedReport {
@@ -181,10 +224,16 @@ impl ShardedReport {
                 self.policy.name()
             ));
             for s in &self.per_shard {
+                let label = if s.backend.is_empty() {
+                    String::new()
+                } else {
+                    format!(" [{}]", s.backend)
+                };
                 out.push_str(&format!(
-                    "\n  shard {}: routed {} dropped {} completed {} \
+                    "\n  shard {}{}: routed {} dropped {} completed {} \
                      mean batch {:.2} p99 {:.1} µs",
                     s.shard,
+                    label,
                     s.routed,
                     s.dropped,
                     s.completed,
@@ -192,6 +241,19 @@ impl ShardedReport {
                     s.p99_latency_us,
                 ));
             }
+        }
+        for b in &self.per_backend {
+            out.push_str(&format!(
+                "\nbackend {} (shards {:?}): completed {} dropped {} \
+                 p50 {:.1} µs p99 {:.1} µs throughput {:.0} ev/s",
+                b.backend,
+                b.shards,
+                b.report.completed,
+                b.report.dropped,
+                b.report.p50_latency_us,
+                b.report.p99_latency_us,
+                b.report.throughput_hz,
+            ));
         }
         out
     }
@@ -204,8 +266,10 @@ impl ShardedServer {
     ///
     /// `runner_factory` is invoked once per worker, *inside* that worker's
     /// thread (non-`Send` engines stay legal), and receives the worker's
-    /// shard index — the hook where a multi-backend deployment hands each
-    /// shard a different engine.
+    /// shard index — the hook where a heterogeneous deployment hands each
+    /// shard a different backend (pair it with
+    /// [`ShardedConfig::shard_backends`] labels so the report splits
+    /// per backend).
     pub fn run<F>(
         cfg: ShardedConfig,
         generator: Box<dyn Generator>,
@@ -218,6 +282,14 @@ impl ShardedServer {
         anyhow::ensure!(
             cfg.server.workers >= 1,
             "need at least one worker per shard"
+        );
+        anyhow::ensure!(
+            cfg.shard_backends.is_empty()
+                || cfg.shard_backends.len() == cfg.shards,
+            "shard_backends names {} backends for {} shards \
+             (need one label per shard, or none)",
+            cfg.shard_backends.len(),
+            cfg.shards
         );
         let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.shards)
             .map(|_| Arc::new(BoundedQueue::new(cfg.server.queue_capacity)))
@@ -271,16 +343,23 @@ impl ShardedServer {
 
             // Source + router run on this thread.  Admission counts into
             // the *target shard's* metrics so the roll-up stays a pure
-            // sum.  The source seed matches `Server::run`, so any shard
-            // count replays the identical request stream.
+            // sum.  The source seed matches `Server::run` and the tier
+            // stamp is a pure (seed, id) hash, so any shard count or tier
+            // mix replays the identical request stream.
             let mut router = Router::new(cfg.policy, cfg.shards);
-            source::run_with(generator, cfg.server.source, 0xEE77, |request| {
-                let shard = router.route(&request);
-                metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
-                if queues[shard].push(request).is_err() {
-                    metrics[shard].dropped.fetch_add(1, Ordering::Relaxed);
-                }
-            });
+            source::run_with(
+                generator,
+                cfg.server.source,
+                0xEE77,
+                &cfg.tier_mix,
+                |request| {
+                    let shard = router.route(&request);
+                    metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
+                    if queues[shard].push(request).is_err() {
+                        metrics[shard].dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
 
             // Coordinated shutdown: a shard is settled once its queue is
             // drained — or abandoned when all its workers have exited
@@ -316,6 +395,11 @@ impl ShardedServer {
             .enumerate()
             .map(|(shard, m)| ShardStats {
                 shard,
+                backend: cfg
+                    .shard_backends
+                    .get(shard)
+                    .cloned()
+                    .unwrap_or_default(),
                 routed: m.generated.load(Ordering::Relaxed),
                 dropped: m.dropped.load(Ordering::Relaxed),
                 completed: m.completed.load(Ordering::Relaxed),
@@ -324,11 +408,38 @@ impl ShardedServer {
                 p99_latency_us: m.total_latency.quantile_us(0.99),
             })
             .collect();
+
+        // Per-backend split: group labelled shards (first-appearance
+        // order) and merge each group's metrics exactly, so every tier
+        // reports its own true percentiles.
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for (shard, label) in cfg.shard_backends.iter().enumerate() {
+            match groups.iter_mut().find(|(name, _)| name == label) {
+                Some((_, shards)) => shards.push(shard),
+                None => groups.push((label.clone(), vec![shard])),
+            }
+        }
+        let per_backend = groups
+            .into_iter()
+            .map(|(backend, shard_ids)| {
+                let tier_metrics = ServerMetrics::new();
+                for &shard in &shard_ids {
+                    tier_metrics.merge(&metrics[shard]);
+                }
+                BackendTierStats {
+                    backend,
+                    report: ServerReport::from_metrics(&tier_metrics, wall),
+                    shards: shard_ids,
+                }
+            })
+            .collect();
+
         Ok(ShardedReport {
             shards: cfg.shards,
             policy: cfg.policy,
             merged: ServerReport::from_metrics(&merged, wall),
             per_shard,
+            per_backend,
         })
     }
 }
@@ -435,6 +546,8 @@ mod tests {
             let cfg = ShardedConfig {
                 shards,
                 policy: ShardPolicy::RoundRobin,
+                tier_mix: TierMix::single(),
+                shard_backends: Vec::new(),
                 server: ServerConfig {
                     workers: 2,
                     queue_capacity: 8192,
@@ -481,6 +594,84 @@ mod tests {
         }
     }
 
+    /// Heterogeneous session bookkeeping: labelled shards fed by a tier
+    /// mix through model-key routing produce a per-backend roll-up that
+    /// exactly partitions the merged totals.
+    #[test]
+    fn per_backend_rollup_partitions_by_label() {
+        let cfg = ShardedConfig {
+            shards: 2,
+            policy: ShardPolicy::ModelKey,
+            tier_mix: TierMix::new(&[0.75, 0.25], 0xC1A5).unwrap(),
+            shard_backends: vec!["fixed".into(), "float".into()],
+            server: ServerConfig {
+                workers: 1,
+                queue_capacity: 8192,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                source: SourceConfig {
+                    rate_hz: 1_000_000.0,
+                    poisson: false,
+                    n_events: 2000,
+                },
+            },
+        };
+        let report =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(3)), |_| {
+                Ok(Box::new(ConstRunner))
+            })
+            .unwrap();
+        assert_eq!(report.per_backend.len(), 2);
+        assert_eq!(report.per_backend[0].backend, "fixed");
+        assert_eq!(report.per_backend[0].shards, vec![0]);
+        assert_eq!(report.per_backend[1].backend, "float");
+        assert_eq!(report.per_backend[1].shards, vec![1]);
+        let routed: u64 = report
+            .per_backend
+            .iter()
+            .map(|b| b.report.generated)
+            .sum();
+        assert_eq!(routed, 2000);
+        let completed: u64 = report
+            .per_backend
+            .iter()
+            .map(|b| b.report.completed)
+            .sum();
+        assert_eq!(completed, report.merged.completed);
+        // 75/25 mix: the trigger tier takes the bulk of the stream.
+        assert!(
+            report.per_backend[0].report.generated
+                > report.per_backend[1].report.generated
+        );
+        assert!(report.per_backend[1].report.generated > 0);
+        // Per-shard stats carry the labels; per-backend == per-shard here
+        // (one shard per label).
+        for (s, b) in report.per_shard.iter().zip(&report.per_backend) {
+            assert_eq!(s.backend, b.backend);
+            assert_eq!(s.completed, b.report.completed);
+        }
+        let rendered = report.render();
+        assert!(rendered.contains("backend fixed"), "{rendered}");
+        assert!(rendered.contains("[float]"), "{rendered}");
+    }
+
+    #[test]
+    fn labels_must_cover_every_shard() {
+        let cfg = ShardedConfig {
+            shards: 3,
+            shard_backends: vec!["fixed".into()],
+            ..Default::default()
+        };
+        let result =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |_| {
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            });
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("one label per shard"), "{err}");
+    }
+
     #[test]
     fn engine_init_failure_on_one_shard_propagates() {
         let cfg = ShardedConfig {
@@ -494,6 +685,7 @@ mod tests {
                 },
                 ..Default::default()
             },
+            ..Default::default()
         };
         let result =
             ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |shard| {

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
+use super::tier::TierMix;
 use super::Request;
 
 #[derive(Debug, Clone, Copy)]
@@ -39,11 +40,22 @@ impl Default for SourceConfig {
 /// only on `(generator, cfg, seed)` — never on the sink — so the same
 /// seed replays the identical request stream into any topology; this is
 /// what makes the 1-shard vs N-shard equivalence suite meaningful.
+///
+/// `tiers` is the traffic-class layer: each request's
+/// [`Request::route_key`] is stamped with `tiers.stamp(id)` — the tier
+/// (trigger / offline / …) the request belongs to, which
+/// [`super::ShardPolicy::ModelKey`] then routes to the matching backend
+/// shard.  Stamping is a pure hash of `(tier seed, id)`, so it neither
+/// consumes from the pacing RNG nor couples requests: the stream replay
+/// contract above extends to every tier sub-stream ([`TierMix::single`]
+/// reproduces the old all-zero keys bit for bit).
+///
 /// Returns the number of generated events.
 pub fn run_with<F>(
     mut generator: Box<dyn Generator>,
     cfg: SourceConfig,
     seed: u64,
+    tiers: &TierMix,
     mut sink: F,
 ) -> usize
 where
@@ -77,7 +89,7 @@ where
             id: id as u64,
             features: event.features,
             label: event.label,
-            route_key: 0,
+            route_key: tiers.stamp(id as u64),
             enqueued_at: Instant::now(),
         });
     }
@@ -85,7 +97,9 @@ where
 }
 
 /// Single-queue admission: count every generated event, push, and count
-/// overflow as a drop — trigger semantics.  Returns generated events.
+/// overflow as a drop — trigger semantics.  Single-class traffic (a
+/// one-coordinator [`super::Server`] has no tiers to steer between).
+/// Returns generated events.
 pub fn run(
     generator: Box<dyn Generator>,
     cfg: SourceConfig,
@@ -93,7 +107,7 @@ pub fn run(
     metrics: &Arc<ServerMetrics>,
     seed: u64,
 ) -> usize {
-    run_with(generator, cfg, seed, |request| {
+    run_with(generator, cfg, seed, &TierMix::single(), |request| {
         metrics.generated.fetch_add(1, Ordering::Relaxed);
         if queue.push(request).is_err() {
             metrics.dropped.fetch_add(1, Ordering::Relaxed);
@@ -137,7 +151,8 @@ mod tests {
         };
         let collect = |drop_odd: bool| {
             let mut got: Vec<(u64, Vec<f32>, u32)> = Vec::new();
-            run_with(Box::new(TopTagging::new(9)), cfg, 77, |r| {
+            let tiers = TierMix::single();
+            run_with(Box::new(TopTagging::new(9)), cfg, 77, &tiers, |r| {
                 if !(drop_odd && r.id % 2 == 1) {
                     got.push((r.id, r.features, r.label));
                 }
@@ -150,6 +165,30 @@ mod tests {
         assert_eq!(evens.len(), 32);
         for (i, kept) in evens.iter().enumerate() {
             assert_eq!(kept, &all[i * 2], "sink behavior leaked into stream");
+        }
+    }
+
+    /// The traffic-class layer: route keys come from the tier mix's pure
+    /// `(seed, id)` hash — per-id reproducible, all tiers represented,
+    /// and never perturbing the generated stream.
+    #[test]
+    fn tier_mix_stamps_route_keys_deterministically() {
+        let cfg = SourceConfig {
+            rate_hz: 1e9,
+            poisson: false,
+            n_events: 256,
+        };
+        let mix = TierMix::new(&[0.75, 0.25], 9).unwrap();
+        let mut keys = Vec::new();
+        run_with(Box::new(TopTagging::new(1)), cfg, 5, &mix, |r| {
+            keys.push((r.id, r.route_key));
+        });
+        assert_eq!(keys.len(), 256);
+        assert!(keys.iter().all(|&(_, k)| k < 2));
+        assert!(keys.iter().any(|&(_, k)| k == 0));
+        assert!(keys.iter().any(|&(_, k)| k == 1));
+        for &(id, key) in &keys {
+            assert_eq!(key, mix.stamp(id), "id {id}");
         }
     }
 

@@ -1,0 +1,223 @@
+//! Traffic classes: the tier mix stamped onto [`Request::route_key`].
+//!
+//! The paper's deployment story is two-tiered (§1, §5): bit-accurate
+//! fixed-point designs serve the trigger path, full-precision models
+//! serve everything that can tolerate latency.  One serving session
+//! mixing both therefore needs a *traffic-class* layer: every request
+//! carries a tier (trigger / offline / …) and the router steers each
+//! tier to the shard owning the matching backend
+//! ([`ShardPolicy::ModelKey`]).
+//!
+//! [`TierMix`] is that layer.  It is deliberately a **pure function of
+//! `(seed, request id)`** — a hash, not a stateful RNG — so:
+//!
+//! * stamping never perturbs the source's arrival pacing or event
+//!   generation (the stream replay contract of `source::run_with` is
+//!   untouched);
+//! * any sub-stream can be replayed independently: given the same seed,
+//!   a standalone single-backend run serves exactly the requests its
+//!   tier would have received in the mixed session, which is what makes
+//!   the mixed-vs-standalone equivalence suite
+//!   (`tests/backend_routing.rs`) possible.
+//!
+//! [`Request::route_key`]: super::Request::route_key
+//! [`ShardPolicy::ModelKey`]: super::ShardPolicy::ModelKey
+
+use crate::util::rng::splitmix64;
+
+/// A configurable traffic-class mix: per-tier fractions that sum to 1.
+/// `stamp(id)` assigns each request id a tier index in `0..tiers()`,
+/// deterministically in `(seed, id)`.
+#[derive(Debug, Clone)]
+pub struct TierMix {
+    /// Normalized per-tier traffic fractions (sum exactly 1 after
+    /// normalization).
+    fractions: Vec<f64>,
+    /// Cumulative upper bounds; the last is forced to 1.0 so every
+    /// hash value lands in some tier.
+    cumulative: Vec<f64>,
+    seed: u64,
+}
+
+impl TierMix {
+    /// The single-class mix: every request is tier 0 (`route_key = 0`),
+    /// reproducing the pre-multi-backend behavior bit for bit.
+    pub fn single() -> Self {
+        Self {
+            fractions: vec![1.0],
+            cumulative: vec![1.0],
+            seed: 0,
+        }
+    }
+
+    /// Build a mix from per-tier fractions.  Fractions must be finite,
+    /// strictly positive, and sum to 1 within 1e-6 (they are then
+    /// normalized exactly).
+    pub fn new(fractions: &[f64], seed: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(!fractions.is_empty(), "tier mix needs >= 1 fraction");
+        for (i, &f) in fractions.iter().enumerate() {
+            anyhow::ensure!(
+                f.is_finite() && f > 0.0,
+                "tier {i} fraction {f} must be a positive finite number"
+            );
+        }
+        let sum: f64 = fractions.iter().sum();
+        anyhow::ensure!(
+            (sum - 1.0).abs() < 1e-6,
+            "tier fractions sum to {sum}, expected 1"
+        );
+        let fractions: Vec<f64> = fractions.iter().map(|f| f / sum).collect();
+        let mut cumulative = Vec::with_capacity(fractions.len());
+        let mut acc = 0.0f64;
+        for &f in &fractions {
+            acc += f;
+            cumulative.push(acc);
+        }
+        *cumulative.last_mut().expect("non-empty") = 1.0;
+        Ok(Self {
+            fractions,
+            cumulative,
+            seed,
+        })
+    }
+
+    /// Parse a CLI spelling: comma-separated fractions (`"0.9,0.1"`).
+    pub fn parse(csv: &str, seed: u64) -> anyhow::Result<Self> {
+        let fractions: Vec<f64> = csv
+            .split(',')
+            .map(|part| {
+                let part = part.trim();
+                part.parse::<f64>().map_err(|e| {
+                    anyhow::anyhow!("tier fraction {part:?}: {e}")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Self::new(&fractions, seed)
+    }
+
+    /// Equal share for each of `tiers` classes (the default when
+    /// `--backends` is given without `--tier-mix`).
+    pub fn uniform(tiers: usize, seed: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(tiers >= 1, "tier mix needs >= 1 tier");
+        Self::new(&vec![1.0 / tiers as f64; tiers], seed)
+    }
+
+    /// Number of traffic classes.
+    pub fn tiers(&self) -> usize {
+        self.fractions.len()
+    }
+
+    /// Configured traffic share of `tier`.
+    pub fn fraction(&self, tier: usize) -> f64 {
+        self.fractions[tier]
+    }
+
+    /// True for the degenerate one-class mix (every request keyed 0).
+    pub fn is_single(&self) -> bool {
+        self.fractions.len() == 1
+    }
+
+    /// Tier index for request `id`, in `0..tiers()`.  A pure function of
+    /// `(seed, id)`: no internal state, no interaction with any other
+    /// request — the property the replay/equivalence suites rely on.
+    pub fn stamp(&self, id: u64) -> u64 {
+        if self.fractions.len() == 1 {
+            return 0;
+        }
+        // One splitmix64 step over a seed/id blend (the golden-ratio
+        // multiply decorrelates sequential ids before the avalanche).
+        let mut state = self.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let u = (splitmix64(&mut state) >> 11) as f64
+            * (1.0 / (1u64 << 53) as f64);
+        self.cumulative
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.fractions.len() - 1) as u64
+    }
+}
+
+impl Default for TierMix {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_mix_stamps_everything_zero() {
+        let mix = TierMix::single();
+        assert_eq!(mix.tiers(), 1);
+        assert!(mix.is_single());
+        for id in 0..512u64 {
+            assert_eq!(mix.stamp(id), 0);
+        }
+    }
+
+    #[test]
+    fn invalid_fractions_rejected() {
+        assert!(TierMix::new(&[], 0).is_err());
+        assert!(TierMix::new(&[0.5, 0.6], 0).is_err(), "sum > 1");
+        assert!(TierMix::new(&[0.5, 0.4], 0).is_err(), "sum < 1");
+        assert!(TierMix::new(&[1.1, -0.1], 0).is_err(), "negative");
+        assert!(TierMix::new(&[f64::NAN, 1.0], 0).is_err(), "nan");
+        assert!(TierMix::new(&[0.0, 1.0], 0).is_err(), "zero share");
+        assert!(TierMix::parse("0.9,0.2", 0).is_err());
+        assert!(TierMix::parse("0.9,zebra", 0).is_err());
+    }
+
+    #[test]
+    fn parse_and_uniform_roundtrip() {
+        let mix = TierMix::parse("0.9, 0.1", 7).unwrap();
+        assert_eq!(mix.tiers(), 2);
+        assert!((mix.fraction(0) - 0.9).abs() < 1e-12);
+        assert!((mix.fraction(1) - 0.1).abs() < 1e-12);
+        assert!(!mix.is_single());
+
+        let uni = TierMix::uniform(4, 7).unwrap();
+        assert_eq!(uni.tiers(), 4);
+        for t in 0..4 {
+            assert!((uni.fraction(t) - 0.25).abs() < 1e-12);
+        }
+        assert!(TierMix::uniform(0, 7).is_err());
+    }
+
+    #[test]
+    fn stamp_is_deterministic_in_seed_and_id() {
+        let a = TierMix::new(&[0.9, 0.1], 42).unwrap();
+        let b = TierMix::new(&[0.9, 0.1], 42).unwrap();
+        for id in 0..4096u64 {
+            assert_eq!(a.stamp(id), b.stamp(id), "id {id}");
+            assert!(a.stamp(id) < 2);
+        }
+        // A different seed must produce a different partition (4096 ids:
+        // the chance a correct hash agrees everywhere is ~0; only a stamp
+        // that ignores the seed would pass).
+        let c = TierMix::new(&[0.9, 0.1], 43).unwrap();
+        assert!(
+            (0..4096u64).any(|id| c.stamp(id) != a.stamp(id)),
+            "seed must repartition the stream"
+        );
+    }
+
+    #[test]
+    fn stamp_respects_fractions() {
+        let mix = TierMix::new(&[0.9, 0.1], 0xC1A5).unwrap();
+        let n = 20_000u64;
+        let tier0 = (0..n).filter(|&id| mix.stamp(id) == 0).count();
+        let share = tier0 as f64 / n as f64;
+        assert!((share - 0.9).abs() < 0.02, "tier-0 share {share}");
+
+        let thirds = TierMix::uniform(3, 5).unwrap();
+        let mut counts = [0usize; 3];
+        for id in 0..n {
+            counts[thirds.stamp(id) as usize] += 1;
+        }
+        for (t, &c) in counts.iter().enumerate() {
+            let share = c as f64 / n as f64;
+            assert!((share - 1.0 / 3.0).abs() < 0.02, "tier {t} share {share}");
+        }
+    }
+}

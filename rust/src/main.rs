@@ -5,6 +5,8 @@
 //! rnn-hls report fig2 --samples 500
 //! rnn-hls serve --model top_gru --engine pjrt --rate 20000
 //! rnn-hls serve --engine float --shards 4 --shard-policy round-robin
+//! rnn-hls serve --shards 2 --shard-policy model-key \
+//!               --backends fixed,float --tier-mix 0.9,0.1
 //! rnn-hls sweep --benchmark top --width 16
 //! rnn-hls golden                        # PJRT vs python golden outputs
 //! ```
@@ -18,7 +20,12 @@
 //! * `--shard-policy hash|round-robin|model-key` — the routing layer in
 //!   front of the shards.  `hash` is sticky per request id, `round-robin`
 //!   is perfectly balanced, `model-key` routes on `Request::route_key`
-//!   (the multi-backend seam; sources emit key 0 today).
+//!   (stamped from the tier mix in heterogeneous sessions).
+//! * `--backends fixed,float` — heterogeneous session: one backend per
+//!   shard (resolved by name through the `nn::BackendSpec` registry),
+//!   with `--tier-mix 0.9,0.1` setting each tier's traffic share and the
+//!   report splitting p50/p99 + throughput per backend.  Requires
+//!   `--shard-policy model-key` so tiers reach their backends.
 //! * `--workers` / `--engine-parallelism` — threads per shard and per
 //!   batch; total budget is `shards × workers × engine-parallelism`.
 //!
@@ -36,13 +43,13 @@ use std::time::Duration;
 use rnn_hls::config::{Fig2Config, ServeCliConfig, SweepConfig};
 use rnn_hls::coordinator::{
     BatcherConfig, ServerConfig, ShardPolicy, ShardedConfig, ShardedServer,
-    SourceConfig,
+    SourceConfig, TierMix,
 };
 use rnn_hls::data::generators;
-use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::fixed::FixedSpec;
 use rnn_hls::hls::{paper, HlsConfig, HlsDesign, ReuseFactor, RnnMode};
 use rnn_hls::model::Weights;
-use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+use rnn_hls::nn::{BackendCtx, BackendSpec};
 use rnn_hls::report::{fig2, resources, tables, throughput};
 use rnn_hls::runtime::{manifest, Runtime};
 use rnn_hls::util::cli::Command;
@@ -223,7 +230,50 @@ impl rnn_hls::coordinator::BatchRunner for PjrtRunner {
     }
 }
 
+/// Load trained weights; when the artifact is absent *and the operator
+/// did not point at an explicit artifacts dir*, fall back to
+/// deterministic synthetic ones so bare checkouts (no `make artifacts`)
+/// can still exercise the full serving path (same seed → same model).
+/// An explicit `--artifacts` that lacks the file stays a hard error — a
+/// typo'd path must not silently serve a random model.
+fn weights_or_synthetic(
+    artifacts: &std::path::Path,
+    key: &str,
+    explicit_artifacts: bool,
+) -> anyhow::Result<Weights> {
+    let path = artifacts.join("weights").join(format!("{key}.json"));
+    if path.exists() || explicit_artifacts {
+        return Weights::load(path);
+    }
+    let (benchmark, cell) = key.rsplit_once('_').ok_or_else(|| {
+        anyhow::anyhow!("model key {key:?} is not <benchmark>_<cell>")
+    })?;
+    let cell = match cell {
+        "lstm" => rnn_hls::model::Cell::Lstm,
+        "gru" => rnn_hls::model::Cell::Gru,
+        other => anyhow::bail!("unknown cell {other:?} in model key {key:?}"),
+    };
+    let arch = rnn_hls::model::zoo::arch(benchmark, cell)?;
+    println!(
+        "WARNING: {} not found — serving SYNTHETIC weights for {key} \
+         (accuracy is meaningless; run `make artifacts` or pass \
+         --artifacts for the trained model)",
+        path.display()
+    );
+    Ok(Weights::synthetic(&arch, 0x5EED))
+}
+
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    // Help text follows the registry, so a new backend row shows up here
+    // without touching the CLI (one short leak per `serve` invocation).
+    let backends_help: &'static str = Box::leak(
+        format!(
+            "heterogeneous session: one backend per shard, comma-separated \
+             ({}); empty = --engine everywhere",
+            BackendSpec::names().join("|")
+        )
+        .into_boxed_str(),
+    );
     let cmd = Command::new("serve", "trigger-style serving demo")
         .opt("artifacts", "artifacts directory", None)
         .opt("model", "model key", Some("top_gru"))
@@ -240,6 +290,18 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             "routing: hash | round-robin | model-key",
             Some("hash"),
         )
+        .opt("backends", backends_help, Some(""))
+        .opt(
+            "tier-mix",
+            "per-backend traffic fractions summing to 1 (e.g. 0.9,0.1); \
+             empty = uniform across --backends",
+            Some(""),
+        )
+        .opt(
+            "tier-seed",
+            "seed of the tier-stamping hash (same seed = same partition)",
+            Some("0"),
+        )
         .opt("workers", "engine worker threads per shard", Some("2"))
         .opt(
             "engine-parallelism",
@@ -254,6 +316,10 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .flag("fixed-interval", "fixed (non-Poisson) arrivals");
     let args = cmd.parse(rest)?;
     let artifacts = artifacts_from(&args);
+    // An operator who pointed anywhere — flag or env var — gets hard
+    // errors for missing weights instead of the synthetic fallback.
+    let explicit_artifacts = args.get("artifacts").is_some()
+        || std::env::var_os("RNN_HLS_ARTIFACTS").is_some();
     let width: u32 = args.parse_num("width", 16)?;
     let integer: u32 = args.parse_num("integer", 6)?;
 
@@ -264,6 +330,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         engine: args
             .one_of("engine", &d.engine, &["pjrt", "fixed", "float"])?
             .to_string(),
+        backends: args.get_or("backends", &d.backends).to_string(),
+        tier_mix: args.get_or("tier-mix", &d.tier_mix).to_string(),
+        tier_seed: args.parse_num("tier-seed", d.tier_seed)?,
         rate_hz: args.parse_num("rate", d.rate_hz)?,
         n_events: args.parse_num("events", d.n_events)?,
         shards: args.parse_num("shards", d.shards)?,
@@ -282,12 +351,59 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let key = cli.model_key.clone();
     let engine_kind = cli.engine.clone();
     let engine_parallelism = cli.engine_parallelism;
+    let policy = ShardPolicy::parse(&cli.shard_policy)?;
+
+    // Heterogeneous session: resolve --backends against the registry and
+    // derive the tier mix (uniform unless --tier-mix pins the shares).
+    let specs: Vec<BackendSpec> = if cli.backends.is_empty() {
+        Vec::new()
+    } else {
+        BackendSpec::parse_list(&cli.backends)?
+    };
+    if !specs.is_empty() {
+        anyhow::ensure!(
+            specs.len() == cli.shards,
+            "--backends names {} backends but --shards is {} \
+             (each shard owns exactly one backend)",
+            specs.len(),
+            cli.shards
+        );
+        anyhow::ensure!(
+            specs.len() == 1 || policy == ShardPolicy::ModelKey,
+            "mixing backends requires --shard-policy model-key \
+             (tier keys must reach their backend's shard; {} routing \
+             would scatter tiers across backends)",
+            policy.name()
+        );
+    }
+    let tier_mix = if cli.tier_mix.is_empty() {
+        if specs.len() > 1 {
+            TierMix::uniform(specs.len(), cli.tier_seed)?
+        } else {
+            TierMix::single()
+        }
+    } else {
+        anyhow::ensure!(
+            !specs.is_empty(),
+            "--tier-mix requires --backends (tiers name backends)"
+        );
+        let mix = TierMix::parse(&cli.tier_mix, cli.tier_seed)?;
+        anyhow::ensure!(
+            mix.tiers() == specs.len(),
+            "--tier-mix lists {} fractions for {} backends",
+            mix.tiers(),
+            specs.len()
+        );
+        mix
+    };
 
     let benchmark = key.split('_').next().unwrap_or(&key).to_string();
     let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
     let cfg = ShardedConfig {
         shards: cli.shards,
-        policy: ShardPolicy::parse(&cli.shard_policy)?,
+        policy,
+        tier_mix,
+        shard_backends: specs.iter().map(|s| s.name().to_string()).collect(),
         server: ServerConfig {
             workers: cli.workers,
             queue_capacity: cli.queue_capacity,
@@ -302,8 +418,20 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             },
         },
     };
+    let engine_desc = if specs.is_empty() {
+        format!("{engine_kind} engine")
+    } else {
+        let mix: Vec<String> = (0..cfg.tier_mix.tiers())
+            .map(|t| format!("{:.2}", cfg.tier_mix.fraction(t)))
+            .collect();
+        format!(
+            "backends [{}] mix [{}]",
+            cfg.shard_backends.join(","),
+            mix.join(",")
+        )
+    };
     println!(
-        "serving {key} via {engine_kind} engine: rate {} ev/s, {} events, \
+        "serving {key} via {engine_desc}: rate {} ev/s, {} events, \
          {} shards ({} routing) × {} workers × {engine_parallelism} engine \
          threads, batch<= {}, wait {} µs",
         cfg.server.source.rate_hz,
@@ -315,53 +443,67 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         cfg.server.batcher.max_wait.as_micros()
     );
 
-    let report = match engine_kind.as_str() {
-        "pjrt" => {
-            let artifacts = artifacts.clone();
-            let key2 = key.clone();
-            ShardedServer::run(cfg, generator, move |_shard| {
-                let runtime = Runtime::new(&artifacts)?;
-                let buckets = runtime.manifest().batch_buckets(&key2)?;
-                // Precompile every bucket before signalling ready (§Perf:
-                // keeps lazy compilation out of the serving percentiles).
-                for &b in &buckets {
-                    runtime.model(&key2, b)?;
-                }
-                Ok(Box::new(PjrtRunner {
-                    runtime,
-                    key: key2.clone(),
-                    buckets,
-                }) as Box<dyn rnn_hls::coordinator::BatchRunner>)
-            })?
+    let report = if !specs.is_empty() {
+        // Heterogeneous: each shard builds its registered backend over
+        // the shared weights; an unbuildable slot (the stubbed pjrt)
+        // fails engine init with the registry's clear error.
+        let weights = weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
+        let max_batch = cfg.server.batcher.max_batch;
+        ShardedServer::run(cfg, generator, move |shard| {
+            let engine = specs[shard].build(&BackendCtx {
+                weights: &weights,
+                fixed_spec: FixedSpec::new(width, integer),
+                parallelism: engine_parallelism,
+            })?;
+            Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
+                engine, max_batch,
+            )) as Box<dyn rnn_hls::coordinator::BatchRunner>)
+        })?
+    } else {
+        match engine_kind.as_str() {
+            "pjrt" => {
+                let artifacts = artifacts.clone();
+                let key2 = key.clone();
+                ShardedServer::run(cfg, generator, move |_shard| {
+                    let runtime = Runtime::new(&artifacts)?;
+                    let buckets = runtime.manifest().batch_buckets(&key2)?;
+                    // Precompile every bucket before signalling ready
+                    // (§Perf: keeps lazy compilation out of the serving
+                    // percentiles).
+                    for &b in &buckets {
+                        runtime.model(&key2, b)?;
+                    }
+                    Ok(Box::new(PjrtRunner {
+                        runtime,
+                        key: key2.clone(),
+                        buckets,
+                    })
+                        as Box<dyn rnn_hls::coordinator::BatchRunner>)
+                })?
+            }
+            "fixed" | "float" => {
+                // One construction path for a backend name: the same
+                // registry row the heterogeneous branch uses.
+                let spec = BackendSpec::parse(&engine_kind)?;
+                let weights =
+                    weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
+                let max_batch = cfg.server.batcher.max_batch;
+                ShardedServer::run(cfg, generator, move |_shard| {
+                    let engine = spec.build(&BackendCtx {
+                        weights: &weights,
+                        fixed_spec: FixedSpec::new(width, integer),
+                        parallelism: engine_parallelism,
+                    })?;
+                    Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
+                        engine, max_batch,
+                    ))
+                        as Box<dyn rnn_hls::coordinator::BatchRunner>)
+                })?
+            }
+            other => {
+                anyhow::bail!("unknown engine {other:?} (pjrt|fixed|float)")
+            }
         }
-        "fixed" | "float" => {
-            let weights = Weights::load(
-                artifacts.join("weights").join(format!("{key}.json")),
-            )?;
-            let max_batch = cfg.server.batcher.max_batch;
-            let fixed = engine_kind == "fixed";
-            ShardedServer::run(cfg, generator, move |_shard| {
-                let engine: Box<dyn Engine> = if fixed {
-                    Box::new(
-                        FixedEngine::new(
-                            &weights,
-                            QuantConfig::ptq(FixedSpec::new(width, integer)),
-                        )?
-                        .with_parallelism(engine_parallelism),
-                    )
-                } else {
-                    Box::new(
-                        FloatEngine::new(&weights)?
-                            .with_parallelism(engine_parallelism),
-                    )
-                };
-                Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
-                    engine, max_batch,
-                ))
-                    as Box<dyn rnn_hls::coordinator::BatchRunner>)
-            })?
-        }
-        other => anyhow::bail!("unknown engine {other:?} (pjrt|fixed|float)"),
     };
     println!("{}", report.render());
     Ok(())

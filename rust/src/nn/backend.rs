@@ -1,0 +1,211 @@
+//! Backend registry: serving engines as data, not hardcoded match arms.
+//!
+//! A *backend* is a named constructor from `(Arch + weights, context)` to
+//! a boxed [`Engine`].  The serving layers (CLI `serve --backends`, the
+//! heterogeneous `ShardedServer` factories, the bench sweeps) resolve
+//! names against the registry table through [`BackendSpec`], so adding
+//! an engine kind is one new registry row — no routing, CLI, or report
+//! code changes.
+//!
+//! Registered backends:
+//!
+//! * `float` — the f32 reference engine ([`FloatEngine`]): the
+//!   offline/full-precision tier.
+//! * `fixed` — the bit-accurate `ap_fixed` engine ([`FixedEngine`]): the
+//!   trigger tier, quantized per the context's [`FixedSpec`].
+//! * `pjrt` — reserved slot for the PJRT runtime.  This build vendors
+//!   only the PJRT interface stub (`vendor/xla`, no plugin), so
+//!   construction fails with a clear error; the row keeps the name
+//!   stable for when the real bindings are reinstated (ROADMAP).
+
+use crate::fixed::{FixedSpec, QuantConfig};
+use crate::model::Weights;
+
+use super::{Engine, FixedEngine, FloatEngine};
+
+/// Everything a backend constructor may draw on.  One context serves all
+/// backends so the factory call sites stay backend-agnostic; fields a
+/// given backend does not need (e.g. `fixed_spec` for `float`) are
+/// simply ignored by it.
+pub struct BackendCtx<'a> {
+    /// Trained or synthetic weights (carry the [`crate::model::Arch`]).
+    pub weights: &'a Weights,
+    /// Quantization type for the `fixed` backend.
+    pub fixed_spec: FixedSpec,
+    /// Per-batch worker threads inside the engine (1 = inline).
+    pub parallelism: usize,
+}
+
+type BuildFn = fn(&BackendCtx) -> anyhow::Result<Box<dyn Engine>>;
+
+/// One registry row: a name, a help line, and a constructor.
+#[derive(Debug)]
+struct BackendEntry {
+    name: &'static str,
+    help: &'static str,
+    build: BuildFn,
+}
+
+fn build_float(ctx: &BackendCtx) -> anyhow::Result<Box<dyn Engine>> {
+    Ok(Box::new(
+        FloatEngine::new(ctx.weights)?.with_parallelism(ctx.parallelism),
+    ))
+}
+
+fn build_fixed(ctx: &BackendCtx) -> anyhow::Result<Box<dyn Engine>> {
+    Ok(Box::new(
+        FixedEngine::new(ctx.weights, QuantConfig::ptq(ctx.fixed_spec))?
+            .with_parallelism(ctx.parallelism),
+    ))
+}
+
+fn build_pjrt(_ctx: &BackendCtx) -> anyhow::Result<Box<dyn Engine>> {
+    anyhow::bail!(
+        "backend \"pjrt\" is registered but unavailable: this build vendors \
+         only the PJRT interface stub (vendor/xla, no plugin), so the slot \
+         cannot construct an engine — pick \"fixed\" or \"float\", or \
+         reinstate the real bindings (see ROADMAP: PJRT backend)"
+    )
+}
+
+/// The backend table.  Order is the order `names()` reports and help
+/// text lists.
+const REGISTRY: &[BackendEntry] = &[
+    BackendEntry {
+        name: "fixed",
+        help: "bit-accurate ap_fixed datapath (trigger tier)",
+        build: build_fixed,
+    },
+    BackendEntry {
+        name: "float",
+        help: "f32 reference engine (offline tier)",
+        build: build_float,
+    },
+    BackendEntry {
+        name: "pjrt",
+        help: "PJRT runtime slot (interface stub in this build)",
+        build: build_pjrt,
+    },
+];
+
+/// A resolved backend: a handle into the registry table.  Cheap to copy
+/// and thread-safe, so serving factories can capture one per shard.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendSpec {
+    entry: &'static BackendEntry,
+}
+
+impl BackendSpec {
+    /// Resolve a backend name; the error lists the registered names.
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        REGISTRY
+            .iter()
+            .find(|entry| entry.name == name)
+            .map(|entry| Self { entry })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown backend {name:?} (registered: {:?})",
+                    Self::names()
+                )
+            })
+    }
+
+    /// Resolve a comma-separated backend list (`"fixed,float"`), one
+    /// entry per shard.
+    pub fn parse_list(csv: &str) -> anyhow::Result<Vec<Self>> {
+        let specs: Vec<Self> = csv
+            .split(',')
+            .map(|part| Self::parse(part.trim()))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!specs.is_empty(), "backend list is empty");
+        Ok(specs)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.entry.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.entry.help
+    }
+
+    /// Construct this backend's engine over the context.
+    pub fn build(&self, ctx: &BackendCtx) -> anyhow::Result<Box<dyn Engine>> {
+        (self.entry.build)(ctx).map_err(|e| {
+            anyhow::anyhow!("backend {:?}: {e}", self.entry.name)
+        })
+    }
+
+    /// All registered backend names, registry order.
+    pub fn names() -> Vec<&'static str> {
+        REGISTRY.iter().map(|entry| entry.name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::model::Cell;
+
+    fn ctx_weights() -> Weights {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        Weights::synthetic(&arch, 0xB0B)
+    }
+
+    #[test]
+    fn registry_resolves_known_names() {
+        assert_eq!(BackendSpec::names(), vec!["fixed", "float", "pjrt"]);
+        for name in BackendSpec::names() {
+            let spec = BackendSpec::parse(name).unwrap();
+            assert_eq!(spec.name(), name);
+            assert!(!spec.help().is_empty());
+        }
+        let err = BackendSpec::parse("tpu").unwrap_err().to_string();
+        assert!(err.contains("registered"), "{err}");
+        assert!(err.contains("fixed"), "{err}");
+    }
+
+    #[test]
+    fn parse_list_splits_and_validates() {
+        let specs = BackendSpec::parse_list("fixed, float").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name(), "fixed");
+        assert_eq!(specs[1].name(), "float");
+        assert!(BackendSpec::parse_list("fixed,nope").is_err());
+        assert!(BackendSpec::parse_list("").is_err());
+    }
+
+    #[test]
+    fn fixed_and_float_build_engines_over_the_arch() {
+        let weights = ctx_weights();
+        let ctx = BackendCtx {
+            weights: &weights,
+            fixed_spec: FixedSpec::new(16, 6),
+            parallelism: 1,
+        };
+        for name in ["fixed", "float"] {
+            let engine = BackendSpec::parse(name).unwrap().build(&ctx).unwrap();
+            assert_eq!(engine.arch().key(), "top_gru", "{name}");
+            let x = vec![0.1f32; engine.arch().seq_len * engine.arch().input_size];
+            assert_eq!(engine.forward(&x).len(), 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn pjrt_slot_rejects_with_clear_error() {
+        let weights = ctx_weights();
+        let ctx = BackendCtx {
+            weights: &weights,
+            fixed_spec: FixedSpec::new(16, 6),
+            parallelism: 1,
+        };
+        let err = BackendSpec::parse("pjrt")
+            .unwrap()
+            .build(&ctx)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stub"), "{err}");
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -1,11 +1,12 @@
 //! f32 reference engine — the rust twin of `python/compile/kernels/ref.py`.
 //!
 //! `forward_batch` runs the paper's batched-GPU-serving analog (§5.2): the
-//! batch is split into contiguous chunks across a [`WorkerPool`], and each
-//! chunk runs the recurrence in lockstep over its samples so every weight
-//! row is streamed across the whole chunk ([`MatT::matmul_acc`]) instead
-//! of being re-fetched per sample.  Per-sample arithmetic order is
-//! unchanged, so batched outputs are bitwise-identical to `forward`.
+//! batch is split into contiguous chunks across a persistent
+//! [`WorkerPool`], and each chunk runs the recurrence in lockstep over its
+//! samples so every weight row is streamed across the whole chunk
+//! ([`MatT::matmul_acc`]) instead of being re-fetched per sample.
+//! Per-sample arithmetic order is unchanged, so batched outputs are
+//! bitwise-identical to `forward`.
 
 use crate::model::{Arch, Cell, OutputActivation, Weights};
 use crate::util::threads::WorkerPool;

@@ -7,13 +7,20 @@
 //!   weights, integer matvecs with wide accumulators, LUT activations.
 //!   This is the software stand-in for the synthesized FPGA design and
 //!   produces the quantized AUCs of Fig. 2.
+//! * [`backend`] — the backend registry: engines resolvable by name
+//!   ([`BackendSpec`]), which is how the heterogeneous serving fabric
+//!   hands each coordinator shard a different engine kind (`fixed` for
+//!   the trigger tier, `float` for the offline tier, a reserved `pjrt`
+//!   slot).
 //!
-//! Both implement [`Engine`], so the evaluation/serving layers are
+//! All engines implement [`Engine`], so the evaluation/serving layers are
 //! engine-agnostic.
 
+pub mod backend;
 pub mod fixed_engine;
 pub mod float_engine;
 
+pub use backend::{BackendCtx, BackendSpec};
 pub use fixed_engine::FixedEngine;
 pub use float_engine::FloatEngine;
 
@@ -41,10 +48,86 @@ pub trait Engine: Send + Sync {
     /// Forward `n` samples packed row-major in one flat buffer
     /// (`[n * seq_len * input_size]`) — the coordinator's batch layout
     /// (see `coordinator::Batch::packed_features`).
+    ///
+    /// The length contract `xs.len() == n * stride` holds
+    /// **unconditionally** (a hard `assert`, not a `debug_assert`): a
+    /// mismatched buffer would otherwise be silently truncated or
+    /// misaligned in release builds, serving some requests a neighbor's
+    /// features.  Callers that cannot guarantee the invariant must check
+    /// first (the coordinator's `EngineRunner` does, returning an error
+    /// instead of panicking).
     fn forward_packed(&self, xs: &[f32], n: usize) -> Vec<Vec<f32>> {
         let stride = self.arch().seq_len * self.arch().input_size;
-        debug_assert_eq!(xs.len(), n * stride);
-        let refs: Vec<&[f32]> = xs.chunks_exact(stride).take(n).collect();
+        assert_eq!(
+            xs.len(),
+            n * stride,
+            "packed buffer length {} != {} samples x stride {}",
+            xs.len(),
+            n,
+            stride
+        );
+        let refs: Vec<&[f32]> = xs.chunks_exact(stride).collect();
         self.forward_batch(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Cell, OutputActivation};
+
+    /// Minimal engine whose output is the first feature of each sample —
+    /// enough to observe which rows `forward_packed` actually serves.
+    struct FirstFeature {
+        arch: Arch,
+    }
+
+    fn mock() -> FirstFeature {
+        FirstFeature {
+            arch: Arch {
+                name: "mock".into(),
+                cell: Cell::Gru,
+                seq_len: 2,
+                input_size: 3,
+                hidden_size: 1,
+                dense_sizes: vec![],
+                output_size: 1,
+                output_activation: OutputActivation::Sigmoid,
+            },
+        }
+    }
+
+    impl Engine for FirstFeature {
+        fn forward(&self, x: &[f32]) -> Vec<f32> {
+            vec![x[0]]
+        }
+        fn arch(&self) -> &Arch {
+            &self.arch
+        }
+    }
+
+    #[test]
+    fn forward_packed_splits_rows_in_order() {
+        let engine = mock();
+        // stride = 2 * 3 = 6; two samples.
+        let xs: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        assert_eq!(engine.forward_packed(&xs, 2), vec![vec![0.0], vec![6.0]]);
+        // n = 0 with an empty buffer is legal.
+        assert!(engine.forward_packed(&[], 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "packed buffer length")]
+    fn forward_packed_rejects_short_buffer() {
+        mock().forward_packed(&[0.0; 11], 2);
+    }
+
+    /// The regression this contract exists for: a buffer holding MORE
+    /// samples than `n` used to be silently truncated to `n` rows by
+    /// `chunks_exact(..).take(n)` once the debug assertion compiled out.
+    #[test]
+    #[should_panic(expected = "packed buffer length")]
+    fn forward_packed_rejects_oversized_buffer() {
+        mock().forward_packed(&[0.0; 18], 2);
     }
 }

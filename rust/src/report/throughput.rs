@@ -14,14 +14,14 @@ use std::time::Duration;
 
 use crate::coordinator::{
     BatcherConfig, EngineRunner, ServerConfig, ShardPolicy, ShardedConfig,
-    ShardedServer, SourceConfig,
+    ShardedServer, SourceConfig, TierMix,
 };
 use crate::data::generators;
 use crate::fixed::FixedSpec;
 use crate::hls::latency::{self, Strategy};
 use crate::hls::{paper, HlsConfig, ReuseFactor, RnnMode};
 use crate::model::{zoo, Cell, Weights};
-use crate::nn::FloatEngine;
+use crate::nn::{BackendCtx, BackendSpec, FloatEngine};
 use crate::runtime::Runtime;
 use crate::util::{json, timing};
 
@@ -144,6 +144,10 @@ pub struct ServingBenchRow {
     pub shards: usize,
     pub policy: String,
     pub workers_per_shard: usize,
+    /// Backend the row measures (`"fixed"` / `"float"`); for mixed
+    /// sessions each backend tier contributes its own row, so per-tier
+    /// latency stays comparable across PRs instead of blending.
+    pub backend: String,
     pub samples_per_sec: f64,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -170,6 +174,8 @@ pub fn shard_sweep(
             let cfg = ShardedConfig {
                 shards,
                 policy,
+                tier_mix: TierMix::single(),
+                shard_backends: Vec::new(),
                 server: ServerConfig {
                     workers: workers_per_shard,
                     queue_capacity: 8192,
@@ -201,6 +207,7 @@ pub fn shard_sweep(
                 shards,
                 policy: policy.name().to_string(),
                 workers_per_shard,
+                backend: "float".to_string(),
                 samples_per_sec: report.merged.throughput_hz,
                 p50_us: report.merged.p50_latency_us,
                 p99_us: report.merged.p99_latency_us,
@@ -212,6 +219,108 @@ pub fn shard_sweep(
     Ok(rows)
 }
 
+/// Mixed-backend serving sweep: single-backend baselines (fixed, float —
+/// each serving the whole stream alone) plus one heterogeneous session
+/// (2 shards, fixed trigger tier at 90 % / float offline tier at 10 %,
+/// model-key routing) reported *per backend* from the roll-up's tier
+/// split.  Synthetic weights, saturating arrivals — same measurement
+/// discipline as [`shard_sweep`]; the rows land in `BENCH_serving.json`
+/// so CI tracks per-tier latency across PRs.
+pub fn mixed_backend_sweep(
+    workers_per_shard: usize,
+    n_events: usize,
+) -> anyhow::Result<Vec<ServingBenchRow>> {
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let fixed_spec = FixedSpec::new(16, 6);
+    let server = ServerConfig {
+        workers: workers_per_shard,
+        queue_capacity: 8192,
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+        },
+        source: SourceConfig {
+            rate_hz: 2_000_000.0,
+            poisson: false,
+            n_events,
+        },
+    };
+    let mut rows = Vec::new();
+
+    // Single-backend baselines.
+    for name in ["fixed", "float"] {
+        let spec = BackendSpec::parse(name)?;
+        let cfg = ShardedConfig {
+            shards: 1,
+            policy: ShardPolicy::ModelKey,
+            tier_mix: TierMix::single(),
+            shard_backends: vec![name.to_string()],
+            server,
+        };
+        let generator = generators::for_benchmark("top", 0xBEEF)?;
+        let weights = weights.clone();
+        let report = ShardedServer::run(cfg, generator, move |_shard| {
+            let engine = spec.build(&BackendCtx {
+                weights: &weights,
+                fixed_spec,
+                parallelism: 1,
+            })?;
+            Ok(Box::new(EngineRunner::new(engine, 32))
+                as Box<dyn crate::coordinator::BatchRunner>)
+        })?;
+        rows.push(ServingBenchRow {
+            config: format!("single_{name}_w{workers_per_shard}"),
+            shards: 1,
+            policy: "model-key".to_string(),
+            workers_per_shard,
+            backend: name.to_string(),
+            samples_per_sec: report.merged.throughput_hz,
+            p50_us: report.merged.p50_latency_us,
+            p99_us: report.merged.p99_latency_us,
+            completed: report.merged.completed,
+            dropped: report.merged.dropped,
+        });
+    }
+
+    // Heterogeneous session: 90 % trigger-tier → fixed, 10 % offline-tier
+    // → float; one row per backend from the per-tier metrics split.
+    let specs = [BackendSpec::parse("fixed")?, BackendSpec::parse("float")?];
+    let cfg = ShardedConfig {
+        shards: 2,
+        policy: ShardPolicy::ModelKey,
+        tier_mix: TierMix::new(&[0.9, 0.1], 0x7135)?,
+        shard_backends: specs.iter().map(|s| s.name().to_string()).collect(),
+        server,
+    };
+    let generator = generators::for_benchmark("top", 0xBEEF)?;
+    let factory_weights = weights.clone();
+    let report = ShardedServer::run(cfg, generator, move |shard| {
+        let engine = specs[shard].build(&BackendCtx {
+            weights: &factory_weights,
+            fixed_spec,
+            parallelism: 1,
+        })?;
+        Ok(Box::new(EngineRunner::new(engine, 32))
+            as Box<dyn crate::coordinator::BatchRunner>)
+    })?;
+    for tier in &report.per_backend {
+        rows.push(ServingBenchRow {
+            config: format!("mixed90_10_{}_w{workers_per_shard}", tier.backend),
+            shards: 2,
+            policy: "model-key".to_string(),
+            workers_per_shard,
+            backend: tier.backend.clone(),
+            samples_per_sec: tier.report.throughput_hz,
+            p50_us: tier.report.p50_latency_us,
+            p99_us: tier.report.p99_latency_us,
+            completed: tier.report.completed,
+            dropped: tier.report.dropped,
+        });
+    }
+    Ok(rows)
+}
+
 /// Emit the sweep as machine-readable JSON (the CI bench artifact).
 pub fn write_bench_json(
     path: &Path,
@@ -219,7 +328,9 @@ pub fn write_bench_json(
 ) -> anyhow::Result<PathBuf> {
     let doc = json::obj(vec![
         ("bench", json::s("serving")),
-        ("schema_version", json::num(1.0)),
+        // v2: every row carries a `backend` field (per-tier rows for the
+        // mixed-backend sweep; "float" for the homogeneous shard sweep).
+        ("schema_version", json::num(2.0)),
         (
             "rows",
             json::arr(
@@ -229,6 +340,7 @@ pub fn write_bench_json(
                             ("config", json::s(&r.config)),
                             ("shards", json::num(r.shards as f64)),
                             ("policy", json::s(&r.policy)),
+                            ("backend", json::s(&r.backend)),
                             (
                                 "workers_per_shard",
                                 json::num(r.workers_per_shard as f64),
@@ -318,6 +430,7 @@ mod tests {
         }
         assert_eq!(rows[0].config, "shards1_hash_w1");
         assert_eq!(rows[1].config, "shards2_hash_w1");
+        assert_eq!(rows[0].backend, "float");
 
         let dir = std::env::temp_dir().join(format!(
             "rnnhls-bench-json-{}",
@@ -328,14 +441,49 @@ mod tests {
         let parsed =
             json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "serving");
+        assert_eq!(
+            parsed.req("schema_version").unwrap().as_usize().unwrap(),
+            2
+        );
         let json_rows = parsed.req("rows").unwrap().as_array().unwrap();
         assert_eq!(json_rows.len(), 2);
         assert_eq!(
             json_rows[1].req("shards").unwrap().as_usize().unwrap(),
             2
         );
+        assert_eq!(
+            json_rows[0].req("backend").unwrap().as_str().unwrap(),
+            "float"
+        );
         assert!(json_rows[0].req("samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Reduced mixed-backend sweep: per-backend rows exist, single runs
+    /// see the whole stream, and the mixed rows exactly partition it
+    /// with the trigger tier taking the configured bulk.
+    #[test]
+    fn mixed_backend_sweep_emits_per_backend_rows() {
+        let rows = mixed_backend_sweep(1, 400).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].config, "single_fixed_w1");
+        assert_eq!(rows[0].backend, "fixed");
+        assert_eq!(rows[1].config, "single_float_w1");
+        assert_eq!(rows[1].backend, "float");
+        for r in &rows[..2] {
+            assert_eq!(r.completed + r.dropped, 400, "{}", r.config);
+            assert!(r.samples_per_sec > 0.0, "{}", r.config);
+        }
+        let mixed = &rows[2..];
+        assert!(mixed.iter().all(|r| r.config.starts_with("mixed90_10_")));
+        let routed: u64 = mixed.iter().map(|r| r.completed + r.dropped).sum();
+        assert_eq!(routed, 400, "mixed tiers must partition the stream");
+        let fixed = mixed.iter().find(|r| r.backend == "fixed").unwrap();
+        let float = mixed.iter().find(|r| r.backend == "float").unwrap();
+        assert!(
+            fixed.completed + fixed.dropped > float.completed + float.dropped,
+            "90/10 mix: trigger tier must dominate"
+        );
     }
 
     #[test]

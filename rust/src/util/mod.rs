@@ -10,8 +10,10 @@
 //!   manifest, reports).
 //! * [`rng`]     — splitmix64/xoshiro256** PRNG + distributions
 //!   (generators, property tests; deterministic by seed).
-//! * [`threads`] — scoped parallel-map + the chunked [`threads::WorkerPool`]
-//!   behind the engines' batched `forward_batch` (the rayon slice we use).
+//! * [`threads`] — scoped parallel-map + the persistent channel-fed
+//!   [`threads::WorkerPool`] behind the engines' batched `forward_batch`
+//!   (the rayon slice we use; pool threads outlive the batches they
+//!   serve).
 //! * [`timing`]  — measurement harness with warmup and percentile stats
 //!   (the criterion slice we use; benches are `harness = false` mains).
 //! * [`prop`]    — miniature property-testing loop (the proptest slice we

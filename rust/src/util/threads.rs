@@ -1,18 +1,30 @@
-//! Scoped parallel map over a worker pool (the rayon slice we need).
+//! Scoped parallel map + a persistent worker pool (the rayon slice we
+//! need).
 //!
 //! Two execution shapes:
 //!
-//! * [`parallel_map`] — per-item fan-out with an atomic work counter;
-//!   best when item costs are uneven (the Fig. 2 grid scan).
+//! * [`parallel_map`] — per-item fan-out with an atomic work counter over
+//!   scoped threads; best when item costs are uneven and calls are rare
+//!   (the Fig. 2 grid scan).
 //! * [`WorkerPool::map_chunks`] — contiguous-chunk fan-out used by the
 //!   batched inference path: each worker owns a contiguous slice of the
 //!   batch, so per-sample state buffers stay worker-local and results
-//!   concatenate in order.  Threads are scoped (spawned per call, no
-//!   `unsafe` lifetime erasure); the spawn cost is amortized over a whole
-//!   batch of forwards, which is the granularity the serving coordinator
-//!   hands us anyway.
+//!   concatenate in order.  The pool's threads are **long-lived and
+//!   channel-fed**: they spawn once in [`WorkerPool::new`] and serve
+//!   every subsequent `map_chunks` call, so the serving hot path pays a
+//!   channel send per chunk instead of an OS thread spawn (~15 µs each)
+//!   per batch — the difference is the whole margin for small batches on
+//!   small models.  `workers == 1` (the engines' default) keeps the old
+//!   inline behavior: no threads, zero overhead.
+//!
+//! Chunking never changes per-sample arithmetic, so results are bitwise
+//! identical for any worker count — the batch-equivalence contract the
+//! engines are held to.
 
 use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 /// Apply `f` to `0..n` across `workers` OS threads, collecting results in
 /// index order.  Work is distributed by atomic counter, so uneven item
@@ -56,19 +68,107 @@ pub fn default_workers() -> usize {
         .unwrap_or(4)
 }
 
+/// A type-erased unit of pool work.  `'static` as far as the channel is
+/// concerned; [`WorkerPool::map_chunks`] erases the caller's lifetimes
+/// and re-establishes safety by blocking until every submitted job has
+/// reported back (see the SAFETY note there).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Channel plumbing shared between the pool handle and its threads.
+struct PoolShared {
+    /// Job injector.  `Option` so `Drop` can disconnect the channel
+    /// (workers observe `recv` failing and exit).
+    sender: Mutex<Option<Sender<Job>>>,
+    /// Single shared job queue; workers take turns holding the lock
+    /// while they block in `recv`.  Jobs are chunk-sized (one per worker
+    /// per batch), so dequeue contention is irrelevant.
+    receiver: Mutex<Receiver<Job>>,
+}
+
+fn pool_worker(shared: &PoolShared) {
+    loop {
+        let job = {
+            let receiver =
+                shared.receiver.lock().expect("pool receiver poisoned");
+            receiver.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            // All senders dropped: the pool handle is gone; exit.
+            Err(_) => break,
+        }
+    }
+}
+
+/// Owns the threads; dropping the last pool handle disconnects the
+/// channel and joins them.
+struct PoolInner {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        if let Ok(mut sender) = self.shared.sender.lock() {
+            *sender = None;
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
 /// A sized pool of batch workers.  `workers == 1` (the default for the
 /// inference engines) runs inline on the caller's thread — zero overhead
-/// and bitwise-deterministic ordering either way, since chunking never
-/// changes per-sample arithmetic.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// — and `workers > 1` spawns that many long-lived channel-fed threads
+/// up front.  Cloning shares the threads; the engines hold one pool for
+/// their lifetime ([`crate::nn::FloatEngine::set_parallelism`] swaps it,
+/// retiring the old threads).
+///
+/// Results are bitwise-deterministic for any worker count, since
+/// chunking never changes per-sample arithmetic order.
+#[derive(Clone)]
 pub struct WorkerPool {
     workers: usize,
+    /// `None` when `workers == 1` (inline execution, no threads).
+    inner: Option<Arc<PoolInner>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("persistent", &self.inner.is_some())
+            .finish()
+    }
 }
 
 impl WorkerPool {
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return Self {
+                workers,
+                inner: None,
+            };
+        }
+        let (sender, receiver) = channel::<Job>();
+        let shared = Arc::new(PoolShared {
+            sender: Mutex::new(Some(sender)),
+            receiver: Mutex::new(receiver),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("rnn-hls-pool-{i}"))
+                    .spawn(move || pool_worker(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
         Self {
-            workers: workers.max(1),
+            workers,
+            inner: Some(Arc::new(PoolInner { shared, handles })),
         }
     }
 
@@ -81,16 +181,33 @@ impl WorkerPool {
         self.workers
     }
 
+    fn submit(&self, job: Job) {
+        let inner = self.inner.as_ref().expect("submit needs a live pool");
+        let sender = inner.shared.sender.lock().expect("pool sender poisoned");
+        sender
+            .as_ref()
+            .expect("pool channel already closed")
+            .send(job)
+            .expect("pool worker threads exited");
+    }
+
     /// Split `0..n` into at most `workers` contiguous chunks, run
-    /// `chunk_fn` on each across scoped threads, and concatenate the
-    /// per-chunk results in index order.
+    /// `chunk_fn` on each across the pool's persistent threads, and
+    /// concatenate the per-chunk results in index order.  Blocks until
+    /// every chunk completes; a panic inside `chunk_fn` is re-raised on
+    /// the calling thread (after the remaining chunks finish), leaving
+    /// the pool serviceable.
+    ///
+    /// Do not call `map_chunks` re-entrantly from inside `chunk_fn` on
+    /// the *same* pool: the nested call's chunks would wait behind the
+    /// very jobs blocking on them.  (The engines never nest.)
     pub fn map_chunks<T, F>(&self, n: usize, chunk_fn: F) -> Vec<T>
     where
         T: Send,
         F: Fn(Range<usize>) -> Vec<T> + Sync,
     {
         let workers = self.workers.clamp(1, n.max(1));
-        if workers <= 1 {
+        if workers <= 1 || self.inner.is_none() {
             return chunk_fn(0..n);
         }
         let base = n / workers;
@@ -105,18 +222,53 @@ impl WorkerPool {
             ranges.push(start..start + len);
             start += len;
         }
-        let mut results: Vec<Option<Vec<T>>> =
+
+        // Every chunk reports through this per-call channel: its index
+        // plus either the result or the panic payload.
+        let (report, results) =
+            channel::<(usize, std::thread::Result<Vec<T>>)>();
+        for (k, range) in ranges.iter().enumerate() {
+            let report = report.clone();
+            let chunk_fn = &chunk_fn;
+            let range = range.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| chunk_fn(range)),
+                );
+                // Receiver outlives every send: `map_chunks` cannot
+                // return before collecting this message.
+                let _ = report.send((k, result));
+            });
+            // SAFETY: the job borrows `chunk_fn` (and through it the
+            // caller's data), which do not live `'static`.  The loop
+            // below blocks until *every* submitted job has sent its
+            // report — including panicking ones, via `catch_unwind` —
+            // and nothing on this thread can panic before that loop
+            // finishes, so the borrows strictly outlive the jobs'
+            // execution.  The transmute erases only lifetimes: source
+            // and target are the same fat-pointer type.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+            };
+            self.submit(job);
+        }
+        drop(report);
+
+        let mut chunks: Vec<Option<Vec<T>>> =
             ranges.iter().map(|_| None).collect();
-        std::thread::scope(|scope| {
-            for (slot, range) in results.iter_mut().zip(&ranges) {
-                let chunk_fn = &chunk_fn;
-                let range = range.clone();
-                scope.spawn(move || {
-                    *slot = Some(chunk_fn(range));
-                });
+        let mut panic_payload = None;
+        for _ in 0..ranges.len() {
+            let (k, result) =
+                results.recv().expect("pool worker lost a chunk");
+            match result {
+                Ok(chunk) => chunks[k] = Some(chunk),
+                Err(payload) => panic_payload = Some(payload),
             }
-        });
-        results
+        }
+        if let Some(payload) = panic_payload {
+            std::panic::resume_unwind(payload);
+        }
+        chunks
             .into_iter()
             .flat_map(|chunk| chunk.expect("chunk completed"))
             .collect()
@@ -180,6 +332,66 @@ mod tests {
     fn pool_clamps_to_at_least_one_worker() {
         assert_eq!(WorkerPool::new(0).workers(), 1);
         assert!(WorkerPool::per_core().workers() >= 1);
+    }
+
+    /// The point of the persistent pool: the same OS threads serve every
+    /// call.  Chunks never run on the caller's thread, and across many
+    /// calls the set of serving threads stays within the pool's size
+    /// (scoped spawning would mint fresh `ThreadId`s — which the runtime
+    /// never reuses — on every call).
+    #[test]
+    fn pool_threads_persist_across_calls() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+
+        let pool = WorkerPool::new(2);
+        let caller = std::thread::current().id();
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..8 {
+            pool.map_chunks(4, |r| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                r.collect::<Vec<_>>()
+            });
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(!ids.contains(&caller), "chunks must run on pool threads");
+        assert!(
+            ids.len() <= 2,
+            "8 calls used {} distinct threads — pool is not persistent",
+            ids.len()
+        );
+    }
+
+    /// A panicking chunk propagates to the caller without wedging or
+    /// killing the pool.
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.map_chunks(4, |r| {
+                    assert!(!r.contains(&0), "chunk boom");
+                    r.collect::<Vec<_>>()
+                })
+            }),
+        );
+        assert!(result.is_err(), "panic must propagate");
+        assert_eq!(
+            pool.map_chunks(3, |r| r.map(|i| i + 1).collect::<Vec<_>>()),
+            vec![1, 2, 3],
+            "pool must stay serviceable after a panic"
+        );
+    }
+
+    #[test]
+    fn clones_share_the_pool() {
+        let pool = WorkerPool::new(3);
+        let other = pool.clone();
+        assert_eq!(other.workers(), 3);
+        assert_eq!(
+            other.map_chunks(6, |r| r.map(|i| i * 2).collect()),
+            vec![0, 2, 4, 6, 8, 10]
+        );
     }
 
     #[test]

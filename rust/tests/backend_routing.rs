@@ -1,0 +1,262 @@
+//! Mixed-backend equivalence suite: a heterogeneous `ShardedServer`
+//! (fixed-point trigger tier + float offline tier behind model-key tier
+//! routing) must produce per-request outputs **bitwise identical** to
+//! routing the same seeded stream through each backend's standalone
+//! `Server` — heterogeneity, like sharding and batching, is a deployment
+//! lever with zero semantic footprint.
+//!
+//! Method: a deterministic top-GRU-shaped generator encodes the event
+//! index into the features, recording runners key every output by that
+//! embedded id, and the tier mix's pure `(seed, id)` stamp tells the
+//! test which backend the mixed session owed each request to.  The
+//! standalone runs serve the *whole* stream through one backend, so for
+//! every id the mixed output can be compared against the matching
+//! standalone output.  Queues are sized so nothing drops (a drop would
+//! shrink the comparison), and every run asserts `dropped == 0` first.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use rnn_hls::coordinator::{
+    BatchRunner, BatcherConfig, EngineRunner, Request, Router, Server,
+    ServerConfig, ShardPolicy, ShardedConfig, ShardedServer, SourceConfig,
+    TierMix,
+};
+use rnn_hls::data::generators::{Event, Generator};
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::{BackendCtx, BackendSpec};
+
+const N_EVENTS: usize = 1_200;
+const TIER_SEED: u64 = 0xC1A5;
+/// top benchmark dimensions: seq 20 × 6 features.
+const STRIDE: usize = 20 * 6;
+
+/// Emits top-GRU-shaped events whose first feature is the event index
+/// (exact in f32 at these stream sizes); the source assigns
+/// `Request::id` in the same order, so runners recover the id from the
+/// features alone.  The remaining features vary with the id so outputs
+/// genuinely differ per request and per backend.
+struct IdGen {
+    next: u64,
+}
+
+impl Generator for IdGen {
+    fn name(&self) -> &'static str {
+        "id-top"
+    }
+    fn seq_len(&self) -> usize {
+        20
+    }
+    fn n_feat(&self) -> usize {
+        6
+    }
+    fn n_classes(&self) -> usize {
+        1
+    }
+    fn generate(&mut self) -> Event {
+        let id = self.next;
+        self.next += 1;
+        let mut features = vec![0.0f32; STRIDE];
+        features[0] = id as f32;
+        for (k, f) in features.iter_mut().enumerate().skip(1) {
+            *f = ((id * 31 + k as u64 * 17) % 41) as f32 / 41.0 - 0.5;
+        }
+        Event {
+            features,
+            label: (id % 2) as u32,
+        }
+    }
+}
+
+/// Wraps a real engine runner, recording (embedded id → output) for
+/// every sample served.
+struct RecordingRunner {
+    inner: Box<dyn BatchRunner>,
+    outputs: Arc<Mutex<HashMap<u64, Vec<f32>>>>,
+}
+
+impl BatchRunner for RecordingRunner {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let out = self.inner.run(xs, n)?;
+        let mut map = self.outputs.lock().unwrap();
+        for (i, probs) in out.iter().enumerate() {
+            let id = xs[i * STRIDE] as u64;
+            anyhow::ensure!(
+                map.insert(id, probs.clone()).is_none(),
+                "request {id} served twice"
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Build the named backend's engine runner over shared synthetic
+/// weights: the same seed on every call, so each run constructs the
+/// identical engine.
+fn engine_runner(backend: &str) -> anyhow::Result<Box<dyn BatchRunner>> {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 0x0B5E55);
+    let engine = BackendSpec::parse(backend)?.build(&BackendCtx {
+        weights: &weights,
+        fixed_spec: FixedSpec::new(16, 6),
+        parallelism: 1,
+    })?;
+    Ok(Box::new(EngineRunner::new(engine, 8)))
+}
+
+fn config(workers: usize) -> ServerConfig {
+    ServerConfig {
+        workers,
+        queue_capacity: 16_384, // > N_EVENTS: nothing can drop
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+        },
+        source: SourceConfig {
+            rate_hz: 2_000_000.0, // saturating: pacing never the bottleneck
+            poisson: false,
+            n_events: N_EVENTS,
+        },
+    }
+}
+
+/// Serve the stream through the heterogeneous two-backend session.
+fn run_mixed(
+    mix: &TierMix,
+) -> (HashMap<u64, Vec<f32>>, rnn_hls::coordinator::ShardedReport) {
+    let outputs = Arc::new(Mutex::new(HashMap::new()));
+    let sink = outputs.clone();
+    let backends = ["fixed", "float"];
+    let report = ShardedServer::run(
+        ShardedConfig {
+            shards: 2,
+            policy: ShardPolicy::ModelKey,
+            tier_mix: mix.clone(),
+            shard_backends: backends.iter().map(|b| b.to_string()).collect(),
+            server: config(2),
+        },
+        Box::new(IdGen { next: 0 }),
+        move |shard| {
+            Ok(Box::new(RecordingRunner {
+                inner: engine_runner(backends[shard])?,
+                outputs: sink.clone(),
+            }) as Box<dyn BatchRunner>)
+        },
+    )
+    .unwrap();
+    let map = Arc::try_unwrap(outputs).unwrap().into_inner().unwrap();
+    (map, report)
+}
+
+/// Serve the whole stream through one backend's standalone `Server`.
+fn run_standalone(backend: &'static str) -> HashMap<u64, Vec<f32>> {
+    let outputs = Arc::new(Mutex::new(HashMap::new()));
+    let sink = outputs.clone();
+    let report =
+        Server::run(config(2), Box::new(IdGen { next: 0 }), move || {
+            Ok(Box::new(RecordingRunner {
+                inner: engine_runner(backend)?,
+                outputs: sink.clone(),
+            }) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+    assert_eq!(report.dropped, 0, "standalone {backend} dropped events");
+    Arc::try_unwrap(outputs).unwrap().into_inner().unwrap()
+}
+
+/// The acceptance contract: every request served by the mixed session is
+/// bitwise identical to the same request served by its tier's backend
+/// standalone, and the per-backend roll-up partitions the totals.
+#[test]
+fn mixed_backend_outputs_match_standalone_backends() {
+    let mix = TierMix::new(&[0.5, 0.5], TIER_SEED).unwrap();
+    let (mixed, report) = run_mixed(&mix);
+    assert_eq!(report.merged.dropped, 0);
+    assert_eq!(report.merged.completed, N_EVENTS as u64);
+    assert_eq!(mixed.len(), N_EVENTS);
+
+    let fixed_map = run_standalone("fixed");
+    let float_map = run_standalone("float");
+    assert_eq!(fixed_map.len(), N_EVENTS);
+    assert_eq!(float_map.len(), N_EVENTS);
+
+    // The backends must actually disagree somewhere, or the comparison
+    // below is vacuous (quantization makes them differ on this stream).
+    assert!(
+        (0..N_EVENTS as u64).any(|id| fixed_map[&id] != float_map[&id]),
+        "fixed and float produced identical outputs — vacuous test"
+    );
+
+    let mut per_tier = [0u64; 2];
+    for id in 0..N_EVENTS as u64 {
+        let tier = mix.stamp(id) as usize;
+        per_tier[tier] += 1;
+        let want = if tier == 0 {
+            &fixed_map[&id]
+        } else {
+            &float_map[&id]
+        };
+        assert_eq!(&mixed[&id], want, "request {id} (tier {tier})");
+    }
+    assert!(
+        per_tier[0] > 100 && per_tier[1] > 100,
+        "both tiers must carry real traffic: {per_tier:?}"
+    );
+
+    // Per-backend roll-up: exact partition of the merged totals, keyed
+    // by the configured labels.
+    assert_eq!(report.per_backend.len(), 2);
+    assert_eq!(report.per_backend[0].backend, "fixed");
+    assert_eq!(report.per_backend[1].backend, "float");
+    for (tier, b) in report.per_backend.iter().enumerate() {
+        assert_eq!(b.report.completed, per_tier[tier], "{}", b.backend);
+        assert_eq!(b.report.dropped, 0, "{}", b.backend);
+    }
+    let completed: u64 =
+        report.per_backend.iter().map(|b| b.report.completed).sum();
+    assert_eq!(completed, report.merged.completed);
+    assert!(report.render().contains("backend fixed"));
+}
+
+/// Router + tier stamping partition the stream deterministically by
+/// seed: same seed, same shard for every id; the configured fractions
+/// hold; a different seed yields a different partition.
+#[test]
+fn tier_stamping_partitions_deterministically_by_seed() {
+    let mix_a = TierMix::new(&[0.9, 0.1], 42).unwrap();
+    let mix_b = TierMix::new(&[0.9, 0.1], 42).unwrap();
+    let mut router = Router::new(ShardPolicy::ModelKey, 2);
+    let mut shares = [0u64; 2];
+    let n = 10_000u64;
+    for id in 0..n {
+        let key = mix_a.stamp(id);
+        assert_eq!(key, mix_b.stamp(id), "same seed must stamp identically");
+        assert!(key < 2);
+        let request = Request {
+            id,
+            features: Vec::new(),
+            label: 0,
+            route_key: key,
+            enqueued_at: std::time::Instant::now(),
+        };
+        let shard = router.route(&request);
+        assert_eq!(
+            shard, key as usize,
+            "model-key routing must follow the tier stamp"
+        );
+        shares[shard] += 1;
+    }
+    let share0 = shares[0] as f64 / n as f64;
+    assert!((share0 - 0.9).abs() < 0.02, "tier-0 share {share0}");
+
+    let other = TierMix::new(&[0.9, 0.1], 43).unwrap();
+    assert!(
+        (0..n).any(|id| other.stamp(id) != mix_a.stamp(id)),
+        "a different seed must repartition the stream"
+    );
+}

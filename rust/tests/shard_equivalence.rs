@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use rnn_hls::coordinator::{
     BatchRunner, BatcherConfig, Server, ServerConfig, ShardPolicy,
-    ShardedConfig, ShardedServer, SourceConfig,
+    ShardedConfig, ShardedServer, SourceConfig, TierMix,
 };
 use rnn_hls::data::generators::{Event, Generator};
 
@@ -119,6 +119,8 @@ fn run_sharded(
         ShardedConfig {
             shards,
             policy,
+            tier_mix: TierMix::single(),
+            shard_backends: Vec::new(),
             server: config(2),
         },
         Box::new(IdGen { next: 0 }),
