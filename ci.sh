@@ -17,14 +17,25 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     test -s BENCH_serving.json
     cat BENCH_serving.json
     echo "== bench-smoke: per-backend schema check =="
-    # Schema, not perf: the artifact must carry per-backend rows (schema
-    # v2) so per-tier latency stays comparable across PRs.  The writer
-    # emits compact JSON (no spaces around ':').
-    grep -q '"schema_version":2' BENCH_serving.json
+    # Schema, not perf: the artifact must carry per-backend rows with
+    # their batcher columns (schema v3) so per-tier latency stays
+    # comparable across PRs *together with the batching policy it was
+    # measured under*.  The writer emits compact JSON (no spaces
+    # around ':').
+    grep -q '"schema_version":3' BENCH_serving.json
     grep -q '"backend":"fixed"' BENCH_serving.json
     grep -q '"backend":"float"' BENCH_serving.json
     grep -q '"config":"mixed90_10_fixed_w2"' BENCH_serving.json
-    echo "per-backend rows present"
+    # Tier-aware batching rows: trigger tier pinned at batch-1/zero-wait,
+    # offline tier batching deep, each row carrying its batcher columns.
+    # The writer emits max_batch and max_wait_us adjacently, so the pair
+    # is grepped as one anchored unit ('"max_batch":1' alone would also
+    # match 16/128 and silently pass a broken policy).
+    grep -q '"config":"tier_batch_fixed_w2"' BENCH_serving.json
+    grep -q '"config":"tier_batch_float_w2"' BENCH_serving.json
+    grep -q '"max_batch":1,"max_wait_us":0,' BENCH_serving.json
+    grep -q '"max_batch":64,"max_wait_us":2000,' BENCH_serving.json
+    echo "per-backend rows + batcher columns present"
     exit 0
 fi
 
@@ -33,6 +44,12 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# Redundant with the full suite above, but pinned as its own gate so the
+# deterministic virtual-clock deadline suite can never be silently
+# filtered out of the matrix toolchains.
+echo "== tier-1: cargo test -q --test tier_batching (virtual-clock suite) =="
+cargo test -q --test tier_batching
 
 # Lint gates: run when the components are installed (rustfmt/clippy are
 # rustup components and may be absent in minimal toolchains).

@@ -7,7 +7,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use rnn_hls::coordinator::{batcher, BatcherConfig, BoundedQueue, Request};
+use rnn_hls::coordinator::{
+    batcher, BatcherConfig, BoundedQueue, Request, SystemClock,
+};
 use rnn_hls::data::generators;
 use rnn_hls::fixed::{ActTables, FixedSpec, QuantConfig};
 use rnn_hls::model::{zoo, Cell, Weights};
@@ -65,11 +67,15 @@ fn main() {
                 })
                 .unwrap();
         }
+        // Non-zero wait: zero is the strict batch-1 trigger regime now;
+        // the pre-filled queue still fills the batch via the drain fast
+        // path without ever consulting the deadline.
         let cfg = BatcherConfig {
             max_batch: 10,
-            max_wait: Duration::ZERO,
+            max_wait: Duration::from_micros(100),
         };
-        let batch = batcher::next_batch(&queue, &cfg).unwrap();
+        let batch =
+            batcher::next_batch(&queue, &cfg, &SystemClock).unwrap();
         std::hint::black_box(batch.packed_features());
     });
     report_row("batcher/form_batch10+pack", &stats);

@@ -17,7 +17,12 @@
 //!    heterogeneous fixed+float session behind model-key tier routing
 //!    vs each backend serving alone, reported *per backend* so the
 //!    trigger and offline tiers track their own latency percentiles.
-//! 4. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//! 4. **Tier-aware batching sweep** (no artifacts needed): the same
+//!    heterogeneous session with per-shard batch policies — trigger
+//!    tier pinned at batch-1/zero-wait, offline tier batching deep —
+//!    emitting the schema-v3 per-backend batcher columns
+//!    (`max_batch`, `max_wait_us`) in `BENCH_serving.json`.
+//! 5. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
 //!    original QuickDraw-LSTM comparison against the scheduler's II.
 //!
 //! Flags (after `--`): `--smoke` runs the reduced-iteration CI variant
@@ -264,11 +269,47 @@ fn backend_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
     rows
 }
 
+/// Tier-aware batching: trigger tier at strict batch-1, offline tier
+/// batching deep, per-backend rows carrying their batcher columns.
+fn tier_batch_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
+    println!(
+        "\n=== tier-aware batching sweep (trigger batch-1 vs offline \
+         deep) ==="
+    );
+    let n_events = if smoke { 3_000 } else { 12_000 };
+    let rows = throughput::tier_batch_sweep(2, n_events)
+        .expect("tier batch sweep");
+    println!(
+        "  {:>22} {:>8} {:>6} {:>8} {:>12} {:>10} {:>10} {:>10} {:>9}",
+        "config", "backend", "batch", "wait µs", "samples/s", "p50 µs",
+        "p99 µs", "completed", "dropped"
+    );
+    for r in &rows {
+        println!(
+            "  {:>22} {:>8} {:>6} {:>8} {:>12.0} {:>10.1} {:>10.1} {:>10} \
+             {:>9}",
+            r.config, r.backend, r.max_batch, r.max_wait_us,
+            r.samples_per_sec, r.p50_us, r.p99_us, r.completed, r.dropped
+        );
+    }
+    // Correctness, not speed: the tiers must partition the stream, and
+    // the policy columns must carry the pinned tier configs.
+    let routed: u64 = rows.iter().map(|r| r.completed + r.dropped).sum();
+    assert_eq!(routed, n_events as u64, "tier sweep lost events");
+    let fixed = rows.iter().find(|r| r.backend == "fixed").unwrap();
+    assert_eq!(fixed.max_batch, 1, "trigger tier must be batch-1");
+    assert_eq!(fixed.max_wait_us, 0);
+    let float = rows.iter().find(|r| r.backend == "float").unwrap();
+    assert!(float.max_batch > 1, "offline tier must batch deep");
+    rows
+}
+
 fn main() {
     let opts = parse_opts();
     engine_scaling(opts.smoke);
     let mut rows = shard_scaling(opts.smoke);
     rows.extend(backend_scaling(opts.smoke));
+    rows.extend(tier_batch_scaling(opts.smoke));
     if let Some(path) = &opts.json {
         let written =
             throughput::write_bench_json(path, &rows).expect("bench json");

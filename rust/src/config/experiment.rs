@@ -92,6 +92,13 @@ pub struct ServeCliConfig {
     pub engine_parallelism: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Per-shard batching policy override, in the `--batch-policy`
+    /// grammar: comma-separated `<name>:<max_batch>:<max_wait_us>`
+    /// entries, one per shard (e.g. `trigger:1:0,offline:64:2000`).
+    /// Empty = tier defaults for heterogeneous sessions (trigger
+    /// backends pinned at batch-1/zero-wait, offline backends batching
+    /// deep), the shared `max_batch`/`max_wait` otherwise.
+    pub batch_policy: String,
     /// Per-shard queue capacity (drop beyond).
     pub queue_capacity: usize,
 }
@@ -112,6 +119,7 @@ impl Default for ServeCliConfig {
             engine_parallelism: 1,
             max_batch: 10,
             max_wait: Duration::from_micros(200),
+            batch_policy: String::new(),
             queue_capacity: 4096,
         }
     }
@@ -148,13 +156,14 @@ mod tests {
     }
 
     /// Likewise the default must stay the homogeneous single-class
-    /// session: no backend list, no tier mix.
+    /// session: no backend list, no tier mix, no per-shard batch policy.
     #[test]
     fn serve_defaults_to_homogeneous_session() {
         let cfg = ServeCliConfig::default();
         assert!(cfg.backends.is_empty());
         assert!(cfg.tier_mix.is_empty());
         assert_eq!(cfg.tier_seed, 0);
+        assert!(cfg.batch_policy.is_empty());
     }
 
     #[test]

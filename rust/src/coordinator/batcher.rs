@@ -3,21 +3,59 @@
 //! The paper's §5.2 throughput study is batch-sensitive (batch-1 FPGA vs
 //! batched GPU); the batcher is where the serving system chooses its
 //! point on that curve.  Policy: collect up to `max_batch` requests; if
-//! the oldest waiting request has been held `max_wait`, flush what we
-//! have.  `max_wait = 0` degenerates to batch-1 serving (the trigger
-//! regime: never trade latency for throughput).
+//! the batch has been held `max_wait` since its first pop, flush what we
+//! have.  `max_wait = 0` is the trigger regime and is **strict batch-1**:
+//! every request is dispatched alone, immediately — never co-batched,
+//! not even with requests already queued behind it (the paper's trigger
+//! never trades a single event's latency for throughput).
+//!
+//! All time flows through a [`Clock`]: production passes
+//! [`SystemClock`](super::clock::SystemClock), tests pass
+//! [`VirtualClock`](super::clock::VirtualClock) and drive the deadline
+//! step-by-step without sleeping (`tests/tier_batching.rs`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::clock::Clock;
 use super::queue::BoundedQueue;
 use super::Request;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatcherConfig {
+    /// Flush when the batch reaches this size.  Must be >= 1: a
+    /// zero-size batch could never flush (enforce via [`Self::new`]).
     pub max_batch: usize,
-    /// Longest a request may wait for co-batching.
+    /// Longest a batch may be held open for co-batching.  Zero = strict
+    /// batch-1 trigger serving.
     pub max_wait: Duration,
+}
+
+impl BatcherConfig {
+    /// Validated constructor — the one every parsing path (CLI flags,
+    /// `--batch-policy` entries) must go through.  `max_batch = 0` is a
+    /// config that can never flush a batch, so it is rejected here with
+    /// a clear error instead of degrading at serve time.
+    pub fn new(max_batch: usize, max_wait: Duration) -> anyhow::Result<Self> {
+        let cfg = Self {
+            max_batch,
+            max_wait,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The flushability invariant, for configs built as plain struct
+    /// literals: the serving entry points (`Server::run`,
+    /// `ShardedServer::run`) re-check it here before spawning workers.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.max_batch >= 1,
+            "batcher max_batch must be >= 1 (got 0): a zero-size batch \
+             can never flush"
+        );
+        Ok(())
+    }
 }
 
 impl Default for BatcherConfig {
@@ -56,21 +94,41 @@ impl Batch {
     }
 }
 
-/// Pull one batch from the queue under the policy.  Returns `None` when
-/// the queue is closed and drained.
+/// Pull one batch from the queue under the policy, on `clock`'s
+/// timeline.  Returns `None` when the queue is closed and drained.
+///
+/// Flush guarantees (the batcher property suite asserts them for random
+/// arrival sequences):
+///
+/// * a batch flushes because it reached `max_batch` (size), because it
+///   was held `max_wait` since its first pop (deadline), or because the
+///   queue closed mid-batch (shutdown drain) — never for any other
+///   reason;
+/// * a batch is never held *past* the deadline;
+/// * `max_wait = 0` always yields batch size 1.
 pub fn next_batch(
     queue: &Arc<BoundedQueue<Request>>,
     cfg: &BatcherConfig,
+    clock: &dyn Clock,
 ) -> Option<Batch> {
-    // Block for the first request.
-    let first = queue.pop_timeout(Duration::from_millis(50))?;
+    debug_assert!(cfg.max_batch >= 1, "BatcherConfig::new enforces this");
+    // Block for the first request (no deadline: only shutdown ends it).
+    let first = clock.pop_first(queue)?;
     let mut requests = vec![first];
+    // The trigger regime: dispatch alone, immediately.  Not even
+    // already-queued requests are co-batched — batch-1 is a *guarantee*
+    // a trigger-tier policy makes, not a best-effort degenerate case.
+    if cfg.max_wait.is_zero() {
+        return Some(Batch {
+            requests,
+            formed_at: clock.now(),
+        });
+    }
     // Anchor the flush deadline to *pop* time, not the first request's
     // enqueue time: under backlog an aged request would otherwise carry
     // an already-expired deadline and force degenerate batch-1 flushes —
-    // exactly when batching matters most.  `max_wait = 0` still means
-    // the trigger regime: drain whatever is already queued, never wait.
-    let deadline = Instant::now() + cfg.max_wait;
+    // exactly when batching matters most.
+    let deadline = clock.now() + cfg.max_wait;
 
     while requests.len() < cfg.max_batch {
         // Fast path: take whatever is already waiting.
@@ -79,24 +137,24 @@ pub fn next_batch(
             requests.extend(more);
             continue;
         }
-        let now = Instant::now();
-        if now >= deadline {
+        if clock.now() >= deadline {
             break;
         }
-        match queue.pop_timeout(deadline - now) {
+        match clock.pop_until(queue, deadline) {
             Some(r) => requests.push(r),
             None => break, // deadline or close
         }
     }
     Some(Batch {
         requests,
-        formed_at: Instant::now(),
+        formed_at: clock.now(),
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::clock::SystemClock;
 
     fn req(id: u64) -> Request {
         Request {
@@ -117,13 +175,23 @@ mod tests {
     }
 
     #[test]
+    fn zero_max_batch_rejected_at_construction() {
+        let err = BatcherConfig::new(0, Duration::ZERO).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("max_batch must be >= 1"),
+            "{err:#}"
+        );
+        assert_eq!(BatcherConfig::new(1, Duration::ZERO).unwrap().max_batch, 1);
+    }
+
+    #[test]
     fn flushes_on_size() {
         let q = queue_with(25);
         let cfg = BatcherConfig {
             max_batch: 10,
             max_wait: Duration::from_secs(10),
         };
-        let b = next_batch(&q, &cfg).unwrap();
+        let b = next_batch(&q, &cfg, &SystemClock).unwrap();
         assert_eq!(b.len(), 10);
         let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
@@ -138,25 +206,26 @@ mod tests {
             max_wait: Duration::from_millis(5),
         };
         let t0 = Instant::now();
-        let b = next_batch(&q, &cfg).unwrap();
+        let b = next_batch(&q, &cfg, &SystemClock).unwrap();
         assert_eq!(b.len(), 3);
         assert!(t0.elapsed() < Duration::from_millis(100));
     }
 
+    /// `max_wait = 0` is the trigger guarantee: strict batch-1, even
+    /// with a deep backlog already queued.
     #[test]
-    fn zero_wait_gives_immediate_partial_batches() {
+    fn zero_wait_is_strict_batch_one() {
         let q = queue_with(3);
         let cfg = BatcherConfig {
             max_batch: 10,
             max_wait: Duration::ZERO,
         };
-        // All three are already queued, so one drain picks them up.
-        let b = next_batch(&q, &cfg).unwrap();
-        assert_eq!(b.len(), 3);
-        // But an empty queue + zero wait returns a singleton immediately.
-        let q2 = queue_with(1);
-        let b2 = next_batch(&q2, &cfg).unwrap();
-        assert_eq!(b2.len(), 1);
+        for want in 0..3u64 {
+            let b = next_batch(&q, &cfg, &SystemClock).unwrap();
+            assert_eq!(b.len(), 1, "trigger regime must never co-batch");
+            assert_eq!(b.requests[0].id, want);
+        }
+        assert!(q.is_empty());
     }
 
     /// Regression: the flush deadline must anchor to pop time.  A request
@@ -177,7 +246,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
             q2.push(req(1)).unwrap();
         });
-        let b = next_batch(&q, &cfg).unwrap();
+        let b = next_batch(&q, &cfg, &SystemClock).unwrap();
         producer.join().unwrap();
         assert_eq!(
             b.len(),
@@ -191,8 +260,30 @@ mod tests {
         let q = queue_with(2);
         q.close();
         let cfg = BatcherConfig::default();
-        assert_eq!(next_batch(&q, &cfg).unwrap().len(), 2);
-        assert!(next_batch(&q, &cfg).is_none());
+        assert_eq!(next_batch(&q, &cfg, &SystemClock).unwrap().len(), 2);
+        assert!(next_batch(&q, &cfg, &SystemClock).is_none());
+    }
+
+    /// The batcher entry blocks across idle gaps instead of giving up:
+    /// a worker must only exit on close, however slow the source is.
+    #[test]
+    fn idle_gap_longer_than_poll_slice_does_not_end_the_stream() {
+        let q: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(16));
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+        };
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(70));
+            q2.push(req(0)).unwrap();
+            q2.close();
+        });
+        let b = next_batch(&q, &cfg, &SystemClock)
+            .expect("batcher must wait out the idle gap");
+        assert_eq!(b.len(), 1);
+        assert!(next_batch(&q, &cfg, &SystemClock).is_none());
+        producer.join().unwrap();
     }
 
     #[test]
@@ -223,7 +314,7 @@ mod tests {
                 let seen = seen.clone();
                 let cfg = cfg;
                 s.spawn(move || {
-                    while let Some(b) = next_batch(&q, &cfg) {
+                    while let Some(b) = next_batch(&q, &cfg, &SystemClock) {
                         let mut set = seen.lock().unwrap();
                         for r in &b.requests {
                             assert!(set.insert(r.id), "duplicate {}", r.id);

@@ -1,0 +1,254 @@
+//! Deterministic time for the serving deadline path.
+//!
+//! Every time-dependent decision in the coordinator — the batcher's
+//! flush deadline, a batch's `formed_at`, the completion instant that
+//! latency percentiles are computed from — goes through a [`Clock`].
+//! Production uses [`SystemClock`] (plain `Instant::now()` plus real
+//! condvar waits); tests use [`VirtualClock`], whose time only moves
+//! when the test advances it, so deadline behavior can be driven
+//! step-by-step without a single `std::thread::sleep`
+//! (`tests/tier_batching.rs`, the batcher property suite).
+//!
+//! The clock owns the *queue waits* as well as `now()`: "wait until a
+//! request arrives or the deadline passes" is the one primitive that
+//! couples time to the queue, and it is exactly the piece that differs
+//! between real and virtual time.  Under [`VirtualClock`] an empty open
+//! queue **auto-advances** virtual time to the deadline (the same
+//! semantics as tokio's paused test clock): if no work exists anywhere,
+//! the only thing the batcher can be waiting for is the deadline itself,
+//! so time jumps there and the batch flushes — deterministically, with
+//! zero wall-clock spent.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+use super::Request;
+
+/// The serving time source.  `Send + Sync` so one clock can be shared by
+/// every worker thread of a session.
+pub trait Clock: Send + Sync {
+    /// The current instant on this clock's timeline.
+    fn now(&self) -> Instant;
+
+    /// Blocking pop of a batch's *first* request: waits (without a
+    /// deadline) until an item arrives or the queue is closed and
+    /// drained.  `None` means shutdown — the worker loop exits.
+    fn pop_first(&self, queue: &BoundedQueue<Request>) -> Option<Request>;
+
+    /// Pop bounded by `deadline` on this clock's timeline: an item, or
+    /// `None` once the deadline passes or the queue closes empty.
+    fn pop_until(
+        &self,
+        queue: &BoundedQueue<Request>,
+        deadline: Instant,
+    ) -> Option<Request>;
+}
+
+/// Real time: `Instant::now()` and genuine condvar waits.
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn pop_first(&self, queue: &BoundedQueue<Request>) -> Option<Request> {
+        // Poll in 50 ms slices so a queue that closes while we wait is
+        // noticed promptly.  Unlike the pre-clock batcher, an *idle*
+        // timeout no longer terminates the worker: only closed-and-
+        // drained does, so a slow (e.g. 10 Hz) source can no longer
+        // silently kill its workers between arrivals.
+        loop {
+            match queue.pop_timeout(Duration::from_millis(50)) {
+                Some(request) => return Some(request),
+                None => {
+                    if queue.is_closed() && queue.is_empty() {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    fn pop_until(
+        &self,
+        queue: &BoundedQueue<Request>,
+        deadline: Instant,
+    ) -> Option<Request> {
+        let now = Instant::now();
+        if now >= deadline {
+            return None;
+        }
+        queue.pop_timeout(deadline - now)
+    }
+}
+
+/// Test time: an `Instant` timeline anchored at construction whose
+/// offset only moves via [`VirtualClock::advance`] (or the batcher's
+/// deadline auto-advance).  Monotone by construction — the offset is an
+/// atomic that only grows — and safe to share across threads.
+///
+/// Waiting semantics:
+///
+/// * [`Clock::pop_until`] on an empty open queue does **not** block: it
+///   advances virtual time straight to the deadline and reports the
+///   deadline as reached.  This is what makes single-threaded tests of
+///   the deadline path total: no producer is needed to unblock them.
+/// * [`Clock::pop_first`] has no deadline to jump to, so on an empty
+///   open queue it spins (yielding) until a producer on another thread
+///   pushes or closes.  Single-threaded tests must therefore only call
+///   the batcher with a non-empty or closed queue — the discipline every
+///   virtual-clock test in this repo follows.
+pub struct VirtualClock {
+    base: Instant,
+    offset_ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self {
+            base: Instant::now(),
+            offset_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Move virtual time forward by `delta`.
+    pub fn advance(&self, delta: Duration) {
+        self.offset_ns
+            .fetch_add(delta.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Move virtual time forward to `target` (no-op if already past it).
+    pub fn advance_to(&self, target: Instant) {
+        let offset = target.saturating_duration_since(self.base);
+        self.offset_ns
+            .fetch_max(offset.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Instant {
+        self.base
+            + Duration::from_nanos(self.offset_ns.load(Ordering::SeqCst))
+    }
+
+    fn pop_first(&self, queue: &BoundedQueue<Request>) -> Option<Request> {
+        loop {
+            if let Some(request) = queue.try_pop() {
+                return Some(request);
+            }
+            if queue.is_closed() {
+                return None;
+            }
+            // A producer on another thread may still be running; yield
+            // real time without touching the virtual timeline.
+            std::thread::yield_now();
+        }
+    }
+
+    fn pop_until(
+        &self,
+        queue: &BoundedQueue<Request>,
+        deadline: Instant,
+    ) -> Option<Request> {
+        if let Some(request) = queue.try_pop() {
+            return Some(request);
+        }
+        if queue.is_closed() {
+            return None;
+        }
+        // Nothing to serve anywhere: the only pending event on this
+        // timeline is the deadline itself — jump to it.
+        self.advance_to(deadline);
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, enqueued_at: Instant) -> Request {
+        Request {
+            id,
+            features: vec![0.0; 2],
+            label: 0,
+            route_key: 0,
+            enqueued_at,
+        }
+    }
+
+    #[test]
+    fn virtual_clock_advances_only_on_demand() {
+        let clock = VirtualClock::new();
+        let t0 = clock.now();
+        assert_eq!(clock.now(), t0, "time must not move on its own");
+        clock.advance(Duration::from_micros(250));
+        assert_eq!(clock.now(), t0 + Duration::from_micros(250));
+        clock.advance_to(t0 + Duration::from_micros(100)); // backwards: no-op
+        assert_eq!(clock.now(), t0 + Duration::from_micros(250));
+        clock.advance_to(t0 + Duration::from_millis(1));
+        assert_eq!(clock.now(), t0 + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn virtual_pop_until_auto_advances_to_deadline_when_idle() {
+        let clock = VirtualClock::new();
+        let queue: BoundedQueue<Request> = BoundedQueue::new(8);
+        let deadline = clock.now() + Duration::from_micros(500);
+        assert!(clock.pop_until(&queue, deadline).is_none());
+        assert_eq!(clock.now(), deadline, "idle wait must jump to deadline");
+    }
+
+    #[test]
+    fn virtual_pop_until_prefers_queued_work_over_advancing() {
+        let clock = VirtualClock::new();
+        let queue = BoundedQueue::new(8);
+        queue.push(req(7, clock.now())).unwrap();
+        let t0 = clock.now();
+        let deadline = t0 + Duration::from_micros(500);
+        let got = clock.pop_until(&queue, deadline).unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(clock.now(), t0, "queued work must not cost time");
+    }
+
+    #[test]
+    fn virtual_pop_handles_closed_queue_without_advancing() {
+        let clock = VirtualClock::new();
+        let queue = BoundedQueue::new(8);
+        queue.push(req(1, clock.now())).unwrap();
+        queue.close();
+        let t0 = clock.now();
+        assert_eq!(clock.pop_first(&queue).unwrap().id, 1);
+        assert!(clock.pop_first(&queue).is_none());
+        let deadline = t0 + Duration::from_micros(100);
+        assert!(clock.pop_until(&queue, deadline).is_none());
+        assert_eq!(clock.now(), t0, "closed queue must not advance time");
+    }
+
+    #[test]
+    fn system_pop_first_survives_idle_gaps_until_close() {
+        let queue = std::sync::Arc::new(BoundedQueue::new(8));
+        let producer = {
+            let queue = queue.clone();
+            std::thread::spawn(move || {
+                // Longer than one 50 ms poll slice: the old batcher
+                // entry path would have given up here.
+                std::thread::sleep(Duration::from_millis(70));
+                queue.push(req(3, Instant::now())).unwrap();
+                queue.close();
+            })
+        };
+        let clock = SystemClock;
+        assert_eq!(clock.pop_first(&queue).unwrap().id, 3);
+        assert!(clock.pop_first(&queue).is_none());
+        producer.join().unwrap();
+    }
+}

@@ -1,8 +1,17 @@
 //! Lock-free serving metrics: counters + a log-bucketed latency
 //! histogram (atomics only on the hot path).
+//!
+//! Time enters this module only as caller-supplied [`Instant`]s (a
+//! batch's `formed_at`, the completion instant from the serving
+//! [`Clock`](super::clock::Clock)) — never via `Instant::now()` — so a
+//! virtual clock drives every recorded latency deterministically and
+//! percentiles can be asserted against hand-computed values
+//! (`tests/tier_batching.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use super::batcher::Batch;
 
 /// Log-spaced latency histogram: [`Self::N_BOUNDS`] bucket bounds at 1 µs
 /// × 1.5ᵏ (so the top bound is ≈ 1.5³⁹ µs ≈ 7.4 s), plus one overflow
@@ -127,6 +136,35 @@ impl ServerMetrics {
         self.total_latency.merge(&other.total_latency);
     }
 
+    /// Record one completed batch: per-request queue latency
+    /// (`formed_at - enqueued_at`), total latency (`done - enqueued_at`),
+    /// batch counters, completion and accuracy counts.  `done` is the
+    /// completion instant on the *serving clock* — the worker loop passes
+    /// `clock.now()`, so under a `VirtualClock` every recorded latency is
+    /// an exact, hand-computable value.  Subtractions saturate at zero so
+    /// a mis-driven virtual timeline degrades to a 0 µs sample instead of
+    /// panicking.
+    pub fn observe_batch(
+        &self,
+        batch: &Batch,
+        outputs: &[Vec<f32>],
+        done: Instant,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_samples
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for (r, probs) in batch.requests.iter().zip(outputs) {
+            self.queue_latency
+                .record(batch.formed_at.saturating_duration_since(r.enqueued_at));
+            self.total_latency
+                .record(done.saturating_duration_since(r.enqueued_at));
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            if super::server::predicted_label(probs) == r.label {
+                self.correct.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let batches = self.batches.load(Ordering::Relaxed);
         if batches == 0 {
@@ -247,6 +285,53 @@ mod tests {
         assert!((total.accuracy() - 60.0 / 90.0).abs() < 1e-12);
         assert_eq!(total.total_latency.count(), 1);
         assert_eq!(total.queue_latency.count(), 1);
+    }
+
+    /// `observe_batch` records exactly the caller-supplied instants: a
+    /// batch formed 20 µs after enqueue and completed 100 µs after it
+    /// must land in the 20 µs / 100 µs buckets — no hidden `now()`.
+    #[test]
+    fn observe_batch_uses_supplied_instants_only() {
+        use crate::coordinator::batcher::Batch;
+        use crate::coordinator::Request;
+
+        let t0 = std::time::Instant::now();
+        let m = ServerMetrics::new();
+        let batch = Batch {
+            requests: vec![
+                Request {
+                    id: 0,
+                    features: vec![0.0; 2],
+                    label: 1,
+                    route_key: 0,
+                    enqueued_at: t0,
+                },
+                Request {
+                    id: 1,
+                    features: vec![0.0; 2],
+                    label: 0,
+                    route_key: 0,
+                    enqueued_at: t0 + Duration::from_micros(10),
+                },
+            ],
+            formed_at: t0 + Duration::from_micros(30),
+        };
+        // Outputs: request 0 predicted 1 (correct), request 1 predicted
+        // 1 (wrong) -> accuracy 1/2.
+        let outputs = vec![vec![0.9f32], vec![0.9f32]];
+        let done = t0 + Duration::from_micros(100);
+        m.observe_batch(&batch, &outputs, done);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.batch_samples.load(Ordering::Relaxed), 2);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(m.total_latency.count(), 2);
+        assert_eq!(m.queue_latency.count(), 2);
+        // Hand-computed buckets: total latencies are 100 µs and 90 µs,
+        // both inside (86.49, 129.7] -> p50 == p99 == 1.5^12 µs.
+        let bound_12 = 1.5f64.powi(12);
+        assert_eq!(m.total_latency.quantile_us(0.5), bound_12);
+        assert_eq!(m.total_latency.quantile_us(0.99), bound_12);
     }
 
     #[test]

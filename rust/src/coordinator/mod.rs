@@ -90,8 +90,39 @@
 //! backend's standalone [`Server`] (`tests/backend_routing.rs` asserts
 //! it), exactly as sharding and batching are semantics-free
 //! (`tests/shard_equivalence.rs`, `tests/batch_equivalence.rs`).
+//!
+//! ## Tier-aware batching
+//!
+//! Tiers differ in more than their backend: they sit at *opposite ends*
+//! of the §5.2 batch-vs-latency curve.  Every shard therefore owns its
+//! own [`BatcherConfig`] ([`ShardedConfig::shard_batchers`]): the
+//! trigger tier is pinned at **strict batch-1** (`max_wait = 0` — a
+//! trigger-tier request is *never* co-batched, not even with requests
+//! already queued behind it), while the offline tier batches deep
+//! (64 requests or a 2 ms deadline).  Defaults resolve from each
+//! backend's [`tier::TierClass`]; the CLI pins them explicitly with
+//! `--batch-policy trigger:1:0,offline:64:2000`
+//! (`<name>:<max_batch>:<max_wait_us>` per shard — see
+//! [`tier::TierPolicy`]).  An empty `shard_batchers` reproduces the
+//! shared-config behavior bit for bit, so homogeneous sessions are
+//! untouched (`tests/shard_equivalence.rs` asserts it).
+//!
+//! ## Deterministic time: the serving clock
+//!
+//! Every time-dependent decision — the batcher deadline in
+//! [`batcher::next_batch`], the completion instant
+//! [`server::worker_loop`] hands to [`ServerMetrics::observe_batch`],
+//! the `enqueued_at` stamp percentiles anchor to — reads a
+//! [`Clock`].  Production uses [`SystemClock`]; `tests/tier_batching.rs`
+//! passes a [`VirtualClock`], whose timeline only moves when the test
+//! advances it (an idle deadline wait *auto-advances* to the deadline),
+//! so size-or-deadline flush semantics and per-tier p50/p99 are asserted
+//! against hand-computed values without one `std::thread::sleep`.
+//! Arrival *pacing* stays real time — a virtual clock can reshape the
+//! latency ledger, never stall the detector.
 
 pub mod batcher;
+pub mod clock;
 pub mod metrics;
 pub mod queue;
 pub mod server;
@@ -100,15 +131,19 @@ pub mod source;
 pub mod tier;
 
 pub use batcher::{Batch, BatcherConfig};
+pub use clock::{Clock, SystemClock, VirtualClock};
 pub use metrics::{LatencyHistogram, ServerMetrics};
 pub use queue::BoundedQueue;
-pub use server::{BatchRunner, EngineRunner, Server, ServerConfig, ServerReport};
+pub use server::{
+    worker_loop, BatchRunner, EngineRunner, Server, ServerConfig,
+    ServerReport,
+};
 pub use sharded::{
     BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,
     ShardedReport, ShardedServer,
 };
 pub use source::SourceConfig;
-pub use tier::TierMix;
+pub use tier::{TierBatch, TierClass, TierMix, TierPolicy};
 
 use std::time::Instant;
 

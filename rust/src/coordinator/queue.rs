@@ -64,6 +64,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking pop: `None` when the queue is currently empty
+    /// (whether open or closed) — the virtual-clock wait primitive.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().expect("queue lock").items.pop_front()
+    }
+
     /// Drain up to `max` items without blocking (batcher top-up).
     pub fn drain_up_to(&self, max: usize) -> Vec<T> {
         let mut inner = self.inner.lock().expect("queue lock");
@@ -130,6 +136,16 @@ mod tests {
         assert_eq!(q.push(2), Err(2));
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.try_pop(), None);
+        q.push(9).unwrap();
+        assert_eq!(q.try_pop(), Some(9));
+        q.close();
+        assert_eq!(q.try_pop(), None);
     }
 
     #[test]

@@ -2,11 +2,11 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::data::generators::Generator;
 
 use super::batcher::{next_batch, BatcherConfig};
+use super::clock::{Clock, SystemClock};
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
 use super::source::{self, SourceConfig};
@@ -95,8 +95,10 @@ pub struct ServerReport {
 
 impl ServerReport {
     /// Build a report from a (possibly merged) metrics block and the run's
-    /// wall time.  Shared by [`Server`] and the sharded roll-up.
-    pub(crate) fn from_metrics(metrics: &ServerMetrics, wall: f64) -> Self {
+    /// wall time.  Shared by [`Server`], the sharded roll-up, and the
+    /// virtual-clock test harness (which hand-builds metrics blocks and
+    /// asserts the derived percentiles exactly).
+    pub fn from_metrics(metrics: &ServerMetrics, wall: f64) -> Self {
         let completed = metrics.completed.load(Ordering::Relaxed);
         Self {
             generated: metrics.generated.load(Ordering::Relaxed),
@@ -141,40 +143,30 @@ impl ServerReport {
 /// batcher policy until the queue is closed and drained, run them on
 /// `runner`, record per-request metrics.  Shared by [`Server`] and
 /// [`super::ShardedServer`] — a shard's workers are exactly this loop on
-/// the shard's own queue and metrics block.
-pub(crate) fn worker_loop(
+/// the shard's own queue, metrics block, and (tier-resolved) batcher
+/// policy.  Every time-dependent step — the flush deadline inside
+/// [`next_batch`], the completion instant metrics are recorded at —
+/// reads `clock`, so the whole loop runs deterministically under a
+/// [`VirtualClock`](super::clock::VirtualClock) (public for exactly that
+/// test harness).
+pub fn worker_loop(
     runner: &mut dyn BatchRunner,
     queue: &Arc<BoundedQueue<Request>>,
     metrics: &ServerMetrics,
     batcher_cfg: &BatcherConfig,
+    clock: &dyn Clock,
 ) -> anyhow::Result<()> {
-    let cap = runner.max_batch().min(batcher_cfg.max_batch);
+    let cap = runner.max_batch().min(batcher_cfg.max_batch).max(1);
     let local_cfg = BatcherConfig {
         max_batch: cap,
         max_wait: batcher_cfg.max_wait,
     };
-    while let Some(batch) = next_batch(queue, &local_cfg) {
+    while let Some(batch) = next_batch(queue, &local_cfg, clock) {
         let n = batch.len();
         let packed = batch.packed_features();
-        for r in &batch.requests {
-            metrics
-                .queue_latency
-                .record(batch.formed_at - r.enqueued_at);
-        }
         let outputs = runner.run(&packed, n)?;
         anyhow::ensure!(outputs.len() == n, "runner output count");
-        let done = Instant::now();
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batch_samples
-            .fetch_add(n as u64, Ordering::Relaxed);
-        for (r, probs) in batch.requests.iter().zip(&outputs) {
-            metrics.total_latency.record(done - r.enqueued_at);
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
-            if predicted_label(probs) == r.label {
-                metrics.correct.fetch_add(1, Ordering::Relaxed);
-            }
-        }
+        metrics.observe_batch(&batch, &outputs, clock.now());
     }
     Ok(())
 }
@@ -194,11 +186,29 @@ impl Server {
     where
         F: Fn() -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
     {
+        Self::run_with_clock(cfg, generator, runner_factory, &SystemClock)
+    }
+
+    /// [`Server::run`] with an explicit serving [`Clock`].  Production
+    /// callers use [`run`](Self::run) (system time); tests may pass a
+    /// [`VirtualClock`](super::clock::VirtualClock) to make the batcher
+    /// deadline and metrics path deterministic (arrival *pacing* stays
+    /// real-time — the clock governs the deadline/latency path).
+    pub fn run_with_clock<F>(
+        cfg: ServerConfig,
+        generator: Box<dyn Generator>,
+        runner_factory: F,
+        clock: &dyn Clock,
+    ) -> anyhow::Result<ServerReport>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+    {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        cfg.batcher.validate()?;
         let queue: Arc<BoundedQueue<Request>> =
             Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(ServerMetrics::new());
-        let t0 = Instant::now();
+        let t0 = clock.now();
 
         // Workers signal readiness after engine construction so the event
         // source doesn't flood the queue while executables compile
@@ -220,7 +230,13 @@ impl Server {
                     });
                     ready.fetch_add(1, Ordering::SeqCst);
                     let mut runner = runner_or?;
-                    worker_loop(runner.as_mut(), &queue, &metrics, &batcher_cfg)
+                    worker_loop(
+                        runner.as_mut(),
+                        &queue,
+                        &metrics,
+                        &batcher_cfg,
+                        clock,
+                    )
                 }));
             }
 
@@ -229,7 +245,7 @@ impl Server {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
             // Source runs on this thread; closing the queue stops workers.
-            source::run(generator, cfg.source, &queue, &metrics, 0xEE77);
+            source::run(generator, cfg.source, &queue, &metrics, 0xEE77, clock);
             // Let the queue drain before closing (workers are pulling) —
             // unless every worker has already exited (e.g. init failure),
             // in which case nothing will ever drain it.
@@ -244,7 +260,8 @@ impl Server {
         });
         report?;
 
-        Ok(ServerReport::from_metrics(&metrics, t0.elapsed().as_secs_f64()))
+        let wall = (clock.now() - t0).as_secs_f64();
+        Ok(ServerReport::from_metrics(&metrics, wall))
     }
 }
 

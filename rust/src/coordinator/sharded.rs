@@ -43,10 +43,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::data::generators::Generator;
 
+use super::batcher::BatcherConfig;
+use super::clock::{Clock, SystemClock};
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
 use super::server::{worker_loop, BatchRunner, ServerConfig, ServerReport};
@@ -155,6 +156,15 @@ pub struct ShardedConfig {
     /// metrics roll-up ([`BackendTierStats`]); shards sharing a label are
     /// merged.  Empty = homogeneous session, no per-backend split.
     pub shard_backends: Vec<String>,
+    /// Per-shard batching policy (tier-aware batching): entry *i* is
+    /// shard *i*'s [`BatcherConfig`], letting a heterogeneous session
+    /// pin its trigger tier at strict batch-1 (`max_wait = 0`) while the
+    /// offline tier batches deep — both ends of the latency/throughput
+    /// curve in one session.  Resolve from backend tiers with
+    /// [`TierPolicy::for_backends`](super::tier::TierPolicy::for_backends)
+    /// or spell it explicitly (CLI `--batch-policy`).  Empty = every
+    /// shard uses `server.batcher` (the pre-tier behavior, bit for bit).
+    pub shard_batchers: Vec<BatcherConfig>,
     pub server: ServerConfig,
 }
 
@@ -165,8 +175,20 @@ impl Default for ShardedConfig {
             policy: ShardPolicy::HashId,
             tier_mix: TierMix::single(),
             shard_backends: Vec::new(),
+            shard_batchers: Vec::new(),
             server: ServerConfig::default(),
         }
+    }
+}
+
+impl ShardedConfig {
+    /// The batcher shard `shard` serves under: its `shard_batchers`
+    /// entry, or the shared `server.batcher` when none is set.
+    pub fn batcher_for(&self, shard: usize) -> BatcherConfig {
+        self.shard_batchers
+            .get(shard)
+            .copied()
+            .unwrap_or(self.server.batcher)
     }
 }
 
@@ -176,6 +198,8 @@ pub struct ShardStats {
     pub shard: usize,
     /// Backend label this shard serves (empty in homogeneous sessions).
     pub backend: String,
+    /// The batching policy this shard served under (tier-resolved).
+    pub batcher: BatcherConfig,
     /// Events the router admitted to this shard (its `generated` count).
     pub routed: u64,
     pub dropped: u64,
@@ -195,6 +219,10 @@ pub struct BackendTierStats {
     pub backend: String,
     /// Shard indices owning this backend.
     pub shards: Vec<usize>,
+    /// The batching policy this backend's shards served under (the
+    /// group's first shard — tier groups share one policy), so bench
+    /// rows can carry per-backend batcher columns.
+    pub batcher: BatcherConfig,
     /// Exact merged report over those shards' metrics.
     pub report: ServerReport,
 }
@@ -230,10 +258,12 @@ impl ShardedReport {
                     format!(" [{}]", s.backend)
                 };
                 out.push_str(&format!(
-                    "\n  shard {}{}: routed {} dropped {} completed {} \
-                     mean batch {:.2} p99 {:.1} µs",
+                    "\n  shard {}{}: batch<= {} wait {} µs, routed {} \
+                     dropped {} completed {} mean batch {:.2} p99 {:.1} µs",
                     s.shard,
                     label,
+                    s.batcher.max_batch,
+                    s.batcher.max_wait.as_micros(),
                     s.routed,
                     s.dropped,
                     s.completed,
@@ -244,10 +274,13 @@ impl ShardedReport {
         }
         for b in &self.per_backend {
             out.push_str(&format!(
-                "\nbackend {} (shards {:?}): completed {} dropped {} \
+                "\nbackend {} (shards {:?}, batch<= {} wait {} µs): \
+                 completed {} dropped {} \
                  p50 {:.1} µs p99 {:.1} µs throughput {:.0} ev/s",
                 b.backend,
                 b.shards,
+                b.batcher.max_batch,
+                b.batcher.max_wait.as_micros(),
                 b.report.completed,
                 b.report.dropped,
                 b.report.p50_latency_us,
@@ -278,6 +311,20 @@ impl ShardedServer {
     where
         F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
     {
+        Self::run_with_clock(cfg, generator, runner_factory, &SystemClock)
+    }
+
+    /// [`ShardedServer::run`] with an explicit serving [`Clock`] (the
+    /// deadline/latency timeline; arrival pacing stays real time).
+    pub fn run_with_clock<F>(
+        cfg: ShardedConfig,
+        generator: Box<dyn Generator>,
+        runner_factory: F,
+        clock: &dyn Clock,
+    ) -> anyhow::Result<ShardedReport>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+    {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
         anyhow::ensure!(
             cfg.server.workers >= 1,
@@ -291,13 +338,44 @@ impl ShardedServer {
             cfg.shard_backends.len(),
             cfg.shards
         );
+        anyhow::ensure!(
+            cfg.shard_batchers.is_empty()
+                || cfg.shard_batchers.len() == cfg.shards,
+            "shard_batchers names {} policies for {} shards \
+             (need one batcher per shard, or none)",
+            cfg.shard_batchers.len(),
+            cfg.shards
+        );
+        cfg.server.batcher.validate()?;
+        for (shard, batcher) in cfg.shard_batchers.iter().enumerate() {
+            batcher
+                .validate()
+                .map_err(|e| anyhow::anyhow!("shard {shard}: {e}"))?;
+        }
+        // Shards sharing a backend label must share a batching policy:
+        // the per-backend roll-up reports one batcher per label, and its
+        // percentiles must not blend measurements taken under different
+        // policies (the schema-v3 bench columns would lie).
+        for (shard, label) in cfg.shard_backends.iter().enumerate() {
+            let first = cfg
+                .shard_backends
+                .iter()
+                .position(|l| l == label)
+                .expect("label exists at its own index");
+            anyhow::ensure!(
+                cfg.batcher_for(first) == cfg.batcher_for(shard),
+                "backend {label:?}: shards {first} and {shard} serve \
+                 under different batchers (the per-backend roll-up \
+                 needs one policy per label)"
+            );
+        }
         let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.shards)
             .map(|_| Arc::new(BoundedQueue::new(cfg.server.queue_capacity)))
             .collect();
         let metrics: Vec<Arc<ServerMetrics>> = (0..cfg.shards)
             .map(|_| Arc::new(ServerMetrics::new()))
             .collect();
-        let t0 = Instant::now();
+        let t0 = clock.now();
 
         // Same readiness gate as `Server::run`: the tap opens only after
         // every worker on every shard has built its engine.
@@ -313,7 +391,10 @@ impl ShardedServer {
                     let queue = queues[shard].clone();
                     let shard_metrics = metrics[shard].clone();
                     let factory = &runner_factory;
-                    let batcher_cfg = cfg.server.batcher;
+                    // Tier-aware batching: each shard serves under its
+                    // own policy (trigger shards batch-1, offline shards
+                    // deep), falling back to the shared config.
+                    let batcher_cfg = cfg.batcher_for(shard);
                     let ready = ready.clone();
                     shard_handles.push(scope.spawn(
                         move || -> anyhow::Result<()> {
@@ -330,6 +411,7 @@ impl ShardedServer {
                                 &queue,
                                 &shard_metrics,
                                 &batcher_cfg,
+                                clock,
                             )
                         },
                     ));
@@ -352,6 +434,7 @@ impl ShardedServer {
                 cfg.server.source,
                 0xEE77,
                 &cfg.tier_mix,
+                clock,
                 |request| {
                     let shard = router.route(&request);
                     metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
@@ -383,7 +466,7 @@ impl ShardedServer {
             Ok(())
         });
         run?;
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = (clock.now() - t0).as_secs_f64();
 
         // Shared roll-up: counters summed, histogram buckets merged.
         let merged = ServerMetrics::new();
@@ -400,6 +483,7 @@ impl ShardedServer {
                     .get(shard)
                     .cloned()
                     .unwrap_or_default(),
+                batcher: cfg.batcher_for(shard),
                 routed: m.generated.load(Ordering::Relaxed),
                 dropped: m.dropped.load(Ordering::Relaxed),
                 completed: m.completed.load(Ordering::Relaxed),
@@ -428,6 +512,7 @@ impl ShardedServer {
                 }
                 BackendTierStats {
                     backend,
+                    batcher: cfg.batcher_for(shard_ids[0]),
                     report: ServerReport::from_metrics(&tier_metrics, wall),
                     shards: shard_ids,
                 }
@@ -447,9 +532,9 @@ impl ShardedServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BatcherConfig, SourceConfig};
+    use crate::coordinator::SourceConfig;
     use crate::data::generators::TopTagging;
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
 
     fn req(id: u64, route_key: u64) -> Request {
         Request {
@@ -548,6 +633,7 @@ mod tests {
                 policy: ShardPolicy::RoundRobin,
                 tier_mix: TierMix::single(),
                 shard_backends: Vec::new(),
+                shard_batchers: Vec::new(),
                 server: ServerConfig {
                     workers: 2,
                     queue_capacity: 8192,
@@ -604,6 +690,7 @@ mod tests {
             policy: ShardPolicy::ModelKey,
             tier_mix: TierMix::new(&[0.75, 0.25], 0xC1A5).unwrap(),
             shard_backends: vec!["fixed".into(), "float".into()],
+            shard_batchers: Vec::new(),
             server: ServerConfig {
                 workers: 1,
                 queue_capacity: 8192,
@@ -655,6 +742,138 @@ mod tests {
         let rendered = report.render();
         assert!(rendered.contains("backend fixed"), "{rendered}");
         assert!(rendered.contains("[float]"), "{rendered}");
+    }
+
+    /// Tier-aware batching: a shard under a batch-1 policy must form
+    /// exactly one batch per request while its sibling batches deeper —
+    /// one session holding both ends of the latency/throughput curve.
+    #[test]
+    fn per_shard_batchers_pin_trigger_shard_at_batch_one() {
+        use crate::coordinator::tier::TierPolicy;
+        let backends = vec!["fixed".to_string(), "float".to_string()];
+        let cfg = ShardedConfig {
+            shards: 2,
+            policy: ShardPolicy::ModelKey,
+            tier_mix: TierMix::new(&[0.75, 0.25], 0xC1A5).unwrap(),
+            shard_backends: backends.clone(),
+            shard_batchers: TierPolicy::for_backends(&backends).batchers(),
+            server: ServerConfig {
+                workers: 1,
+                queue_capacity: 8192,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                source: SourceConfig {
+                    rate_hz: 1_000_000.0,
+                    poisson: false,
+                    n_events: 1500,
+                },
+            },
+        };
+        let report =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(3)), |_| {
+                Ok(Box::new(ConstRunner))
+            })
+            .unwrap();
+        let trigger = &report.per_shard[0];
+        assert_eq!(trigger.batcher.max_batch, 1);
+        assert!(trigger.batcher.max_wait.is_zero());
+        assert_eq!(
+            trigger.batches, trigger.completed,
+            "trigger shard must serve strict batch-1"
+        );
+        if trigger.completed > 0 {
+            assert!((trigger.mean_batch - 1.0).abs() < 1e-12);
+        }
+        let offline = &report.per_shard[1];
+        assert_eq!(offline.batcher.max_batch, 64);
+        assert_eq!(report.per_backend[0].batcher.max_batch, 1);
+        assert_eq!(report.per_backend[1].batcher.max_batch, 64);
+        let rendered = report.render();
+        assert!(rendered.contains("batch<= 1 wait 0 µs"), "{rendered}");
+    }
+
+    #[test]
+    fn batchers_must_cover_every_shard_and_be_flushable() {
+        let cfg = ShardedConfig {
+            shards: 2,
+            shard_batchers: vec![BatcherConfig::default()],
+            ..Default::default()
+        };
+        let result =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |_| {
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            });
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("one batcher per shard"), "{err}");
+
+        // Regression: max_batch = 0 must be rejected up front, not spin
+        // or silently degrade at serve time.
+        let cfg = ShardedConfig {
+            shards: 1,
+            shard_batchers: vec![BatcherConfig {
+                max_batch: 0,
+                max_wait: Duration::ZERO,
+            }],
+            ..Default::default()
+        };
+        let result =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |_| {
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            });
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("max_batch must be >= 1"), "{err}");
+    }
+
+    /// Shards replicating one backend label must share a batching
+    /// policy: the per-backend roll-up reports one batcher per label.
+    #[test]
+    fn shards_sharing_a_label_must_share_a_batcher() {
+        let cfg = ShardedConfig {
+            shards: 2,
+            shard_backends: vec!["fixed".into(), "fixed".into()],
+            shard_batchers: vec![
+                BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::ZERO,
+                },
+                BatcherConfig {
+                    max_batch: 64,
+                    max_wait: Duration::from_micros(2_000),
+                },
+            ],
+            ..Default::default()
+        };
+        let result =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |_| {
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            });
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("one policy per label"), "{err}");
+
+        // ... while replicated labels under one shared policy are fine.
+        let cfg = ShardedConfig {
+            shards: 2,
+            policy: ShardPolicy::RoundRobin,
+            shard_backends: vec!["fixed".into(), "fixed".into()],
+            server: ServerConfig {
+                source: SourceConfig {
+                    rate_hz: 1e6,
+                    poisson: false,
+                    n_events: 100,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report =
+            ShardedServer::run(cfg, Box::new(TopTagging::new(1)), |_| {
+                Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+            })
+            .unwrap();
+        assert_eq!(report.per_backend.len(), 1);
+        assert_eq!(report.per_backend[0].shards, vec![0, 1]);
     }
 
     #[test]

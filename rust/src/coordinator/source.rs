@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 use crate::data::generators::Generator;
 use crate::util::rng::Rng;
 
+use super::clock::{Clock, SystemClock};
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
 use super::tier::TierMix;
@@ -50,12 +51,18 @@ impl Default for SourceConfig {
 /// contract above extends to every tier sub-stream ([`TierMix::single`]
 /// reproduces the old all-zero keys bit for bit).
 ///
+/// `clock` stamps each request's `enqueued_at` (the anchor of every
+/// latency percentile) so virtual-clock sessions stay on one timeline;
+/// arrival *pacing* is always real time — a virtual clock must never be
+/// able to stall the detector.
+///
 /// Returns the number of generated events.
 pub fn run_with<F>(
     mut generator: Box<dyn Generator>,
     cfg: SourceConfig,
     seed: u64,
     tiers: &TierMix,
+    clock: &dyn Clock,
     mut sink: F,
 ) -> usize
 where
@@ -90,7 +97,7 @@ where
             features: event.features,
             label: event.label,
             route_key: tiers.stamp(id as u64),
-            enqueued_at: Instant::now(),
+            enqueued_at: clock.now(),
         });
     }
     cfg.n_events
@@ -106,8 +113,9 @@ pub fn run(
     queue: &Arc<BoundedQueue<Request>>,
     metrics: &Arc<ServerMetrics>,
     seed: u64,
+    clock: &dyn Clock,
 ) -> usize {
-    run_with(generator, cfg, seed, &TierMix::single(), |request| {
+    run_with(generator, cfg, seed, &TierMix::single(), clock, |request| {
         metrics.generated.fetch_add(1, Ordering::Relaxed);
         if queue.push(request).is_err() {
             metrics.dropped.fetch_add(1, Ordering::Relaxed);
@@ -130,7 +138,14 @@ mod tests {
             n_events: 500,
         };
         let t0 = Instant::now();
-        let n = run(Box::new(TopTagging::new(1)), cfg, &queue, &metrics, 2);
+        let n = run(
+            Box::new(TopTagging::new(1)),
+            cfg,
+            &queue,
+            &metrics,
+            2,
+            &SystemClock,
+        );
         let elapsed = t0.elapsed();
         assert_eq!(n, 500);
         assert_eq!(metrics.generated.load(Ordering::Relaxed), 500);
@@ -152,11 +167,18 @@ mod tests {
         let collect = |drop_odd: bool| {
             let mut got: Vec<(u64, Vec<f32>, u32)> = Vec::new();
             let tiers = TierMix::single();
-            run_with(Box::new(TopTagging::new(9)), cfg, 77, &tiers, |r| {
-                if !(drop_odd && r.id % 2 == 1) {
-                    got.push((r.id, r.features, r.label));
-                }
-            });
+            run_with(
+                Box::new(TopTagging::new(9)),
+                cfg,
+                77,
+                &tiers,
+                &SystemClock,
+                |r| {
+                    if !(drop_odd && r.id % 2 == 1) {
+                        got.push((r.id, r.features, r.label));
+                    }
+                },
+            );
             got
         };
         let all = collect(false);
@@ -180,9 +202,16 @@ mod tests {
         };
         let mix = TierMix::new(&[0.75, 0.25], 9).unwrap();
         let mut keys = Vec::new();
-        run_with(Box::new(TopTagging::new(1)), cfg, 5, &mix, |r| {
-            keys.push((r.id, r.route_key));
-        });
+        run_with(
+            Box::new(TopTagging::new(1)),
+            cfg,
+            5,
+            &mix,
+            &SystemClock,
+            |r| {
+                keys.push((r.id, r.route_key));
+            },
+        );
         assert_eq!(keys.len(), 256);
         assert!(keys.iter().all(|&(_, k)| k < 2));
         assert!(keys.iter().any(|&(_, k)| k == 0));
@@ -201,7 +230,14 @@ mod tests {
             poisson: false,
             n_events: 100,
         };
-        run(Box::new(TopTagging::new(3)), cfg, &queue, &metrics, 4);
+        run(
+            Box::new(TopTagging::new(3)),
+            cfg,
+            &queue,
+            &metrics,
+            4,
+            &SystemClock,
+        );
         assert_eq!(metrics.generated.load(Ordering::Relaxed), 100);
         assert_eq!(metrics.dropped.load(Ordering::Relaxed), 90);
         assert_eq!(queue.len(), 10);

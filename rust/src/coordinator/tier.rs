@@ -20,10 +20,20 @@
 //!   the mixed-vs-standalone equivalence suite
 //!   (`tests/backend_routing.rs`) possible.
 //!
+//! Tiers also carry a **batching policy** ([`TierPolicy`]): the trigger
+//! tier is pinned at strict batch-1 (`max_wait = 0`) while the offline
+//! tier batches deep, so one heterogeneous session holds both ends of
+//! the latency/throughput curve at once (the paper's §5.2 trade).  The
+//! CLI spells it `--batch-policy trigger:1:0,offline:64:2000`.
+//!
 //! [`Request::route_key`]: super::Request::route_key
 //! [`ShardPolicy::ModelKey`]: super::ShardPolicy::ModelKey
 
+use std::time::Duration;
+
 use crate::util::rng::splitmix64;
+
+use super::batcher::BatcherConfig;
 
 /// A configurable traffic-class mix: per-tier fractions that sum to 1.
 /// `stamp(id)` assigns each request id a tier index in `0..tiers()`,
@@ -142,6 +152,156 @@ impl Default for TierMix {
     }
 }
 
+/// Latency class of a backend: which end of the paper's §5.2
+/// batch-vs-latency curve its shard should hold.  This is what resolves
+/// a backend name to a default per-shard [`BatcherConfig`] when the
+/// operator does not pin one with `--batch-policy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierClass {
+    /// The trigger path: strict batch-1, never wait — a trigger never
+    /// trades one event's latency for throughput.
+    Trigger,
+    /// The offline path: batch deep, amortize dispatch — latency is
+    /// negotiable, throughput is the budget.
+    Offline,
+}
+
+impl TierClass {
+    /// Class of a registered backend: the bit-accurate engines (`fixed`,
+    /// and the reserved `pjrt` slot standing in for the FPGA design) are
+    /// trigger-path; everything else serves offline traffic.
+    pub fn for_backend(backend: &str) -> Self {
+        match backend {
+            "fixed" | "pjrt" => Self::Trigger,
+            _ => Self::Offline,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Trigger => "trigger",
+            Self::Offline => "offline",
+        }
+    }
+
+    /// The class's default batcher: trigger is pinned at batch-1 /
+    /// zero-wait; offline batches deep (64 requests or a 2 ms deadline,
+    /// whichever first).
+    pub fn default_batcher(self) -> BatcherConfig {
+        match self {
+            Self::Trigger => BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            Self::Offline => BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(2_000),
+            },
+        }
+    }
+}
+
+/// One named per-shard batching policy entry.
+#[derive(Debug, Clone)]
+pub struct TierBatch {
+    /// Display label (`trigger`, `offline`, or any operator-chosen
+    /// name); purely informational — position selects the shard.
+    pub name: String,
+    pub batcher: BatcherConfig,
+}
+
+/// Per-shard batching policy: entry *i* is shard *i*'s batcher, which
+/// under [`ShardPolicy::ModelKey`](super::ShardPolicy::ModelKey) routing
+/// is tier *i*'s batcher.  Parsed from the CLI grammar
+///
+/// ```text
+/// --batch-policy <name>:<max_batch>:<max_wait_us>[,<name>:<max_batch>:<max_wait_us>...]
+/// ```
+///
+/// e.g. `trigger:1:0,offline:64:2000` — shard 0 serves strict batch-1,
+/// shard 1 batches up to 64 with a 2 ms deadline.  `max_batch` must be
+/// >= 1 (a zero-size batch can never flush; rejected at parse time).
+#[derive(Debug, Clone)]
+pub struct TierPolicy {
+    pub entries: Vec<TierBatch>,
+}
+
+impl TierPolicy {
+    /// Parse the CLI spelling (see the type-level grammar).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let fields: Vec<&str> = part.split(':').collect();
+            anyhow::ensure!(
+                fields.len() == 3,
+                "batch-policy entry {part:?} is not \
+                 <name>:<max_batch>:<max_wait_us>"
+            );
+            let name = fields[0].trim();
+            anyhow::ensure!(
+                !name.is_empty(),
+                "batch-policy entry {part:?} has an empty tier name"
+            );
+            let max_batch: usize = fields[1].trim().parse().map_err(|e| {
+                anyhow::anyhow!("batch-policy {name}: max_batch {:?}: {e}", fields[1])
+            })?;
+            let wait_us: u64 = fields[2].trim().parse().map_err(|e| {
+                anyhow::anyhow!("batch-policy {name}: max_wait_us {:?}: {e}", fields[2])
+            })?;
+            let batcher = BatcherConfig::new(
+                max_batch,
+                Duration::from_micros(wait_us),
+            )
+            .map_err(|e| anyhow::anyhow!("batch-policy {name}: {e}"))?;
+            entries.push(TierBatch {
+                name: name.to_string(),
+                batcher,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "batch-policy needs >= 1 entry");
+        Ok(Self { entries })
+    }
+
+    /// Default policy for a heterogeneous session: each backend's
+    /// [`TierClass`] default, in shard order.
+    pub fn for_backends<S: AsRef<str>>(backends: &[S]) -> Self {
+        let entries = backends
+            .iter()
+            .map(|b| {
+                let class = TierClass::for_backend(b.as_ref());
+                TierBatch {
+                    name: class.name().to_string(),
+                    batcher: class.default_batcher(),
+                }
+            })
+            .collect();
+        Self { entries }
+    }
+
+    /// The per-shard batcher configs, in shard order (what
+    /// `ShardedConfig::shard_batchers` takes).
+    pub fn batchers(&self) -> Vec<BatcherConfig> {
+        self.entries.iter().map(|e| e.batcher).collect()
+    }
+
+    /// Render back to the CLI grammar (for banners and reports).
+    pub fn describe(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| {
+                format!(
+                    "{}:{}:{}",
+                    e.name,
+                    e.batcher.max_batch,
+                    e.batcher.max_wait.as_micros()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +360,125 @@ mod tests {
             (0..4096u64).any(|id| c.stamp(id) != a.stamp(id)),
             "seed must repartition the stream"
         );
+    }
+
+    /// A one-entry explicit mix must behave exactly like
+    /// `TierMix::single()`: one tier, every request keyed 0.
+    #[test]
+    fn explicit_single_tier_mix_matches_single() {
+        let mix = TierMix::new(&[1.0], 99).unwrap();
+        assert_eq!(mix.tiers(), 1);
+        assert!(mix.is_single());
+        assert!((mix.fraction(0) - 1.0).abs() < 1e-12);
+        for id in 0..1024u64 {
+            assert_eq!(mix.stamp(id), 0, "id {id}");
+        }
+    }
+
+    /// `1.0,0.0` names a tier that can never receive traffic — a config
+    /// error (a backend would sit idle silently), not a valid mix.
+    #[test]
+    fn zero_share_tiers_rejected_even_when_sum_is_one() {
+        for spec in ["1.0,0.0", "0.0,1.0", "0.5,0.0,0.5"] {
+            let err = TierMix::parse(spec, 0).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("positive"),
+                "{spec}: {err:#}"
+            );
+        }
+    }
+
+    /// Near-boundary stamping: tiny-but-positive fractions, fractions
+    /// whose float cumulative sum lands just shy of 1, and many-tier
+    /// mixes must all keep every stamp strictly inside `0..tiers()` —
+    /// the forced final cumulative bound of 1.0 guarantees it.
+    #[test]
+    fn stamp_stays_in_range_near_fraction_boundaries() {
+        let cases: Vec<TierMix> = vec![
+            TierMix::new(&[1e-9, 1.0 - 1e-9], 7).unwrap(),
+            TierMix::new(&[1.0 - 1e-9, 1e-9], 7).unwrap(),
+            // 10 × 0.1 accumulates float error near the top boundary.
+            TierMix::new(&[0.1; 10], 3).unwrap(),
+            TierMix::new(&[1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0], 1).unwrap(),
+            TierMix::uniform(7, 5).unwrap(),
+        ];
+        for (case, mix) in cases.iter().enumerate() {
+            let tiers = mix.tiers() as u64;
+            for id in 0..8192u64 {
+                let t = mix.stamp(id);
+                assert!(t < tiers, "case {case} id {id}: tier {t}");
+            }
+        }
+        // The dominant tier of a (1e-9, rest) mix takes essentially all
+        // traffic; the starved tier keeps its index valid regardless.
+        let skewed = TierMix::new(&[1e-9, 1.0 - 1e-9], 7).unwrap();
+        let tier1 = (0..8192u64).filter(|&id| skewed.stamp(id) == 1).count();
+        assert!(tier1 > 8000, "dominant tier got {tier1}/8192");
+    }
+
+    #[test]
+    fn sums_away_from_one_rejected() {
+        for bad in [&[0.2, 0.2][..], &[0.7, 0.7][..], &[0.9999, 0.0002][..]] {
+            assert!(TierMix::new(bad, 0).is_err(), "{bad:?}");
+        }
+        // ... while 1e-7-level float noise around 1 is normalized away.
+        assert!(TierMix::new(&[0.3000000499, 0.7], 0).is_ok());
+    }
+
+    #[test]
+    fn tier_class_resolves_backends() {
+        assert_eq!(TierClass::for_backend("fixed"), TierClass::Trigger);
+        assert_eq!(TierClass::for_backend("pjrt"), TierClass::Trigger);
+        assert_eq!(TierClass::for_backend("float"), TierClass::Offline);
+        let trig = TierClass::Trigger.default_batcher();
+        assert_eq!(trig.max_batch, 1);
+        assert!(trig.max_wait.is_zero());
+        let off = TierClass::Offline.default_batcher();
+        assert!(off.max_batch > 1);
+        assert!(!off.max_wait.is_zero());
+    }
+
+    #[test]
+    fn tier_policy_parse_roundtrip() {
+        let policy = TierPolicy::parse("trigger:1:0, offline:64:2000").unwrap();
+        assert_eq!(policy.entries.len(), 2);
+        assert_eq!(policy.entries[0].name, "trigger");
+        assert_eq!(policy.entries[0].batcher.max_batch, 1);
+        assert!(policy.entries[0].batcher.max_wait.is_zero());
+        assert_eq!(policy.entries[1].batcher.max_batch, 64);
+        assert_eq!(
+            policy.entries[1].batcher.max_wait,
+            Duration::from_micros(2000)
+        );
+        assert_eq!(policy.describe(), "trigger:1:0,offline:64:2000");
+        assert_eq!(policy.batchers().len(), 2);
+    }
+
+    #[test]
+    fn tier_policy_rejects_malformed_and_zero_batch_entries() {
+        assert!(TierPolicy::parse("").is_err());
+        assert!(TierPolicy::parse("trigger:1").is_err(), "missing field");
+        assert!(TierPolicy::parse("trigger:1:0:9").is_err(), "extra field");
+        assert!(TierPolicy::parse(":1:0").is_err(), "empty name");
+        assert!(TierPolicy::parse("t:zebra:0").is_err(), "bad max_batch");
+        assert!(TierPolicy::parse("t:1:zebra").is_err(), "bad wait");
+        // The max_batch = 0 config that used to reach the batcher.
+        let err = TierPolicy::parse("trigger:0:0").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("max_batch must be >= 1"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn tier_policy_for_backends_matches_classes() {
+        let policy =
+            TierPolicy::for_backends(&["fixed".to_string(), "float".into()]);
+        assert_eq!(policy.entries[0].name, "trigger");
+        assert_eq!(policy.entries[0].batcher.max_batch, 1);
+        assert_eq!(policy.entries[1].name, "offline");
+        assert_eq!(policy.entries[1].batcher.max_batch, 64);
+        assert_eq!(policy.describe(), "trigger:1:0,offline:64:2000");
     }
 
     #[test]

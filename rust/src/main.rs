@@ -26,6 +26,12 @@
 //!   with `--tier-mix 0.9,0.1` setting each tier's traffic share and the
 //!   report splitting p50/p99 + throughput per backend.  Requires
 //!   `--shard-policy model-key` so tiers reach their backends.
+//! * `--batch-policy trigger:1:0,offline:64:2000` — per-shard batching
+//!   (grammar: comma-separated `<name>:<max_batch>:<max_wait_us>`, one
+//!   entry per shard).  Heterogeneous sessions default to each backend's
+//!   tier class: trigger backends (`fixed`, `pjrt`) pinned at strict
+//!   batch-1 / zero-wait, offline backends batching deep — one session
+//!   holding both ends of the latency/throughput curve.
 //! * `--workers` / `--engine-parallelism` — threads per shard and per
 //!   batch; total budget is `shards × workers × engine-parallelism`.
 //!
@@ -43,7 +49,7 @@ use std::time::Duration;
 use rnn_hls::config::{Fig2Config, ServeCliConfig, SweepConfig};
 use rnn_hls::coordinator::{
     BatcherConfig, ServerConfig, ShardPolicy, ShardedConfig, ShardedServer,
-    SourceConfig, TierMix,
+    SourceConfig, TierMix, TierPolicy,
 };
 use rnn_hls::data::generators;
 use rnn_hls::fixed::FixedSpec;
@@ -308,8 +314,17 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             "per-batch threads inside each rust engine",
             Some("1"),
         )
-        .opt("max-batch", "dynamic batcher size cap", Some("10"))
-        .opt("max-wait-us", "batching deadline (µs)", Some("200"))
+        .opt("max-batch", "dynamic batcher size cap (>= 1)", Some("10"))
+        .opt("max-wait-us", "batching deadline (µs; 0 = strict batch-1)", Some("200"))
+        .opt(
+            "batch-policy",
+            "per-shard batching: comma-separated name:max_batch:max_wait_us \
+             entries, one per shard (e.g. trigger:1:0,offline:64:2000); \
+             empty = tier defaults with --backends (trigger backends \
+             batch-1/zero-wait, offline deep), --max-batch/--max-wait-us \
+             otherwise",
+            Some(""),
+        )
         .opt("queue", "per-shard queue capacity (drop beyond)", Some("4096"))
         .opt("width", "fixed engine: total bits", Some("16"))
         .opt("integer", "fixed engine: integer bits", Some("6"))
@@ -346,6 +361,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         max_wait: Duration::from_micros(
             args.parse_num("max-wait-us", d.max_wait.as_micros() as u64)?,
         ),
+        batch_policy: args.get_or("batch-policy", &d.batch_policy).to_string(),
         queue_capacity: args.parse_num("queue", d.queue_capacity)?,
     };
     let key = cli.model_key.clone();
@@ -397,20 +413,62 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         mix
     };
 
+    let shard_backend_names: Vec<String> =
+        specs.iter().map(|s| s.name().to_string()).collect();
+    // Tier-aware batching: an explicit --batch-policy pins one batcher
+    // per shard; heterogeneous sessions default to each backend's tier
+    // class (trigger batch-1/zero-wait, offline deep); homogeneous
+    // sessions keep the shared --max-batch/--max-wait-us everywhere.
+    let batch_policy = if !cli.batch_policy.is_empty() {
+        let parsed = TierPolicy::parse(&cli.batch_policy)?;
+        anyhow::ensure!(
+            parsed.entries.len() == cli.shards,
+            "--batch-policy names {} tiers but --shards is {} \
+             (one name:max_batch:max_wait_us entry per shard)",
+            parsed.entries.len(),
+            cli.shards
+        );
+        Some(parsed)
+    } else if specs.len() > 1 {
+        // Tier defaults supersede the shared batcher knobs for mixed
+        // sessions; an operator who spelled those knobs out explicitly
+        // must hear that they were overridden (use --batch-policy to
+        // pin per-shard values).  Args::parse folds defaults into the
+        // parsed map, so explicitness is read off the raw arg list.
+        let explicit_batch_flags = rest.iter().any(|a| {
+            a == "--max-batch"
+                || a == "--max-wait-us"
+                || a.starts_with("--max-batch=")
+                || a.starts_with("--max-wait-us=")
+        });
+        if explicit_batch_flags {
+            println!(
+                "WARNING: --max-batch/--max-wait-us are overridden by \
+                 tier defaults in a multi-backend session; pass \
+                 --batch-policy to pin per-shard batching explicitly"
+            );
+        }
+        Some(TierPolicy::for_backends(&shard_backend_names))
+    } else {
+        None
+    };
+
     let benchmark = key.split('_').next().unwrap_or(&key).to_string();
     let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
     let cfg = ShardedConfig {
         shards: cli.shards,
         policy,
         tier_mix,
-        shard_backends: specs.iter().map(|s| s.name().to_string()).collect(),
+        shard_backends: shard_backend_names,
+        shard_batchers: batch_policy
+            .as_ref()
+            .map(TierPolicy::batchers)
+            .unwrap_or_default(),
         server: ServerConfig {
             workers: cli.workers,
             queue_capacity: cli.queue_capacity,
-            batcher: BatcherConfig {
-                max_batch: cli.max_batch,
-                max_wait: cli.max_wait,
-            },
+            // Validated constructor: rejects --max-batch 0 up front.
+            batcher: BatcherConfig::new(cli.max_batch, cli.max_wait)?,
             source: SourceConfig {
                 rate_hz: cli.rate_hz,
                 poisson: !args.has("fixed-interval"),
@@ -430,25 +488,38 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             mix.join(",")
         )
     };
+    let batching_desc = match &batch_policy {
+        Some(policy) => format!("batch policy [{}]", policy.describe()),
+        None => format!(
+            "batch<= {}, wait {} µs",
+            cfg.server.batcher.max_batch,
+            cfg.server.batcher.max_wait.as_micros()
+        ),
+    };
     println!(
         "serving {key} via {engine_desc}: rate {} ev/s, {} events, \
          {} shards ({} routing) × {} workers × {engine_parallelism} engine \
-         threads, batch<= {}, wait {} µs",
+         threads, {batching_desc}",
         cfg.server.source.rate_hz,
         cfg.server.source.n_events,
         cfg.shards,
         cfg.policy.name(),
         cfg.server.workers,
-        cfg.server.batcher.max_batch,
-        cfg.server.batcher.max_wait.as_micros()
     );
 
+    // Each EngineRunner's cap follows its shard's (tier-resolved)
+    // batcher, so a deep-batching offline tier is not silently clamped
+    // to the shared --max-batch.  (The pjrt branch sizes itself from
+    // its AOT batch buckets instead.)
+    let runner_caps: Vec<usize> = (0..cfg.shards)
+        .map(|shard| cfg.batcher_for(shard).max_batch)
+        .collect();
     let report = if !specs.is_empty() {
         // Heterogeneous: each shard builds its registered backend over
         // the shared weights; an unbuildable slot (the stubbed pjrt)
         // fails engine init with the registry's clear error.
         let weights = weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
-        let max_batch = cfg.server.batcher.max_batch;
+        let runner_caps = runner_caps.clone();
         ShardedServer::run(cfg, generator, move |shard| {
             let engine = specs[shard].build(&BackendCtx {
                 weights: &weights,
@@ -456,7 +527,8 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 parallelism: engine_parallelism,
             })?;
             Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
-                engine, max_batch,
+                engine,
+                runner_caps[shard],
             )) as Box<dyn rnn_hls::coordinator::BatchRunner>)
         })?
     } else {
@@ -483,19 +555,22 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             }
             "fixed" | "float" => {
                 // One construction path for a backend name: the same
-                // registry row the heterogeneous branch uses.
+                // registry row the heterogeneous branch uses (a
+                // homogeneous session may still pin per-shard policies
+                // via --batch-policy, hence the shared runner_caps).
                 let spec = BackendSpec::parse(&engine_kind)?;
                 let weights =
                     weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
-                let max_batch = cfg.server.batcher.max_batch;
-                ShardedServer::run(cfg, generator, move |_shard| {
+                let runner_caps = runner_caps.clone();
+                ShardedServer::run(cfg, generator, move |shard| {
                     let engine = spec.build(&BackendCtx {
                         weights: &weights,
                         fixed_spec: FixedSpec::new(width, integer),
                         parallelism: engine_parallelism,
                     })?;
                     Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
-                        engine, max_batch,
+                        engine,
+                        runner_caps[shard],
                     ))
                         as Box<dyn rnn_hls::coordinator::BatchRunner>)
                 })?

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use crate::coordinator::{
     BatcherConfig, EngineRunner, ServerConfig, ShardPolicy, ShardedConfig,
-    ShardedServer, SourceConfig, TierMix,
+    ShardedServer, SourceConfig, TierMix, TierPolicy,
 };
 use crate::data::generators;
 use crate::fixed::FixedSpec;
@@ -148,6 +148,12 @@ pub struct ServingBenchRow {
     /// sessions each backend tier contributes its own row, so per-tier
     /// latency stays comparable across PRs instead of blending.
     pub backend: String,
+    /// Batcher size cap the row's shards served under (schema v3: the
+    /// per-backend batcher columns — a row's latency is only comparable
+    /// across PRs together with its batching policy).
+    pub max_batch: usize,
+    /// Batcher deadline (µs) the row's shards served under.
+    pub max_wait_us: u64,
     pub samples_per_sec: f64,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -176,6 +182,7 @@ pub fn shard_sweep(
                 policy,
                 tier_mix: TierMix::single(),
                 shard_backends: Vec::new(),
+                shard_batchers: Vec::new(),
                 server: ServerConfig {
                     workers: workers_per_shard,
                     queue_capacity: 8192,
@@ -194,6 +201,9 @@ pub fn shard_sweep(
             };
             let weights = weights.clone();
             let generator = generators::for_benchmark("top", 0xBEEF)?;
+            // Batcher columns come from the measured config itself, so
+            // tuning the sweep can never desynchronize the artifact.
+            let batcher = cfg.server.batcher;
             let report = ShardedServer::run(cfg, generator, move |_shard| {
                 let engine = FloatEngine::new(&weights)?;
                 Ok(Box::new(EngineRunner::new(Box::new(engine), 32))
@@ -208,6 +218,8 @@ pub fn shard_sweep(
                 policy: policy.name().to_string(),
                 workers_per_shard,
                 backend: "float".to_string(),
+                max_batch: batcher.max_batch,
+                max_wait_us: batcher.max_wait.as_micros() as u64,
                 samples_per_sec: report.merged.throughput_hz,
                 p50_us: report.merged.p50_latency_us,
                 p99_us: report.merged.p99_latency_us,
@@ -256,6 +268,7 @@ pub fn mixed_backend_sweep(
             policy: ShardPolicy::ModelKey,
             tier_mix: TierMix::single(),
             shard_backends: vec![name.to_string()],
+            shard_batchers: Vec::new(),
             server,
         };
         let generator = generators::for_benchmark("top", 0xBEEF)?;
@@ -275,6 +288,8 @@ pub fn mixed_backend_sweep(
             policy: "model-key".to_string(),
             workers_per_shard,
             backend: name.to_string(),
+            max_batch: server.batcher.max_batch,
+            max_wait_us: server.batcher.max_wait.as_micros() as u64,
             samples_per_sec: report.merged.throughput_hz,
             p50_us: report.merged.p50_latency_us,
             p99_us: report.merged.p99_latency_us,
@@ -291,6 +306,7 @@ pub fn mixed_backend_sweep(
         policy: ShardPolicy::ModelKey,
         tier_mix: TierMix::new(&[0.9, 0.1], 0x7135)?,
         shard_backends: specs.iter().map(|s| s.name().to_string()).collect(),
+        shard_batchers: Vec::new(),
         server,
     };
     let generator = generators::for_benchmark("top", 0xBEEF)?;
@@ -311,6 +327,85 @@ pub fn mixed_backend_sweep(
             policy: "model-key".to_string(),
             workers_per_shard,
             backend: tier.backend.clone(),
+            max_batch: tier.batcher.max_batch,
+            max_wait_us: tier.batcher.max_wait.as_micros() as u64,
+            samples_per_sec: tier.report.throughput_hz,
+            p50_us: tier.report.p50_latency_us,
+            p99_us: tier.report.p99_latency_us,
+            completed: tier.report.completed,
+            dropped: tier.report.dropped,
+        });
+    }
+    Ok(rows)
+}
+
+/// Tier-aware batching sweep: the heterogeneous fixed+float session of
+/// [`mixed_backend_sweep`], but with each shard under its *tier's*
+/// batching policy ([`TierPolicy::for_backends`]): the fixed trigger
+/// tier pinned at strict batch-1 / zero-wait, the float offline tier
+/// batching up to 64 with a 2 ms deadline.  One row per backend, each
+/// carrying its batcher columns (`max_batch`, `max_wait_us` — the
+/// schema-v3 addition), so CI tracks the trigger tier's batch-1 latency
+/// and the offline tier's deep-batch throughput as separate
+/// trajectories.  Same measurement discipline as [`shard_sweep`]:
+/// synthetic weights, saturating fixed-interval arrivals.
+pub fn tier_batch_sweep(
+    workers_per_shard: usize,
+    n_events: usize,
+) -> anyhow::Result<Vec<ServingBenchRow>> {
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let fixed_spec = FixedSpec::new(16, 6);
+    let specs = [BackendSpec::parse("fixed")?, BackendSpec::parse("float")?];
+    let backends: Vec<String> =
+        specs.iter().map(|s| s.name().to_string()).collect();
+    let policy = TierPolicy::for_backends(&backends);
+    let runner_caps: Vec<usize> =
+        policy.batchers().iter().map(|b| b.max_batch).collect();
+    let cfg = ShardedConfig {
+        shards: 2,
+        policy: ShardPolicy::ModelKey,
+        tier_mix: TierMix::new(&[0.9, 0.1], 0x7135)?,
+        shard_backends: backends,
+        shard_batchers: policy.batchers(),
+        server: ServerConfig {
+            workers: workers_per_shard,
+            queue_capacity: 8192,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(200),
+            },
+            source: SourceConfig {
+                rate_hz: 2_000_000.0,
+                poisson: false,
+                n_events,
+            },
+        },
+    };
+    let generator = generators::for_benchmark("top", 0xBEEF)?;
+    let factory_weights = weights.clone();
+    let report = ShardedServer::run(cfg, generator, move |shard| {
+        let engine = specs[shard].build(&BackendCtx {
+            weights: &factory_weights,
+            fixed_spec,
+            parallelism: 1,
+        })?;
+        Ok(Box::new(EngineRunner::new(engine, runner_caps[shard]))
+            as Box<dyn crate::coordinator::BatchRunner>)
+    })?;
+    let mut rows = Vec::new();
+    for tier in &report.per_backend {
+        rows.push(ServingBenchRow {
+            config: format!(
+                "tier_batch_{}_w{workers_per_shard}",
+                tier.backend
+            ),
+            shards: 2,
+            policy: "model-key".to_string(),
+            workers_per_shard,
+            backend: tier.backend.clone(),
+            max_batch: tier.batcher.max_batch,
+            max_wait_us: tier.batcher.max_wait.as_micros() as u64,
             samples_per_sec: tier.report.throughput_hz,
             p50_us: tier.report.p50_latency_us,
             p99_us: tier.report.p99_latency_us,
@@ -330,7 +425,11 @@ pub fn write_bench_json(
         ("bench", json::s("serving")),
         // v2: every row carries a `backend` field (per-tier rows for the
         // mixed-backend sweep; "float" for the homogeneous shard sweep).
-        ("schema_version", json::num(2.0)),
+        // v3: per-backend batcher columns (`max_batch`, `max_wait_us`)
+        // plus the tier-aware `tier_batch_*` rows, so per-tier latency
+        // trajectories carry the batching policy they were measured
+        // under.
+        ("schema_version", json::num(3.0)),
         (
             "rows",
             json::arr(
@@ -341,6 +440,8 @@ pub fn write_bench_json(
                             ("shards", json::num(r.shards as f64)),
                             ("policy", json::s(&r.policy)),
                             ("backend", json::s(&r.backend)),
+                            ("max_batch", json::num(r.max_batch as f64)),
+                            ("max_wait_us", json::num(r.max_wait_us as f64)),
                             (
                                 "workers_per_shard",
                                 json::num(r.workers_per_shard as f64),
@@ -443,7 +544,7 @@ mod tests {
         assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "serving");
         assert_eq!(
             parsed.req("schema_version").unwrap().as_usize().unwrap(),
-            2
+            3
         );
         let json_rows = parsed.req("rows").unwrap().as_array().unwrap();
         assert_eq!(json_rows.len(), 2);
@@ -454,6 +555,15 @@ mod tests {
         assert_eq!(
             json_rows[0].req("backend").unwrap().as_str().unwrap(),
             "float"
+        );
+        // v3: batcher columns ride along on every row.
+        assert_eq!(
+            json_rows[0].req("max_batch").unwrap().as_usize().unwrap(),
+            32
+        );
+        assert_eq!(
+            json_rows[0].req("max_wait_us").unwrap().as_usize().unwrap(),
+            200
         );
         assert!(json_rows[0].req("samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
         std::fs::remove_dir_all(dir).ok();
@@ -483,6 +593,29 @@ mod tests {
         assert!(
             fixed.completed + fixed.dropped > float.completed + float.dropped,
             "90/10 mix: trigger tier must dominate"
+        );
+    }
+
+    /// Reduced tier-aware batching sweep: one row per backend, the
+    /// trigger tier pinned at batch-1/zero-wait, the offline tier deep,
+    /// and the two tiers exactly partitioning the stream.
+    #[test]
+    fn tier_batch_sweep_pins_trigger_and_offline_policies() {
+        let rows = tier_batch_sweep(1, 400).unwrap();
+        assert_eq!(rows.len(), 2);
+        let fixed = rows.iter().find(|r| r.backend == "fixed").unwrap();
+        assert_eq!(fixed.config, "tier_batch_fixed_w1");
+        assert_eq!(fixed.max_batch, 1, "trigger tier must be batch-1");
+        assert_eq!(fixed.max_wait_us, 0, "trigger tier must never wait");
+        let float = rows.iter().find(|r| r.backend == "float").unwrap();
+        assert_eq!(float.config, "tier_batch_float_w1");
+        assert_eq!(float.max_batch, 64, "offline tier must batch deep");
+        assert_eq!(float.max_wait_us, 2000);
+        let routed: u64 = rows.iter().map(|r| r.completed + r.dropped).sum();
+        assert_eq!(routed, 400, "tiers must partition the stream");
+        // 90/10 mix: the trigger tier dominates admission.
+        assert!(
+            fixed.completed + fixed.dropped > float.completed + float.dropped
         );
     }
 

@@ -138,6 +138,7 @@ fn run_mixed(
             policy: ShardPolicy::ModelKey,
             tier_mix: mix.clone(),
             shard_backends: backends.iter().map(|b| b.to_string()).collect(),
+            shard_batchers: Vec::new(),
             server: config(2),
         },
         Box::new(IdGen { next: 0 }),

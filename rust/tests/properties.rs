@@ -254,6 +254,91 @@ fn prop_gru_cheaper_than_lstm_everywhere() {
     });
 }
 
+// ------------------------------------------------------------ coordinator
+
+/// Deadline semantics of `next_batch` under a virtual clock, for random
+/// arrival sequences: every flush is triggered by size OR by the batch
+/// having waited `max_wait` — never neither, never held past the
+/// deadline — `max_wait = 0` always yields batch size 1, order is FIFO,
+/// and no request is lost.  Fully deterministic: virtual time only moves
+/// via the batcher's own deadline auto-advance.
+#[test]
+fn prop_next_batch_deadline_semantics_under_virtual_clock() {
+    use rnn_hls::coordinator::batcher::next_batch;
+    use rnn_hls::coordinator::{
+        BatcherConfig, BoundedQueue, Clock, Request, VirtualClock,
+    };
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    check("batcher-deadline-virtual", 250, |rng| {
+        let clock = VirtualClock::new();
+        let queue = Arc::new(BoundedQueue::new(4096));
+        let max_batch = 1 + rng.below(12);
+        let wait_us = [0u64, 1, 40, 250, 1_000][rng.below(5)];
+        let max_wait = Duration::from_micros(wait_us);
+        let cfg = BatcherConfig::new(max_batch, max_wait)
+            .map_err(|e| e.to_string())?;
+        let n = 1 + rng.below(48) as u64;
+        // Random arrival sequence: ids in order, gaps of 0..300 µs.
+        for id in 0..n {
+            if rng.uniform() < 0.5 {
+                clock.advance(Duration::from_micros(rng.below(300) as u64));
+            }
+            queue
+                .push(Request {
+                    id,
+                    features: vec![0.0; 2],
+                    label: 0,
+                    route_key: 0,
+                    enqueued_at: clock.now(),
+                })
+                .map_err(|_| "queue overflow".to_string())?;
+        }
+        let mut popped = 0u64;
+        while !queue.is_empty() {
+            let t_pop = clock.now();
+            let batch = next_batch(&queue, &cfg, &clock)
+                .ok_or("non-empty open queue must yield a batch")?;
+            let held = batch.formed_at - t_pop;
+            prop_assert!(
+                batch.len() >= 1 && batch.len() <= max_batch,
+                "batch size {} outside 1..={max_batch}",
+                batch.len()
+            );
+            if wait_us == 0 {
+                prop_assert!(
+                    batch.len() == 1,
+                    "max_wait = 0 must be strict batch-1, got {}",
+                    batch.len()
+                );
+            }
+            let by_size = batch.len() == max_batch;
+            let by_deadline = held >= max_wait;
+            prop_assert!(
+                by_size || by_deadline,
+                "flush of {} after {held:?} satisfies neither size \
+                 ({max_batch}) nor deadline ({max_wait:?})",
+                batch.len()
+            );
+            prop_assert!(
+                held <= max_wait,
+                "batch held {held:?}, past the {max_wait:?} deadline"
+            );
+            for r in &batch.requests {
+                prop_assert!(
+                    r.id == popped,
+                    "FIFO violated: got {} want {popped}",
+                    r.id
+                );
+                popped += 1;
+            }
+        }
+        prop_assert!(popped == n, "served {popped} of {n} requests");
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------------ nn engines
 
 #[test]

@@ -113,6 +113,16 @@ fn run_sharded(
     shards: usize,
     policy: ShardPolicy,
 ) -> (HashMap<u64, Vec<f32>>, rnn_hls::coordinator::ShardedReport) {
+    run_sharded_with(shards, policy, Vec::new())
+}
+
+/// `run_sharded` with an explicit per-shard batching policy (empty =
+/// the shared `ServerConfig` batcher on every shard).
+fn run_sharded_with(
+    shards: usize,
+    policy: ShardPolicy,
+    shard_batchers: Vec<BatcherConfig>,
+) -> (HashMap<u64, Vec<f32>>, rnn_hls::coordinator::ShardedReport) {
     let outputs = Arc::new(Mutex::new(HashMap::new()));
     let sink = outputs.clone();
     let report = ShardedServer::run(
@@ -121,6 +131,7 @@ fn run_sharded(
             policy,
             tier_mix: TierMix::single(),
             shard_backends: Vec::new(),
+            shard_batchers,
             server: config(2),
         },
         Box::new(IdGen { next: 0 }),
@@ -217,6 +228,34 @@ fn multi_shard_outputs_identical_to_single_shard() {
             }
         }
     }
+}
+
+/// Tier-aware batching must not perturb a homogeneous session: a
+/// 1-shard run with an *explicit* per-shard batcher equal to the shared
+/// config — and a multi-shard run with identical per-shard policies —
+/// remain bitwise-identical to the pre-tier [`Server`] output, request
+/// for request.
+#[test]
+fn per_shard_batchers_keep_homogeneous_runs_bitwise_identical() {
+    let (single_map, single) = run_single();
+    assert_eq!(single.dropped, 0);
+
+    let batcher = config(2).batcher;
+    let (map, report) =
+        run_sharded_with(1, ShardPolicy::HashId, vec![batcher]);
+    assert_eq!(report.merged.dropped, 0);
+    assert_eq!(report.merged.completed, single.completed);
+    assert_eq!(report.merged.accuracy, single.accuracy);
+    assert_eq!(map, single_map, "explicit uniform policy changed outputs");
+    assert_eq!(report.per_shard[0].batcher.max_batch, batcher.max_batch);
+
+    let (map2, report2) = run_sharded_with(
+        2,
+        ShardPolicy::RoundRobin,
+        vec![batcher, batcher],
+    );
+    assert_eq!(report2.merged.dropped, 0);
+    assert_eq!(map2, single_map, "per-shard policies changed outputs");
 }
 
 /// Round-robin must split a steady stream near-perfectly; hash must be

@@ -1,0 +1,432 @@
+//! Tier-aware batching under a deterministic virtual clock.
+//!
+//! Every deadline decision in this suite is driven by
+//! [`VirtualClock`] — there is not a single `std::thread::sleep` in this
+//! file, and none is needed: an idle deadline wait auto-advances virtual
+//! time to the deadline, so size-or-deadline flush semantics, the
+//! trigger tier's strict batch-1 guarantee, and per-tier latency
+//! percentiles are all *exact* assertions, not timing-tolerant ones.
+//!
+//! Covers the three tentpole claims:
+//!
+//! 1. trigger-tier requests are **never co-batched** (batch-1 is a
+//!    guarantee of the `max_wait = 0` policy, not a best-effort);
+//! 2. offline-tier flushes obey **size OR deadline, exactly**, under
+//!    virtual time;
+//! 3. per-tier p50/p99 in the metrics roll-up match **hand-computed**
+//!    values from the virtual timeline.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rnn_hls::coordinator::batcher::next_batch;
+use rnn_hls::coordinator::{
+    worker_loop, BatchRunner, BatcherConfig, BoundedQueue, Clock, Request,
+    ServerConfig, ServerMetrics, ServerReport, ShardPolicy, ShardedConfig,
+    ShardedServer, SourceConfig, TierClass, TierMix, TierPolicy,
+    VirtualClock,
+};
+use rnn_hls::data::generators::{Event, Generator};
+
+fn req(id: u64, enqueued_at: Instant) -> Request {
+    Request {
+        id,
+        features: vec![0.0; 4],
+        label: 0,
+        route_key: 0,
+        enqueued_at,
+    }
+}
+
+/// Pre-fill a queue with `n` requests, all enqueued "now".
+fn backlog(n: u64, clock: &VirtualClock) -> Arc<BoundedQueue<Request>> {
+    let q = Arc::new(BoundedQueue::new(4096));
+    for id in 0..n {
+        q.push(req(id, clock.now())).unwrap();
+    }
+    q
+}
+
+// ------------------------------------------------------- (1) trigger tier
+
+/// The trigger-tier policy (`max_batch = 1`, `max_wait = 0`) never
+/// co-batches — even against a deep backlog, every flush is a singleton,
+/// in FIFO order, and serving consumes zero (virtual) time waiting.
+#[test]
+fn trigger_tier_requests_are_never_co_batched() {
+    let clock = VirtualClock::new();
+    let q = backlog(64, &clock);
+    let cfg = TierClass::Trigger.default_batcher();
+    assert_eq!(cfg.max_batch, 1);
+    assert!(cfg.max_wait.is_zero());
+    let t0 = clock.now();
+    for want in 0..64u64 {
+        let b = next_batch(&q, &cfg, &clock).unwrap();
+        assert_eq!(b.len(), 1, "request {want} was co-batched");
+        assert_eq!(b.requests[0].id, want, "FIFO order violated");
+        assert_eq!(b.formed_at, t0, "trigger flush must be immediate");
+    }
+    assert!(q.is_empty());
+    assert_eq!(clock.now(), t0, "trigger serving must never wait");
+}
+
+/// `max_wait = 0` alone (even with a wide `max_batch`) is already the
+/// strict batch-1 guarantee: zero-wait means *never* trade one event's
+/// latency, not "drain whatever happens to be queued".
+#[test]
+fn zero_wait_is_batch_one_even_with_wide_max_batch() {
+    let clock = VirtualClock::new();
+    let q = backlog(10, &clock);
+    let cfg = BatcherConfig {
+        max_batch: 10,
+        max_wait: Duration::ZERO,
+    };
+    for _ in 0..10 {
+        assert_eq!(next_batch(&q, &cfg, &clock).unwrap().len(), 1);
+    }
+    assert!(q.is_empty());
+}
+
+// ------------------------------------------------------- (2) offline tier
+
+/// Size flush: a full batch forms instantly off the backlog, never
+/// consulting the deadline — zero virtual time passes.
+#[test]
+fn offline_tier_size_flush_is_instant_and_exact() {
+    let clock = VirtualClock::new();
+    let q = backlog(100, &clock);
+    let cfg = BatcherConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(2_000),
+    };
+    let t0 = clock.now();
+    let b = next_batch(&q, &cfg, &clock).unwrap();
+    assert_eq!(b.len(), 64, "size flush must take exactly max_batch");
+    assert_eq!(b.formed_at, t0, "size flush must not wait");
+    assert_eq!(clock.now(), t0);
+    assert_eq!(q.len(), 36, "remainder stays queued");
+}
+
+/// Deadline flush: a partial batch is held exactly `max_wait` — no less
+/// (it could still fill) and no more (the deadline is a promise) — then
+/// flushed with whatever arrived.
+#[test]
+fn offline_tier_deadline_flush_is_exact_under_virtual_time() {
+    let clock = VirtualClock::new();
+    let cfg = BatcherConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(2_000),
+    };
+    let q = backlog(5, &clock);
+    let t0 = clock.now();
+    let b = next_batch(&q, &cfg, &clock).unwrap();
+    assert_eq!(b.len(), 5, "deadline flush takes what arrived");
+    assert_eq!(
+        b.formed_at,
+        t0 + Duration::from_micros(2_000),
+        "partial batch must flush exactly at the deadline"
+    );
+    assert_eq!(clock.now(), t0 + Duration::from_micros(2_000));
+
+    // A closed queue flushes the remainder immediately (shutdown drain):
+    // no deadline wait on a stream that can never grow.
+    let q2 = backlog(3, &clock);
+    q2.close();
+    let t1 = clock.now();
+    let b2 = next_batch(&q2, &cfg, &clock).unwrap();
+    assert_eq!(b2.len(), 3);
+    assert_eq!(b2.formed_at, t1, "closed-queue drain must not wait");
+    assert!(next_batch(&q2, &cfg, &clock).is_none());
+}
+
+// --------------------------------------------- (3) hand-computed roll-up
+
+/// Mirror of `LatencyHistogram`'s bucketing: upper bound 1.5^k µs, built
+/// by the same iterated multiplication so the floats match bit for bit.
+fn bucket_bound(us: f64) -> f64 {
+    let mut bound = 1.0f64;
+    for _ in 0..40 {
+        if us < bound {
+            return bound;
+        }
+        bound *= 1.5;
+    }
+    bound // overflow bucket reports top bound × 1.5 == 1.5^40
+}
+
+/// Hand-computed quantile: the histogram bound of the ceil(q·n)-th
+/// smallest latency (bucketing is monotone, so this is exactly what the
+/// cumulative bucket walk returns).
+fn expected_quantile(latencies_us: &[f64], q: f64) -> f64 {
+    let mut sorted = latencies_us.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let target = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    bucket_bound(sorted[target - 1])
+}
+
+/// Records every batch size it serves; outputs keep accuracy at 1.0
+/// (prob 0.1 → predicted 0 == label 0).
+struct CountingRunner {
+    cap: usize,
+    batch_sizes: Vec<usize>,
+}
+
+impl BatchRunner for CountingRunner {
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.batch_sizes.push(n);
+        Ok(vec![vec![0.1]; n])
+    }
+}
+
+/// Drive two tiers' worker loops on one virtual timeline with known
+/// arrival instants, then assert the per-tier reports — and the merged
+/// roll-up — reproduce hand-computed p50/p99 exactly.
+#[test]
+fn per_tier_percentiles_match_hand_computed_values() {
+    let clock = VirtualClock::new();
+    let t0 = clock.now();
+
+    // Trigger tier: 8 requests, 100 µs apart.
+    let trig_q = Arc::new(BoundedQueue::new(64));
+    for id in 0..8u64 {
+        trig_q.push(req(id, clock.now())).unwrap();
+        clock.advance(Duration::from_micros(100));
+    }
+    // Offline tier: 12 requests, 25 µs apart, arriving after.
+    let off_q = Arc::new(BoundedQueue::new(64));
+    for id in 0..12u64 {
+        off_q.push(req(100 + id, clock.now())).unwrap();
+        clock.advance(Duration::from_micros(25));
+    }
+    trig_q.close();
+    off_q.close();
+    let done = clock.now();
+    assert_eq!(done - t0, Duration::from_micros(8 * 100 + 12 * 25));
+
+    // Hand-computed per-request latencies (µs) at the completion
+    // instant `done`: trigger request i enqueued at t0 + 100·i,
+    // offline request j at t0 + 800 + 25·j.
+    let trig_lat: Vec<f64> =
+        (0..8).map(|i| (1100 - 100 * i) as f64).collect();
+    let off_lat: Vec<f64> = (0..12).map(|j| (300 - 25 * j) as f64).collect();
+
+    // Serve both tiers: closed queues drain without advancing the
+    // clock, so every completion lands exactly at `done`.
+    let trig_m = ServerMetrics::new();
+    let mut trig_runner = CountingRunner {
+        cap: 64,
+        batch_sizes: Vec::new(),
+    };
+    worker_loop(
+        &mut trig_runner,
+        &trig_q,
+        &trig_m,
+        &TierClass::Trigger.default_batcher(),
+        &clock,
+    )
+    .unwrap();
+    let off_m = ServerMetrics::new();
+    let mut off_runner = CountingRunner {
+        cap: 64,
+        batch_sizes: Vec::new(),
+    };
+    worker_loop(
+        &mut off_runner,
+        &off_q,
+        &off_m,
+        &TierClass::Offline.default_batcher(),
+        &clock,
+    )
+    .unwrap();
+    assert_eq!(clock.now(), done, "drain must consume no virtual time");
+
+    // Batch structure: trigger strictly singletons, offline one deep
+    // drain batch.
+    assert_eq!(trig_runner.batch_sizes, vec![1; 8]);
+    assert_eq!(off_runner.batch_sizes, vec![12]);
+
+    // Per-tier reports: percentiles equal the hand-computed bucket
+    // bounds bit for bit, accuracy and counts exact.
+    let trig = ServerReport::from_metrics(&trig_m, 1.0);
+    assert_eq!(trig.completed, 8);
+    assert_eq!(trig.mean_batch, 1.0);
+    assert_eq!(trig.accuracy, 1.0);
+    assert_eq!(trig.p50_latency_us, expected_quantile(&trig_lat, 0.5));
+    assert_eq!(trig.p99_latency_us, expected_quantile(&trig_lat, 0.99));
+
+    let off = ServerReport::from_metrics(&off_m, 1.0);
+    assert_eq!(off.completed, 12);
+    assert_eq!(off.mean_batch, 12.0);
+    assert_eq!(off.p50_latency_us, expected_quantile(&off_lat, 0.5));
+    assert_eq!(off.p99_latency_us, expected_quantile(&off_lat, 0.99));
+
+    // The tiers genuinely differ — a blended percentile would describe
+    // neither (the reason the roll-up splits per backend).
+    assert!(trig.p50_latency_us > off.p50_latency_us);
+
+    // Merged roll-up (the cross-shard primitive): quantiles over the
+    // union, hand-computed the same way.
+    let merged = ServerMetrics::new();
+    merged.merge(&trig_m);
+    merged.merge(&off_m);
+    let all: Vec<f64> = trig_lat
+        .iter()
+        .chain(off_lat.iter())
+        .copied()
+        .collect();
+    let merged_report = ServerReport::from_metrics(&merged, 1.0);
+    assert_eq!(merged_report.completed, 20);
+    assert_eq!(merged_report.p50_latency_us, expected_quantile(&all, 0.5));
+    assert_eq!(merged_report.p99_latency_us, expected_quantile(&all, 0.99));
+}
+
+// ----------------------------------------------- end-to-end tier policy
+
+/// Deterministic generator for full-session tests (no artifacts).
+struct FlatGen;
+
+impl Generator for FlatGen {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+    fn seq_len(&self) -> usize {
+        4
+    }
+    fn n_feat(&self) -> usize {
+        1
+    }
+    fn n_classes(&self) -> usize {
+        1
+    }
+    fn generate(&mut self) -> Event {
+        Event {
+            features: vec![0.0; 4],
+            label: 0,
+        }
+    }
+}
+
+/// Trigger-shard runner: *proves* no co-batching by failing the whole
+/// session if it ever sees a batch of more than one.
+struct MaxOneRunner;
+
+impl BatchRunner for MaxOneRunner {
+    fn max_batch(&self) -> usize {
+        8 // wider than the policy: the shard's batcher must clamp, not us
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(n == 1, "trigger tier co-batched {n} requests");
+        Ok(vec![vec![0.1]; n])
+    }
+}
+
+struct WideRunner;
+
+impl BatchRunner for WideRunner {
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![0.1]; n])
+    }
+}
+
+/// Full heterogeneous session under per-shard batch policies: the
+/// trigger shard provably serves batch-1 (its runner rejects anything
+/// else), the roll-up carries each tier's policy, and nothing is lost.
+#[test]
+fn sharded_session_honors_per_shard_batch_policy() {
+    let backends = vec!["fixed".to_string(), "float".to_string()];
+    let cfg = ShardedConfig {
+        shards: 2,
+        policy: ShardPolicy::ModelKey,
+        tier_mix: TierMix::new(&[0.75, 0.25], 0xC1A5).unwrap(),
+        shard_backends: backends.clone(),
+        shard_batchers: TierPolicy::for_backends(&backends).batchers(),
+        server: ServerConfig {
+            workers: 1,
+            queue_capacity: 16_384, // > n_events: nothing can drop
+            batcher: BatcherConfig::default(),
+            source: SourceConfig {
+                rate_hz: 1_000_000.0,
+                poisson: false,
+                n_events: 2_000,
+            },
+        },
+    };
+    let report = ShardedServer::run(cfg, Box::new(FlatGen), |shard| {
+        if shard == 0 {
+            Ok(Box::new(MaxOneRunner) as Box<dyn BatchRunner>)
+        } else {
+            Ok(Box::new(WideRunner) as Box<dyn BatchRunner>)
+        }
+    })
+    .unwrap();
+
+    assert_eq!(report.merged.generated, 2_000);
+    assert_eq!(report.merged.dropped, 0);
+    assert_eq!(report.merged.completed, 2_000);
+
+    let trigger = &report.per_backend[0];
+    assert_eq!(trigger.backend, "fixed");
+    assert_eq!(trigger.batcher.max_batch, 1);
+    assert!(trigger.batcher.max_wait.is_zero());
+    assert!(trigger.report.completed > 0);
+    assert_eq!(
+        trigger.report.mean_batch, 1.0,
+        "trigger tier must serve strict batch-1"
+    );
+
+    let offline = &report.per_backend[1];
+    assert_eq!(offline.backend, "float");
+    assert_eq!(offline.batcher.max_batch, 64);
+    assert_eq!(
+        offline.batcher.max_wait,
+        Duration::from_micros(2_000)
+    );
+    assert!(offline.report.completed > 0);
+
+    // Per-shard stats carry the tier policies too.
+    assert_eq!(report.per_shard[0].batcher.max_batch, 1);
+    assert_eq!(report.per_shard[1].batcher.max_batch, 64);
+}
+
+// ------------------------------------------------ max_batch = 0 regression
+
+/// Regression: `max_batch = 0` (a batch that can never flush) must be
+/// rejected at every construction path with a clear error.
+#[test]
+fn zero_max_batch_is_rejected_everywhere() {
+    let err = BatcherConfig::new(0, Duration::from_micros(100)).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("max_batch must be >= 1"),
+        "{err:#}"
+    );
+
+    let err = TierPolicy::parse("trigger:0:0").unwrap_err();
+    assert!(
+        format!("{err:#}").contains("max_batch must be >= 1"),
+        "{err:#}"
+    );
+
+    // A hand-built config (bypassing BatcherConfig::new) is still caught
+    // at session start, before any worker spawns.
+    let cfg = ShardedConfig {
+        server: ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 0,
+                max_wait: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let result = ShardedServer::run(cfg, Box::new(FlatGen), |_| {
+        Ok(Box::new(WideRunner) as Box<dyn BatchRunner>)
+    });
+    let err = format!("{:#}", result.unwrap_err());
+    assert!(err.contains("max_batch must be >= 1"), "{err}");
+}
