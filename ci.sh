@@ -18,11 +18,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     cat BENCH_serving.json
     echo "== bench-smoke: per-backend schema check =="
     # Schema, not perf: the artifact must carry per-backend rows with
-    # their batcher columns (schema v3) so per-tier latency stays
+    # their batcher columns (schema v4) so per-tier latency stays
     # comparable across PRs *together with the batching policy it was
     # measured under*.  The writer emits compact JSON (no spaces
     # around ':').
-    grep -q '"schema_version":3' BENCH_serving.json
+    grep -q '"schema_version":4' BENCH_serving.json
     grep -q '"backend":"fixed"' BENCH_serving.json
     grep -q '"backend":"float"' BENCH_serving.json
     grep -q '"config":"mixed90_10_fixed_w2"' BENCH_serving.json
@@ -35,7 +35,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     grep -q '"config":"tier_batch_float_w2"' BENCH_serving.json
     grep -q '"max_batch":1,"max_wait_us":0,' BENCH_serving.json
     grep -q '"max_batch":64,"max_wait_us":2000,' BENCH_serving.json
-    echo "per-backend rows + batcher columns present"
+    # Session-API overhead rows (schema v4): the live request-driven
+    # path must be tracked next to the replay path it wraps.
+    grep -q '"config":"session_replay_w2"' BENCH_serving.json
+    grep -q '"config":"session_submit_w2"' BENCH_serving.json
+    echo "per-backend rows + batcher columns + session rows present"
     exit 0
 fi
 
@@ -51,18 +55,26 @@ cargo test -q
 echo "== tier-1: cargo test -q --test tier_batching (virtual-clock suite) =="
 cargo test -q --test tier_batching
 
-# Lint gates: run when the components are installed (rustfmt/clippy are
-# rustup components and may be absent in minimal toolchains).
+# Lint gates.  Locally they degrade to a skip when the rustup component
+# is absent; under CI ($CI is set on GitHub Actions, which installs both
+# components) a missing component is a hard failure — the lint gates are
+# part of tier 1, not best-effort.
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
+elif [[ -n "${CI:-}" ]]; then
+    echo "cargo fmt is required in CI but not installed" >&2
+    exit 1
 else
     echo "== cargo fmt --check == (skipped: rustfmt not installed)"
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then
-    echo "== cargo clippy -D warnings =="
+    echo "== cargo clippy --all-targets -D warnings =="
     cargo clippy --all-targets -- -D warnings
+elif [[ -n "${CI:-}" ]]; then
+    echo "cargo clippy is required in CI but not installed" >&2
+    exit 1
 else
     echo "== cargo clippy == (skipped: clippy not installed)"
 fi

@@ -1,0 +1,115 @@
+//! **Library-embedding quickstart** (referenced from README §Serving):
+//! the full Session lifecycle — spec → start → submit → snapshot →
+//! shutdown — driven from two concurrent submitter threads, with no
+//! artifacts needed (synthetic weights, float engine).
+//!
+//! ```text
+//! cargo run --release --example embed_session
+//! ```
+//!
+//! What it shows:
+//!
+//! * a typed [`ServingSpec`] built with struct-update syntax — all the
+//!   validation (shards, batch sizes, arities) happens in one place,
+//!   `spec.build()`, inside `Session::start`;
+//! * two producer threads sharing one fabric through cloned
+//!   [`SessionHandle`]s, with backpressure surfaced as a typed
+//!   `SubmitError` instead of a silent drop;
+//! * the completion channel (`recv`) matching outputs back to request
+//!   ids;
+//! * a live `snapshot()` mid-stream, then the final `ShardedReport`
+//!   from `shutdown()`.
+
+use std::time::Duration;
+
+use rnn_hls::coordinator::EngineRunner;
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::FloatEngine;
+use rnn_hls::{BackendKind, ServingSpec, Session};
+
+const PER_THREAD: usize = 2_000;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Spec: a 2-shard float session, round-robin routing, modest
+    //    batching.  Everything else keeps the defaults.
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        shards: 2,
+        shard_policy: rnn_hls::coordinator::ShardPolicy::RoundRobin,
+        workers: 1,
+        queue_capacity: 8_192,
+        ..ServingSpec::default()
+    }
+    .with_batcher(16, Duration::from_micros(200));
+
+    // 2. Start: the factory runs once per worker, inside that worker's
+    //    thread, and builds this shard's engine (synthetic weights — no
+    //    `make artifacts` required).
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED);
+    let session = Session::start(&spec, move |_shard| {
+        let engine = FloatEngine::new(&weights)?;
+        Ok(Box::new(EngineRunner::new(Box::new(engine), 16))
+            as Box<dyn rnn_hls::coordinator::BatchRunner>)
+    })?;
+
+    // 3. Submit from two threads: each owns a cloned SessionHandle and
+    //    pushes its own stream of synthetic events into the one fabric.
+    let stride = arch.seq_len * arch.input_size;
+    std::thread::scope(|scope| {
+        for submitter in 0..2u64 {
+            let handle = session.handle();
+            scope.spawn(move || {
+                let mut rejected = 0u64;
+                for i in 0..PER_THREAD as u64 {
+                    let mut features = vec![0.0f32; stride];
+                    features[0] = (submitter * 1_000 + i % 97) as f32 * 1e-3;
+                    // Typed backpressure: a full queue hands the request
+                    // back; this demo just counts it as shed load.
+                    if handle.submit_event(features, (i % 2) as u32).is_err()
+                    {
+                        rejected += 1;
+                    }
+                }
+                println!(
+                    "submitter {submitter}: {PER_THREAD} sent, \
+                     {rejected} rejected (backpressure)"
+                );
+            });
+        }
+    });
+
+    // 4. Live monitoring while the fabric drains: same exact roll-up as
+    //    the final report, taken mid-flight.
+    let snap = session.snapshot();
+    println!(
+        "\nlive snapshot: {} admitted, {} completed so far, mean batch \
+         {:.2}",
+        snap.merged.generated, snap.merged.completed, snap.merged.mean_batch
+    );
+
+    // Completions: every served request comes back with its id and its
+    // enqueue/complete instants on the serving clock.
+    let mut served = 0usize;
+    let expect = (snap.merged.generated - snap.merged.dropped) as usize;
+    let mut worst_us = 0.0f64;
+    while served < expect {
+        let completion = session.recv().expect("fabric alive");
+        let latency = completion
+            .completed_at
+            .saturating_duration_since(completion.enqueued_at);
+        worst_us = worst_us.max(latency.as_secs_f64() * 1e6);
+        served += 1;
+    }
+    println!("{served} completions received, worst latency {worst_us:.1} µs");
+
+    // 5. Shutdown: drain-then-close, then the final report.
+    let report = session.shutdown()?;
+    println!("\n{}", report.render());
+    anyhow::ensure!(
+        report.merged.completed + report.merged.dropped
+            == 2 * PER_THREAD as u64,
+        "every submitted event must be accounted for"
+    );
+    Ok(())
+}

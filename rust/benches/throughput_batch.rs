@@ -20,9 +20,13 @@
 //! 4. **Tier-aware batching sweep** (no artifacts needed): the same
 //!    heterogeneous session with per-shard batch policies — trigger
 //!    tier pinned at batch-1/zero-wait, offline tier batching deep —
-//!    emitting the schema-v3 per-backend batcher columns
+//!    emitting the per-backend batcher columns
 //!    (`max_batch`, `max_wait_us`) in `BENCH_serving.json`.
-//! 5. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//! 5. **Session-API overhead** (no artifacts needed): the replay
+//!    wrapper vs the live request-driven path (public `Session::submit`
+//!    + completion channel) on the same stream — the schema-v4
+//!    `session_replay_*` / `session_submit_*` row pair.
+//! 6. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
 //!    original QuickDraw-LSTM comparison against the scheduler's II.
 //!
 //! Flags (after `--`): `--smoke` runs the reduced-iteration CI variant
@@ -269,6 +273,38 @@ fn backend_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
     rows
 }
 
+/// Session-API overhead: the replay wrapper vs the live submit path
+/// (public `Session` API with the completion channel on), same stream.
+fn session_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
+    println!(
+        "\n=== session API overhead (replay wrapper vs live submit) ==="
+    );
+    let n_events = if smoke { 3_000 } else { 12_000 };
+    let rows = throughput::session_submit_sweep(2, n_events)
+        .expect("session submit sweep");
+    println!(
+        "  {:>22} {:>12} {:>10} {:>10} {:>10} {:>9}",
+        "config", "samples/s", "p50 µs", "p99 µs", "completed", "dropped"
+    );
+    for r in &rows {
+        println!(
+            "  {:>22} {:>12.0} {:>10.1} {:>10.1} {:>10} {:>9}",
+            r.config, r.samples_per_sec, r.p50_us, r.p99_us, r.completed,
+            r.dropped
+        );
+        // Correctness, not speed: both paths must account for every
+        // event and actually serve the stream.
+        assert_eq!(
+            r.completed + r.dropped,
+            n_events as u64,
+            "{}: lost events",
+            r.config
+        );
+        assert!(r.completed > 0, "{}: nothing served", r.config);
+    }
+    rows
+}
+
 /// Tier-aware batching: trigger tier at strict batch-1, offline tier
 /// batching deep, per-backend rows carrying their batcher columns.
 fn tier_batch_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
@@ -310,6 +346,7 @@ fn main() {
     let mut rows = shard_scaling(opts.smoke);
     rows.extend(backend_scaling(opts.smoke));
     rows.extend(tier_batch_scaling(opts.smoke));
+    rows.extend(session_scaling(opts.smoke));
     if let Some(path) = &opts.json {
         let written =
             throughput::write_bench_json(path, &rows).expect("bench json");

@@ -1,7 +1,5 @@
 //! Typed experiment configuration shared by the CLI and the benches.
 
-use std::time::Duration;
-
 /// Fig. 2 quantization-scan configuration.
 #[derive(Debug, Clone)]
 pub struct Fig2Config {
@@ -56,74 +54,11 @@ impl SweepConfig {
     }
 }
 
-/// `serve` subcommand configuration (mapped onto the coordinator).
-#[derive(Debug, Clone)]
-pub struct ServeCliConfig {
-    pub model_key: String,
-    /// Homogeneous engine for every shard: "pjrt" | "fixed" | "float".
-    /// Ignored when `backends` is non-empty.
-    pub engine: String,
-    /// Heterogeneous session: comma-separated backend names, one per
-    /// shard (`"fixed,float"`), resolved through the `nn::BackendSpec`
-    /// registry.  Empty = homogeneous `engine` on every shard.
-    pub backends: String,
-    /// Traffic-class fractions, one per backend (`"0.9,0.1"`, summing to
-    /// 1), stamped onto `Request::route_key`; requires `backends` and the
-    /// `model-key` shard policy to steer tiers to their backends.  Empty
-    /// = uniform across `backends`.
-    pub tier_mix: String,
-    /// Seed of the tier-stamping hash (a pure function of (seed, id)):
-    /// same seed, same partition of the stream into tiers.
-    pub tier_seed: u64,
-    pub rate_hz: f64,
-    pub n_events: usize,
-    /// Coordinator shards: independent queue+batcher+worker pipelines the
-    /// request stream is partitioned across.  1 = the classic single
-    /// coordinator (bitwise-identical results to `Server`).
-    pub shards: usize,
-    /// Routing policy in front of the shards:
-    /// "hash" | "round-robin" | "model-key".
-    pub shard_policy: String,
-    /// Engine-worker threads *per shard* (each owns one engine replica).
-    pub workers: usize,
-    /// Per-batch parallelism *inside* each rust engine (`forward_batch`
-    /// worker pool; 1 = single-threaded engine).  Total thread budget is
-    /// `shards × workers × engine_parallelism`.
-    pub engine_parallelism: usize,
-    pub max_batch: usize,
-    pub max_wait: Duration,
-    /// Per-shard batching policy override, in the `--batch-policy`
-    /// grammar: comma-separated `<name>:<max_batch>:<max_wait_us>`
-    /// entries, one per shard (e.g. `trigger:1:0,offline:64:2000`).
-    /// Empty = tier defaults for heterogeneous sessions (trigger
-    /// backends pinned at batch-1/zero-wait, offline backends batching
-    /// deep), the shared `max_batch`/`max_wait` otherwise.
-    pub batch_policy: String,
-    /// Per-shard queue capacity (drop beyond).
-    pub queue_capacity: usize,
-}
-
-impl Default for ServeCliConfig {
-    fn default() -> Self {
-        Self {
-            model_key: "top_gru".into(),
-            engine: "pjrt".into(),
-            backends: String::new(),
-            tier_mix: String::new(),
-            tier_seed: 0,
-            rate_hz: 20_000.0,
-            n_events: 50_000,
-            shards: 1,
-            shard_policy: "hash".into(),
-            workers: 2,
-            engine_parallelism: 1,
-            max_batch: 10,
-            max_wait: Duration::from_micros(200),
-            batch_policy: String::new(),
-            queue_capacity: 4096,
-        }
-    }
-}
+// The `serve` subcommand's configuration is no longer a stringly struct
+// here: the CLI parses its flags straight into the typed
+// `coordinator::session::ServingSpec` (whose `Default` carries the serve
+// defaults), and every serving invariant is validated in
+// `ServingSpec::build`.
 
 #[cfg(test)]
 mod tests {
@@ -138,32 +73,23 @@ mod tests {
         assert_eq!(cfg.keys.len(), 6);
     }
 
+    /// The serve defaults moved to `ServingSpec::default` with the typed
+    /// session API; they must stay the single-coordinator, single-class,
+    /// single-threaded-engine session so existing invocations reproduce
+    /// pre-session behavior exactly.
     #[test]
-    fn serve_defaults_are_single_threaded_engines() {
-        let cfg = ServeCliConfig::default();
-        assert_eq!(cfg.workers, 2);
-        assert_eq!(cfg.engine_parallelism, 1);
-        assert_eq!(cfg.max_batch, 10);
-    }
-
-    /// The default serve config must stay the single-coordinator setup so
-    /// existing invocations reproduce pre-sharding behavior exactly.
-    #[test]
-    fn serve_defaults_to_one_shard_hash_policy() {
-        let cfg = ServeCliConfig::default();
-        assert_eq!(cfg.shards, 1);
-        assert_eq!(cfg.shard_policy, "hash");
-    }
-
-    /// Likewise the default must stay the homogeneous single-class
-    /// session: no backend list, no tier mix, no per-shard batch policy.
-    #[test]
-    fn serve_defaults_to_homogeneous_session() {
-        let cfg = ServeCliConfig::default();
-        assert!(cfg.backends.is_empty());
-        assert!(cfg.tier_mix.is_empty());
-        assert_eq!(cfg.tier_seed, 0);
-        assert!(cfg.batch_policy.is_empty());
+    fn serve_defaults_live_in_the_typed_serving_spec() {
+        use crate::coordinator::{ServingSpec, ShardPolicy};
+        let spec = ServingSpec::default();
+        assert_eq!(spec.shards, 1);
+        assert_eq!(spec.shard_policy, ShardPolicy::HashId);
+        assert_eq!(spec.workers, 2);
+        assert_eq!(spec.engine_parallelism, 1);
+        assert_eq!(spec.batcher.max_batch, 10);
+        assert!(spec.backends.is_empty());
+        assert!(spec.tier_mix.is_none());
+        assert_eq!(spec.tier_seed, 0);
+        assert!(spec.batch_policy.is_none());
     }
 
     #[test]

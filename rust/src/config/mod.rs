@@ -3,4 +3,4 @@
 
 pub mod experiment;
 
-pub use experiment::{Fig2Config, ServeCliConfig, SweepConfig};
+pub use experiment::{Fig2Config, SweepConfig};

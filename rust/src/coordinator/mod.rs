@@ -6,13 +6,43 @@
 //! system:
 //!
 //! ```text
-//! EventSource ──► bounded queue ──► Batcher ──► engine worker threads
-//!  (Poisson /      (backpressure:    (size +      (each owns a PJRT
-//!   fixed rate)     drop + count)     deadline)     executable set)
-//!                                                       │
+//! submitters ──► bounded queue ──► Batcher ──► engine worker threads
+//!  (live Session   (backpressure:    (size +      (each owns a PJRT
+//!   handles, or     typed error /     deadline)     executable set)
+//!   replay source)  drop + count)                       │
 //!                        Metrics ◄──────────────────────┘
 //!            (drop rate, p50/p99 latency, throughput)
 //! ```
+//!
+//! ## Request-driven serving: the Session lifecycle
+//!
+//! The primary API is [`session`]: **spec → start → submit → snapshot →
+//! shutdown**.
+//!
+//! 1. Describe the session with a typed [`ServingSpec`] (backend kinds,
+//!    shards, routing, tier mix, per-shard batching, workers, queue
+//!    depth, clock).  [`ServingSpec::build`] is the single validation
+//!    point — shard ≥ 1, batch ≥ 1, mix sums to 1, backends arity,
+//!    per-label batcher consistency — with uniform error messages; the
+//!    CLI parses its flags straight into this struct.
+//! 2. [`Session::start`] spins up the sharded queue+batcher+worker
+//!    fabric and returns a live handle.
+//! 3. Any number of threads [`submit`](Session::submit) requests through
+//!    [`SessionHandle`] clones (many sources, one fabric); a full shard
+//!    queue surfaces as a typed [`SubmitError`] instead of blocking the
+//!    detector.
+//! 4. [`Session::recv`] / [`Session::drain`] yield per-request
+//!    [`Completion`]s (output, id, enqueue/complete instants);
+//!    [`Session::snapshot`] rolls live metrics up mid-flight.
+//! 5. [`Session::shutdown`] drains, closes, joins, and returns the final
+//!    [`ShardedReport`].
+//!
+//! The classic replay-to-completion entry points — [`Server::run`],
+//! [`ShardedServer::run`] — are thin wrappers: start a session, replay
+//! the spec's synthetic source through `submit`
+//! ([`Session::replay`]), shut down.  One fabric serves both modes, so
+//! the equivalence suites (shard, backend, batching) cover the live
+//! path by construction.
 //!
 //! Design notes:
 //!
@@ -126,6 +156,7 @@ pub mod clock;
 pub mod metrics;
 pub mod queue;
 pub mod server;
+pub mod session;
 pub mod sharded;
 pub mod source;
 pub mod tier;
@@ -137,6 +168,10 @@ pub use queue::BoundedQueue;
 pub use server::{
     worker_loop, BatchRunner, EngineRunner, Server, ServerConfig,
     ServerReport,
+};
+pub use session::{
+    BackendKind, Completion, ServingPlan, ServingSpec, Session,
+    SessionHandle, SubmitError,
 };
 pub use sharded::{
     BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,

@@ -9,7 +9,10 @@ use super::batcher::{next_batch, BatcherConfig};
 use super::clock::{Clock, SystemClock};
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
-use super::source::{self, SourceConfig};
+use super::session::{Completion, CompletionSink, Session};
+use super::sharded::{ShardPolicy, ShardedConfig};
+use super::source::SourceConfig;
+use super::tier::TierMix;
 use super::Request;
 
 /// An engine that can run one packed batch.  Implemented by the PJRT
@@ -110,7 +113,14 @@ impl ServerReport {
             p99_latency_us: metrics.total_latency.quantile_us(0.99),
             p50_queue_us: metrics.queue_latency.quantile_us(0.5),
             wall_seconds: wall,
-            throughput_hz: completed as f64 / wall,
+            // Guard the zero-wall case (a live `Session::snapshot`
+            // under a virtual clock that has not advanced): report 0,
+            // never NaN/Inf.
+            throughput_hz: if wall > 0.0 {
+                completed as f64 / wall
+            } else {
+                0.0
+            },
         }
     }
 
@@ -156,6 +166,22 @@ pub fn worker_loop(
     batcher_cfg: &BatcherConfig,
     clock: &dyn Clock,
 ) -> anyhow::Result<()> {
+    worker_loop_with_sink(runner, queue, metrics, batcher_cfg, clock, None)
+}
+
+/// [`worker_loop`] with an optional completion sink: after a batch's
+/// metrics are recorded, each request's output is forwarded to the
+/// session's completion channel with its enqueue/complete instants.
+/// `None` (the replay wrappers, the plain `worker_loop`) skips the
+/// forwarding entirely — identical hot path, bit for bit.
+pub(crate) fn worker_loop_with_sink(
+    runner: &mut dyn BatchRunner,
+    queue: &Arc<BoundedQueue<Request>>,
+    metrics: &ServerMetrics,
+    batcher_cfg: &BatcherConfig,
+    clock: &dyn Clock,
+    sink: Option<&CompletionSink>,
+) -> anyhow::Result<()> {
     let cap = runner.max_batch().min(batcher_cfg.max_batch).max(1);
     let local_cfg = BatcherConfig {
         max_batch: cap,
@@ -166,7 +192,29 @@ pub fn worker_loop(
         let packed = batch.packed_features();
         let outputs = runner.run(&packed, n)?;
         anyhow::ensure!(outputs.len() == n, "runner output count");
-        metrics.observe_batch(&batch, &outputs, clock.now());
+        let done = clock.now();
+        metrics.observe_batch(&batch, &outputs, done);
+        if let Some(sink) = sink {
+            for (request, output) in batch.requests.into_iter().zip(outputs) {
+                // Completions are monitoring, not control flow: a full
+                // channel (owner not draining) or a gone receiver
+                // (session dropped mid-run) must never stall serving —
+                // shed the notification and count it.
+                let undelivered = sink
+                    .tx
+                    .try_send(Completion {
+                        id: request.id,
+                        output,
+                        shard: sink.shard,
+                        enqueued_at: request.enqueued_at,
+                        completed_at: done,
+                    })
+                    .is_err();
+                if undelivered {
+                    sink.lost.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -174,7 +222,9 @@ pub fn worker_loop(
 pub struct Server;
 
 impl Server {
-    /// Run one serving session to completion.
+    /// Run one serving session to completion — a thin wrapper over the
+    /// live [`Session`] API: start a one-shard session, replay the
+    /// configured synthetic source through `Session::submit`, shut down.
     ///
     /// `runner_factory` is invoked once *inside each worker thread* —
     /// this is what lets non-`Send` engines (PJRT) be used.
@@ -184,9 +234,17 @@ impl Server {
         runner_factory: F,
     ) -> anyhow::Result<ServerReport>
     where
-        F: Fn() -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+        F: Fn() -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
     {
-        Self::run_with_clock(cfg, generator, runner_factory, &SystemClock)
+        Self::run_with_clock(
+            cfg,
+            generator,
+            runner_factory,
+            Arc::new(SystemClock),
+        )
     }
 
     /// [`Server::run`] with an explicit serving [`Clock`].  Production
@@ -198,70 +256,34 @@ impl Server {
         cfg: ServerConfig,
         generator: Box<dyn Generator>,
         runner_factory: F,
-        clock: &dyn Clock,
+        clock: Arc<dyn Clock>,
     ) -> anyhow::Result<ServerReport>
     where
-        F: Fn() -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+        F: Fn() -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
     {
-        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
-        cfg.batcher.validate()?;
-        let queue: Arc<BoundedQueue<Request>> =
-            Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let metrics = Arc::new(ServerMetrics::new());
-        let t0 = clock.now();
-
-        // Workers signal readiness after engine construction so the event
-        // source doesn't flood the queue while executables compile
-        // (§Perf L3: lazy first-batch compilation was adding ~0.5 s of
-        // artificial backlog to every run's latency percentiles).
-        let ready = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-
-        let report = std::thread::scope(|scope| -> anyhow::Result<()> {
-            let mut workers = Vec::new();
-            for worker_id in 0..cfg.workers {
-                let queue = queue.clone();
-                let metrics = metrics.clone();
-                let factory = &runner_factory;
-                let batcher_cfg = cfg.batcher;
-                let ready = ready.clone();
-                workers.push(scope.spawn(move || -> anyhow::Result<()> {
-                    let runner_or = factory().map_err(|e| {
-                        anyhow::anyhow!("worker {worker_id}: engine init: {e}")
-                    });
-                    ready.fetch_add(1, Ordering::SeqCst);
-                    let mut runner = runner_or?;
-                    worker_loop(
-                        runner.as_mut(),
-                        &queue,
-                        &metrics,
-                        &batcher_cfg,
-                        clock,
-                    )
-                }));
-            }
-
-            // Wait for every worker's engine before opening the tap.
-            while ready.load(Ordering::SeqCst) < cfg.workers {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-            }
-            // Source runs on this thread; closing the queue stops workers.
-            source::run(generator, cfg.source, &queue, &metrics, 0xEE77, clock);
-            // Let the queue drain before closing (workers are pulling) —
-            // unless every worker has already exited (e.g. init failure),
-            // in which case nothing will ever drain it.
-            while !queue.is_empty() && !workers.iter().all(|w| w.is_finished()) {
-                std::thread::sleep(std::time::Duration::from_micros(200));
-            }
-            queue.close();
-            for w in workers {
-                w.join().expect("worker panicked")?;
-            }
-            Ok(())
-        });
-        report?;
-
-        let wall = (clock.now() - t0).as_secs_f64();
-        Ok(ServerReport::from_metrics(&metrics, wall))
+        // A one-shard session is exactly the classic single coordinator
+        // (every routing policy degenerates to shard 0, the source seed
+        // and tier stamp are identical) — asserted by the
+        // shard-equivalence suite, so this wrapper has zero semantic
+        // footprint.
+        let session = Session::start_config(
+            ShardedConfig {
+                shards: 1,
+                policy: ShardPolicy::HashId,
+                tier_mix: TierMix::single(),
+                shard_backends: Vec::new(),
+                shard_batchers: Vec::new(),
+                server: cfg,
+            },
+            clock,
+            false,
+            move |_shard| runner_factory(),
+        )?;
+        session.replay(generator);
+        Ok(session.shutdown()?.merged)
     }
 }
 

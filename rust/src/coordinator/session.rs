@@ -1,0 +1,1437 @@
+//! Request-driven serving: the typed [`ServingSpec`] and the live
+//! [`Session`] handle — the primary serving API of this crate.
+//!
+//! The paper's trigger premise is a *continuously arriving* event stream
+//! served under a fixed latency budget; a serving fabric that can only
+//! replay a pre-built synthetic source to completion models the
+//! benchmark, not the deployment.  This module turns the sharded
+//! queue+batcher+worker fabric into a long-lived service:
+//!
+//! ```text
+//! ServingSpec ──build()──► ServingPlan ──Session::start(spec, factory)
+//!                                             │
+//!    submitters ──submit(Request)──► router ──┼─► shard queues ─ workers
+//!    (any number of threads,                  │          │
+//!     SessionHandle clones)                   │          └─► completion
+//!                                             │               channel
+//!    snapshot() ◄── live metrics roll-up ─────┘               (recv /
+//!    shutdown() ◄── drain-then-close ─────────┘                drain)
+//! ```
+//!
+//! Lifecycle: **spec → start → submit → snapshot → shutdown**.
+//!
+//! * [`ServingSpec`] is the one typed, validated description of a
+//!   session: backend kinds, shard count and routing policy, tier mix,
+//!   per-shard batching, worker/parallelism knobs, queue depth, the
+//!   synthetic-source shape for replay runs, and the serving [`Clock`].
+//!   Every check that used to live in `main.rs` or `ShardedServer::run`
+//!   (shard ≥ 1, batch ≥ 1, mix sums to 1, backends arity, per-label
+//!   policy consistency) happens in [`ServingSpec::build`], with uniform
+//!   error messages — the CLI is a thin adapter that parses flags
+//!   straight into this struct via `FromStr`.
+//! * [`Session::start`] spins the fabric up (one bounded queue, batcher
+//!   policy, and metrics block per shard; engine workers built by the
+//!   caller's factory *inside* their threads, so non-`Send` engines stay
+//!   legal) and returns a live handle.
+//! * [`Session::submit`] admits one request: route, count, push.
+//!   Backpressure is *surfaced*, not swallowed — a full shard queue
+//!   returns [`SubmitError::Full`] with the request handed back, exactly
+//!   the drop a trigger would count.  Any number of threads may submit
+//!   concurrently through [`SessionHandle`] clones (many sources, one
+//!   fabric).
+//! * Completions flow out of a channel: [`Session::recv`] /
+//!   [`Session::drain`] yield each request's output with its id and its
+//!   enqueue/complete instants on the serving clock.
+//! * [`Session::snapshot`] rolls the per-shard metrics up into a
+//!   [`ShardedReport`] *while the session serves* — live monitoring, the
+//!   same exact bucket-merge maths as the final report.
+//! * [`Session::shutdown`] runs the drain-then-close protocol (wait for
+//!   the queues to empty, close them, join every worker) and returns the
+//!   final report.
+//!
+//! The pre-existing replay entry points are thin wrappers:
+//! [`Server::run`](super::Server::run) and
+//! [`ShardedServer::run`](super::ShardedServer::run) start a `Session`,
+//! drive the spec's synthetic source through [`Session::replay`], and
+//! shut down — so the bitwise-equivalence guarantees of the
+//! shard/backend/batching suites hold for the live path *by
+//! construction*: there is only one fabric.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    Receiver, RecvTimeoutError, SyncSender, TryRecvError,
+};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::generators::Generator;
+use crate::nn::BackendSpec;
+
+use super::batcher::BatcherConfig;
+use super::clock::{Clock, SystemClock};
+use super::metrics::ServerMetrics;
+use super::queue::BoundedQueue;
+use super::server::{
+    worker_loop_with_sink, BatchRunner, ServerConfig, ServerReport,
+};
+use super::sharded::{
+    BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,
+    ShardedReport,
+};
+use super::source::{self, SourceConfig};
+use super::tier::{TierClass, TierMix, TierPolicy};
+use super::Request;
+
+// ------------------------------------------------------------ BackendKind
+
+/// A serving backend, as a type instead of a string.  The kinds mirror
+/// the `nn::BackendSpec` registry rows one for one (asserted by a unit
+/// test), so resolving a kind to an engine constructor cannot fail —
+/// only *building* the engine can (e.g. the stubbed `pjrt` slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Bit-accurate `ap_fixed` datapath — the trigger tier.
+    Fixed,
+    /// f32 reference engine — the offline tier.
+    Float,
+    /// PJRT runtime slot (interface stub in this build).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Registry name of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Fixed => "fixed",
+            Self::Float => "float",
+            Self::Pjrt => "pjrt",
+        }
+    }
+
+    /// The registry row this kind resolves to (infallible: the enum and
+    /// the registry are kept in sync).
+    pub fn spec(self) -> BackendSpec {
+        BackendSpec::parse(self.name()).expect("kind registered")
+    }
+
+    /// Latency class of this backend (which batching defaults it gets).
+    pub fn tier_class(self) -> TierClass {
+        TierClass::for_backend(self.name())
+    }
+
+    /// Parse a comma-separated backend list (`"fixed,float"`), one entry
+    /// per shard.
+    pub fn parse_list(csv: &str) -> anyhow::Result<Vec<Self>> {
+        anyhow::ensure!(!csv.trim().is_empty(), "backend list is empty");
+        csv.split(',').map(|part| part.trim().parse()).collect()
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "fixed" => Ok(Self::Fixed),
+            "float" => Ok(Self::Float),
+            "pjrt" => Ok(Self::Pjrt),
+            other => anyhow::bail!(
+                "unknown backend {other:?} (registered: {:?})",
+                BackendSpec::names()
+            ),
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ------------------------------------------------------------ ServingSpec
+
+/// Typed, validated description of one serving session — everything the
+/// old stringly CLI config (`engine`/`backends`/`tier_mix`/
+/// `shard_policy`/`batch_policy` as raw `String`s) expressed, as real
+/// types with one validation point ([`Self::build`]).
+///
+/// Construct with struct-update syntax over [`Default`] or the
+/// `with_*` builder methods:
+///
+/// ```no_run
+/// use rnn_hls::coordinator::session::{BackendKind, ServingSpec};
+///
+/// let spec = ServingSpec::default()
+///     .with_engine(BackendKind::Float)
+///     .with_shards(2)
+///     .with_workers(2);
+/// let plan = spec.build().unwrap();
+/// assert_eq!(plan.config.shards, 2);
+/// ```
+#[derive(Clone)]
+pub struct ServingSpec {
+    /// Homogeneous engine for every shard.  Ignored when `backends` is
+    /// non-empty.
+    pub engine: BackendKind,
+    /// Heterogeneous session: one backend per shard (`backends.len()`
+    /// must equal `shards`; mixing kinds requires
+    /// [`ShardPolicy::ModelKey`] so tiers reach their backends).  Empty
+    /// = homogeneous `engine` everywhere.
+    pub backends: Vec<BackendKind>,
+    /// Explicit traffic-class mix (one fraction per backend).  `None` =
+    /// uniform across `backends`, or the single-class mix when the
+    /// session is homogeneous.
+    pub tier_mix: Option<TierMix>,
+    /// Seed of the tier-stamping hash (same seed, same partition of the
+    /// id space into tiers).  Used when `tier_mix` is `None` and the
+    /// session is heterogeneous.
+    pub tier_seed: u64,
+    /// Coordinator shards (independent queue+batcher+worker pipelines).
+    pub shards: usize,
+    /// Routing policy in front of the shards.
+    pub shard_policy: ShardPolicy,
+    /// Explicit per-shard batching policy (one entry per shard).  `None`
+    /// = each backend's tier default for heterogeneous sessions, the
+    /// shared `batcher` otherwise.
+    pub batch_policy: Option<TierPolicy>,
+    /// Engine-worker threads per shard.
+    pub workers: usize,
+    /// Per-batch worker threads inside each rust engine (1 = inline).
+    pub engine_parallelism: usize,
+    /// Shared batching policy (the per-shard fallback).
+    pub batcher: BatcherConfig,
+    /// Per-shard bounded-queue capacity (submits beyond it fail with
+    /// [`SubmitError::Full`]).
+    pub queue_capacity: usize,
+    /// Synthetic-source shape for replay runs ([`Session::replay`], the
+    /// `Server::run` / `ShardedServer::run` wrappers).  Live submitters
+    /// ignore it.
+    pub source: SourceConfig,
+    /// The serving clock (deadline + latency timeline).  Production uses
+    /// [`SystemClock`]; tests may share a
+    /// [`VirtualClock`](super::clock::VirtualClock).
+    pub clock: Arc<dyn Clock>,
+    /// Record per-request completions on the session channel.  The
+    /// channel is bounded (4× the aggregate queue capacity, at least
+    /// 4096): overflow is shed and counted
+    /// ([`Session::completions_lost`]) rather than stalling workers or
+    /// growing without bound.  Replay wrappers switch this off (nothing
+    /// drains the channel there).
+    pub completions: bool,
+}
+
+impl Default for ServingSpec {
+    /// The `serve` subcommand's defaults — the single coordinator,
+    /// single-class session.
+    fn default() -> Self {
+        Self {
+            engine: BackendKind::Pjrt,
+            backends: Vec::new(),
+            tier_mix: None,
+            tier_seed: 0,
+            shards: 1,
+            shard_policy: ShardPolicy::HashId,
+            batch_policy: None,
+            workers: 2,
+            engine_parallelism: 1,
+            batcher: BatcherConfig {
+                max_batch: 10,
+                max_wait: Duration::from_micros(200),
+            },
+            queue_capacity: 4096,
+            source: SourceConfig {
+                rate_hz: 20_000.0,
+                poisson: true,
+                n_events: 50_000,
+            },
+            clock: Arc::new(SystemClock),
+            completions: true,
+        }
+    }
+}
+
+impl fmt::Debug for ServingSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ServingSpec")
+            .field("engine", &self.engine)
+            .field("backends", &self.backends)
+            .field("tier_mix", &self.tier_mix)
+            .field("tier_seed", &self.tier_seed)
+            .field("shards", &self.shards)
+            .field("shard_policy", &self.shard_policy)
+            .field("batch_policy", &self.batch_policy)
+            .field("workers", &self.workers)
+            .field("engine_parallelism", &self.engine_parallelism)
+            .field("batcher", &self.batcher)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("source", &self.source)
+            .field("completions", &self.completions)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ServingSpec {
+    pub fn with_engine(mut self, engine: BackendKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_backends(mut self, backends: Vec<BackendKind>) -> Self {
+        self.backends = backends;
+        self
+    }
+
+    pub fn with_tier_mix(mut self, mix: TierMix) -> Self {
+        self.tier_mix = Some(mix);
+        self
+    }
+
+    pub fn with_tier_seed(mut self, seed: u64) -> Self {
+        self.tier_seed = seed;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_shard_policy(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = policy;
+        self
+    }
+
+    pub fn with_batch_policy(mut self, policy: TierPolicy) -> Self {
+        self.batch_policy = Some(policy);
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_engine_parallelism(mut self, parallelism: usize) -> Self {
+        self.engine_parallelism = parallelism;
+        self
+    }
+
+    pub fn with_batcher(mut self, max_batch: usize, max_wait: Duration) -> Self {
+        self.batcher = BatcherConfig {
+            max_batch,
+            max_wait,
+        };
+        self
+    }
+
+    pub fn with_queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    pub fn with_source(mut self, source: SourceConfig) -> Self {
+        self.source = source;
+        self
+    }
+
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    pub fn with_completions(mut self, on: bool) -> Self {
+        self.completions = on;
+        self
+    }
+
+    /// Validate the spec and resolve it into a [`ServingPlan`] — the one
+    /// place every serving invariant is checked, with uniform error
+    /// messages (the CLI and the library share it):
+    ///
+    /// * `shards >= 1`, `workers >= 1`, `queue_capacity >= 1`,
+    ///   `engine_parallelism >= 1`;
+    /// * `batcher.max_batch >= 1` (and every `batch_policy` entry —
+    ///   enforced at `TierPolicy` parse time too);
+    /// * `backends` names exactly one backend per shard, and mixing
+    ///   kinds requires [`ShardPolicy::ModelKey`];
+    /// * an explicit `tier_mix` requires `backends` and one fraction per
+    ///   backend (the mix itself validates that fractions are positive
+    ///   and sum to 1);
+    /// * an explicit `batch_policy` names exactly one entry per shard;
+    /// * shards sharing a backend label share one batching policy
+    ///   (re-checked by [`Session::start`]).
+    pub fn build(&self) -> anyhow::Result<ServingPlan> {
+        // Fabric invariants (shards/workers/queue >= 1, batcher
+        // validity, arities, label consistency) are checked once, in
+        // `validate_config` on the assembled config below — one copy of
+        // each message, shared with hand-built `Session::start_config`
+        // callers.  Only spec-level knobs are checked here.
+        anyhow::ensure!(
+            self.engine_parallelism >= 1,
+            "engine parallelism must be >= 1"
+        );
+
+        if !self.backends.is_empty() {
+            anyhow::ensure!(
+                self.backends.len() == self.shards,
+                "spec names {} backends for {} shards \
+                 (one backend per shard)",
+                self.backends.len(),
+                self.shards
+            );
+            let mixed = self
+                .backends
+                .iter()
+                .any(|kind| *kind != self.backends[0]);
+            anyhow::ensure!(
+                !mixed || self.shard_policy == ShardPolicy::ModelKey,
+                "mixing backends requires the model-key shard policy \
+                 (tier keys must reach their backend's shard; {} routing \
+                 would scatter tiers across backends)",
+                self.shard_policy.name()
+            );
+        }
+
+        let tier_mix = match &self.tier_mix {
+            Some(mix) => {
+                anyhow::ensure!(
+                    !self.backends.is_empty(),
+                    "a tier mix requires backends (tiers name backends)"
+                );
+                anyhow::ensure!(
+                    mix.tiers() == self.backends.len(),
+                    "tier mix lists {} fractions for {} backends",
+                    mix.tiers(),
+                    self.backends.len()
+                );
+                mix.clone()
+            }
+            None if self.backends.len() > 1 => {
+                TierMix::uniform(self.backends.len(), self.tier_seed)?
+            }
+            None => TierMix::single(),
+        };
+
+        let shard_backends: Vec<String> = self
+            .backends
+            .iter()
+            .map(|kind| kind.name().to_string())
+            .collect();
+        let shard_batchers = match &self.batch_policy {
+            Some(policy) => {
+                anyhow::ensure!(
+                    policy.entries.len() == self.shards,
+                    "batch policy names {} tiers for {} shards \
+                     (one name:max_batch:max_wait_us entry per shard)",
+                    policy.entries.len(),
+                    self.shards
+                );
+                policy.batchers()
+            }
+            // Heterogeneous sessions default to each backend's tier
+            // class: trigger backends batch-1/zero-wait, offline deep.
+            None if self.backends.len() > 1 => {
+                TierPolicy::for_backends(&shard_backends).batchers()
+            }
+            None => Vec::new(),
+        };
+
+        let config = ShardedConfig {
+            shards: self.shards,
+            policy: self.shard_policy,
+            tier_mix,
+            shard_backends,
+            shard_batchers,
+            server: ServerConfig {
+                workers: self.workers,
+                queue_capacity: self.queue_capacity,
+                batcher: self.batcher,
+                source: self.source,
+            },
+        };
+        validate_config(&config)?;
+        Ok(ServingPlan {
+            config,
+            shard_kinds: self.backends.clone(),
+            engine: self.engine,
+            engine_parallelism: self.engine_parallelism,
+            clock: self.clock.clone(),
+            completions: self.completions,
+        })
+    }
+}
+
+/// A validated spec, resolved to the fabric configuration plus the
+/// engine-construction context a factory needs ([`Self::kind_for`],
+/// [`Self::runner_cap`]).  Produced by [`ServingSpec::build`], consumed
+/// by [`Session::start_plan`].
+#[derive(Clone)]
+pub struct ServingPlan {
+    /// The fabric configuration the session spins up.
+    pub config: ShardedConfig,
+    /// Resolved engine kind per shard (empty = homogeneous `engine`).
+    pub shard_kinds: Vec<BackendKind>,
+    /// Homogeneous engine kind (used when `shard_kinds` is empty).
+    pub engine: BackendKind,
+    /// Per-batch worker threads inside each engine.
+    pub engine_parallelism: usize,
+    /// The serving clock.
+    pub clock: Arc<dyn Clock>,
+    /// Whether the session records per-request completions.
+    pub completions: bool,
+}
+
+impl ServingPlan {
+    /// Engine kind shard `shard` serves with.
+    pub fn kind_for(&self, shard: usize) -> BackendKind {
+        self.shard_kinds.get(shard).copied().unwrap_or(self.engine)
+    }
+
+    /// The engine-runner batch cap for `shard`: its (tier-resolved)
+    /// batcher's `max_batch`, so a deep-batching shard is never clamped
+    /// by the shared batcher.
+    pub fn runner_cap(&self, shard: usize) -> usize {
+        self.config.batcher_for(shard).max_batch
+    }
+}
+
+// ------------------------------------------------------------ Completion
+
+/// One served request, as delivered on the session's completion channel.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// The request's id (caller-assigned via [`Session::submit`], or the
+    /// source's sequence number in replay runs).
+    pub id: u64,
+    /// The engine's output probabilities for this request.
+    pub output: Vec<f32>,
+    /// Shard that served the request.
+    pub shard: usize,
+    /// When the request entered the fabric (the latency anchor).
+    pub enqueued_at: Instant,
+    /// When its batch finished, on the serving clock.
+    pub completed_at: Instant,
+}
+
+/// Per-worker handle the serving loop pushes completions through.  The
+/// channel is *bounded* (sized from the session's aggregate queue
+/// capacity), and a full channel drops the completion and counts it
+/// ([`Session::completions_lost`]) instead of stalling the worker — an
+/// undrained egress buffer must never block serving or grow without
+/// bound.
+pub(crate) struct CompletionSink {
+    pub(crate) shard: usize,
+    pub(crate) tx: SyncSender<Completion>,
+    pub(crate) lost: Arc<AtomicU64>,
+}
+
+// ------------------------------------------------------------ SubmitError
+
+/// Why a submission was not admitted.  Both variants hand the request
+/// back so the caller can retry, redirect, or drop it knowingly.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The target shard's bounded queue is full — trigger-style
+    /// backpressure.  The drop has been counted in that shard's metrics
+    /// (exactly what the replay source does with overflow).
+    Full {
+        /// Shard whose queue rejected the request.
+        shard: usize,
+        /// The rejected request, returned to the caller.
+        request: Request,
+    },
+    /// The session is shutting down (or already shut down); nothing was
+    /// counted.
+    Closed {
+        /// The rejected request, returned to the caller.
+        request: Request,
+    },
+}
+
+impl SubmitError {
+    /// The request that was not admitted.
+    pub fn request(&self) -> &Request {
+        match self {
+            Self::Full { request, .. } | Self::Closed { request } => request,
+        }
+    }
+
+    /// Recover the request by value (for retry).
+    pub fn into_request(self) -> Request {
+        match self {
+            Self::Full { request, .. } | Self::Closed { request } => request,
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Full { shard, request } => write!(
+                f,
+                "shard {shard} queue full: request {} dropped \
+                 (backpressure)",
+                request.id
+            ),
+            Self::Closed { request } => write!(
+                f,
+                "session closed: request {} not admitted",
+                request.id
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+// --------------------------------------------------------------- Session
+
+/// The shared state every submitter handle and the session itself point
+/// at.  Admission (route → count → push) lives here so `Session` and
+/// [`SessionHandle`] behave identically.
+struct SessionShared {
+    config: ShardedConfig,
+    queues: Vec<Arc<BoundedQueue<Request>>>,
+    metrics: Vec<Arc<ServerMetrics>>,
+    router: Mutex<Router>,
+    clock: Arc<dyn Clock>,
+    closed: AtomicBool,
+    next_id: AtomicU64,
+}
+
+impl SessionShared {
+    fn submit(&self, request: Request) -> Result<(), SubmitError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed { request });
+        }
+        // Route on the submitter's thread — the same cheap, deterministic
+        // policies the replay source uses (no downstream inspection).
+        // Hash and model-key routing are pure functions of the request,
+        // so concurrent submitters take no lock on the hot path; only
+        // round-robin (router state) serializes.
+        let shard = match self
+            .config
+            .policy
+            .route_stateless(&request, self.config.shards)
+        {
+            Some(shard) => shard,
+            None => self.router.lock().expect("router lock").route(&request),
+        };
+        self.metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
+        match self.queues[shard].push(request) {
+            Ok(()) => Ok(()),
+            // A push failing on a *closed* queue means shutdown raced us
+            // between the closed-flag check and the push: undo the
+            // admission count (the request was never admitted) and
+            // report Closed, not a spurious Full — the final report's
+            // books must balance (generated = completed + dropped).
+            Err(request) if self.queues[shard].is_closed() => {
+                self.metrics[shard]
+                    .generated
+                    .fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed { request })
+            }
+            Err(request) => {
+                self.metrics[shard]
+                    .dropped
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Full { shard, request })
+            }
+        }
+    }
+
+    /// Build a request the session way: fresh id, tier stamp from the
+    /// session's mix, enqueue instant from the serving clock.
+    fn next_request(&self, features: Vec<f32>, label: u32) -> Request {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Request {
+            id,
+            features,
+            label,
+            route_key: self.config.tier_mix.stamp(id),
+            enqueued_at: self.clock.now(),
+        }
+    }
+
+    fn snapshot(&self, started_at: Instant) -> ShardedReport {
+        let wall = (self.clock.now() - started_at).as_secs_f64();
+        roll_up(&self.config, &self.metrics, wall)
+    }
+}
+
+/// A clonable submitter handle: many sources, one fabric.  Cheap to
+/// clone and `Send + Sync`, so each producer thread owns one.
+#[derive(Clone)]
+pub struct SessionHandle {
+    shared: Arc<SessionShared>,
+}
+
+impl SessionHandle {
+    /// Admit one request (see [`Session::submit`]).
+    pub fn submit(&self, request: Request) -> Result<(), SubmitError> {
+        self.shared.submit(request)
+    }
+
+    /// Build and admit a request from raw features, returning its
+    /// session-assigned id.  On rejection the error carries the request
+    /// (and its id) back.
+    pub fn submit_event(
+        &self,
+        features: Vec<f32>,
+        label: u32,
+    ) -> Result<u64, SubmitError> {
+        let request = self.shared.next_request(features, label);
+        let id = request.id;
+        self.shared.submit(request)?;
+        Ok(id)
+    }
+}
+
+type WorkerHandles = Vec<Vec<JoinHandle<anyhow::Result<()>>>>;
+
+/// A live serving session: the sharded queue+batcher+worker fabric with
+/// the tap open.  See the [module docs](crate::coordinator::session) for
+/// the lifecycle.
+pub struct Session {
+    shared: Arc<SessionShared>,
+    /// `workers[shard][worker]` join handles (the shutdown protocol
+    /// needs the per-shard grouping for its settled check).
+    workers: WorkerHandles,
+    completions: Mutex<Receiver<Completion>>,
+    /// Completions dropped because the bounded channel was full (the
+    /// owner was not draining).  Serving itself is unaffected.
+    completions_lost: Arc<AtomicU64>,
+    started_at: Instant,
+}
+
+impl Session {
+    /// Validate `spec` and start the fabric.  `factory` is invoked once
+    /// per worker, *inside* that worker's thread (non-`Send` engines
+    /// stay legal), receiving the worker's shard index; `start` returns
+    /// once every worker has built its engine (or failed to — init
+    /// errors surface at [`Self::shutdown`]).
+    pub fn start<F>(spec: &ServingSpec, factory: F) -> anyhow::Result<Self>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Self::start_plan(spec.build()?, factory)
+    }
+
+    /// [`Self::start`] over an already-built plan (lets the caller read
+    /// `plan.kind_for` / `plan.runner_cap` while constructing `factory`).
+    pub fn start_plan<F>(plan: ServingPlan, factory: F) -> anyhow::Result<Self>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Self::start_config(plan.config, plan.clock, plan.completions, factory)
+    }
+
+    /// Low-level entry over an assembled [`ShardedConfig`] — the path
+    /// the replay wrappers (`Server::run`, `ShardedServer::run`) use.
+    /// Re-validates the config, so hand-built configs get the same
+    /// errors as spec-built ones.
+    pub fn start_config<F>(
+        config: ShardedConfig,
+        clock: Arc<dyn Clock>,
+        completions: bool,
+        factory: F,
+    ) -> anyhow::Result<Self>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        validate_config(&config)?;
+        let queues: Vec<Arc<BoundedQueue<Request>>> = (0..config.shards)
+            .map(|_| Arc::new(BoundedQueue::new(config.server.queue_capacity)))
+            .collect();
+        let metrics: Vec<Arc<ServerMetrics>> = (0..config.shards)
+            .map(|_| Arc::new(ServerMetrics::new()))
+            .collect();
+        let started_at = clock.now();
+        // The completion channel is bounded — the egress buffer must
+        // never grow without bound when the owner is slow to drain.  The
+        // bound is generous (4× the aggregate ingress capacity, at least
+        // 4096) so a consumer that keeps up never loses a completion;
+        // overflow is dropped and counted, never blocking a worker.
+        let completion_bound = config
+            .server
+            .queue_capacity
+            .saturating_mul(config.shards)
+            .saturating_mul(4)
+            .max(4096);
+        let (tx, rx) = mpsc::sync_channel::<Completion>(completion_bound);
+        let completions_lost = Arc::new(AtomicU64::new(0));
+
+        // Readiness gate: the tap opens (start returns) only after every
+        // worker on every shard has attempted engine construction, so
+        // submitters cannot flood the queues while executables compile.
+        let total_workers = config.shards * config.server.workers;
+        let ready = Arc::new(AtomicUsize::new(0));
+        let factory = Arc::new(factory);
+
+        let mut workers: WorkerHandles = Vec::with_capacity(config.shards);
+        for shard in 0..config.shards {
+            let mut shard_handles =
+                Vec::with_capacity(config.server.workers);
+            // Tier-aware batching: each shard serves under its own
+            // policy, falling back to the shared config.
+            let batcher_cfg = config.batcher_for(shard);
+            for worker in 0..config.server.workers {
+                let queue = queues[shard].clone();
+                let shard_metrics = metrics[shard].clone();
+                let factory = factory.clone();
+                let ready = ready.clone();
+                let clock = clock.clone();
+                let sink = completions.then(|| CompletionSink {
+                    shard,
+                    tx: tx.clone(),
+                    lost: completions_lost.clone(),
+                });
+                shard_handles.push(std::thread::spawn(
+                    move || -> anyhow::Result<()> {
+                        // The readiness bump rides a drop guard so a
+                        // factory that *panics* (not just errors) still
+                        // counts: a dead worker must never wedge the
+                        // start-time readiness gate.
+                        struct ReadyGuard(Arc<AtomicUsize>);
+                        impl Drop for ReadyGuard {
+                            fn drop(&mut self) {
+                                self.0.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        let runner_or = {
+                            let _ready = ReadyGuard(ready);
+                            (*factory)(shard).map_err(|e| {
+                                anyhow::anyhow!(
+                                    "shard {shard} worker {worker}: \
+                                     engine init: {e}"
+                                )
+                            })
+                        };
+                        let mut runner = runner_or?;
+                        worker_loop_with_sink(
+                            runner.as_mut(),
+                            &queue,
+                            &shard_metrics,
+                            &batcher_cfg,
+                            &*clock,
+                            sink.as_ref(),
+                        )
+                    },
+                ));
+            }
+            workers.push(shard_handles);
+        }
+        // The workers own every live sender clone; dropping the original
+        // lets `recv` observe end-of-stream once they exit.
+        drop(tx);
+
+        while ready.load(Ordering::SeqCst) < total_workers {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        let shared = Arc::new(SessionShared {
+            router: Mutex::new(Router::new(config.policy, config.shards)),
+            config,
+            queues,
+            metrics,
+            clock,
+            closed: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+        });
+        Ok(Self {
+            shared,
+            workers,
+            completions: Mutex::new(rx),
+            completions_lost,
+            started_at,
+        })
+    }
+
+    /// Admit one request: route it to its shard, count it, push it.
+    /// Backpressure and shutdown surface as typed [`SubmitError`]s with
+    /// the request handed back — never a panic, never a silent drop.
+    pub fn submit(&self, request: Request) -> Result<(), SubmitError> {
+        self.shared.submit(request)
+    }
+
+    /// Build and admit a request from raw features (session-assigned id,
+    /// tier stamp, enqueue instant), returning the id.
+    pub fn submit_event(
+        &self,
+        features: Vec<f32>,
+        label: u32,
+    ) -> Result<u64, SubmitError> {
+        let request = self.shared.next_request(features, label);
+        let id = request.id;
+        self.shared.submit(request)?;
+        Ok(id)
+    }
+
+    /// A clonable submitter handle — hand one to each producer thread
+    /// (many sources, one fabric).
+    pub fn handle(&self) -> SessionHandle {
+        SessionHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Blocking receive of the next completion.  `None` once every
+    /// worker has exited (after [`Self::shutdown`] has begun) and the
+    /// channel is drained.  Only meaningful when the spec enabled
+    /// `completions`.  Consumption is serialized, but the inner lock is
+    /// released between waits so a concurrent [`Self::drain`] can make
+    /// progress on an idle session.
+    pub fn recv(&self) -> Option<Completion> {
+        loop {
+            let rx = self.completions.lock().expect("completions lock");
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(completion) => return Some(completion),
+                Err(RecvTimeoutError::Disconnected) => return None,
+                // Timed out with the fabric still up: drop the lock for
+                // a beat so other consumers are not starved, then wait
+                // again.
+                Err(RecvTimeoutError::Timeout) => {}
+            }
+        }
+    }
+
+    /// Completions dropped because the bounded completion channel was
+    /// full (the session owner was not draining).  Serving and metrics
+    /// are unaffected — only the egress notifications were shed.
+    pub fn completions_lost(&self) -> u64 {
+        self.completions_lost.load(Ordering::Relaxed)
+    }
+
+    /// Non-blocking drain of every completion currently queued.
+    pub fn drain(&self) -> Vec<Completion> {
+        let rx = self.completions.lock().expect("completions lock");
+        let mut out = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(completion) => out.push(completion),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => {
+                    return out
+                }
+            }
+        }
+    }
+
+    /// Live metrics roll-up: the same exact cross-shard merge as the
+    /// final report (counters summed, histogram buckets merged
+    /// bucket-wise), taken while the session serves.
+    pub fn snapshot(&self) -> ShardedReport {
+        self.shared.snapshot(self.started_at)
+    }
+
+    /// Replay the spec's synthetic source through [`Self::submit`] to
+    /// completion — the paced stream the `Server::run` /
+    /// `ShardedServer::run` wrappers drive.  Same source seed, tier
+    /// stamp, and admission accounting as the pre-session servers, so
+    /// replay runs are bitwise-equivalent by construction.  Returns the
+    /// number of generated events.
+    ///
+    /// The source stamps ids `0..n`; do not run a replay *concurrently*
+    /// with [`Self::submit_event`] on one session (the wrappers never
+    /// do) — a replay advances the session's id counter past its range,
+    /// so sequential mixing stays collision-free.
+    pub fn replay(&self, generator: Box<dyn Generator>) -> usize {
+        let generated = source::run_with(
+            generator,
+            self.shared.config.server.source,
+            0xEE77,
+            &self.shared.config.tier_mix,
+            &*self.shared.clock,
+            |request| {
+                // Overflow is already counted inside submit — exactly
+                // the drop-and-continue admission the source always had.
+                let _ = self.shared.submit(request);
+            },
+        );
+        // Keep later submit_event ids disjoint from the replayed range.
+        self.shared
+            .next_id
+            .fetch_max(generated as u64, Ordering::SeqCst);
+        generated
+    }
+
+    /// Drain-then-close shutdown: stop admitting, wait for every shard's
+    /// queue to empty (or for all its workers to have exited — one dead
+    /// shard cannot wedge the rest), close the queues, join every
+    /// worker, and return the final report.  Worker errors (engine init,
+    /// runner failures) surface here.
+    pub fn shutdown(mut self) -> anyhow::Result<ShardedReport> {
+        let workers = std::mem::take(&mut self.workers);
+        self.shared.closed.store(true, Ordering::SeqCst);
+
+        let settled = |shard: usize| {
+            self.shared.queues[shard].is_empty()
+                || workers[shard].iter().all(|w| w.is_finished())
+        };
+        while !(0..self.shared.config.shards).all(settled) {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        for queue in &self.shared.queues {
+            queue.close();
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for shard_handles in workers {
+            for handle in shard_handles {
+                // Join every worker even after a failure; report the
+                // first error once the fabric is fully stopped.
+                if let Err(e) = handle.join().expect("worker panicked") {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        let wall = (self.shared.clock.now() - self.started_at).as_secs_f64();
+        Ok(roll_up(&self.shared.config, &self.shared.metrics, wall))
+        // `self` drops here: its Drop re-closes the (already closed)
+        // queues, a no-op.
+    }
+}
+
+impl Drop for Session {
+    /// A session dropped without [`Session::shutdown`] (early `?`
+    /// return, panic unwind) must not strand its fabric: stop admitting
+    /// and close every shard queue so the workers drain what is queued
+    /// and exit on their own.  The threads are detached rather than
+    /// joined — `Drop` must not block — so `shutdown` remains the
+    /// orderly path (joined workers, surfaced errors, final report).
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        for queue in &self.shared.queues {
+            queue.close();
+        }
+    }
+}
+
+// ------------------------------------------------- validation + roll-up
+
+/// The fabric invariants every entry point enforces (spec-built and
+/// hand-built configs alike) — moved here from `ShardedServer::run` so
+/// there is exactly one copy of each message.
+pub(crate) fn validate_config(cfg: &ShardedConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+    anyhow::ensure!(
+        cfg.server.workers >= 1,
+        "need at least one worker per shard"
+    );
+    anyhow::ensure!(
+        cfg.server.queue_capacity >= 1,
+        "queue capacity must be >= 1"
+    );
+    anyhow::ensure!(
+        cfg.shard_backends.is_empty()
+            || cfg.shard_backends.len() == cfg.shards,
+        "shard_backends names {} backends for {} shards \
+         (need one label per shard, or none)",
+        cfg.shard_backends.len(),
+        cfg.shards
+    );
+    anyhow::ensure!(
+        cfg.shard_batchers.is_empty()
+            || cfg.shard_batchers.len() == cfg.shards,
+        "shard_batchers names {} policies for {} shards \
+         (need one batcher per shard, or none)",
+        cfg.shard_batchers.len(),
+        cfg.shards
+    );
+    cfg.server.batcher.validate()?;
+    for (shard, batcher) in cfg.shard_batchers.iter().enumerate() {
+        batcher
+            .validate()
+            .map_err(|e| anyhow::anyhow!("shard {shard}: {e}"))?;
+    }
+    // Shards sharing a backend label must share a batching policy: the
+    // per-backend roll-up reports one batcher per label, and its
+    // percentiles must not blend measurements taken under different
+    // policies (the bench batcher columns would lie).
+    for (shard, label) in cfg.shard_backends.iter().enumerate() {
+        let first = cfg
+            .shard_backends
+            .iter()
+            .position(|l| l == label)
+            .expect("label exists at its own index");
+        anyhow::ensure!(
+            cfg.batcher_for(first) == cfg.batcher_for(shard),
+            "backend {label:?}: shards {first} and {shard} serve \
+             under different batchers (the per-backend roll-up \
+             needs one policy per label)"
+        );
+    }
+    Ok(())
+}
+
+/// Cross-shard metrics roll-up: counters summed, histogram buckets
+/// merged bucket-wise (merged percentiles are exact, not averages of
+/// percentiles), plus the per-shard breakdown and — for labelled
+/// sessions — the per-backend tier split.  Shared by the live
+/// [`Session::snapshot`] and the final [`Session::shutdown`] report.
+pub(crate) fn roll_up(
+    cfg: &ShardedConfig,
+    metrics: &[Arc<ServerMetrics>],
+    wall: f64,
+) -> ShardedReport {
+    let merged = ServerMetrics::new();
+    for shard_metrics in metrics {
+        merged.merge(shard_metrics);
+    }
+    let per_shard = metrics
+        .iter()
+        .enumerate()
+        .map(|(shard, m)| ShardStats {
+            shard,
+            backend: cfg
+                .shard_backends
+                .get(shard)
+                .cloned()
+                .unwrap_or_default(),
+            batcher: cfg.batcher_for(shard),
+            routed: m.generated.load(Ordering::Relaxed),
+            dropped: m.dropped.load(Ordering::Relaxed),
+            completed: m.completed.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            mean_batch: m.mean_batch_size(),
+            p99_latency_us: m.total_latency.quantile_us(0.99),
+        })
+        .collect();
+
+    // Per-backend split: group labelled shards (first-appearance order)
+    // and merge each group's metrics exactly, so every tier reports its
+    // own true percentiles.
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (shard, label) in cfg.shard_backends.iter().enumerate() {
+        match groups.iter_mut().find(|(name, _)| name == label) {
+            Some((_, shards)) => shards.push(shard),
+            None => groups.push((label.clone(), vec![shard])),
+        }
+    }
+    let per_backend = groups
+        .into_iter()
+        .map(|(backend, shard_ids)| {
+            let tier_metrics = ServerMetrics::new();
+            for &shard in &shard_ids {
+                tier_metrics.merge(&metrics[shard]);
+            }
+            BackendTierStats {
+                backend,
+                batcher: cfg.batcher_for(shard_ids[0]),
+                report: ServerReport::from_metrics(&tier_metrics, wall),
+                shards: shard_ids,
+            }
+        })
+        .collect();
+
+    ShardedReport {
+        shards: cfg.shards,
+        policy: cfg.policy,
+        merged: ServerReport::from_metrics(&merged, wall),
+        per_shard,
+        per_backend,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            features: vec![0.0; 4],
+            label: 0,
+            route_key: 0,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    /// Echo runner: output encodes the first feature, so tests can match
+    /// completions back to requests.
+    struct EchoRunner;
+    impl BatchRunner for EchoRunner {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn run(
+            &mut self,
+            xs: &[f32],
+            n: usize,
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            let stride = xs.len() / n.max(1);
+            Ok((0..n).map(|i| vec![xs[i * stride]]).collect())
+        }
+    }
+
+    #[test]
+    fn backend_kind_mirrors_the_registry() {
+        // The typed enum and the registry table must agree row for row.
+        let names: Vec<&str> =
+            [BackendKind::Fixed, BackendKind::Float, BackendKind::Pjrt]
+                .iter()
+                .map(|k| k.name())
+                .collect();
+        assert_eq!(names, BackendSpec::names());
+        for name in BackendSpec::names() {
+            let kind: BackendKind = name.parse().unwrap();
+            assert_eq!(kind.name(), name);
+            assert_eq!(kind.spec().name(), name);
+            assert_eq!(kind.to_string(), name);
+        }
+        let err = "tpu".parse::<BackendKind>().unwrap_err().to_string();
+        assert!(err.contains("unknown backend"), "{err}");
+        assert!(err.contains("registered"), "{err}");
+    }
+
+    #[test]
+    fn backend_kind_list_parses_and_validates() {
+        let kinds = BackendKind::parse_list("fixed, float").unwrap();
+        assert_eq!(kinds, vec![BackendKind::Fixed, BackendKind::Float]);
+        assert!(BackendKind::parse_list("fixed,nope").is_err());
+        assert_eq!(BackendKind::Fixed.tier_class(), TierClass::Trigger);
+        assert_eq!(BackendKind::Float.tier_class(), TierClass::Offline);
+    }
+
+    #[test]
+    fn default_spec_builds_the_single_coordinator_plan() {
+        let plan = ServingSpec::default().build().unwrap();
+        assert_eq!(plan.config.shards, 1);
+        assert_eq!(plan.config.policy, ShardPolicy::HashId);
+        assert!(plan.config.shard_backends.is_empty());
+        assert!(plan.config.shard_batchers.is_empty());
+        assert!(plan.config.tier_mix.is_single());
+        assert_eq!(plan.config.server.workers, 2);
+        assert_eq!(plan.config.server.queue_capacity, 4096);
+        assert_eq!(plan.config.server.batcher.max_batch, 10);
+        assert_eq!(plan.kind_for(0), BackendKind::Pjrt);
+        assert_eq!(plan.runner_cap(0), 10);
+    }
+
+    #[test]
+    fn heterogeneous_spec_resolves_tier_defaults() {
+        let spec = ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+            .with_shards(2)
+            .with_shard_policy(ShardPolicy::ModelKey);
+        let plan = spec.build().unwrap();
+        assert_eq!(plan.config.shard_backends, vec!["fixed", "float"]);
+        // Tier defaults: trigger batch-1/zero-wait, offline deep.
+        assert_eq!(plan.config.shard_batchers[0].max_batch, 1);
+        assert!(plan.config.shard_batchers[0].max_wait.is_zero());
+        assert_eq!(plan.config.shard_batchers[1].max_batch, 64);
+        // Uniform mix across the two tiers.
+        assert_eq!(plan.config.tier_mix.tiers(), 2);
+        assert!((plan.config.tier_mix.fraction(0) - 0.5).abs() < 1e-12);
+        assert_eq!(plan.kind_for(0), BackendKind::Fixed);
+        assert_eq!(plan.kind_for(1), BackendKind::Float);
+        assert_eq!(plan.runner_cap(1), 64);
+    }
+
+    /// The uniform validation layer: every mis-configuration is caught
+    /// at `build`, with a stable message.
+    #[test]
+    fn spec_validation_errors_are_uniform() {
+        let err = |spec: ServingSpec| -> String {
+            format!("{:#}", spec.build().unwrap_err())
+        };
+
+        let e = err(ServingSpec::default().with_shards(0));
+        assert!(e.contains("at least one shard"), "{e}");
+
+        let e = err(ServingSpec::default().with_workers(0));
+        assert!(e.contains("at least one worker"), "{e}");
+
+        let e = err(ServingSpec::default().with_queue_capacity(0));
+        assert!(e.contains("queue capacity"), "{e}");
+
+        let e = err(ServingSpec::default().with_engine_parallelism(0));
+        assert!(e.contains("engine parallelism"), "{e}");
+
+        let e = err(ServingSpec::default().with_batcher(0, Duration::ZERO));
+        assert!(e.contains("max_batch must be >= 1"), "{e}");
+
+        // Backends arity vs shards.
+        let e = err(ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+            .with_shards(3)
+            .with_shard_policy(ShardPolicy::ModelKey));
+        assert!(e.contains("2 backends for 3 shards"), "{e}");
+
+        // Mixed kinds require model-key routing.
+        let e = err(ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+            .with_shards(2)
+            .with_shard_policy(ShardPolicy::RoundRobin));
+        assert!(e.contains("model-key"), "{e}");
+
+        // A tier mix without backends names tiers that map to nothing.
+        let e = err(ServingSpec::default()
+            .with_tier_mix(TierMix::new(&[0.9, 0.1], 7).unwrap()));
+        assert!(e.contains("requires backends"), "{e}");
+
+        // Mix arity vs backends arity.
+        let e = err(ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+            .with_shards(2)
+            .with_shard_policy(ShardPolicy::ModelKey)
+            .with_tier_mix(TierMix::new(&[0.5, 0.3, 0.2], 7).unwrap()));
+        assert!(e.contains("3 fractions for 2 backends"), "{e}");
+
+        // Batch policy arity vs shards.
+        let e = err(ServingSpec::default()
+            .with_batch_policy(TierPolicy::parse("a:1:0,b:4:100").unwrap()));
+        assert!(e.contains("2 tiers for 1 shards"), "{e}");
+    }
+
+    /// Replicated same-kind backends do not need model-key routing
+    /// (there is only one engine to reach).
+    #[test]
+    fn replicated_backends_allow_any_policy() {
+        let spec = ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Fixed])
+            .with_shards(2)
+            .with_shard_policy(ShardPolicy::RoundRobin);
+        let plan = spec.build().unwrap();
+        assert_eq!(plan.config.shard_backends, vec!["fixed", "fixed"]);
+        // Same kind twice → same tier default on both shards, so the
+        // per-label consistency check passes.
+        assert_eq!(plan.config.shard_batchers[0], plan.config.shard_batchers[1]);
+    }
+
+    fn live_spec() -> ServingSpec {
+        ServingSpec::default()
+            .with_engine(BackendKind::Float)
+            .with_workers(1)
+            .with_batcher(4, Duration::from_micros(100))
+            .with_queue_capacity(256)
+    }
+
+    #[test]
+    fn session_serves_submitted_requests_end_to_end() {
+        let session =
+            Session::start(&live_spec(), |_| Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>))
+                .unwrap();
+        for id in 0..32u64 {
+            let mut request = req(id);
+            request.features[0] = id as f32;
+            session.submit(request).unwrap();
+        }
+        let mut got = Vec::new();
+        while got.len() < 32 {
+            got.push(session.recv().expect("fabric alive"));
+        }
+        let mut ids: Vec<u64> = got.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..32).collect::<Vec<_>>());
+        for completion in &got {
+            assert_eq!(completion.output, vec![completion.id as f32]);
+            assert_eq!(completion.shard, 0);
+            assert!(completion.completed_at >= completion.enqueued_at);
+        }
+        // Live snapshot sees the served requests before shutdown.
+        let snap = session.snapshot();
+        assert_eq!(snap.merged.generated, 32);
+        assert_eq!(snap.merged.completed, 32);
+        // The bounded egress channel never overflowed (we drained it).
+        assert_eq!(session.completions_lost(), 0);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.merged.completed, 32);
+        assert_eq!(report.merged.dropped, 0);
+    }
+
+    #[test]
+    fn submit_event_assigns_sequential_ids_and_stamps() {
+        let session =
+            Session::start(&live_spec(), |_| Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>))
+                .unwrap();
+        let a = session.submit_event(vec![7.0; 4], 1).unwrap();
+        let b = session.submit_event(vec![8.0; 4], 0).unwrap();
+        assert_eq!((a, b), (0, 1));
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.merged.generated, 2);
+        assert_eq!(report.merged.completed, 2);
+    }
+
+    #[test]
+    fn handle_submit_after_shutdown_is_a_typed_error() {
+        let session =
+            Session::start(&live_spec(), |_| Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>))
+                .unwrap();
+        let handle = session.handle();
+        session.shutdown().unwrap();
+        let err = handle.submit(req(9)).unwrap_err();
+        assert!(
+            matches!(&err, SubmitError::Closed { request } if request.id == 9),
+            "{err}"
+        );
+        assert!(err.to_string().contains("closed"), "{err}");
+        assert_eq!(err.into_request().id, 9);
+        let err = handle.submit_event(vec![0.0; 4], 0).unwrap_err();
+        assert!(matches!(err, SubmitError::Closed { .. }), "{err}");
+    }
+
+    #[test]
+    fn session_replay_matches_sharded_server_accounting() {
+        use crate::coordinator::SourceConfig;
+        use crate::data::generators::TopTagging;
+
+        let spec = ServingSpec::default()
+            .with_engine(BackendKind::Float)
+            .with_workers(1)
+            .with_queue_capacity(8192)
+            .with_completions(false)
+            .with_source(SourceConfig {
+                rate_hz: 1_000_000.0,
+                poisson: false,
+                n_events: 500,
+            });
+        let session =
+            Session::start(&spec, |_| Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)).unwrap();
+        assert_eq!(session.replay(Box::new(TopTagging::new(3))), 500);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.merged.generated, 500);
+        assert_eq!(report.merged.completed + report.merged.dropped, 500);
+    }
+
+    /// Dropping a session without `shutdown` must not strand the
+    /// fabric: Drop stops admissions (observable through a surviving
+    /// handle) and closes the queues so workers exit on their own.
+    #[test]
+    fn dropping_a_session_stops_admissions() {
+        let session = Session::start(&live_spec(), |_| {
+            Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        let handle = session.handle();
+        drop(session);
+        let err = handle.submit(req(1)).unwrap_err();
+        assert!(matches!(err, SubmitError::Closed { .. }), "{err}");
+    }
+
+    #[test]
+    fn engine_init_failure_surfaces_at_shutdown() {
+        let session = Session::start(&live_spec(), |shard| {
+            anyhow::ensure!(shard != 0, "no engine");
+            Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        let err = format!("{:#}", session.shutdown().unwrap_err());
+        assert!(err.contains("engine init"), "{err}");
+    }
+}

@@ -41,17 +41,15 @@
 //!   shows *per-tier* p50/p99 and throughput — a blended percentile over
 //!   a 2 µs trigger tier and a 200 µs offline tier describes neither.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::str::FromStr;
 use std::sync::Arc;
 
 use crate::data::generators::Generator;
 
 use super::batcher::BatcherConfig;
 use super::clock::{Clock, SystemClock};
-use super::metrics::ServerMetrics;
-use super::queue::BoundedQueue;
-use super::server::{worker_loop, BatchRunner, ServerConfig, ServerReport};
-use super::source;
+use super::server::{BatchRunner, ServerConfig, ServerReport};
+use super::session::Session;
 use super::tier::TierMix;
 use super::Request;
 
@@ -96,6 +94,38 @@ impl ShardPolicy {
     }
 }
 
+impl FromStr for ShardPolicy {
+    type Err = anyhow::Error;
+
+    /// [`ShardPolicy::parse`] as `FromStr`, so the CLI reads policies
+    /// with `.parse()` like every other typed `ServingSpec` field.
+    fn from_str(name: &str) -> anyhow::Result<Self> {
+        Self::parse(name)
+    }
+}
+
+impl ShardPolicy {
+    /// Stateless shard index for `request`, or `None` for the one
+    /// policy that carries router state (round-robin).  Pure in the
+    /// request, so concurrent submitters can route without a lock; the
+    /// maths are identical to [`Router::route`] (which delegates here).
+    pub fn route_stateless(
+        self,
+        request: &Request,
+        shards: usize,
+    ) -> Option<usize> {
+        match self {
+            Self::HashId => {
+                Some((hash_id(request.id) % shards as u64) as usize)
+            }
+            Self::ModelKey => {
+                Some((request.route_key % shards as u64) as usize)
+            }
+            Self::RoundRobin => None,
+        }
+    }
+}
+
 /// One splitmix64 step from `state = id` — the same mix `util::rng` seeds
 /// with; enough to decorrelate sequential ids across shards.
 fn hash_id(id: u64) -> u64 {
@@ -123,19 +153,15 @@ impl Router {
 
     /// Shard index for `request`, in `0..shards`.
     pub fn route(&mut self, request: &Request) -> usize {
-        match self.policy {
-            ShardPolicy::HashId => {
-                (hash_id(request.id) % self.shards as u64) as usize
-            }
-            ShardPolicy::RoundRobin => {
-                let shard = (self.rr_next % self.shards as u64) as usize;
-                self.rr_next += 1;
-                shard
-            }
-            ShardPolicy::ModelKey => {
-                (request.route_key % self.shards as u64) as usize
-            }
+        if let Some(shard) =
+            self.policy.route_stateless(request, self.shards)
+        {
+            return shard;
         }
+        // Round-robin: the one stateful policy.
+        let shard = (self.rr_next % self.shards as u64) as usize;
+        self.rr_next += 1;
+        shard
     }
 }
 
@@ -295,7 +321,12 @@ impl ShardedReport {
 pub struct ShardedServer;
 
 impl ShardedServer {
-    /// Run one sharded serving session to completion.
+    /// Run one sharded serving session to completion — a thin wrapper
+    /// over the live [`Session`] API: start the fabric, replay the
+    /// configured synthetic source through `Session::submit`, shut down.
+    /// The validation, admission accounting, worker loop, and metrics
+    /// roll-up are all the session's, so replay runs and live
+    /// request-driven runs share one code path.
     ///
     /// `runner_factory` is invoked once per worker, *inside* that worker's
     /// thread (non-`Send` engines stay legal), and receives the worker's
@@ -309,9 +340,17 @@ impl ShardedServer {
         runner_factory: F,
     ) -> anyhow::Result<ShardedReport>
     where
-        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
     {
-        Self::run_with_clock(cfg, generator, runner_factory, &SystemClock)
+        Self::run_with_clock(
+            cfg,
+            generator,
+            runner_factory,
+            Arc::new(SystemClock),
+        )
     }
 
     /// [`ShardedServer::run`] with an explicit serving [`Clock`] (the
@@ -320,212 +359,18 @@ impl ShardedServer {
         cfg: ShardedConfig,
         generator: Box<dyn Generator>,
         runner_factory: F,
-        clock: &dyn Clock,
+        clock: Arc<dyn Clock>,
     ) -> anyhow::Result<ShardedReport>
     where
-        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>> + Send + Sync,
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
     {
-        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
-        anyhow::ensure!(
-            cfg.server.workers >= 1,
-            "need at least one worker per shard"
-        );
-        anyhow::ensure!(
-            cfg.shard_backends.is_empty()
-                || cfg.shard_backends.len() == cfg.shards,
-            "shard_backends names {} backends for {} shards \
-             (need one label per shard, or none)",
-            cfg.shard_backends.len(),
-            cfg.shards
-        );
-        anyhow::ensure!(
-            cfg.shard_batchers.is_empty()
-                || cfg.shard_batchers.len() == cfg.shards,
-            "shard_batchers names {} policies for {} shards \
-             (need one batcher per shard, or none)",
-            cfg.shard_batchers.len(),
-            cfg.shards
-        );
-        cfg.server.batcher.validate()?;
-        for (shard, batcher) in cfg.shard_batchers.iter().enumerate() {
-            batcher
-                .validate()
-                .map_err(|e| anyhow::anyhow!("shard {shard}: {e}"))?;
-        }
-        // Shards sharing a backend label must share a batching policy:
-        // the per-backend roll-up reports one batcher per label, and its
-        // percentiles must not blend measurements taken under different
-        // policies (the schema-v3 bench columns would lie).
-        for (shard, label) in cfg.shard_backends.iter().enumerate() {
-            let first = cfg
-                .shard_backends
-                .iter()
-                .position(|l| l == label)
-                .expect("label exists at its own index");
-            anyhow::ensure!(
-                cfg.batcher_for(first) == cfg.batcher_for(shard),
-                "backend {label:?}: shards {first} and {shard} serve \
-                 under different batchers (the per-backend roll-up \
-                 needs one policy per label)"
-            );
-        }
-        let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.shards)
-            .map(|_| Arc::new(BoundedQueue::new(cfg.server.queue_capacity)))
-            .collect();
-        let metrics: Vec<Arc<ServerMetrics>> = (0..cfg.shards)
-            .map(|_| Arc::new(ServerMetrics::new()))
-            .collect();
-        let t0 = clock.now();
-
-        // Same readiness gate as `Server::run`: the tap opens only after
-        // every worker on every shard has built its engine.
-        let total_workers = cfg.shards * cfg.server.workers;
-        let ready = Arc::new(AtomicUsize::new(0));
-
-        let run = std::thread::scope(|scope| -> anyhow::Result<()> {
-            // handles[shard][worker]
-            let mut handles = Vec::with_capacity(cfg.shards);
-            for shard in 0..cfg.shards {
-                let mut shard_handles = Vec::with_capacity(cfg.server.workers);
-                for worker in 0..cfg.server.workers {
-                    let queue = queues[shard].clone();
-                    let shard_metrics = metrics[shard].clone();
-                    let factory = &runner_factory;
-                    // Tier-aware batching: each shard serves under its
-                    // own policy (trigger shards batch-1, offline shards
-                    // deep), falling back to the shared config.
-                    let batcher_cfg = cfg.batcher_for(shard);
-                    let ready = ready.clone();
-                    shard_handles.push(scope.spawn(
-                        move || -> anyhow::Result<()> {
-                            let runner_or = factory(shard).map_err(|e| {
-                                anyhow::anyhow!(
-                                    "shard {shard} worker {worker}: \
-                                     engine init: {e}"
-                                )
-                            });
-                            ready.fetch_add(1, Ordering::SeqCst);
-                            let mut runner = runner_or?;
-                            worker_loop(
-                                runner.as_mut(),
-                                &queue,
-                                &shard_metrics,
-                                &batcher_cfg,
-                                clock,
-                            )
-                        },
-                    ));
-                }
-                handles.push(shard_handles);
-            }
-
-            while ready.load(Ordering::SeqCst) < total_workers {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-            }
-
-            // Source + router run on this thread.  Admission counts into
-            // the *target shard's* metrics so the roll-up stays a pure
-            // sum.  The source seed matches `Server::run` and the tier
-            // stamp is a pure (seed, id) hash, so any shard count or tier
-            // mix replays the identical request stream.
-            let mut router = Router::new(cfg.policy, cfg.shards);
-            source::run_with(
-                generator,
-                cfg.server.source,
-                0xEE77,
-                &cfg.tier_mix,
-                clock,
-                |request| {
-                    let shard = router.route(&request);
-                    metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
-                    if queues[shard].push(request).is_err() {
-                        metrics[shard].dropped.fetch_add(1, Ordering::Relaxed);
-                    }
-                },
-            );
-
-            // Coordinated shutdown: a shard is settled once its queue is
-            // drained — or abandoned when all its workers have exited
-            // (e.g. engine-init failure), so one dead shard cannot wedge
-            // the rest.  Then close every queue and join every worker.
-            let settled = |shard: usize| {
-                queues[shard].is_empty()
-                    || handles[shard].iter().all(|w| w.is_finished())
-            };
-            while !(0..cfg.shards).all(settled) {
-                std::thread::sleep(std::time::Duration::from_micros(200));
-            }
-            for queue in &queues {
-                queue.close();
-            }
-            for shard_handles in handles {
-                for handle in shard_handles {
-                    handle.join().expect("worker panicked")?;
-                }
-            }
-            Ok(())
-        });
-        run?;
-        let wall = (clock.now() - t0).as_secs_f64();
-
-        // Shared roll-up: counters summed, histogram buckets merged.
-        let merged = ServerMetrics::new();
-        for shard_metrics in &metrics {
-            merged.merge(shard_metrics);
-        }
-        let per_shard = metrics
-            .iter()
-            .enumerate()
-            .map(|(shard, m)| ShardStats {
-                shard,
-                backend: cfg
-                    .shard_backends
-                    .get(shard)
-                    .cloned()
-                    .unwrap_or_default(),
-                batcher: cfg.batcher_for(shard),
-                routed: m.generated.load(Ordering::Relaxed),
-                dropped: m.dropped.load(Ordering::Relaxed),
-                completed: m.completed.load(Ordering::Relaxed),
-                batches: m.batches.load(Ordering::Relaxed),
-                mean_batch: m.mean_batch_size(),
-                p99_latency_us: m.total_latency.quantile_us(0.99),
-            })
-            .collect();
-
-        // Per-backend split: group labelled shards (first-appearance
-        // order) and merge each group's metrics exactly, so every tier
-        // reports its own true percentiles.
-        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
-        for (shard, label) in cfg.shard_backends.iter().enumerate() {
-            match groups.iter_mut().find(|(name, _)| name == label) {
-                Some((_, shards)) => shards.push(shard),
-                None => groups.push((label.clone(), vec![shard])),
-            }
-        }
-        let per_backend = groups
-            .into_iter()
-            .map(|(backend, shard_ids)| {
-                let tier_metrics = ServerMetrics::new();
-                for &shard in &shard_ids {
-                    tier_metrics.merge(&metrics[shard]);
-                }
-                BackendTierStats {
-                    backend,
-                    batcher: cfg.batcher_for(shard_ids[0]),
-                    report: ServerReport::from_metrics(&tier_metrics, wall),
-                    shards: shard_ids,
-                }
-            })
-            .collect();
-
-        Ok(ShardedReport {
-            shards: cfg.shards,
-            policy: cfg.policy,
-            merged: ServerReport::from_metrics(&merged, wall),
-            per_shard,
-            per_backend,
-        })
+        let session =
+            Session::start_config(cfg, clock, false, runner_factory)?;
+        session.replay(generator);
+        session.shutdown()
     }
 }
 

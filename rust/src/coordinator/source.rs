@@ -1,17 +1,20 @@
 //! Event source: generates benchmark events at a configured arrival rate
 //! (Poisson or fixed-interval), pushing into the bounded queue; overflow
 //! is dropped and counted — trigger semantics.
+//!
+//! This is the *replay* producer: [`run_with`] backs
+//! [`Session::replay`](super::session::Session::replay), which the
+//! `Server::run` / `ShardedServer::run` wrappers drive to completion.
+//! Live deployments submit through the session API instead; the replay
+//! contract below (generation is sink-independent) is what makes the
+//! submit-vs-replay equivalence suite (`tests/session_api.rs`) exact.
 
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::generators::Generator;
 use crate::util::rng::Rng;
 
-use super::clock::{Clock, SystemClock};
-use super::metrics::ServerMetrics;
-use super::queue::BoundedQueue;
+use super::clock::Clock;
 use super::tier::TierMix;
 use super::Request;
 
@@ -103,30 +106,31 @@ where
     cfg.n_events
 }
 
-/// Single-queue admission: count every generated event, push, and count
-/// overflow as a drop — trigger semantics.  Single-class traffic (a
-/// one-coordinator [`super::Server`] has no tiers to steer between).
-/// Returns generated events.
-pub fn run(
-    generator: Box<dyn Generator>,
-    cfg: SourceConfig,
-    queue: &Arc<BoundedQueue<Request>>,
-    metrics: &Arc<ServerMetrics>,
-    seed: u64,
-    clock: &dyn Clock,
-) -> usize {
-    run_with(generator, cfg, seed, &TierMix::single(), clock, |request| {
-        metrics.generated.fetch_add(1, Ordering::Relaxed);
-        if queue.push(request).is_err() {
-            metrics.dropped.fetch_add(1, Ordering::Relaxed);
-        }
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::clock::SystemClock;
+    use crate::coordinator::metrics::ServerMetrics;
+    use crate::coordinator::queue::BoundedQueue;
     use crate::data::generators::TopTagging;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    /// The single-queue admission sink the serving session applies on
+    /// every submit (count generated, push, count overflow as a drop) —
+    /// spelled out here so the source tests exercise the same trigger
+    /// semantics without depending on the session layer.
+    fn admit<'a>(
+        queue: &'a Arc<BoundedQueue<Request>>,
+        metrics: &'a Arc<ServerMetrics>,
+    ) -> impl FnMut(Request) + 'a {
+        move |request| {
+            metrics.generated.fetch_add(1, Ordering::Relaxed);
+            if queue.push(request).is_err() {
+                metrics.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 
     #[test]
     fn source_emits_all_events_and_paces() {
@@ -138,13 +142,13 @@ mod tests {
             n_events: 500,
         };
         let t0 = Instant::now();
-        let n = run(
+        let n = run_with(
             Box::new(TopTagging::new(1)),
             cfg,
-            &queue,
-            &metrics,
             2,
+            &TierMix::single(),
             &SystemClock,
+            admit(&queue, &metrics),
         );
         let elapsed = t0.elapsed();
         assert_eq!(n, 500);
@@ -230,13 +234,13 @@ mod tests {
             poisson: false,
             n_events: 100,
         };
-        run(
+        run_with(
             Box::new(TopTagging::new(3)),
             cfg,
-            &queue,
-            &metrics,
             4,
+            &TierMix::single(),
             &SystemClock,
+            admit(&queue, &metrics),
         );
         assert_eq!(metrics.generated.load(Ordering::Relaxed), 100);
         assert_eq!(metrics.dropped.load(Ordering::Relaxed), 90);

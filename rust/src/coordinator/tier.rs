@@ -302,6 +302,17 @@ impl TierPolicy {
     }
 }
 
+impl std::str::FromStr for TierPolicy {
+    type Err = anyhow::Error;
+
+    /// [`TierPolicy::parse`] as `FromStr`, so the CLI reads batch
+    /// policies with `.parse()` like every other typed `ServingSpec`
+    /// field.
+    fn from_str(spec: &str) -> anyhow::Result<Self> {
+        Self::parse(spec)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -31,3 +31,13 @@ pub mod nn;
 pub mod report;
 pub mod runtime;
 pub mod util;
+
+// The primary serving API, re-exported at the crate root: describe a
+// session with a typed [`ServingSpec`], start it with
+// [`Session::start`], submit requests from any number of threads, read
+// completions and live snapshots, then shut down for the final report.
+// `coordinator::{Server, ShardedServer}` are replay wrappers over this.
+pub use coordinator::session::{
+    BackendKind, Completion, ServingPlan, ServingSpec, Session,
+    SessionHandle, SubmitError,
+};

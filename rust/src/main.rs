@@ -46,10 +46,10 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use rnn_hls::config::{Fig2Config, ServeCliConfig, SweepConfig};
+use rnn_hls::config::{Fig2Config, SweepConfig};
 use rnn_hls::coordinator::{
-    BatcherConfig, ServerConfig, ShardPolicy, ShardedConfig, ShardedServer,
-    SourceConfig, TierMix, TierPolicy,
+    BackendKind, BatchRunner, BatcherConfig, EngineRunner, ServingSpec,
+    Session, SourceConfig, TierMix, TierPolicy,
 };
 use rnn_hls::data::generators;
 use rnn_hls::fixed::FixedSpec;
@@ -220,7 +220,7 @@ struct PjrtRunner {
     buckets: Vec<usize>,
 }
 
-impl rnn_hls::coordinator::BatchRunner for PjrtRunner {
+impl BatchRunner for PjrtRunner {
     fn max_batch(&self) -> usize {
         *self.buckets.last().expect("non-empty buckets")
     }
@@ -337,104 +337,31 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         || std::env::var_os("RNN_HLS_ARTIFACTS").is_some();
     let width: u32 = args.parse_num("width", 16)?;
     let integer: u32 = args.parse_num("integer", 6)?;
+    let model_key = args.get_or("model", "top_gru").to_string();
 
-    // Single source of truth for serve defaults: ServeCliConfig::default.
-    let d = ServeCliConfig::default();
-    let cli = ServeCliConfig {
-        model_key: args.get_or("model", &d.model_key).to_string(),
-        engine: args
-            .one_of("engine", &d.engine, &["pjrt", "fixed", "float"])?
-            .to_string(),
-        backends: args.get_or("backends", &d.backends).to_string(),
-        tier_mix: args.get_or("tier-mix", &d.tier_mix).to_string(),
-        tier_seed: args.parse_num("tier-seed", d.tier_seed)?,
-        rate_hz: args.parse_num("rate", d.rate_hz)?,
-        n_events: args.parse_num("events", d.n_events)?,
-        shards: args.parse_num("shards", d.shards)?,
-        // Validated by ShardPolicy::parse below — the one source of truth
-        // for the accepted spellings (including the "rr" shorthand).
-        shard_policy: args.get_or("shard-policy", &d.shard_policy).to_string(),
-        workers: args.parse_num("workers", d.workers)?,
-        engine_parallelism: args
-            .parse_num("engine-parallelism", d.engine_parallelism)?,
-        max_batch: args.parse_num("max-batch", d.max_batch)?,
-        max_wait: Duration::from_micros(
-            args.parse_num("max-wait-us", d.max_wait.as_micros() as u64)?,
-        ),
-        batch_policy: args.get_or("batch-policy", &d.batch_policy).to_string(),
-        queue_capacity: args.parse_num("queue", d.queue_capacity)?,
+    // The CLI is a thin adapter over the typed session API: every flag
+    // parses straight into a ServingSpec field (FromStr), and every
+    // serving invariant — backend names, arities, mix sums to 1, zero
+    // batch — is validated in one place, ServingSpec::build.
+    let tier_seed: u64 = args.parse_num("tier-seed", 0u64)?;
+    let backends = match args.get_or("backends", "") {
+        "" => Vec::new(),
+        csv => BackendKind::parse_list(csv)?,
     };
-    let key = cli.model_key.clone();
-    let engine_kind = cli.engine.clone();
-    let engine_parallelism = cli.engine_parallelism;
-    let policy = ShardPolicy::parse(&cli.shard_policy)?;
-
-    // Heterogeneous session: resolve --backends against the registry and
-    // derive the tier mix (uniform unless --tier-mix pins the shares).
-    let specs: Vec<BackendSpec> = if cli.backends.is_empty() {
-        Vec::new()
-    } else {
-        BackendSpec::parse_list(&cli.backends)?
+    let tier_mix = match args.get_or("tier-mix", "") {
+        "" => None,
+        csv => Some(TierMix::parse(csv, tier_seed)?),
     };
-    if !specs.is_empty() {
-        anyhow::ensure!(
-            specs.len() == cli.shards,
-            "--backends names {} backends but --shards is {} \
-             (each shard owns exactly one backend)",
-            specs.len(),
-            cli.shards
-        );
-        anyhow::ensure!(
-            specs.len() == 1 || policy == ShardPolicy::ModelKey,
-            "mixing backends requires --shard-policy model-key \
-             (tier keys must reach their backend's shard; {} routing \
-             would scatter tiers across backends)",
-            policy.name()
-        );
-    }
-    let tier_mix = if cli.tier_mix.is_empty() {
-        if specs.len() > 1 {
-            TierMix::uniform(specs.len(), cli.tier_seed)?
-        } else {
-            TierMix::single()
-        }
-    } else {
-        anyhow::ensure!(
-            !specs.is_empty(),
-            "--tier-mix requires --backends (tiers name backends)"
-        );
-        let mix = TierMix::parse(&cli.tier_mix, cli.tier_seed)?;
-        anyhow::ensure!(
-            mix.tiers() == specs.len(),
-            "--tier-mix lists {} fractions for {} backends",
-            mix.tiers(),
-            specs.len()
-        );
-        mix
+    let batch_policy = match args.get_or("batch-policy", "") {
+        "" => None,
+        grammar => Some(grammar.parse::<TierPolicy>()?),
     };
-
-    let shard_backend_names: Vec<String> =
-        specs.iter().map(|s| s.name().to_string()).collect();
-    // Tier-aware batching: an explicit --batch-policy pins one batcher
-    // per shard; heterogeneous sessions default to each backend's tier
-    // class (trigger batch-1/zero-wait, offline deep); homogeneous
-    // sessions keep the shared --max-batch/--max-wait-us everywhere.
-    let batch_policy = if !cli.batch_policy.is_empty() {
-        let parsed = TierPolicy::parse(&cli.batch_policy)?;
-        anyhow::ensure!(
-            parsed.entries.len() == cli.shards,
-            "--batch-policy names {} tiers but --shards is {} \
-             (one name:max_batch:max_wait_us entry per shard)",
-            parsed.entries.len(),
-            cli.shards
-        );
-        Some(parsed)
-    } else if specs.len() > 1 {
-        // Tier defaults supersede the shared batcher knobs for mixed
-        // sessions; an operator who spelled those knobs out explicitly
-        // must hear that they were overridden (use --batch-policy to
-        // pin per-shard values).  Args::parse folds defaults into the
-        // parsed map, so explicitness is read off the raw arg list.
+    // Tier defaults supersede the shared batcher knobs for mixed
+    // sessions; an operator who spelled those knobs out explicitly must
+    // hear that they were overridden (use --batch-policy to pin
+    // per-shard values).  Args::parse folds defaults into the parsed
+    // map, so explicitness is read off the raw arg list.
+    if backends.len() > 1 && batch_policy.is_none() {
         let explicit_batch_flags = rest.iter().any(|a| {
             a == "--max-batch"
                 || a == "--max-wait-us"
@@ -448,137 +375,163 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                  --batch-policy to pin per-shard batching explicitly"
             );
         }
-        Some(TierPolicy::for_backends(&shard_backend_names))
-    } else {
-        None
-    };
-
-    let benchmark = key.split('_').next().unwrap_or(&key).to_string();
-    let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
-    let cfg = ShardedConfig {
-        shards: cli.shards,
-        policy,
+    }
+    // Single source of truth for serve defaults: ServingSpec::default
+    // (the Command .opt defaults above are display strings; the typed
+    // fallbacks come from the spec so the CLI can never drift from the
+    // library defaults).
+    let d = ServingSpec::default();
+    let spec = ServingSpec {
+        engine: args.get_or("engine", d.engine.name()).parse()?,
+        backends,
         tier_mix,
-        shard_backends: shard_backend_names,
-        shard_batchers: batch_policy
-            .as_ref()
-            .map(TierPolicy::batchers)
-            .unwrap_or_default(),
-        server: ServerConfig {
-            workers: cli.workers,
-            queue_capacity: cli.queue_capacity,
-            // Validated constructor: rejects --max-batch 0 up front.
-            batcher: BatcherConfig::new(cli.max_batch, cli.max_wait)?,
-            source: SourceConfig {
-                rate_hz: cli.rate_hz,
-                poisson: !args.has("fixed-interval"),
-                n_events: cli.n_events,
-            },
+        tier_seed,
+        shards: args.parse_num("shards", d.shards)?,
+        shard_policy: args
+            .get_or("shard-policy", d.shard_policy.name())
+            .parse()?,
+        batch_policy,
+        workers: args.parse_num("workers", d.workers)?,
+        engine_parallelism: args
+            .parse_num("engine-parallelism", d.engine_parallelism)?,
+        batcher: BatcherConfig {
+            max_batch: args.parse_num("max-batch", d.batcher.max_batch)?,
+            max_wait: Duration::from_micros(args.parse_num(
+                "max-wait-us",
+                d.batcher.max_wait.as_micros() as u64,
+            )?),
         },
+        queue_capacity: args.parse_num("queue", d.queue_capacity)?,
+        source: SourceConfig {
+            rate_hz: args.parse_num("rate", d.source.rate_hz)?,
+            poisson: !args.has("fixed-interval"),
+            n_events: args.parse_num("events", d.source.n_events)?,
+        },
+        // Replay-to-completion run: nothing drains a completion channel.
+        completions: false,
+        ..d
     };
-    let engine_desc = if specs.is_empty() {
-        format!("{engine_kind} engine")
+    let plan = spec.build()?;
+
+    let engine_desc = if plan.shard_kinds.is_empty() {
+        format!("{} engine", spec.engine)
     } else {
-        let mix: Vec<String> = (0..cfg.tier_mix.tiers())
-            .map(|t| format!("{:.2}", cfg.tier_mix.fraction(t)))
+        let mix: Vec<String> = (0..plan.config.tier_mix.tiers())
+            .map(|t| format!("{:.2}", plan.config.tier_mix.fraction(t)))
             .collect();
         format!(
             "backends [{}] mix [{}]",
-            cfg.shard_backends.join(","),
+            plan.config.shard_backends.join(","),
             mix.join(",")
         )
     };
-    let batching_desc = match &batch_policy {
-        Some(policy) => format!("batch policy [{}]", policy.describe()),
-        None => format!(
+    // Describe the batchers the plan *actually resolved* (explicit
+    // policy or tier defaults), never a re-derivation that could drift
+    // from what the session serves under.
+    let batching_desc = if plan.config.shard_batchers.is_empty() {
+        format!(
             "batch<= {}, wait {} µs",
-            cfg.server.batcher.max_batch,
-            cfg.server.batcher.max_wait.as_micros()
-        ),
+            plan.config.server.batcher.max_batch,
+            plan.config.server.batcher.max_wait.as_micros()
+        )
+    } else {
+        let entries: Vec<String> = plan
+            .config
+            .shard_batchers
+            .iter()
+            .enumerate()
+            .map(|(shard, b)| {
+                // Prefer the operator's tier names (explicit
+                // --batch-policy), then the backend label, then a
+                // generic placeholder.
+                let label = spec
+                    .batch_policy
+                    .as_ref()
+                    .and_then(|p| p.entries.get(shard))
+                    .map(|e| e.name.as_str())
+                    .or_else(|| {
+                        plan.config
+                            .shard_backends
+                            .get(shard)
+                            .map(String::as_str)
+                    })
+                    .unwrap_or("shard");
+                format!(
+                    "{label}:{}:{}",
+                    b.max_batch,
+                    b.max_wait.as_micros()
+                )
+            })
+            .collect();
+        format!("batch policy [{}]", entries.join(","))
     };
     println!(
-        "serving {key} via {engine_desc}: rate {} ev/s, {} events, \
-         {} shards ({} routing) × {} workers × {engine_parallelism} engine \
+        "serving {model_key} via {engine_desc}: rate {} ev/s, {} events, \
+         {} shards ({} routing) × {} workers × {} engine \
          threads, {batching_desc}",
-        cfg.server.source.rate_hz,
-        cfg.server.source.n_events,
-        cfg.shards,
-        cfg.policy.name(),
-        cfg.server.workers,
+        plan.config.server.source.rate_hz,
+        plan.config.server.source.n_events,
+        plan.config.shards,
+        plan.config.policy.name(),
+        plan.config.server.workers,
+        plan.engine_parallelism,
     );
 
-    // Each EngineRunner's cap follows its shard's (tier-resolved)
-    // batcher, so a deep-batching offline tier is not silently clamped
-    // to the shared --max-batch.  (The pjrt branch sizes itself from
-    // its AOT batch buckets instead.)
-    let runner_caps: Vec<usize> = (0..cfg.shards)
-        .map(|shard| cfg.batcher_for(shard).max_batch)
-        .collect();
-    let report = if !specs.is_empty() {
-        // Heterogeneous: each shard builds its registered backend over
-        // the shared weights; an unbuildable slot (the stubbed pjrt)
-        // fails engine init with the registry's clear error.
-        let weights = weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
-        let runner_caps = runner_caps.clone();
-        ShardedServer::run(cfg, generator, move |shard| {
-            let engine = specs[shard].build(&BackendCtx {
+    let benchmark = model_key
+        .split('_')
+        .next()
+        .unwrap_or(&model_key)
+        .to_string();
+    let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
+    let report = if plan.shard_kinds.is_empty()
+        && spec.engine == BackendKind::Pjrt
+    {
+        // PJRT runtime path: the runner sizes itself from the AOT batch
+        // buckets, and every bucket precompiles before the readiness
+        // gate opens (§Perf: keeps lazy compilation out of the serving
+        // percentiles).
+        let artifacts = artifacts.clone();
+        let key2 = model_key.clone();
+        let session = Session::start_plan(plan, move |_shard| {
+            let runtime = Runtime::new(&artifacts)?;
+            let buckets = runtime.manifest().batch_buckets(&key2)?;
+            for &b in &buckets {
+                runtime.model(&key2, b)?;
+            }
+            Ok(Box::new(PjrtRunner {
+                runtime,
+                key: key2.clone(),
+                buckets,
+            }) as Box<dyn BatchRunner>)
+        })?;
+        session.replay(generator);
+        session.shutdown()?
+    } else {
+        // Registry path (homogeneous or heterogeneous): each shard
+        // builds its resolved BackendKind over the shared weights; an
+        // unbuildable slot (the stubbed pjrt row) fails engine init
+        // with the registry's clear error.  Each EngineRunner's cap
+        // follows its shard's (tier-resolved) batcher, so a
+        // deep-batching offline tier is never clamped to the shared
+        // --max-batch.
+        let weights =
+            weights_or_synthetic(&artifacts, &model_key, explicit_artifacts)?;
+        let parallelism = plan.engine_parallelism;
+        let shard_kinds: Vec<BackendKind> =
+            (0..plan.config.shards).map(|s| plan.kind_for(s)).collect();
+        let runner_caps: Vec<usize> =
+            (0..plan.config.shards).map(|s| plan.runner_cap(s)).collect();
+        let session = Session::start_plan(plan, move |shard| {
+            let engine = shard_kinds[shard].spec().build(&BackendCtx {
                 weights: &weights,
                 fixed_spec: FixedSpec::new(width, integer),
-                parallelism: engine_parallelism,
+                parallelism,
             })?;
-            Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
-                engine,
-                runner_caps[shard],
-            )) as Box<dyn rnn_hls::coordinator::BatchRunner>)
-        })?
-    } else {
-        match engine_kind.as_str() {
-            "pjrt" => {
-                let artifacts = artifacts.clone();
-                let key2 = key.clone();
-                ShardedServer::run(cfg, generator, move |_shard| {
-                    let runtime = Runtime::new(&artifacts)?;
-                    let buckets = runtime.manifest().batch_buckets(&key2)?;
-                    // Precompile every bucket before signalling ready
-                    // (§Perf: keeps lazy compilation out of the serving
-                    // percentiles).
-                    for &b in &buckets {
-                        runtime.model(&key2, b)?;
-                    }
-                    Ok(Box::new(PjrtRunner {
-                        runtime,
-                        key: key2.clone(),
-                        buckets,
-                    })
-                        as Box<dyn rnn_hls::coordinator::BatchRunner>)
-                })?
-            }
-            "fixed" | "float" => {
-                // One construction path for a backend name: the same
-                // registry row the heterogeneous branch uses (a
-                // homogeneous session may still pin per-shard policies
-                // via --batch-policy, hence the shared runner_caps).
-                let spec = BackendSpec::parse(&engine_kind)?;
-                let weights =
-                    weights_or_synthetic(&artifacts, &key, explicit_artifacts)?;
-                let runner_caps = runner_caps.clone();
-                ShardedServer::run(cfg, generator, move |shard| {
-                    let engine = spec.build(&BackendCtx {
-                        weights: &weights,
-                        fixed_spec: FixedSpec::new(width, integer),
-                        parallelism: engine_parallelism,
-                    })?;
-                    Ok(Box::new(rnn_hls::coordinator::EngineRunner::new(
-                        engine,
-                        runner_caps[shard],
-                    ))
-                        as Box<dyn rnn_hls::coordinator::BatchRunner>)
-                })?
-            }
-            other => {
-                anyhow::bail!("unknown engine {other:?} (pjrt|fixed|float)")
-            }
-        }
+            Ok(Box::new(EngineRunner::new(engine, runner_caps[shard]))
+                as Box<dyn BatchRunner>)
+        })?;
+        session.replay(generator);
+        session.shutdown()?
     };
     println!("{}", report.render());
     Ok(())

@@ -13,10 +13,12 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::coordinator::{
-    BatcherConfig, EngineRunner, ServerConfig, ShardPolicy, ShardedConfig,
-    ShardedServer, SourceConfig, TierMix, TierPolicy,
+    BackendKind, BatcherConfig, EngineRunner, ServerConfig, ServingSpec,
+    Session, ShardPolicy, ShardedConfig, ShardedServer, SourceConfig,
+    TierMix, TierPolicy,
 };
 use crate::data::generators;
+use crate::data::generators::Generator;
 use crate::fixed::FixedSpec;
 use crate::hls::latency::{self, Strategy};
 use crate::hls::{paper, HlsConfig, ReuseFactor, RnnMode};
@@ -416,6 +418,106 @@ pub fn tier_batch_sweep(
     Ok(rows)
 }
 
+/// Session-API overhead row pair: the same saturating top-GRU stream
+/// served (a) through the replay wrapper — `session_replay_*`, the
+/// `ShardedServer::run` path, where `source::run_with` drives
+/// `Session::submit` internally with completions off — and (b) through
+/// the public live [`Session`] API — `session_submit_*`, an external
+/// submitter calling `submit_event` with the completion channel enabled.
+/// The delta between the two rows is the cost of the request-driven
+/// path (router lock, id stamping, completion forwarding); CI tracks it
+/// in `BENCH_serving.json` (schema v4) so the session API stays on the
+/// serving fast path.  Same measurement discipline as [`shard_sweep`]:
+/// synthetic weights, saturating fixed-interval arrivals.
+pub fn session_submit_sweep(
+    workers_per_shard: usize,
+    n_events: usize,
+) -> anyhow::Result<Vec<ServingBenchRow>> {
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let batcher = BatcherConfig {
+        max_batch: 32,
+        max_wait: Duration::from_micros(200),
+    };
+    let source = SourceConfig {
+        rate_hz: 2_000_000.0,
+        poisson: false,
+        n_events,
+    };
+    let row = |config: String, merged: &crate::coordinator::ServerReport| ServingBenchRow {
+        config,
+        shards: 1,
+        policy: "hash".to_string(),
+        workers_per_shard,
+        backend: "float".to_string(),
+        max_batch: batcher.max_batch,
+        max_wait_us: batcher.max_wait.as_micros() as u64,
+        samples_per_sec: merged.throughput_hz,
+        p50_us: merged.p50_latency_us,
+        p99_us: merged.p99_latency_us,
+        completed: merged.completed,
+        dropped: merged.dropped,
+    };
+    let mut rows = Vec::new();
+
+    // (a) Replay wrapper: the classic run-to-completion path.
+    let cfg = ShardedConfig {
+        shards: 1,
+        policy: ShardPolicy::HashId,
+        tier_mix: TierMix::single(),
+        shard_backends: Vec::new(),
+        shard_batchers: Vec::new(),
+        server: ServerConfig {
+            workers: workers_per_shard,
+            queue_capacity: 8192,
+            batcher,
+            source,
+        },
+    };
+    let replay_weights = weights.clone();
+    let generator = generators::for_benchmark("top", 0xBEEF)?;
+    let report = ShardedServer::run(cfg, generator, move |_shard| {
+        let engine = FloatEngine::new(&replay_weights)?;
+        Ok(Box::new(EngineRunner::new(Box::new(engine), 32))
+            as Box<dyn crate::coordinator::BatchRunner>)
+    })?;
+    rows.push(row(
+        format!("session_replay_w{workers_per_shard}"),
+        &report.merged,
+    ));
+
+    // (b) Live session: an external submitter pushing the identical
+    // generated stream through the public API, completions on.
+    let spec = ServingSpec::default()
+        .with_engine(BackendKind::Float)
+        .with_workers(workers_per_shard)
+        .with_batcher(batcher.max_batch, batcher.max_wait)
+        .with_queue_capacity(8192)
+        .with_source(source);
+    let live_weights = weights.clone();
+    let session = Session::start(&spec, move |_shard| {
+        let engine = FloatEngine::new(&live_weights)?;
+        Ok(Box::new(EngineRunner::new(Box::new(engine), 32))
+            as Box<dyn crate::coordinator::BatchRunner>)
+    })?;
+    let mut generator = generators::for_benchmark("top", 0xBEEF)?;
+    for _ in 0..n_events {
+        let event = generator.generate();
+        // A full queue is the session's typed backpressure; the drop is
+        // counted in the report exactly like replay overflow.
+        let _ = session.submit_event(event.features, event.label);
+    }
+    // The completion channel is part of the measured path; consume it
+    // before closing out.
+    let _ = session.drain();
+    let report = session.shutdown()?;
+    rows.push(row(
+        format!("session_submit_w{workers_per_shard}"),
+        &report.merged,
+    ));
+    Ok(rows)
+}
+
 /// Emit the sweep as machine-readable JSON (the CI bench artifact).
 pub fn write_bench_json(
     path: &Path,
@@ -429,7 +531,11 @@ pub fn write_bench_json(
         // plus the tier-aware `tier_batch_*` rows, so per-tier latency
         // trajectories carry the batching policy they were measured
         // under.
-        ("schema_version", json::num(3.0)),
+        // v4: the `session_replay_*` / `session_submit_*` row pair from
+        // the session-API overhead sweep, so the live request path is a
+        // tracked trajectory next to the replay path it must keep up
+        // with.
+        ("schema_version", json::num(4.0)),
         (
             "rows",
             json::arr(
@@ -544,7 +650,7 @@ mod tests {
         assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "serving");
         assert_eq!(
             parsed.req("schema_version").unwrap().as_usize().unwrap(),
-            3
+            4
         );
         let json_rows = parsed.req("rows").unwrap().as_array().unwrap();
         assert_eq!(json_rows.len(), 2);
@@ -617,6 +723,24 @@ mod tests {
         assert!(
             fixed.completed + fixed.dropped > float.completed + float.dropped
         );
+    }
+
+    /// Reduced session-overhead sweep: the replay/live row pair exists,
+    /// both paths account for every event, and the live path (public
+    /// submit + completion channel) actually served the stream.
+    #[test]
+    fn session_submit_sweep_emits_replay_and_live_rows() {
+        let rows = session_submit_sweep(1, 400).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].config, "session_replay_w1");
+        assert_eq!(rows[1].config, "session_submit_w1");
+        for r in &rows {
+            assert_eq!(r.completed + r.dropped, 400, "{}", r.config);
+            assert!(r.completed > 0, "{}", r.config);
+            assert!(r.samples_per_sec > 0.0, "{}", r.config);
+            assert_eq!(r.backend, "float", "{}", r.config);
+            assert_eq!(r.max_batch, 32, "{}", r.config);
+        }
     }
 
     #[test]

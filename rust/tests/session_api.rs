@@ -1,0 +1,402 @@
+//! Session-API acceptance suite (the request-driven serving redesign):
+//!
+//! (a) a stream submitted via `Session::submit` is **bitwise identical**
+//!     to the same stream replayed through `Server::run` /
+//!     `ShardedServer::run`, for 1 and 4 shards — the live path and the
+//!     replay path are one fabric;
+//! (b) two concurrent submitters into one session produce a
+//!     deterministic per-id output set (many sources, one fabric);
+//! (c) backpressure (`SubmitError::Full`) and submit-after-shutdown
+//!     (`SubmitError::Closed`) are typed errors carrying the request
+//!     back — never panics, never silent losses.
+//!
+//! Method (as in `shard_equivalence.rs`): a deterministic generator
+//! encodes the event index into the features, a recording runner keys
+//! every output by that embedded id, and `source::run_with`'s
+//! sink-independence guarantee lets the test collect the exact replay
+//! stream up front and push it through the live API.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rnn_hls::coordinator::source;
+use rnn_hls::coordinator::{
+    BatchRunner, Request, Server, ServerConfig, ShardPolicy, SourceConfig,
+    SystemClock, TierMix,
+};
+use rnn_hls::data::generators::{Event, Generator};
+use rnn_hls::{BackendKind, ServingSpec, Session, SubmitError};
+
+const N_EVENTS: usize = 2_000;
+
+/// Emits events whose first feature is the event index (exact in f32 at
+/// these sizes); the source assigns `Request::id` in the same order.
+struct IdGen {
+    next: u64,
+}
+
+impl Generator for IdGen {
+    fn name(&self) -> &'static str {
+        "id"
+    }
+    fn seq_len(&self) -> usize {
+        4
+    }
+    fn n_feat(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        1
+    }
+    fn generate(&mut self) -> Event {
+        let id = self.next;
+        self.next += 1;
+        let mut features = vec![0.0f32; self.seq_len() * self.n_feat()];
+        features[0] = id as f32;
+        features[1] = (id % 17) as f32 * 0.25;
+        Event {
+            features,
+            label: (id % 2) as u32,
+        }
+    }
+}
+
+/// Output as a pure function of the embedded id — what both the replay
+/// and the live runs must reproduce bit for bit.
+fn expected_output(id: u64, second_feature: f32) -> Vec<f32> {
+    let base = if id % 2 == 1 { 0.9f32 } else { 0.1f32 };
+    vec![base + second_feature * 1e-4]
+}
+
+/// Records (id → output) for every sample it serves.
+struct RecordingRunner {
+    outputs: Arc<Mutex<HashMap<u64, Vec<f32>>>>,
+}
+
+impl BatchRunner for RecordingRunner {
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let stride = xs.len() / n.max(1);
+        let mut out = Vec::with_capacity(n);
+        let mut map = self.outputs.lock().unwrap();
+        for i in 0..n {
+            let row = &xs[i * stride..(i + 1) * stride];
+            let id = row[0] as u64;
+            let probs = expected_output(id, row[1]);
+            anyhow::ensure!(
+                map.insert(id, probs.clone()).is_none(),
+                "request {id} served twice"
+            );
+            out.push(probs);
+        }
+        Ok(out)
+    }
+}
+
+fn server_config() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        queue_capacity: 16_384, // > N_EVENTS: nothing can drop
+        batcher: rnn_hls::coordinator::BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+        },
+        source: SourceConfig {
+            rate_hz: 5_000_000.0, // saturating: pacing never the bottleneck
+            poisson: false,
+            n_events: N_EVENTS,
+        },
+    }
+}
+
+fn live_spec(shards: usize) -> ServingSpec {
+    let cfg = server_config();
+    ServingSpec {
+        engine: BackendKind::Float, // factory overrides; field is unused
+        shards,
+        shard_policy: ShardPolicy::HashId,
+        workers: cfg.workers,
+        queue_capacity: cfg.queue_capacity,
+        batcher: cfg.batcher,
+        source: cfg.source,
+        ..ServingSpec::default()
+    }
+}
+
+/// The replay baseline: the classic `Server::run` single coordinator.
+fn run_replay_single() -> HashMap<u64, Vec<f32>> {
+    let outputs = Arc::new(Mutex::new(HashMap::new()));
+    let sink = outputs.clone();
+    let report = Server::run(
+        server_config(),
+        Box::new(IdGen { next: 0 }),
+        move || {
+            Ok(Box::new(RecordingRunner {
+                outputs: sink.clone(),
+            }) as Box<dyn BatchRunner>)
+        },
+    )
+    .unwrap();
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.completed, N_EVENTS as u64);
+    Arc::try_unwrap(outputs).unwrap().into_inner().unwrap()
+}
+
+/// Collect the exact request stream the replay wrappers would drive:
+/// `source::run_with` is a pure function of (generator, cfg, seed), so
+/// the same seed reproduces the identical ids, features, and tier
+/// stamps regardless of the sink.
+fn collect_stream() -> Vec<Request> {
+    let mut stream = Vec::with_capacity(N_EVENTS);
+    source::run_with(
+        Box::new(IdGen { next: 0 }),
+        server_config().source,
+        0xEE77, // the wrappers' source seed
+        &TierMix::single(),
+        &SystemClock,
+        |request| stream.push(request),
+    );
+    stream
+}
+
+/// Serve the collected stream through the live `Session::submit` path,
+/// returning both the runner-recorded map and the completion-channel
+/// map.
+fn run_live(
+    shards: usize,
+) -> (HashMap<u64, Vec<f32>>, HashMap<u64, Vec<f32>>) {
+    let outputs = Arc::new(Mutex::new(HashMap::new()));
+    let sink = outputs.clone();
+    let session = Session::start(&live_spec(shards), move |_shard| {
+        Ok(Box::new(RecordingRunner {
+            outputs: sink.clone(),
+        }) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    for request in collect_stream() {
+        session.submit(request).unwrap();
+    }
+    let mut completions = HashMap::new();
+    for _ in 0..N_EVENTS {
+        let completion = session.recv().expect("fabric alive");
+        assert!(completion.shard < shards);
+        assert!(completion.completed_at >= completion.enqueued_at);
+        assert!(
+            completions
+                .insert(completion.id, completion.output)
+                .is_none(),
+            "completion {} delivered twice",
+            completion.id
+        );
+    }
+    assert_eq!(session.completions_lost(), 0, "egress channel overflowed");
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.generated, N_EVENTS as u64);
+    assert_eq!(report.merged.dropped, 0);
+    assert_eq!(report.merged.completed, N_EVENTS as u64);
+    let served = Arc::try_unwrap(outputs).unwrap().into_inner().unwrap();
+    (served, completions)
+}
+
+/// (a) Live submit ≡ replay, for 1 and 4 shards: same per-id outputs on
+/// the runner side AND on the completion channel.
+#[test]
+fn submitted_stream_is_bitwise_identical_to_replay() {
+    let replay = run_replay_single();
+    assert_eq!(replay.len(), N_EVENTS);
+    for shards in [1usize, 4] {
+        let (served, completions) = run_live(shards);
+        assert_eq!(served, replay, "shards={shards}: runner outputs");
+        assert_eq!(
+            completions, replay,
+            "shards={shards}: completion outputs"
+        );
+    }
+}
+
+/// (b) Two concurrent submitters into one fabric: the union of their id
+/// ranges is served exactly once each, with outputs deterministic per
+/// id — repeated runs produce the identical map.
+#[test]
+fn concurrent_submitters_produce_deterministic_output_set() {
+    let run_once = || -> HashMap<u64, Vec<f32>> {
+        let outputs = Arc::new(Mutex::new(HashMap::new()));
+        let sink = outputs.clone();
+        let session = Session::start(&live_spec(2), move |_shard| {
+            Ok(Box::new(RecordingRunner {
+                outputs: sink.clone(),
+            }) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        std::thread::scope(|scope| {
+            for submitter in 0..2u64 {
+                let handle = session.handle();
+                scope.spawn(move || {
+                    let base = submitter * 1_000;
+                    for i in 0..1_000u64 {
+                        let id = base + i;
+                        let mut features = vec![0.0f32; 8];
+                        features[0] = id as f32;
+                        features[1] = (id % 17) as f32 * 0.25;
+                        handle
+                            .submit(Request {
+                                id,
+                                features,
+                                label: (id % 2) as u32,
+                                route_key: 0,
+                                enqueued_at: Instant::now(),
+                            })
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let mut completions = HashMap::new();
+        for _ in 0..2_000 {
+            let completion = session.recv().expect("fabric alive");
+            completions.insert(completion.id, completion.output);
+        }
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.merged.generated, 2_000);
+        assert_eq!(report.merged.completed, 2_000);
+        assert_eq!(report.merged.dropped, 0);
+        let served =
+            Arc::try_unwrap(outputs).unwrap().into_inner().unwrap();
+        assert_eq!(served, completions);
+        served
+    };
+    let first = run_once();
+    assert_eq!(first.len(), 2_000);
+    for (id, output) in &first {
+        assert_eq!(
+            output,
+            &expected_output(*id, (*id % 17) as f32 * 0.25),
+            "id {id}"
+        );
+    }
+    let second = run_once();
+    assert_eq!(first, second, "two runs must serve the identical set");
+}
+
+/// Runner that parks on a gate so the test can wedge the (single)
+/// worker and fill the queue deterministically.
+struct BlockingRunner {
+    gate: Receiver<()>,
+}
+
+impl BatchRunner for BlockingRunner {
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        // Parks until the test drops the sender; afterwards recv errors
+        // immediately and the backlog drains.
+        let _ = self.gate.recv();
+        Ok(vec![vec![0.1]; n])
+    }
+}
+
+fn tiny_request(id: u64) -> Request {
+    Request {
+        id,
+        features: vec![0.0; 8],
+        label: 0,
+        route_key: 0,
+        enqueued_at: Instant::now(),
+    }
+}
+
+/// (c) Queue-full backpressure is a typed error carrying the request
+/// back, counted as a drop — and the session keeps serving afterwards.
+#[test]
+fn queue_full_backpressure_is_a_typed_error() {
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        queue_capacity: 1,
+        ..ServingSpec::default()
+    }
+    .with_batcher(1, Duration::ZERO);
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let slot = Arc::new(Mutex::new(Some(gate_rx)));
+    let session = Session::start(&spec, move |_shard| {
+        let gate = slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("exactly one worker builds a runner");
+        Ok(Box::new(BlockingRunner { gate }) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+
+    // The worker parks on the first request it pops; with capacity 1,
+    // the queue must reject within a handful of submissions.
+    let mut full: Option<SubmitError> = None;
+    let mut admitted = 0u64;
+    for id in 0..100u64 {
+        match session.submit(tiny_request(id)) {
+            Ok(()) => admitted += 1,
+            Err(err) => {
+                full = Some(err);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let err = full.expect("a 1-deep queue behind a wedged worker must fill");
+    match &err {
+        SubmitError::Full { shard, request } => {
+            assert_eq!(*shard, 0);
+            assert_eq!(request.id, admitted, "request handed back intact");
+        }
+        other => panic!("expected Full, got {other}"),
+    }
+    assert!(err.to_string().contains("full"), "{err}");
+    let rejected_id = err.into_request().id;
+    assert_eq!(rejected_id, admitted);
+
+    // Release the worker; everything admitted drains and the books
+    // balance: generated = admitted + the counted drop.
+    drop(gate_tx);
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.generated, admitted + 1);
+    assert_eq!(report.merged.dropped, 1);
+    assert_eq!(report.merged.completed, admitted);
+}
+
+/// (c) Submit after shutdown is a typed `Closed` error — on a handle
+/// that outlived its session.
+#[test]
+fn submit_after_shutdown_is_a_typed_error() {
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        ..ServingSpec::default()
+    };
+    let outputs = Arc::new(Mutex::new(HashMap::new()));
+    let sink = outputs.clone();
+    let session = Session::start(&spec, move |_shard| {
+        Ok(Box::new(RecordingRunner {
+            outputs: sink.clone(),
+        }) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    let handle = session.handle();
+    session.submit(tiny_request(0)).unwrap();
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.completed, 1);
+
+    let err = handle.submit(tiny_request(1)).unwrap_err();
+    assert!(
+        matches!(&err, SubmitError::Closed { request } if request.id == 1),
+        "{err}"
+    );
+    assert!(err.to_string().contains("closed"), "{err}");
+    // The rejected request was not counted anywhere.
+    let err = handle.submit_event(vec![0.0; 8], 0).unwrap_err();
+    assert!(matches!(err, SubmitError::Closed { .. }), "{err}");
+}
