@@ -1,12 +1,33 @@
 #!/usr/bin/env bash
 # Tier-1 verify + lint gates.  Invoked by .github/workflows/ci.yml and
 # runnable locally:
-#   ./ci.sh                # full gates: build, test, fmt, clippy, doc
+#   ./ci.sh                # full gates: build, test, invariant lint,
+#                          # fmt, clippy, doc
 #   ./ci.sh --bench-smoke  # reduced-iteration serving bench; emits
 #                          # BENCH_serving.json (CI uploads it as an
 #                          # artifact to track the perf trajectory)
+#   ./ci.sh --analysis     # concurrency analysis: invariant lint +
+#                          # model-check interleaving suite
+#                          # (cargo test --features model-check)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--analysis" ]]; then
+    # The lint's own negative suite first: a rule that silently stopped
+    # matching must fail the build, not pass it.
+    echo "== analysis: invariant lint self-test =="
+    cargo run --release -p rnn-hls --bin lint -- --self-test
+    echo "== analysis: invariant lint (rust/src rust/tests) =="
+    cargo run --release -p rnn-hls --bin lint -- rust/src rust/tests
+    # The model checker explores the serving fabric's interleavings
+    # (tests/model_check.rs) and re-checks the whole suite with the
+    # instrumented primitives swapped in.  On failure the harness
+    # prints a MODEL_CHECK_TRACE/MODEL_CHECK_SEED replay line.
+    echo "== analysis: cargo test -q -p rnn-hls --features model-check =="
+    cargo test -q -p rnn-hls --features model-check
+    echo "ci.sh --analysis: all gates passed"
+    exit 0
+fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     echo "== bench-smoke: throughput_batch --smoke =="
@@ -54,6 +75,16 @@ cargo test -q
 # filtered out of the matrix toolchains.
 echo "== tier-1: cargo test -q --test tier_batching (virtual-clock suite) =="
 cargo test -q --test tier_batching
+
+# Invariant lint (tools/lint): sync primitives confined to the
+# util::sync gateway, SeqCst on accounting writes, lock_or_recover
+# instead of unwrap on lock results, allowlisted + SAFETY-commented
+# unsafe.  Self-test first — a rule that stopped matching must fail
+# here, not silently pass the scan.
+echo "== invariant lint: self-test =="
+cargo run --release -p rnn-hls --bin lint -- --self-test
+echo "== invariant lint: rust/src rust/tests =="
+cargo run --release -p rnn-hls --bin lint -- rust/src rust/tests
 
 # Lint gates.  Locally they degrade to a skip when the rustup component
 # is absent; under CI ($CI is set on GitHub Actions, which installs both

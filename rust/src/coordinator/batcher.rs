@@ -300,8 +300,8 @@ mod tests {
 
     #[test]
     fn no_request_lost_under_concurrent_batching() {
+        use crate::util::sync::{lock_or_recover, Mutex};
         use std::collections::HashSet;
-        use std::sync::Mutex;
         let q = Arc::new(BoundedQueue::new(4096));
         let seen = Arc::new(Mutex::new(HashSet::new()));
         let cfg = BatcherConfig {
@@ -315,7 +315,7 @@ mod tests {
                 let cfg = cfg;
                 s.spawn(move || {
                     while let Some(b) = next_batch(&q, &cfg, &SystemClock) {
-                        let mut set = seen.lock().unwrap();
+                        let mut set = lock_or_recover(&seen);
                         for r in &b.requests {
                             assert!(set.insert(r.id), "duplicate {}", r.id);
                         }
@@ -329,6 +329,6 @@ mod tests {
             }
             q.close();
         });
-        assert_eq!(seen.lock().unwrap().len(), 2000);
+        assert_eq!(lock_or_recover(&seen).len(), 2000);
     }
 }

@@ -158,7 +158,10 @@ impl ServerMetrics {
                 .record(batch.formed_at.saturating_duration_since(r.enqueued_at));
             self.total_latency
                 .record(done.saturating_duration_since(r.enqueued_at));
-            self.completed.fetch_add(1, Ordering::Relaxed);
+            // SeqCst: `completed` is one leg of the cross-thread
+            // accounting identity (generated == completed + dropped)
+            // that shutdown and the model checker assert.
+            self.completed.fetch_add(1, Ordering::SeqCst);
             if super::server::predicted_label(probs) == r.label {
                 self.correct.fetch_add(1, Ordering::Relaxed);
             }
@@ -258,17 +261,17 @@ mod tests {
     #[test]
     fn server_metrics_merge_sums_counters_and_histograms() {
         let a = ServerMetrics::new();
-        a.generated.store(60, Ordering::Relaxed);
-        a.dropped.store(10, Ordering::Relaxed);
-        a.completed.store(50, Ordering::Relaxed);
+        a.generated.store(60, Ordering::SeqCst);
+        a.dropped.store(10, Ordering::SeqCst);
+        a.completed.store(50, Ordering::SeqCst);
         a.correct.store(40, Ordering::Relaxed);
         a.batches.store(5, Ordering::Relaxed);
         a.batch_samples.store(50, Ordering::Relaxed);
         a.total_latency.record(Duration::from_micros(100));
         let b = ServerMetrics::new();
-        b.generated.store(40, Ordering::Relaxed);
-        b.dropped.store(0, Ordering::Relaxed);
-        b.completed.store(40, Ordering::Relaxed);
+        b.generated.store(40, Ordering::SeqCst);
+        b.dropped.store(0, Ordering::SeqCst);
+        b.completed.store(40, Ordering::SeqCst);
         b.correct.store(20, Ordering::Relaxed);
         b.batches.store(5, Ordering::Relaxed);
         b.batch_samples.store(40, Ordering::Relaxed);
@@ -337,9 +340,9 @@ mod tests {
     #[test]
     fn metrics_ratios() {
         let m = ServerMetrics::new();
-        m.generated.store(100, Ordering::Relaxed);
-        m.dropped.store(25, Ordering::Relaxed);
-        m.completed.store(75, Ordering::Relaxed);
+        m.generated.store(100, Ordering::SeqCst);
+        m.dropped.store(25, Ordering::SeqCst);
+        m.completed.store(75, Ordering::SeqCst);
         m.correct.store(60, Ordering::Relaxed);
         m.batches.store(15, Ordering::Relaxed);
         m.batch_samples.store(75, Ordering::Relaxed);

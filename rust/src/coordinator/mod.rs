@@ -150,6 +150,45 @@
 //! against hand-computed values without one `std::thread::sleep`.
 //! Arrival *pacing* stays real time — a virtual clock can reshape the
 //! latency ledger, never stall the detector.
+//!
+//! ## Concurrency invariants
+//!
+//! The fabric's cross-thread contracts, stated once.  Plain tests pin
+//! them under real threads; `tests/model_check.rs` explores them under
+//! adversarial schedules (`--features model-check`); `tools/lint`
+//! rejects code that could erode them.
+//!
+//! * **The accounting identity.**  At shutdown,
+//!   `generated == completed + dropped` exactly.  `submit` counts
+//!   `generated` *before* the push; a `Full` rejection adds one
+//!   `dropped`; a push that loses the race with shutdown (closed-flag
+//!   check passed, queue closed underneath) *un-counts* `generated` and
+//!   reports `Closed` — so a `Closed` rejection is counted nowhere.
+//!   All writes to the identity's counters (`generated`, `dropped`,
+//!   `completed`, and the egress `lost`) are `SeqCst`; relaxed loads
+//!   for display are fine, relaxed writes are a lint error.
+//! * **Queue close protocol.**  [`BoundedQueue::close`] flips `closed`
+//!   under the lock and `notify_all`s; producers then fail fast,
+//!   consumers drain the backlog and only then see `None`.  A timed-out
+//!   `pop_timeout` re-checks the queue under the reacquired lock, so an
+//!   item racing the timeout is delivered, not stranded.
+//! * **Lock discipline.**  Every sync primitive enters through
+//!   [`crate::util::sync`] (the model checker's instrumentation point),
+//!   and locks are acquired with
+//!   [`lock_or_recover`](crate::util::sync::lock_or_recover): a
+//!   panicking worker is *reported* — it must never cascade poisoning
+//!   into the drain/close/Drop paths other threads need for shutdown.
+//!   No lock is held across an engine call or a channel send; condvar
+//!   waits re-check their predicate in a loop (spurious wakeups are
+//!   routine, and the model checker injects them deliberately).
+//! * **Shutdown linearizability.**  `shutdown` stores `closed`
+//!   (SeqCst), waits for every shard to settle (queue empty or workers
+//!   gone), closes the queues, joins the workers.  A `Session` dropped
+//!   without `shutdown` still stops admission and closes every queue —
+//!   workers drain and exit detached; `Drop` never blocks.
+//! * **Egress shedding.**  The completion channel is bounded;
+//!   `try_send` sheds on overflow and counts `lost` — a worker never
+//!   blocks on a slow consumer, and `sent == delivered + lost`.
 
 pub mod batcher;
 pub mod clock;

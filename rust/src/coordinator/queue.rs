@@ -1,9 +1,17 @@
 //! Bounded MPMC queue with trigger-style overflow: when full, `push`
 //! fails immediately (the caller counts a drop) instead of blocking the
 //! producer — a detector never waits for the DAQ.
+//!
+//! Sync primitives come from [`crate::util::sync`], so the queue runs
+//! under the model checker unchanged (`tests/model_check.rs` drives
+//! this exact code through adversarial interleavings).  Lock
+//! acquisitions recover from poisoning ([`lock_or_recover`]): a
+//! panicking worker must not wedge the drain/close paths that other
+//! threads rely on for shutdown.
 
+use crate::util::sync::{lock_or_recover, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::PoisonError;
 use std::time::Duration;
 
 pub struct BoundedQueue<T> {
@@ -32,7 +40,7 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking push; `Err(item)` when full or closed (drop + count).
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut inner = self.inner.lock().expect("queue lock");
+        let mut inner = lock_or_recover(&self.inner);
         if inner.closed || inner.items.len() >= self.capacity {
             return Err(item);
         }
@@ -45,7 +53,7 @@ impl<T> BoundedQueue<T> {
     /// Pop one item, waiting up to `timeout`.  `None` on timeout, or when
     /// the queue is closed AND drained.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
-        let mut inner = self.inner.lock().expect("queue lock");
+        let mut inner = lock_or_recover(&self.inner);
         loop {
             if let Some(item) = inner.items.pop_front() {
                 return Some(item);
@@ -56,9 +64,12 @@ impl<T> BoundedQueue<T> {
             let (guard, result) = self
                 .not_empty
                 .wait_timeout(inner, timeout)
-                .expect("queue wait");
+                .unwrap_or_else(PoisonError::into_inner);
             inner = guard;
             if result.timed_out() {
+                // An item may have raced in between the timeout firing
+                // and this thread reacquiring the lock — deliver it
+                // rather than reporting an empty timeout.
                 return inner.items.pop_front();
             }
         }
@@ -67,18 +78,18 @@ impl<T> BoundedQueue<T> {
     /// Non-blocking pop: `None` when the queue is currently empty
     /// (whether open or closed) — the virtual-clock wait primitive.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().expect("queue lock").items.pop_front()
+        lock_or_recover(&self.inner).items.pop_front()
     }
 
     /// Drain up to `max` items without blocking (batcher top-up).
     pub fn drain_up_to(&self, max: usize) -> Vec<T> {
-        let mut inner = self.inner.lock().expect("queue lock");
+        let mut inner = lock_or_recover(&self.inner);
         let take = max.min(inner.items.len());
         inner.items.drain(..take).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("queue lock").items.len()
+        lock_or_recover(&self.inner).items.len()
     }
 
     /// Capacity the queue was built with (push fails beyond it).
@@ -92,12 +103,12 @@ impl<T> BoundedQueue<T> {
 
     /// Close: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
-        self.inner.lock().expect("queue lock").closed = true;
+        lock_or_recover(&self.inner).closed = true;
         self.not_empty.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().expect("queue lock").closed
+        lock_or_recover(&self.inner).closed
     }
 }
 
@@ -187,5 +198,80 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert_eq!(q.pop_timeout(Duration::from_millis(20)), None);
         assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    /// A spurious wakeup (notify with nothing enqueued) must re-enter
+    /// the wait, not return early — the later real push is delivered
+    /// within the same `pop_timeout` call.
+    #[test]
+    fn pop_timeout_survives_spurious_wakeup() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let poker = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // Spurious: nothing enqueued yet.
+                for _ in 0..10 {
+                    q.not_empty.notify_all();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                q.push(42u32).unwrap();
+            })
+        };
+        // Far longer than the poker takes: a premature `None` (treating
+        // the spurious wake as a timeout) would fail the assert.
+        assert_eq!(q.pop_timeout(Duration::from_secs(5)), Some(42));
+        poker.join().unwrap();
+    }
+
+    /// An item that races in exactly as the wait times out is
+    /// delivered, not stranded: the timed-out branch re-checks the
+    /// queue under the reacquired lock.
+    #[test]
+    fn pop_timeout_delivers_item_racing_the_timeout() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let pusher = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // Land close to the 20ms deadline; whichever side of it
+                // the push falls on, the item must not be lost.
+                std::thread::sleep(Duration::from_millis(18));
+                q.push(7u32).unwrap();
+            })
+        };
+        let got = q.pop_timeout(Duration::from_millis(20));
+        pusher.join().unwrap();
+        match got {
+            Some(7) => {}
+            Some(other) => panic!("wrong item: {other}"),
+            // Timed out before the push landed: the item must still be
+            // in the queue — stranding it would be the bug.
+            None => assert_eq!(q.try_pop(), Some(7)),
+        }
+    }
+
+    /// A producer that panics while holding the queue lock poisons it;
+    /// every path (push, pop, close, len) must keep working so shutdown
+    /// can still drain and report.
+    #[test]
+    fn poisoned_lock_still_drains_and_closes() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push(1u32).unwrap();
+        let poisoner = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let _guard = lock_or_recover(&q.inner);
+                panic!("worker dies holding the queue lock");
+            })
+        };
+        assert!(poisoner.join().is_err());
+        // Queue is now poisoned; all operations must recover.
+        q.push(2u32).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(2));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
     }
 }

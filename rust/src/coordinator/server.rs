@@ -211,7 +211,10 @@ pub(crate) fn worker_loop_with_sink(
                     })
                     .is_err();
                 if undelivered {
-                    sink.lost.fetch_add(1, Ordering::Relaxed);
+                    // SeqCst: `lost` closes the completion-channel
+                    // accounting identity (sent == delivered + lost)
+                    // that the model-check shed scenario asserts.
+                    sink.lost.fetch_add(1, Ordering::SeqCst);
                 }
             }
         }

@@ -59,13 +59,22 @@
 
 use std::fmt;
 use std::str::FromStr;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{
-    Receiver, RecvTimeoutError, SyncSender, TryRecvError,
-};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+// All sync primitives come through the `util::sync` shim (enforced by
+// `tools/lint`): zero-cost std re-exports normally, the model checker's
+// instrumented types under `--features model-check` — which is what
+// lets `tests/model_check.rs` explore the submit/shutdown/Drop races in
+// this exact code.
+use crate::util::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use crate::util::sync::mpsc::{
+    self, Receiver, RecvTimeoutError, SyncSender, TryRecvError,
+};
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{lock_or_recover, Mutex};
 
 use crate::data::generators::Generator;
 use crate::nn::BackendSpec;
@@ -619,9 +628,14 @@ impl SessionShared {
             .route_stateless(&request, self.config.shards)
         {
             Some(shard) => shard,
-            None => self.router.lock().expect("router lock").route(&request),
+            None => lock_or_recover(&self.router).route(&request),
         };
-        self.metrics[shard].generated.fetch_add(1, Ordering::Relaxed);
+        // SeqCst on the accounting counters (here and below): the
+        // `generated == completed + dropped` identity is checked across
+        // threads, and the un-count on the shutdown race must never be
+        // reorderable against the closed-queue observation that
+        // justifies it.  (Enforced by `tools/lint`.)
+        self.metrics[shard].generated.fetch_add(1, Ordering::SeqCst);
         match self.queues[shard].push(request) {
             Ok(()) => Ok(()),
             // A push failing on a *closed* queue means shutdown raced us
@@ -632,13 +646,13 @@ impl SessionShared {
             Err(request) if self.queues[shard].is_closed() => {
                 self.metrics[shard]
                     .generated
-                    .fetch_sub(1, Ordering::Relaxed);
+                    .fetch_sub(1, Ordering::SeqCst);
                 Err(SubmitError::Closed { request })
             }
             Err(request) => {
                 self.metrics[shard]
                     .dropped
-                    .fetch_add(1, Ordering::Relaxed);
+                    .fetch_add(1, Ordering::SeqCst);
                 Err(SubmitError::Full { shard, request })
             }
         }
@@ -799,7 +813,7 @@ impl Session {
                     tx: tx.clone(),
                     lost: completions_lost.clone(),
                 });
-                shard_handles.push(std::thread::spawn(
+                shard_handles.push(thread::spawn(
                     move || -> anyhow::Result<()> {
                         // The readiness bump rides a drop guard so a
                         // factory that *panics* (not just errors) still
@@ -839,7 +853,7 @@ impl Session {
         drop(tx);
 
         while ready.load(Ordering::SeqCst) < total_workers {
-            std::thread::sleep(Duration::from_millis(1));
+            thread::sleep(Duration::from_millis(1));
         }
 
         let shared = Arc::new(SessionShared {
@@ -896,7 +910,7 @@ impl Session {
     /// progress on an idle session.
     pub fn recv(&self) -> Option<Completion> {
         loop {
-            let rx = self.completions.lock().expect("completions lock");
+            let rx = lock_or_recover(&self.completions);
             match rx.recv_timeout(Duration::from_millis(10)) {
                 Ok(completion) => return Some(completion),
                 Err(RecvTimeoutError::Disconnected) => return None,
@@ -917,7 +931,7 @@ impl Session {
 
     /// Non-blocking drain of every completion currently queued.
     pub fn drain(&self) -> Vec<Completion> {
-        let rx = self.completions.lock().expect("completions lock");
+        let rx = lock_or_recover(&self.completions);
         let mut out = Vec::new();
         loop {
             match rx.try_recv() {
@@ -981,7 +995,7 @@ impl Session {
                 || workers[shard].iter().all(|w| w.is_finished())
         };
         while !(0..self.shared.config.shards).all(settled) {
-            std::thread::sleep(Duration::from_micros(200));
+            thread::sleep(Duration::from_micros(200));
         }
         for queue in &self.shared.queues {
             queue.close();

@@ -125,9 +125,9 @@ mod tests {
         metrics: &'a Arc<ServerMetrics>,
     ) -> impl FnMut(Request) + 'a {
         move |request| {
-            metrics.generated.fetch_add(1, Ordering::Relaxed);
+            metrics.generated.fetch_add(1, Ordering::SeqCst);
             if queue.push(request).is_err() {
-                metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                metrics.dropped.fetch_add(1, Ordering::SeqCst);
             }
         }
     }

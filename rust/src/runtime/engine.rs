@@ -8,7 +8,9 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{lock_or_recover, Mutex};
 
 use crate::model::Weights;
 
@@ -102,18 +104,13 @@ impl Runtime {
 
     /// Load (or fetch cached) the executable for `key` at `batch`.
     pub fn model(&self, key: &str, batch: usize) -> anyhow::Result<Arc<PjrtModel>> {
-        if let Some(hit) = self
-            .cache
-            .lock()
-            .expect("runtime cache")
-            .get(&(key.to_string(), batch))
+        if let Some(hit) =
+            lock_or_recover(&self.cache).get(&(key.to_string(), batch))
         {
             return Ok(hit.clone());
         }
         let model = Arc::new(self.compile(key, batch)?);
-        self.cache
-            .lock()
-            .expect("runtime cache")
+        lock_or_recover(&self.cache)
             .insert((key.to_string(), batch), model.clone());
         Ok(model)
     }

@@ -19,10 +19,15 @@
 //! * [`prop`]    — miniature property-testing loop (the proptest slice we
 //!   use: seeded random cases + failure reporting, no shrinking).
 //! * [`cli`]     — declarative flag parsing for the launcher.
+//! * [`sync`]    — the crate's one gateway to `std::sync`: zero-cost
+//!   re-exports in normal builds, the "loom-lite" model checker under
+//!   `--features model-check` (the loom slice we use; deterministic
+//!   interleaving exploration with seed/trace replay).
 
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod threads;
 pub mod timing;

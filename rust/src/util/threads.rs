@@ -20,11 +20,20 @@
 //! Chunking never changes per-sample arithmetic, so results are bitwise
 //! identical for any worker count — the batch-equivalence contract the
 //! engines are held to.
+//!
+//! Sync primitives come from [`crate::util::sync`]: normal builds get
+//! the std types verbatim; `--features model-check` lets the model
+//! checker schedule the pool (`tests/model_check.rs` drives a panicking
+//! job through `map_chunks` across interleavings).  Locks are acquired
+//! with [`lock_or_recover`] — in a pool, poisoning is routine (a
+//! panicking job is *expected*, and reported to the caller), so no path
+//! here may cascade it.
 
+use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::thread::{Builder, JoinHandle};
+use crate::util::sync::{lock_or_recover, Mutex};
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 
 /// Apply `f` to `0..n` across `workers` OS threads, collecting results in
 /// index order.  Work is distributed by atomic counter, so uneven item
@@ -42,8 +51,8 @@ where
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> =
+        out.iter_mut().map(Mutex::new).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -52,7 +61,7 @@ where
                     break;
                 }
                 let val = f(i);
-                **slots[i].lock().expect("slot poisoned") = Some(val);
+                **lock_or_recover(&slots[i]) = Some(val);
             });
         }
     });
@@ -88,8 +97,10 @@ struct PoolShared {
 fn pool_worker(shared: &PoolShared) {
     loop {
         let job = {
-            let receiver =
-                shared.receiver.lock().expect("pool receiver poisoned");
+            // Recover, don't cascade: a sibling worker panicking inside
+            // a job poisons this lock, but the panic is *reported* to
+            // the `map_chunks` caller — the pool itself stays healthy.
+            let receiver = lock_or_recover(&shared.receiver);
             receiver.recv()
         };
         match job {
@@ -109,9 +120,11 @@ struct PoolInner {
 
 impl Drop for PoolInner {
     fn drop(&mut self) {
-        if let Ok(mut sender) = self.shared.sender.lock() {
-            *sender = None;
-        }
+        // Must disconnect even when the sender mutex is poisoned: if the
+        // sender survived (an `if let Ok` here once skipped it), the
+        // workers would never see `recv` fail and the joins below would
+        // hang the dropping thread forever.
+        *lock_or_recover(&self.shared.sender) = None;
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
@@ -160,7 +173,7 @@ impl WorkerPool {
         let handles = (0..workers)
             .map(|i| {
                 let shared = shared.clone();
-                std::thread::Builder::new()
+                Builder::new()
                     .name(format!("rnn-hls-pool-{i}"))
                     .spawn(move || pool_worker(&shared))
                     .expect("spawn pool worker")
@@ -183,7 +196,7 @@ impl WorkerPool {
 
     fn submit(&self, job: Job) {
         let inner = self.inner.as_ref().expect("submit needs a live pool");
-        let sender = inner.shared.sender.lock().expect("pool sender poisoned");
+        let sender = lock_or_recover(&inner.shared.sender);
         sender
             .as_ref()
             .expect("pool channel already closed")
@@ -206,6 +219,8 @@ impl WorkerPool {
         T: Send,
         F: Fn(Range<usize>) -> Vec<T> + Sync,
     {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
         let workers = self.workers.clamp(1, n.max(1));
         if workers <= 1 || self.inner.is_none() {
             return chunk_fn(0..n);
@@ -224,29 +239,48 @@ impl WorkerPool {
         }
 
         // Every chunk reports through this per-call channel: its index
-        // plus either the result or the panic payload.
+        // plus either the result or the panic payload.  `inflight` is
+        // the job epoch for this call: decremented by each job *before*
+        // it reports, so once the collection loop below has all the
+        // reports, a zero epoch proves no submitted job can still be
+        // executing (the debug assertion that backs the transmute).
         let (report, results) =
             channel::<(usize, std::thread::Result<Vec<T>>)>();
+        let inflight = Arc::new(AtomicUsize::new(ranges.len()));
         for (k, range) in ranges.iter().enumerate() {
             let report = report.clone();
+            let inflight = inflight.clone();
             let chunk_fn = &chunk_fn;
             let range = range.clone();
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let result = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| chunk_fn(range)),
                 );
+                // Epoch before report: the borrow of `chunk_fn` (the
+                // closure environment) is dead from here on.
+                inflight.fetch_sub(1, Ordering::SeqCst);
                 // Receiver outlives every send: `map_chunks` cannot
                 // return before collecting this message.
                 let _ = report.send((k, result));
             });
             // SAFETY: the job borrows `chunk_fn` (and through it the
-            // caller's data), which do not live `'static`.  The loop
-            // below blocks until *every* submitted job has sent its
-            // report — including panicking ones, via `catch_unwind` —
-            // and nothing on this thread can panic before that loop
-            // finishes, so the borrows strictly outlive the jobs'
-            // execution.  The transmute erases only lifetimes: source
-            // and target are the same fat-pointer type.
+            // caller's data), which do not live `'static`, so erasing
+            // the lifetime is sound only while this call frame is the
+            // jobs' lifetime bound.  That holds because:
+            //  * the collection loop below blocks until *every*
+            //    submitted job has sent its report — panicking jobs
+            //    included, via `catch_unwind` — and a job's last use of
+            //    the borrow strictly precedes its report (it decrements
+            //    `inflight` in between, which the debug assertion below
+            //    re-checks);
+            //  * nothing on this thread between here and the end of
+            //    that loop can panic or early-return: `submit`/`recv`
+            //    only panic if the pool threads themselves are gone, in
+            //    which case no job holds the borrow either;
+            //  * the pool is never dropped from inside `chunk_fn` (the
+            //    caller holds `&self`).
+            // The transmute erases only lifetimes: source and target
+            // are the same fat-pointer type.
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
             };
@@ -265,6 +299,14 @@ impl WorkerPool {
                 Err(payload) => panic_payload = Some(payload),
             }
         }
+        // The job epoch must be spent before the borrows go out of
+        // scope — a nonzero count here means a job could still be
+        // executing with a dangling environment.
+        debug_assert_eq!(
+            inflight.load(Ordering::SeqCst),
+            0,
+            "map_chunks returning with jobs still in flight"
+        );
         if let Some(payload) = panic_payload {
             std::panic::resume_unwind(payload);
         }
@@ -311,11 +353,10 @@ mod tests {
 
     #[test]
     fn map_chunks_gives_contiguous_ranges() {
-        use std::sync::Mutex;
         let seen = Mutex::new(Vec::new());
         let pool = WorkerPool::new(4);
         pool.map_chunks(10, |r| {
-            seen.lock().unwrap().push(r.clone());
+            lock_or_recover(&seen).push(r.clone());
             r.map(|_| ()).collect()
         });
         let mut ranges = seen.into_inner().unwrap();
@@ -342,14 +383,13 @@ mod tests {
     #[test]
     fn pool_threads_persist_across_calls() {
         use std::collections::HashSet;
-        use std::sync::Mutex;
 
         let pool = WorkerPool::new(2);
         let caller = std::thread::current().id();
         let ids = Mutex::new(HashSet::new());
         for _ in 0..8 {
             pool.map_chunks(4, |r| {
-                ids.lock().unwrap().insert(std::thread::current().id());
+                lock_or_recover(&ids).insert(std::thread::current().id());
                 r.collect::<Vec<_>>()
             });
         }
@@ -381,6 +421,66 @@ mod tests {
             vec![1, 2, 3],
             "pool must stay serviceable after a panic"
         );
+    }
+
+    /// The transmute's regression test: when one chunk panics,
+    /// `map_chunks` must still block until the *other* (slower) chunks
+    /// finish before unwinding — returning early would free the borrowed
+    /// closure environment while pool threads still run it.
+    #[test]
+    fn panicking_chunk_cannot_leak_past_return() {
+        let pool = WorkerPool::new(3);
+        let witness = Arc::new(());
+        let held = witness.clone();
+        let executed = Mutex::new(Vec::new());
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                // 6 items over 3 workers: ranges 0..2, 2..4, 4..6.
+                pool.map_chunks(6, |r| {
+                    let _anchor = &held;
+                    if r.start == 0 {
+                        panic!("first chunk dies");
+                    }
+                    // Slow chunks: if map_chunks unwound early, these
+                    // would still be running at the asserts below.
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    lock_or_recover(&executed).push(r.start);
+                    r.collect::<Vec<_>>()
+                })
+            }),
+        );
+        assert!(result.is_err(), "panic must propagate");
+        // Unwound only *after* every surviving chunk completed…
+        let mut done = executed.into_inner().unwrap();
+        done.sort_unstable();
+        assert_eq!(done, vec![2, 4], "all surviving chunks ran to completion");
+        // …and the closure environment is dead: only our handle remains.
+        drop(held);
+        assert_eq!(
+            Arc::strong_count(&witness),
+            1,
+            "a job outlived map_chunks and still holds the environment"
+        );
+    }
+
+    /// Dropping the pool while its sender mutex is poisoned must still
+    /// disconnect the channel and join the workers (a hang here is the
+    /// regression: `if let Ok` on the poisoned lock used to skip the
+    /// disconnect, leaving `recv` blocked forever).
+    #[test]
+    fn pool_drop_completes_with_poisoned_sender_lock() {
+        let pool = WorkerPool::new(2);
+        {
+            let inner = pool.inner.as_ref().expect("persistent pool");
+            let shared = inner.shared.clone();
+            let poisoner = std::thread::spawn(move || {
+                let _guard = lock_or_recover(&shared.sender);
+                panic!("die holding the sender lock");
+            });
+            assert!(poisoner.join().is_err());
+        }
+        // Must not hang on the worker joins, nor panic.
+        drop(pool);
     }
 
     #[test]

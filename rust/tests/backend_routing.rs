@@ -15,7 +15,7 @@
 //! shrink the comparison), and every run asserts `dropped == 0` first.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use rnn_hls::coordinator::{
@@ -27,6 +27,7 @@ use rnn_hls::data::generators::{Event, Generator};
 use rnn_hls::fixed::FixedSpec;
 use rnn_hls::model::{zoo, Cell, Weights};
 use rnn_hls::nn::{BackendCtx, BackendSpec};
+use rnn_hls::util::sync::{lock_or_recover, Mutex};
 
 const N_EVENTS: usize = 1_200;
 const TIER_SEED: u64 = 0xC1A5;
@@ -83,7 +84,7 @@ impl BatchRunner for RecordingRunner {
     }
     fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
         let out = self.inner.run(xs, n)?;
-        let mut map = self.outputs.lock().unwrap();
+        let mut map = lock_or_recover(&self.outputs);
         for (i, probs) in out.iter().enumerate() {
             let id = xs[i * STRIDE] as u64;
             anyhow::ensure!(

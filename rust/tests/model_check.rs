@@ -1,0 +1,218 @@
+//! Model-check scenarios for the serving fabric — compiled only under
+//! `--features model-check`, where `util::sync` swaps its std
+//! re-exports for instrumented primitives driven by a deterministic
+//! scheduler (see `src/util/sync.rs`).
+//!
+//! Each scenario drives the *production* queue/pool/session code —
+//! not a model of it — through adversarial interleavings:
+//!
+//! * bounded-exhaustive DFS (`explore_exhaustive`) for the small,
+//!   spin-free scenarios (queue races, channel shed), where the whole
+//!   decision tree is enumerable;
+//! * seeded-random schedules (`explore_random`) for the full fabric
+//!   (worker pool, live session), whose readiness/settle spin loops
+//!   terminate probabilistically but not on every DFS path.
+//!
+//! On failure the harness panics with a replay line; re-run with
+//! `MODEL_CHECK_TRACE=<trace>` (exhaustive) or `MODEL_CHECK_SEED=<seed>`
+//! (random) to reproduce that exact interleaving.
+#![cfg(feature = "model-check")]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rnn_hls::coordinator::{BatchRunner, BoundedQueue, Request};
+use rnn_hls::util::sync::{check, mpsc, thread};
+use rnn_hls::util::threads::WorkerPool;
+use rnn_hls::{BackendKind, ServingSpec, Session, SubmitError};
+
+/// Scenario 1 — the queue close race.  A push, a timed pop, and a close
+/// interleave freely; whenever the push was *admitted* the item must
+/// surface exactly once (popped by the consumer or drained after the
+/// close) — never lost, never duplicated.
+#[test]
+fn queue_close_race_never_loses_an_item() {
+    check::explore_exhaustive("queue_close_race", 20_000, || {
+        let q = Arc::new(BoundedQueue::new(2));
+        let producer = {
+            let q = q.clone();
+            thread::spawn(move || q.push(7u32).is_ok())
+        };
+        let consumer = {
+            let q = q.clone();
+            thread::spawn(move || q.pop_timeout(Duration::from_millis(50)))
+        };
+        q.close();
+        let pushed = producer.join().unwrap();
+        let popped = consumer.join().unwrap();
+        let mut delivered = usize::from(popped.is_some());
+        while q.try_pop().is_some() {
+            delivered += 1;
+        }
+        assert_eq!(
+            delivered,
+            usize::from(pushed),
+            "an admitted item must surface exactly once \
+             (pushed={pushed}, popped={popped:?})"
+        );
+    });
+}
+
+/// Scenario 2 — no lost wakeup on the queue condvar.  A consumer
+/// blocked in `pop_timeout` must always observe a racing push: the
+/// model's timeout budget (two scheduler-chosen timeouts per run) means
+/// a lost notify would leave the consumer blocked forever, which the
+/// scheduler reports as a deadlock instead of hanging the test.
+#[test]
+fn queue_push_always_wakes_a_timed_wait() {
+    check::explore_exhaustive("queue_no_lost_wakeup", 20_000, || {
+        let q = Arc::new(BoundedQueue::new(2));
+        let consumer = {
+            let q = q.clone();
+            thread::spawn(move || loop {
+                if let Some(v) = q.pop_timeout(Duration::from_millis(50)) {
+                    return v;
+                }
+            })
+        };
+        let producer = {
+            let q = q.clone();
+            // Capacity 2, queue open: this push cannot be rejected.
+            thread::spawn(move || q.push(9u32).unwrap())
+        };
+        producer.join().unwrap();
+        assert_eq!(consumer.join().unwrap(), 9);
+    });
+}
+
+/// Scenario 3 — a panicking job in the worker pool.  The panic must
+/// surface on the calling thread (after the surviving chunks finish),
+/// the pool must stay serviceable for the next call, and `Drop` must
+/// join every worker — under schedules where the panic lands before,
+/// between, and after the sibling chunks.
+#[test]
+fn worker_pool_survives_a_panicking_chunk() {
+    check::explore_random("worker_pool_panic", 0xA11CE, 25, || {
+        let pool = WorkerPool::new(2);
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.map_chunks(4, |range| {
+                    if range.start == 0 {
+                        panic!("chunk boom");
+                    }
+                    range.map(|i| i * 10).collect::<Vec<_>>()
+                })
+            }));
+        assert!(caught.is_err(), "the chunk panic must reach the caller");
+        let ok = pool.map_chunks(4, |range| range.collect::<Vec<usize>>());
+        assert_eq!(ok, vec![0, 1, 2, 3], "pool serviceable after a panic");
+        drop(pool);
+    });
+}
+
+/// Minimal runner for the live-session scenario: constant output, no
+/// shared state — the accounting identity is what is under test.
+struct TinyRunner;
+
+impl BatchRunner for TinyRunner {
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![0.5]; n])
+    }
+}
+
+fn request(id: u64) -> Request {
+    Request {
+        id,
+        features: vec![0.0; 4],
+        label: 0,
+        route_key: 0,
+        enqueued_at: Instant::now(),
+    }
+}
+
+/// Scenario 4 — submit vs shutdown linearizability on a live session.
+/// Whatever the interleaving, the final report's books balance: every
+/// `Ok` admission completes, every `Full` rejection is one counted
+/// drop, every `Closed` rejection — including the narrow race where the
+/// closed-flag check passes but the push lands on an already-closed
+/// queue (the un-count path) — is counted nowhere.
+#[test]
+fn submit_racing_shutdown_keeps_the_accounting_identity() {
+    check::explore_random("submit_vs_shutdown", 0x5E55, 20, || {
+        let spec = ServingSpec {
+            engine: BackendKind::Float,
+            workers: 1,
+            queue_capacity: 2,
+            completions: false,
+            ..ServingSpec::default()
+        }
+        .with_batcher(1, Duration::ZERO);
+        let session = Session::start(&spec, |_shard| {
+            Ok(Box::new(TinyRunner) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        let handle = session.handle();
+        let submitter = thread::spawn(move || {
+            let (mut ok, mut full) = (0u64, 0u64);
+            for id in 0..3u64 {
+                match handle.submit(request(id)) {
+                    Ok(()) => ok += 1,
+                    Err(SubmitError::Full { .. }) => full += 1,
+                    Err(SubmitError::Closed { .. }) => break,
+                }
+            }
+            (ok, full)
+        });
+        let report = session.shutdown().unwrap();
+        let (ok, full) = submitter.join().unwrap();
+        assert_eq!(
+            report.merged.generated,
+            ok + full,
+            "every admission attempt that touched a queue counted once"
+        );
+        assert_eq!(report.merged.dropped, full, "every Full is one drop");
+        assert_eq!(report.merged.completed, ok, "every admission drains");
+        assert_eq!(
+            report.merged.generated,
+            report.merged.completed + report.merged.dropped,
+            "the accounting identity"
+        );
+    });
+}
+
+/// Scenario 5 — completion-channel shed accounting.  The egress channel
+/// is bounded and `try_send` sheds on overflow (a worker never blocks
+/// on a slow consumer); whatever the producer/consumer interleaving,
+/// `sent == delivered + shed` — here checked as: every successful send
+/// is eventually delivered, every attempt is either sent or shed.
+#[test]
+fn completion_channel_shed_never_miscounts() {
+    check::explore_exhaustive("completion_channel_shed", 20_000, || {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        let producer = thread::spawn(move || {
+            let (mut sent, mut shed) = (0u32, 0u32);
+            for i in 0..3u32 {
+                match tx.try_send(i) {
+                    Ok(()) => sent += 1,
+                    Err(_) => shed += 1,
+                }
+            }
+            (sent, shed)
+        });
+        // Drain concurrently with the producer...
+        let mut delivered = 0u32;
+        while rx.try_recv().is_ok() {
+            delivered += 1;
+        }
+        let (sent, shed) = producer.join().unwrap();
+        // ...then drain what is left once it has finished.
+        while rx.try_recv().is_ok() {
+            delivered += 1;
+        }
+        assert_eq!(sent + shed, 3, "every send attempt accounted");
+        assert_eq!(sent, delivered, "every successful send is delivered");
+    });
+}

@@ -17,8 +17,7 @@
 //! stream up front and push it through the live API.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rnn_hls::coordinator::source;
@@ -27,6 +26,8 @@ use rnn_hls::coordinator::{
     SystemClock, TierMix,
 };
 use rnn_hls::data::generators::{Event, Generator};
+use rnn_hls::util::sync::mpsc::{self, Receiver};
+use rnn_hls::util::sync::{lock_or_recover, Mutex};
 use rnn_hls::{BackendKind, ServingSpec, Session, SubmitError};
 
 const N_EVENTS: usize = 2_000;
@@ -82,7 +83,7 @@ impl BatchRunner for RecordingRunner {
     fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
         let stride = xs.len() / n.max(1);
         let mut out = Vec::with_capacity(n);
-        let mut map = self.outputs.lock().unwrap();
+        let mut map = lock_or_recover(&self.outputs);
         for i in 0..n {
             let row = &xs[i * stride..(i + 1) * stride];
             let id = row[0] as u64;
@@ -324,9 +325,7 @@ fn queue_full_backpressure_is_a_typed_error() {
     let (gate_tx, gate_rx) = mpsc::channel::<()>();
     let slot = Arc::new(Mutex::new(Some(gate_rx)));
     let session = Session::start(&spec, move |_shard| {
-        let gate = slot
-            .lock()
-            .unwrap()
+        let gate = lock_or_recover(&slot)
             .take()
             .expect("exactly one worker builds a runner");
         Ok(Box::new(BlockingRunner { gate }) as Box<dyn BatchRunner>)
@@ -399,4 +398,116 @@ fn submit_after_shutdown_is_a_typed_error() {
     // The rejected request was not counted anywhere.
     let err = handle.submit_event(vec![0.0; 8], 0).unwrap_err();
     assert!(matches!(err, SubmitError::Closed { .. }), "{err}");
+}
+
+/// Cheap constant-output runner for the shutdown-race tests: the books
+/// are what is under test, not the outputs.
+struct ConstRunner;
+
+impl BatchRunner for ConstRunner {
+    fn max_batch(&self) -> usize {
+        4
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![0.5]; n])
+    }
+}
+
+/// Submits racing `shutdown` never unbalance the books.  Every `Ok`
+/// admission is eventually completed, every `Full` rejection is a
+/// counted drop, and every `Closed` rejection — including the narrow
+/// race where `submit` passes the closed-flag check but lands on an
+/// already-closed queue (the un-count path) — is counted nowhere.  The
+/// final report must satisfy `generated == completed + dropped`
+/// *exactly*, whatever the interleaving.  The same race is explored
+/// schedule-exhaustively in `tests/model_check.rs`; this test keeps the
+/// invariant pinned under real threads and real timing.
+#[test]
+fn shutdown_racing_submits_keeps_the_books_balanced() {
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        queue_capacity: 4,
+        ..ServingSpec::default()
+    }
+    .with_batcher(4, Duration::from_micros(50));
+    let session = Session::start(&spec, |_shard| {
+        Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    let mut submitters = Vec::new();
+    for t in 0..4u64 {
+        let handle = session.handle();
+        submitters.push(std::thread::spawn(move || {
+            let (mut ok, mut full) = (0u64, 0u64);
+            let mut id = t * 1_000_000;
+            loop {
+                match handle.submit(tiny_request(id)) {
+                    Ok(()) => ok += 1,
+                    Err(SubmitError::Full { .. }) => full += 1,
+                    Err(SubmitError::Closed { .. }) => break,
+                }
+                id += 1;
+            }
+            (ok, full)
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+    let report = session.shutdown().unwrap();
+    let (mut ok, mut full) = (0u64, 0u64);
+    for submitter in submitters {
+        let (o, f) = submitter.join().expect("submitter must not panic");
+        ok += o;
+        full += f;
+    }
+    assert!(ok > 0, "some submissions must land before the shutdown");
+    assert_eq!(
+        report.merged.generated,
+        ok + full,
+        "every admission attempt that touched the queue counted once"
+    );
+    assert_eq!(report.merged.dropped, full, "every Full is one drop");
+    assert_eq!(report.merged.completed, ok, "every admission drains");
+    assert_eq!(
+        report.merged.generated,
+        report.merged.completed + report.merged.dropped,
+        "the accounting identity"
+    );
+}
+
+/// `Session::Drop` (the non-orderly path: early `?` return, panic
+/// unwind) racing a live submitter must never panic or deadlock: the
+/// drop stops admission and closes the queues, the detached workers
+/// drain and exit, and the handle that outlived the session is turned
+/// away with `Closed` — with the rejected requests counted nowhere
+/// (the un-count path runs under the race, not just after it).
+#[test]
+fn dropping_the_session_under_concurrent_submits_is_safe() {
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        queue_capacity: 8,
+        ..ServingSpec::default()
+    }
+    .with_batcher(4, Duration::from_micros(50));
+    let session = Session::start(&spec, |_shard| {
+        Ok(Box::new(ConstRunner) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    let handle = session.handle();
+    let submitter = std::thread::spawn(move || {
+        let (mut ok, mut id) = (0u64, 0u64);
+        loop {
+            match handle.submit(tiny_request(id)) {
+                Ok(()) => ok += 1,
+                Err(SubmitError::Full { .. }) => std::thread::yield_now(),
+                Err(SubmitError::Closed { .. }) => return ok,
+            }
+            id += 1;
+        }
+    });
+    std::thread::sleep(Duration::from_millis(2));
+    drop(session);
+    let ok = submitter.join().expect("submitter must not panic");
+    assert!(ok > 0, "some submissions must land before the drop");
 }

@@ -12,7 +12,7 @@
 //! `dropped == 0` first.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use rnn_hls::coordinator::{
@@ -20,6 +20,7 @@ use rnn_hls::coordinator::{
     ShardedConfig, ShardedServer, SourceConfig, TierMix,
 };
 use rnn_hls::data::generators::{Event, Generator};
+use rnn_hls::util::sync::{lock_or_recover, Mutex};
 
 const N_EVENTS: usize = 2_000;
 
@@ -72,7 +73,7 @@ impl BatchRunner for RecordingRunner {
     fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
         let stride = xs.len() / n.max(1);
         let mut out = Vec::with_capacity(n);
-        let mut map = self.outputs.lock().unwrap();
+        let mut map = lock_or_recover(&self.outputs);
         for i in 0..n {
             let row = &xs[i * stride..(i + 1) * stride];
             let id = row[0] as u64;

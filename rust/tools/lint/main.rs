@@ -1,0 +1,512 @@
+//! Invariant lint for the serving fabric — pure std, line-based
+//! "AST-lite" rules, wired into `ci.sh` (and `ci.sh --analysis`).
+//!
+//! The crate routes every sync primitive through the `util::sync` shim
+//! so the model checker can instrument them; these rules keep that
+//! gateway (and the accounting/unsafe discipline around it) from
+//! eroding:
+//!
+//! * **R1 sync-gateway** — no `use std::sync::{Mutex, MutexGuard,
+//!   Condvar}` or `std::sync::mpsc` (imports or qualified paths)
+//!   outside `util/sync.rs`.  `Arc`, `PoisonError`, and
+//!   `std::sync::atomic` remain legal everywhere.
+//! * **R2 accounting-ordering** — no `Ordering::Relaxed` on a *write*
+//!   (`fetch_add` / `fetch_sub` / `fetch_max` / `.store(`) touching an
+//!   accounting counter (`generated`, `dropped`, `completed`, `lost`).
+//!   The `generated == completed + dropped` identity is checked across
+//!   threads; relaxed loads for display stay legal.
+//! * **R3 lock-recovery** — no `.unwrap()` / `.expect(` on a statement
+//!   containing `.lock()` outside the shim: lock acquisition goes
+//!   through `lock_or_recover`, which survives poisoning.
+//! * **R4 unsafe-allowlist** — `unsafe` only in allowlisted files, and
+//!   there only with a `SAFETY:` comment in the preceding lines.
+//!
+//! `lint --self-test` runs a seeded-violation negative suite: every
+//! rule must fire on a synthetic violation and stay quiet on the clean
+//! counterpart.  CI runs the self-test before the real scan so a rule
+//! that silently stopped matching fails the build instead of passing
+//! it.
+//!
+//! Known AST-lite limits (accepted): `//` inside string literals ends a
+//! line early; nested `use std::{sync::{..}}` groups are not expanded
+//! (the codebase does not use them — and R1's qualified-path check
+//! still catches the expanded form).
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Counters participating in a cross-thread accounting identity.
+const ACCOUNTING: [&str; 4] = ["generated", "dropped", "completed", "lost"];
+
+/// Files allowed to contain `unsafe` (each use still needs `SAFETY:`).
+const UNSAFE_ALLOWLIST: [&str; 1] = ["src/util/threads.rs"];
+
+/// Tokens whose import from `std::sync` is confined to the shim.
+const GATEWAY_TOKENS: [&str; 4] = ["Mutex", "MutexGuard", "Condvar", "mpsc"];
+
+/// How far above an `unsafe` keyword the `SAFETY:` comment may sit
+/// (the threads.rs transmute carries an 18-line justification).
+const SAFETY_LOOKBACK: usize = 25;
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        return self_test();
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from("src"), PathBuf::from("tests")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in &roots {
+        if !root.exists() {
+            eprintln!("lint: scan root {} does not exist", root.display());
+            return ExitCode::from(2);
+        }
+        collect_rs(root, &mut files);
+    }
+    files.sort();
+
+    let mut violations: Vec<Violation> = Vec::new();
+    for file in &files {
+        let content = match fs::read_to_string(file) {
+            Ok(content) => content,
+            Err(err) => {
+                eprintln!("lint: reading {}: {err}", file.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = file.to_string_lossy().replace('\\', "/");
+        violations.extend(check_file(&rel, &content));
+    }
+
+    if violations.is_empty() {
+        println!(
+            "lint: {} file(s) clean (R1 sync-gateway, R2 \
+             accounting-ordering, R3 lock-recovery, R4 unsafe-allowlist)",
+            files.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+        }
+        eprintln!("lint: {} violation(s) in {} file(s)", violations.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return;
+    }
+    let entries = match fs::read_dir(root) {
+        Ok(entries) => entries,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        // Vendored crates and build output are not ours to lint.
+        if path.is_dir() && (name == "vendor" || name == "target") {
+            continue;
+        }
+        collect_rs(&path, out);
+    }
+}
+
+// ------------------------------------------------------------ the rules
+
+fn check_file(rel: &str, content: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let shim = rel.ends_with("util/sync.rs");
+    let allow_unsafe =
+        UNSAFE_ALLOWLIST.iter().any(|allowed| rel.ends_with(allowed));
+    let raw_lines: Vec<&str> = content.lines().collect();
+    let lines: Vec<String> =
+        raw_lines.iter().map(|l| strip_line_comment(l)).collect();
+
+    if !shim {
+        rule_sync_gateway(rel, &lines, &mut out);
+        rule_lock_recovery(rel, &lines, &mut out);
+    }
+    rule_accounting_ordering(rel, &lines, &mut out);
+    rule_unsafe_allowlist(rel, &lines, &raw_lines, allow_unsafe, &mut out);
+    out
+}
+
+/// R1: sync primitives enter the crate only through `util::sync`.
+fn rule_sync_gateway(rel: &str, lines: &[String], out: &mut Vec<Violation>) {
+    let mut import_buf = String::new();
+    let mut import_start = 0usize;
+    let mut in_import = false;
+    for (idx, line) in lines.iter().enumerate() {
+        if in_import {
+            import_buf.push(' ');
+            import_buf.push_str(line.trim());
+            if line.contains(';') {
+                flag_gateway_import(rel, import_start, &import_buf, out);
+                in_import = false;
+                import_buf.clear();
+            }
+            continue;
+        }
+        let head = line.trim_start();
+        if head.starts_with("use std::sync::")
+            || head.starts_with("pub use std::sync::")
+        {
+            if line.contains(';') {
+                flag_gateway_import(rel, idx + 1, line, out);
+            } else {
+                in_import = true;
+                import_start = idx + 1;
+                import_buf.clear();
+                import_buf.push_str(line.trim());
+            }
+            continue;
+        }
+        // Qualified paths in code bypass imports entirely.
+        for token in GATEWAY_TOKENS {
+            let needle = format!("std::sync::{token}");
+            if let Some(pos) = line.find(&needle) {
+                let after = line[pos + needle.len()..].chars().next();
+                if !matches!(after, Some(c) if is_ident_char(c)) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: idx + 1,
+                        rule: "R1",
+                        message: format!(
+                            "qualified `{needle}` outside util/sync.rs — \
+                             go through the `util::sync` shim"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn flag_gateway_import(
+    rel: &str,
+    line: usize,
+    import: &str,
+    out: &mut Vec<Violation>,
+) {
+    for token in GATEWAY_TOKENS {
+        if contains_word(import, token) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: "R1",
+                message: format!(
+                    "`{token}` imported from std::sync outside \
+                     util/sync.rs — import it from `crate::util::sync` \
+                     (or `rnn_hls::util::sync` in integration tests)"
+                ),
+            });
+        }
+    }
+}
+
+/// R2: accounting counters take SeqCst on every write.
+fn rule_accounting_ordering(
+    rel: &str,
+    lines: &[String],
+    out: &mut Vec<Violation>,
+) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !line.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let is_write = line.contains("fetch_add")
+            || line.contains("fetch_sub")
+            || line.contains("fetch_max")
+            || line.contains(".store(");
+        if !is_write {
+            continue;
+        }
+        if let Some(name) = ACCOUNTING
+            .iter()
+            .copied()
+            .find(|name| contains_word(line, name))
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "R2",
+                message: format!(
+                    "Relaxed write to accounting counter `{name}` — the \
+                     generated == completed + dropped identity needs \
+                     SeqCst on every write"
+                ),
+            });
+        }
+    }
+}
+
+/// R3: lock results are recovered, never unwrapped, outside the shim.
+fn rule_lock_recovery(rel: &str, lines: &[String], out: &mut Vec<Violation>) {
+    let mut stmt = String::new();
+    let mut stmt_start = 0usize;
+    let flush = |stmt: &mut String, start: usize, out: &mut Vec<Violation>| {
+        if stmt.contains(".lock()")
+            && (stmt.contains(".unwrap()") || stmt.contains(".expect("))
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: start,
+                rule: "R3",
+                message: "`.unwrap()`/`.expect()` on a lock result — use \
+                          `util::sync::lock_or_recover` (poisoning must \
+                          not cascade)"
+                    .to_string(),
+            });
+        }
+        stmt.clear();
+    };
+    for (idx, line) in lines.iter().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if stmt.is_empty() {
+            stmt_start = idx + 1;
+        }
+        stmt.push(' ');
+        stmt.push_str(trimmed);
+        if trimmed.ends_with(';')
+            || trimmed.ends_with('{')
+            || trimmed.ends_with('}')
+            || trimmed.ends_with(',')
+        {
+            flush(&mut stmt, stmt_start, out);
+        }
+    }
+    flush(&mut stmt, stmt_start, out);
+}
+
+/// R4: `unsafe` is allowlisted per file and justified per use.
+fn rule_unsafe_allowlist(
+    rel: &str,
+    lines: &[String],
+    raw_lines: &[&str],
+    allowed: bool,
+    out: &mut Vec<Violation>,
+) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !contains_word(line, "unsafe") {
+            continue;
+        }
+        if !allowed {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "R4",
+                message: "`unsafe` outside the allowlist (see \
+                          UNSAFE_ALLOWLIST in tools/lint) — justify and \
+                          allowlist it, or find a safe formulation"
+                    .to_string(),
+            });
+            continue;
+        }
+        let from = idx.saturating_sub(SAFETY_LOOKBACK);
+        let justified =
+            raw_lines[from..idx].iter().any(|l| l.contains("SAFETY:"));
+        if !justified {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: "R4",
+                message: format!(
+                    "`unsafe` without a `SAFETY:` comment in the \
+                     preceding {SAFETY_LOOKBACK} lines"
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------- helpers
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whole-identifier containment: `lost` matches `sink.lost` but not
+/// `completions_lost` or `lost_and_found`.
+fn contains_word(haystack: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let before_ok = start == 0
+            || !is_ident_char(haystack[..start].chars().next_back().unwrap());
+        let after_ok = end == haystack.len()
+            || !is_ident_char(haystack[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Drop a `//` line comment (doc comments included).  Accepts the
+/// AST-lite false cut on `//` inside string literals.
+fn strip_line_comment(line: &str) -> String {
+    match line.find("//") {
+        Some(pos) => line[..pos].to_string(),
+        None => line.to_string(),
+    }
+}
+
+// ----------------------------------------------------------- self-test
+
+/// Seeded-violation negative suite: every rule must fire on a synthetic
+/// violation and stay quiet on its clean counterpart.  Run by CI before
+/// the real scan.
+fn self_test() -> ExitCode {
+    struct Case {
+        name: &'static str,
+        file: &'static str,
+        source: &'static str,
+        expect: &'static [&'static str],
+    }
+    let cases = [
+        Case {
+            name: "R1 fires on a direct Mutex import",
+            file: "src/coordinator/x.rs",
+            source: "use std::sync::Mutex;\n",
+            expect: &["R1"],
+        },
+        Case {
+            name: "R1 fires inside a multi-line brace import",
+            file: "src/coordinator/x.rs",
+            source: "use std::sync::{\n    Arc,\n    Condvar,\n};\n",
+            expect: &["R1"],
+        },
+        Case {
+            name: "R1 fires on a qualified path",
+            file: "src/coordinator/x.rs",
+            source: "let m = std::sync::Mutex::new(0);\n",
+            expect: &["R1"],
+        },
+        Case {
+            name: "R1 fires on an mpsc import",
+            file: "tests/x.rs",
+            source: "use std::sync::mpsc::{self, Receiver};\n",
+            expect: &["R1"],
+        },
+        Case {
+            name: "R1 ignores Arc/PoisonError/atomic imports",
+            file: "src/coordinator/x.rs",
+            source: "use std::sync::{Arc, PoisonError};\n\
+                     use std::sync::atomic::{AtomicU64, Ordering};\n",
+            expect: &[],
+        },
+        Case {
+            name: "R1 does not apply inside the shim",
+            file: "src/util/sync.rs",
+            source: "pub use std::sync::{Condvar, Mutex, MutexGuard};\n",
+            expect: &[],
+        },
+        Case {
+            name: "R2 fires on a Relaxed accounting fetch_add",
+            file: "src/coordinator/x.rs",
+            source: "m.generated.fetch_add(1, Ordering::Relaxed);\n",
+            expect: &["R2"],
+        },
+        Case {
+            name: "R2 fires on a Relaxed accounting store",
+            file: "src/coordinator/x.rs",
+            source: "self.dropped.store(0, Ordering::Relaxed);\n",
+            expect: &["R2"],
+        },
+        Case {
+            name: "R2 ignores Relaxed accounting loads",
+            file: "src/coordinator/x.rs",
+            source: "let g = m.generated.load(Ordering::Relaxed);\n",
+            expect: &[],
+        },
+        Case {
+            name: "R2 ignores non-accounting Relaxed writes",
+            file: "src/coordinator/x.rs",
+            source: "self.batches.fetch_add(1, Ordering::Relaxed);\n\
+                     self.completions_lost_total.store(0, Ordering::Relaxed);\n",
+            expect: &[],
+        },
+        Case {
+            name: "R3 fires on lock().unwrap()",
+            file: "src/coordinator/x.rs",
+            source: "let g = q.lock().unwrap();\n",
+            expect: &["R3"],
+        },
+        Case {
+            name: "R3 fires across a multi-line chain",
+            file: "src/coordinator/x.rs",
+            source: "let g = q\n    .lock()\n    .expect(\"poisoned\");\n",
+            expect: &["R3"],
+        },
+        Case {
+            name: "R3 ignores lock_or_recover and unrelated unwraps",
+            file: "src/coordinator/x.rs",
+            source: "let g = lock_or_recover(&q);\nlet v = rx.recv().unwrap();\n",
+            expect: &[],
+        },
+        Case {
+            name: "R4 fires outside the allowlist",
+            file: "src/coordinator/x.rs",
+            source: "let p = unsafe { std::mem::transmute(q) };\n",
+            expect: &["R4"],
+        },
+        Case {
+            name: "R4 fires in an allowlisted file without SAFETY",
+            file: "src/util/threads.rs",
+            source: "let p = unsafe { std::mem::transmute(q) };\n",
+            expect: &["R4"],
+        },
+        Case {
+            name: "R4 passes allowlisted unsafe with a SAFETY comment",
+            file: "src/util/threads.rs",
+            source: "// SAFETY: lifetimes only; the call frame outlives\n\
+                     // every job (collection loop blocks on all reports).\n\
+                     let p = unsafe { std::mem::transmute(q) };\n",
+            expect: &[],
+        },
+    ];
+
+    let mut failures = 0usize;
+    for case in &cases {
+        let got: Vec<&'static str> = check_file(case.file, case.source)
+            .iter()
+            .map(|v| v.rule)
+            .collect();
+        if got != case.expect {
+            failures += 1;
+            eprintln!(
+                "lint self-test FAIL: {} — expected {:?}, got {:?}",
+                case.name, case.expect, got
+            );
+        }
+    }
+    if failures == 0 {
+        println!("lint self-test: {} case(s) pass", cases.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lint self-test: {failures} case(s) FAILED");
+        ExitCode::FAILURE
+    }
+}
