@@ -39,11 +39,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     cat BENCH_serving.json
     echo "== bench-smoke: per-backend schema check =="
     # Schema, not perf: the artifact must carry per-backend rows with
-    # their batcher columns (schema v4) so per-tier latency stays
+    # their batcher columns (schema v5) so per-tier latency stays
     # comparable across PRs *together with the batching policy it was
     # measured under*.  The writer emits compact JSON (no spaces
     # around ':').
-    grep -q '"schema_version":4' BENCH_serving.json
+    grep -q '"schema_version":5' BENCH_serving.json
     grep -q '"backend":"fixed"' BENCH_serving.json
     grep -q '"backend":"float"' BENCH_serving.json
     grep -q '"config":"mixed90_10_fixed_w2"' BENCH_serving.json
@@ -60,7 +60,18 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # path must be tracked next to the replay path it wraps.
     grep -q '"config":"session_replay_w2"' BENCH_serving.json
     grep -q '"config":"session_submit_w2"' BENCH_serving.json
-    echo "per-backend rows + batcher columns + session rows present"
+    # Network saturation curve (schema v5): the loadgen ladder drives
+    # real sockets at three offered rates; every point must land as a
+    # merged row plus per-tier rows, each carrying the offered rate and
+    # the shed count so overload behaviour stays tracked across PRs.
+    grep -q '"config":"loadgen_r20k_merged_w2"' BENCH_serving.json
+    grep -q '"config":"loadgen_r100k_merged_w2"' BENCH_serving.json
+    grep -q '"config":"loadgen_r400k_merged_w2"' BENCH_serving.json
+    grep -q '"config":"loadgen_r400k_fixed_w2"' BENCH_serving.json
+    grep -q '"config":"loadgen_r400k_float_w2"' BENCH_serving.json
+    grep -q '"offered_hz":' BENCH_serving.json
+    grep -q '"shed":' BENCH_serving.json
+    echo "per-backend rows + batcher columns + session rows + loadgen saturation rows present"
     exit 0
 fi
 
@@ -75,6 +86,12 @@ cargo test -q
 # filtered out of the matrix toolchains.
 echo "== tier-1: cargo test -q --test tier_batching (virtual-clock suite) =="
 cargo test -q --test tier_batching
+
+# Same reasoning for the network front-end: the wire-framing property
+# tests and the TCP-vs-in-process bitwise-identity suite are the only
+# guard on the socket path, so they get their own pinned gate.
+echo "== tier-1: cargo test -q --test net_ingest (wire + socket suite) =="
+cargo test -q --test net_ingest
 
 # Invariant lint (tools/lint): sync primitives confined to the
 # util::sync gateway, SeqCst on accounting writes, lock_or_recover

@@ -22,10 +22,13 @@
 
 use std::time::Duration;
 
+// `rnn_hls::api` is the stable import path for the serving surface —
+// prefer it over reaching into `coordinator::session` directly (the
+// module tree is a layout detail; `api` is the contract).
+use rnn_hls::api::{BackendKind, ErrorCode, ServingSpec, Session};
 use rnn_hls::coordinator::EngineRunner;
 use rnn_hls::model::{zoo, Cell, Weights};
 use rnn_hls::nn::FloatEngine;
-use rnn_hls::{BackendKind, ServingSpec, Session};
 
 const PER_THREAD: usize = 2_000;
 
@@ -65,9 +68,13 @@ fn main() -> anyhow::Result<()> {
                     let mut features = vec![0.0f32; stride];
                     features[0] = (submitter * 1_000 + i % 97) as f32 * 1e-3;
                     // Typed backpressure: a full queue hands the request
-                    // back; this demo just counts it as shed load.
-                    if handle.submit_event(features, (i % 2) as u32).is_err()
+                    // back with the same stable numeric code
+                    // (`ErrorCode::Shed`) a TCP client would see as a
+                    // SHED frame; this demo just counts it as shed load.
+                    if let Err(err) =
+                        handle.submit_event(features, (i % 2) as u32)
                     {
+                        assert_eq!(err.code(), ErrorCode::Shed);
                         rejected += 1;
                     }
                 }

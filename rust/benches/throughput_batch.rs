@@ -1,6 +1,6 @@
 //! Bench: §5.2 throughput — batch scaling of the serving engines.
 //!
-//! Four parts:
+//! Seven parts:
 //!
 //! 1. **Engine batch × worker scaling** (no artifacts needed): the
 //!    parallel `forward_batch` runtime vs the sequential per-sample
@@ -26,7 +26,11 @@
 //!    wrapper vs the live request-driven path (public `Session::submit`
 //!    + completion channel) on the same stream — the schema-v4
 //!    `session_replay_*` / `session_submit_*` row pair.
-//! 6. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
+//! 6. **Network saturation curves** (no artifacts needed): the socket
+//!    loadgen drives the `ingest::wire` listener open-loop at 20k/100k/
+//!    400k ev/s offered — the schema-v5 `loadgen_r*` rows carrying
+//!    `offered_hz`, `shed`, and per-tier p50/p99 under overload.
+//! 7. **PJRT vs analytical FPGA band** (requires `make artifacts`): the
 //!    original QuickDraw-LSTM comparison against the scheduler's II.
 //!
 //! Flags (after `--`): `--smoke` runs the reduced-iteration CI variant
@@ -340,6 +344,43 @@ fn tier_batch_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
     rows
 }
 
+/// Network saturation curves: real sockets, open-loop offered load,
+/// three load points spanning under- to over-saturation — the source of
+/// the schema-v5 `loadgen_r*` rows.
+fn loadgen_scaling(smoke: bool) -> Vec<throughput::ServingBenchRow> {
+    println!(
+        "\n=== network saturation curves (socket loadgen, fixed + float) ==="
+    );
+    let events_per_point = if smoke { 2_000 } else { 20_000 };
+    let rows = throughput::loadgen_sweep(2, events_per_point)
+        .expect("loadgen sweep");
+    println!(
+        "  {:>24} {:>8} {:>11} {:>12} {:>10} {:>10} {:>10} {:>9} {:>8}",
+        "config", "backend", "offered/s", "samples/s", "p50 µs", "p99 µs",
+        "completed", "dropped", "shed"
+    );
+    for r in &rows {
+        println!(
+            "  {:>24} {:>8} {:>11.0} {:>12.0} {:>10.1} {:>10.1} {:>10} \
+             {:>9} {:>8}",
+            r.config, r.backend, r.offered_hz, r.samples_per_sec, r.p50_us,
+            r.p99_us, r.completed, r.dropped, r.shed
+        );
+    }
+    // Correctness, not speed: the sweep must produce the full load
+    // ladder (loadgen_sweep already asserted the client-side identity
+    // per point), and each point must serve something.
+    let merged: Vec<_> = rows
+        .iter()
+        .filter(|r| r.config.ends_with("_merged_w2"))
+        .collect();
+    assert_eq!(merged.len(), 3, "expected 3 saturation-curve load points");
+    for r in &merged {
+        assert!(r.completed > 0, "{}: nothing served over TCP", r.config);
+    }
+    rows
+}
+
 fn main() {
     let opts = parse_opts();
     engine_scaling(opts.smoke);
@@ -347,6 +388,7 @@ fn main() {
     rows.extend(backend_scaling(opts.smoke));
     rows.extend(tier_batch_scaling(opts.smoke));
     rows.extend(session_scaling(opts.smoke));
+    rows.extend(loadgen_scaling(opts.smoke));
     if let Some(path) = &opts.json {
         let written =
             throughput::write_bench_json(path, &rows).expect("bench json");

@@ -1,0 +1,133 @@
+//! The stable serving API surface: one canonical import path for the
+//! types a serving client touches, plus the **stable numeric error
+//! codes** shared by in-process callers and the wire protocol.
+//!
+//! In-process embedders and network clients must agree on what a
+//! rejection *means*: a [`SubmitError::Full`] surfaced to a library
+//! caller and a `SHED` frame surfaced to a TCP client are the same
+//! event, so both are derived from one mapping ([`SubmitError::code`])
+//! with numeric values that are frozen — the wire protocol
+//! ([`crate::ingest::wire`]) encodes `ErrorCode as u8` directly, and a
+//! renumbering would silently change what deployed clients observe.
+//!
+//! Prefer these re-exports over the bare `coordinator::session` paths
+//! (`use rnn_hls::api::{Completion, SubmitError}`): the coordinator
+//! module tree is a layout detail and may move; this module is the
+//! contract.
+
+pub use crate::coordinator::session::{
+    BackendKind, Completion, ServingPlan, ServingSpec, Session,
+    SessionHandle, SubmitError,
+};
+
+/// Stable numeric rejection codes, shared by the in-process API and the
+/// wire protocol's `WireError` frames.  The discriminants are part of
+/// the serialized protocol — append new codes, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Backpressure: the target shard's bounded queue was full and the
+    /// request was shed (maps from [`SubmitError::Full`]).  Retryable.
+    Shed = 1,
+    /// The session is shutting down or closed (maps from
+    /// [`SubmitError::Closed`]).  Not retryable on this session.
+    Closed = 2,
+    /// The network front-end refused the *connection* (worker pool and
+    /// backlog saturated) — nothing reached the session.  Retryable
+    /// against another replica or after backoff.
+    Busy = 3,
+    /// The peer sent a frame the server could not parse; the connection
+    /// is dropped after this answer.
+    Malformed = 4,
+}
+
+impl ErrorCode {
+    /// Decode a wire byte back into a code (`None` for unknown bytes —
+    /// a frame from a future protocol revision, surfaced as a framing
+    /// error rather than a panic).
+    pub fn from_u8(byte: u8) -> Option<Self> {
+        match byte {
+            1 => Some(Self::Shed),
+            2 => Some(Self::Closed),
+            3 => Some(Self::Busy),
+            4 => Some(Self::Malformed),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (metrics endpoint + log lines).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Shed => "shed",
+            Self::Closed => "closed",
+            Self::Busy => "busy",
+            Self::Malformed => "malformed",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl SubmitError {
+    /// The stable numeric code of this rejection — the one mapping both
+    /// the wire protocol and in-process callers use to distinguish shed
+    /// (retryable backpressure) from closed (session gone).
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            Self::Full { .. } => ErrorCode::Shed,
+            Self::Closed { .. } => ErrorCode::Closed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use std::time::Instant;
+
+    fn req() -> Request {
+        Request {
+            id: 1,
+            features: vec![0.0; 4],
+            label: 0,
+            route_key: 0,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    /// The discriminants are frozen protocol constants: a renumbering
+    /// must fail here, not in a deployed client.
+    #[test]
+    fn error_codes_are_stable() {
+        assert_eq!(ErrorCode::Shed as u8, 1);
+        assert_eq!(ErrorCode::Closed as u8, 2);
+        assert_eq!(ErrorCode::Busy as u8, 3);
+        assert_eq!(ErrorCode::Malformed as u8, 4);
+        for code in [
+            ErrorCode::Shed,
+            ErrorCode::Closed,
+            ErrorCode::Busy,
+            ErrorCode::Malformed,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(255), None);
+    }
+
+    #[test]
+    fn submit_errors_map_to_their_codes() {
+        let full = SubmitError::Full {
+            shard: 0,
+            request: req(),
+        };
+        assert_eq!(full.code(), ErrorCode::Shed);
+        let closed = SubmitError::Closed { request: req() };
+        assert_eq!(closed.code(), ErrorCode::Closed);
+    }
+}

@@ -1,0 +1,174 @@
+//! `loadgen` — open-loop socket load generator for the network front-end.
+//!
+//! Drives real TCP connections speaking `ingest::wire` at a configured
+//! arrival rate (Poisson or bursty), splits the client population across
+//! connections, and prints the client-side ledger: generated, completed,
+//! shed, closed, lost, RTT p50/p99.  The accounting identity
+//! `generated == completed + shed + closed + lost` is asserted — a load
+//! test that loses events silently is not a load test.
+//!
+//! ```text
+//! loadgen --clients 10000 --profile poisson          # self-served
+//! loadgen --addr 127.0.0.1:9000 --rate 400000 \
+//!         --events 1000000 --profile bursty          # external server
+//! ```
+//!
+//! Without `--addr` the binary starts an in-process serving session
+//! (fixed+float tiers behind model-key routing, synthetic top_gru
+//! weights) on a loopback listener and aims the load at itself, so the
+//! full socket path is exercisable from a bare checkout.  With `--addr`
+//! it is a pure client; `--feature-len` must then match the server's
+//! model (`seq_len * input_size`).
+
+use rnn_hls::api::{BackendKind, ServingSpec, Session};
+use rnn_hls::coordinator::{
+    BatchRunner, EngineRunner, NetServer, ShardPolicy, TierMix,
+};
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::ingest::loadgen::{run_load, LoadConfig, LoadReport, Profile};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::BackendCtx;
+use rnn_hls::util::cli::Command;
+
+fn main() {
+    if let Err(err) = run() {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("loadgen", "open-loop socket load generator")
+        .opt(
+            "addr",
+            "target wire endpoint (host:port); absent = self-serve an \
+             in-process session on loopback",
+            None,
+        )
+        .opt("clients", "simulated client population", Some("10000"))
+        .opt("connections", "TCP connections to spread load over", Some("8"))
+        .opt("rate", "offered arrival rate (events/s)", Some("100000"))
+        .opt("events", "total events to generate", Some("100000"))
+        .opt("profile", "arrival process: poisson | bursty", Some("poisson"))
+        .opt("seed", "PRNG seed (same seed = same schedule)", Some("12648430"))
+        .opt(
+            "feature-len",
+            "floats per request; must match the server's seq_len * \
+             input_size (ignored when self-serving)",
+            Some("120"),
+        )
+        .opt(
+            "workers",
+            "self-serve only: engine workers per shard",
+            Some("2"),
+        );
+    let args = cmd.parse(&argv)?;
+
+    let profile: Profile = args.get_or("profile", "poisson").parse()?;
+    let clients: usize = args.parse_num("clients", 10_000usize)?;
+    let connections: usize = args.parse_num("connections", 8usize)?;
+    let rate_hz: f64 = args.parse_num("rate", 100_000.0f64)?;
+    let events: usize = args.parse_num("events", 100_000usize)?;
+    let seed: u64 = args.parse_num("seed", 0xC0FFEEu64)?;
+
+    // Self-serve when no target was named: stand up the same two-tier
+    // session the bench sweep measures and aim the load at its listener.
+    let (addr, feature_len, server) = match args.get("addr") {
+        Some(addr) => (
+            addr.parse()?,
+            args.parse_num("feature-len", 120usize)?,
+            None,
+        ),
+        None => {
+            let workers: usize = args.parse_num("workers", 2usize)?;
+            let (server, feature_len) = self_serve(workers)?;
+            println!(
+                "self-serving fixed+float session on {}",
+                server.local_addr()
+            );
+            (server.local_addr(), feature_len, Some(server))
+        }
+    };
+
+    let mut load = LoadConfig::new(addr);
+    load.clients = clients;
+    load.connections = connections;
+    load.rate_hz = rate_hz;
+    load.events = events;
+    load.profile = profile;
+    load.seed = seed;
+    load.feature_len = feature_len;
+
+    println!(
+        "offering {events} events at {rate_hz:.0} ev/s ({} arrivals, \
+         {clients} clients over {connections} connections) to {addr}",
+        profile.name()
+    );
+    let report = run_load(&load)?;
+    report.check_identity()?;
+    print_report(&report);
+
+    if let Some(server) = server {
+        let net = server.shutdown()?;
+        println!("\nserver-side roll-up:");
+        println!("{}", net.serving.render());
+        println!(
+            "  net: accepted {} refused {} requests {} replies {} \
+             wire_errors {} malformed {}",
+            net.accepted, net.refused, net.requests, net.replies,
+            net.wire_errors, net.malformed
+        );
+    }
+    Ok(())
+}
+
+/// The self-serve session: two shards (fixed trigger tier 90 %, float
+/// offline tier 10 %) behind model-key routing, synthetic top_gru
+/// weights — the same shape as `report::throughput::loadgen_sweep`, so
+/// a standalone `loadgen` run probes what CI tracks.
+fn self_serve(workers: usize) -> anyhow::Result<(NetServer, usize)> {
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let feature_len = arch.seq_len * arch.input_size;
+    let fixed_spec = FixedSpec::new(16, 6);
+
+    let spec = ServingSpec::default()
+        .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+        .with_shards(2)
+        .with_shard_policy(ShardPolicy::ModelKey)
+        .with_tier_mix(TierMix::new(&[0.9, 0.1], 0x7135)?)
+        .with_workers(workers)
+        .with_queue_capacity(8192)
+        .with_listener("127.0.0.1:0".parse()?);
+    let plan = spec.build()?;
+    let caps: Vec<usize> = (0..2).map(|shard| plan.runner_cap(shard)).collect();
+    let kinds: Vec<BackendKind> =
+        (0..2).map(|shard| plan.kind_for(shard)).collect();
+    let session = Session::start_plan(plan, move |shard| {
+        let engine = kinds[shard].spec().build(&BackendCtx {
+            weights: &weights,
+            fixed_spec,
+            parallelism: 1,
+        })?;
+        Ok(Box::new(EngineRunner::new(engine, caps[shard]))
+            as Box<dyn BatchRunner>)
+    })?;
+    Ok((session.serve_listener()?, feature_len))
+}
+
+fn print_report(report: &LoadReport) {
+    println!(
+        "\ngenerated {} = completed {} + shed {} + closed {} + lost {} \
+         (busy retries refused: {})",
+        report.generated, report.completed, report.shed, report.closed,
+        report.lost, report.busy
+    );
+    println!(
+        "achieved {:.0} ev/s over {:.2} s; RTT p50 {:.1} µs p99 {:.1} µs",
+        report.completed_hz(),
+        report.wall_seconds,
+        report.latency.quantile_us(0.5),
+        report.latency.quantile_us(0.99),
+    );
+}

@@ -137,6 +137,51 @@
 //! shared-config behavior bit for bit, so homogeneous sessions are
 //! untouched (`tests/shard_equivalence.rs` asserts it).
 //!
+//! ## Network serving
+//!
+//! [`net`] puts a TCP edge on the live session — the paper's events
+//! arrive over the wire, not from an in-process loop.  Name a listener
+//! in the spec ([`ServingSpec::with_listener`], plus
+//! `with_metrics_listener` / `with_max_connections`), start the session
+//! as usual, then hand it to [`Session::serve_listener`]; the returned
+//! [`NetServer`] owns the accept loop, the bounded connection-worker
+//! pool, and the completion dispatcher, and its
+//! [`shutdown`](NetServer::shutdown) runs the same drain-then-close
+//! protocol as in-process.
+//!
+//! The protocol is [`crate::ingest::wire`]: length-prefixed binary
+//! frames with an 8-byte header —
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic 0x4852 ("RH", little-endian)
+//! 2       1     version (currently 1)
+//! 3       1     frame type: 1 = Request, 2 = Response, 3 = Error
+//! 4       4     payload length (LE u32, ≤ 1 MiB)
+//! ```
+//!
+//! Request payloads carry `seq · label · features[]`; Response payloads
+//! `seq · id · shard · outputs[]`; Error payloads `seq · code`, where
+//! `code` is the **stable** [`crate::api::ErrorCode`] numeric space —
+//! `SHED` (1, queue full: retryable backpressure), `CLOSED` (2, session
+//! gone), `BUSY` (3, connection cap hit at admission), `MALFORMED` (4,
+//! unparseable bytes; the connection is dropped after the answer).  A
+//! TCP client and a library embedder observe the *same* rejection
+//! taxonomy, derived from one mapping (`SubmitError::code`).
+//!
+//! The serving semantics are unchanged by the socket: the TCP path's
+//! outputs are bitwise identical to in-process `submit` for the same
+//! requests (`tests/net_ingest.rs` asserts it, for 1 and 4 shards),
+//! and the accounting identity holds end-to-end.  Drive a listener with
+//! the `loadgen` binary (open-loop Poisson or bursty arrivals over many
+//! connections):
+//!
+//! ```text
+//! rnn-hls serve --engine float --listen 127.0.0.1:7432 &
+//! loadgen --addr 127.0.0.1:7432 --clients 10000 --rate 100000
+//! loadgen                      # no --addr: self-serves a session
+//! ```
+//!
 //! ## Deterministic time: the serving clock
 //!
 //! Every time-dependent decision — the batcher deadline in
@@ -193,6 +238,7 @@
 pub mod batcher;
 pub mod clock;
 pub mod metrics;
+pub mod net;
 pub mod queue;
 pub mod server;
 pub mod session;
@@ -203,14 +249,15 @@ pub mod tier;
 pub use batcher::{Batch, BatcherConfig};
 pub use clock::{Clock, SystemClock, VirtualClock};
 pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use net::{NetConfig, NetReport, NetServer};
 pub use queue::BoundedQueue;
 pub use server::{
     worker_loop, BatchRunner, EngineRunner, Server, ServerConfig,
     ServerReport,
 };
 pub use session::{
-    BackendKind, Completion, ServingPlan, ServingSpec, Session,
-    SessionHandle, SubmitError,
+    BackendKind, Completion, ListenerSpec, ServingPlan, ServingSpec,
+    Session, SessionHandle, SubmitError,
 };
 pub use sharded::{
     BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,

@@ -1,0 +1,658 @@
+//! The network ingest front-end: a TCP edge on the live [`Session`].
+//!
+//! The paper's premise is serving under a hard *ingest* budget — events
+//! arrive over the wire, not from an in-process loop.  This module puts
+//! that process boundary in front of the serving fabric while keeping
+//! the fabric's contracts intact: the accounting identity
+//! (`generated == completed + dropped`), typed backpressure, and
+//! drain-then-close shutdown all hold end-to-end across the socket.
+//!
+//! ```text
+//!  clients ──TCP──► accept loop ──► BoundedQueue<TcpStream> ──► conn
+//!  (ingest::wire     (admission:      (accept backlog)          workers
+//!   frames)           BUSY beyond                                 │
+//!                      max_connections)        prepare_event ─────┤
+//!                                              register route     │
+//!                                              submit ────────────┼──► Session
+//!  replies ◄── per-conn writer ◄── dispatcher ◄── Session::recv ──┘
+//!  (Response/         (Mutex<TcpStream>,   (routes: id → seq+writer)
+//!   Error frames)      shared clone)
+//! ```
+//!
+//! Design rules, in order of importance:
+//!
+//! * **No external deps.**  Thread-per-listener with a blocking accept
+//!   loop and a *bounded* connection-worker pool over std sockets — no
+//!   epoll, no async runtime.  Shutdown wakes the blocking accepts with
+//!   a self-connect.
+//! * **Register before submit.**  The dispatcher routes completions by
+//!   session id, so the conn worker builds the request with
+//!   [`Session::prepare_event`] (learning the id), registers the reply
+//!   route, *then* submits.  A completion can never arrive for an id
+//!   the route table has not seen.
+//! * **Typed rejections, never silence.**  A full shard queue answers
+//!   `SHED`, a closing session `CLOSED`, a saturated accept backlog
+//!   `BUSY`, garbage bytes `MALFORMED` — the same
+//!   [`ErrorCode`](crate::api::ErrorCode) space in-process callers see.
+//! * **Drain-then-close.**  [`NetServer::shutdown`] stops admissions
+//!   (accepts first, then the session), waits for in-flight requests to
+//!   answer, joins every thread, and only then closes sockets — the
+//!   same protocol [`Session::shutdown`] runs in-process.
+//!
+//! The optional **metrics endpoint** (second listener) answers every
+//! connection with one line-oriented [`Session::snapshot`] roll-up and
+//! closes.  Grammar (one `key value...` pair per line, floats in
+//! microseconds, terminated by `end`):
+//!
+//! ```text
+//! generated <u64>
+//! completed <u64>
+//! dropped <u64>
+//! shed_completions <u64>
+//! connections_accepted <u64>
+//! connections_refused <u64>
+//! p50_us <f64>
+//! p99_us <f64>
+//! throughput_hz <f64>
+//! backend <name> completed <u64> dropped <u64> p50_us <f64> p99_us <f64>
+//! end
+//! ```
+//! (`backend` lines appear once per labelled tier, heterogeneous
+//! sessions only.)
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::ErrorCode;
+use crate::ingest::wire::{
+    read_frame, write_frame, Frame, WireError, WireResponse,
+};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{lock_or_recover, Mutex};
+
+use super::queue::BoundedQueue;
+use super::session::{ListenerSpec, Session};
+use super::sharded::ShardedReport;
+
+/// Poll tick for blocking reads: how often an idle conn worker re-checks
+/// the closing flag.
+const POLL_TICK: Duration = Duration::from_millis(50);
+/// Once bytes are visible on a connection, the whole frame must follow
+/// within this budget — a peer trickling a frame slower is dropped.
+const FRAME_READ_TIMEOUT: Duration = Duration::from_secs(1);
+/// How long a closing connection waits for its in-flight requests to
+/// answer before giving up (shed completions would otherwise wedge it).
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+// ------------------------------------------------------------ NetConfig
+
+/// Front-end knobs beyond the [`ListenerSpec`] itself.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Resolved listener settings (bind addresses + connection bound).
+    pub listener: ListenerSpec,
+    /// Connection-worker threads (each serves one connection at a time;
+    /// the pool bound is what keeps a connection flood from spawning
+    /// unbounded threads).
+    pub conn_workers: usize,
+}
+
+impl NetConfig {
+    /// Default worker pool over a listener spec: 8 conn workers, never
+    /// more than the connection bound itself.
+    pub fn for_listener(listener: ListenerSpec) -> Self {
+        Self {
+            listener,
+            conn_workers: listener.max_connections.min(8).max(1),
+        }
+    }
+}
+
+// ----------------------------------------------------------- shared state
+
+/// A connection's write half, shared between its conn worker (error
+/// replies) and the dispatcher (response replies).  The mutex serializes
+/// frame writes so concurrent repliers cannot interleave bytes.
+struct ConnWriter {
+    stream: Mutex<TcpStream>,
+    /// Requests admitted on this connection whose reply has not been
+    /// written yet — the connection's drain phase waits for zero.
+    pending: AtomicU64,
+}
+
+impl ConnWriter {
+    /// Best-effort frame write (a peer that hung up loses its reply;
+    /// serving is unaffected).
+    fn send(&self, frame: &Frame) -> bool {
+        let mut stream = lock_or_recover(&self.stream);
+        write_frame(&mut *stream, frame).is_ok()
+    }
+}
+
+/// Reply route for one in-flight request: which connection (and which
+/// client-side `seq`) the completion with this session id answers.
+struct Route {
+    seq: u64,
+    writer: Arc<ConnWriter>,
+}
+
+/// State shared by the accept loop, conn workers, dispatcher, and
+/// metrics thread.
+struct NetShared {
+    session: Arc<Session>,
+    closing: AtomicBool,
+    /// Accepted connections waiting for a conn worker.
+    conns: Arc<BoundedQueue<TcpStream>>,
+    /// session id → reply route, registered *before* submit.
+    routes: Mutex<HashMap<u64, Route>>,
+    /// Accepted-but-unfinished connections (admission control).
+    active: AtomicU64,
+    max_connections: u64,
+    accepted: AtomicU64,
+    refused: AtomicU64,
+    /// Request frames parsed off the wire.
+    requests: AtomicU64,
+    /// Response frames written back.
+    replies: AtomicU64,
+    /// Error frames written back (shed/closed/busy/malformed).
+    wire_errors: AtomicU64,
+    /// Connections dropped for unparseable input.
+    malformed: AtomicU64,
+}
+
+// ------------------------------------------------------------- NetServer
+
+/// Final report of a network serving run: the session's serving report
+/// plus the front-end's own books.
+#[derive(Debug)]
+pub struct NetReport {
+    /// The session's drain-then-close report (the accounting identity
+    /// `generated == completed + dropped` holds here as in-process).
+    pub serving: ShardedReport,
+    /// Connections accepted into the fabric.
+    pub accepted: u64,
+    /// Connections answered `BUSY` at admission.
+    pub refused: u64,
+    /// Request frames parsed off the wire.
+    pub requests: u64,
+    /// Response frames written back.
+    pub replies: u64,
+    /// Error frames written back (shed/closed/busy/malformed).
+    pub wire_errors: u64,
+    /// Connections dropped for unparseable input.
+    pub malformed: u64,
+    /// Completions the bounded session channel shed (their clients never
+    /// got a reply frame; `stranded` counts their leftover routes).
+    pub completions_lost: u64,
+    /// Reply routes still registered at shutdown (requests whose
+    /// completion was shed or whose client vanished).
+    pub stranded: u64,
+}
+
+/// A live network front-end over a [`Session`] — accept loop, conn
+/// workers, completion dispatcher, optional metrics endpoint.  Start it
+/// with [`Session::serve_listener`]; stop it with [`Self::shutdown`].
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    local_addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
+    accept_thread: Option<JoinHandle<()>>,
+    metrics_thread: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    conn_threads: Vec<JoinHandle<()>>,
+}
+
+impl Session {
+    /// Put the spec's TCP listener in front of this session: bind,
+    /// start the accept loop + conn workers + dispatcher (+ metrics
+    /// endpoint when the spec named one), and return the live server.
+    /// Fails when the spec named no listener
+    /// ([`ServingSpec::with_listener`](super::ServingSpec::with_listener))
+    /// or a bind fails.
+    pub fn serve_listener(self) -> anyhow::Result<NetServer> {
+        let spec = self.listener_spec.ok_or_else(|| {
+            anyhow::anyhow!(
+                "spec named no listener (ServingSpec::with_listener)"
+            )
+        })?;
+        NetServer::start(self, NetConfig::for_listener(spec))
+    }
+}
+
+impl NetServer {
+    /// Bind and start the front-end over `session`.
+    pub fn start(session: Session, config: NetConfig) -> anyhow::Result<Self> {
+        let spec = config.listener;
+        let listener = TcpListener::bind(spec.addr).map_err(|e| {
+            anyhow::anyhow!("bind ingest listener {}: {e}", spec.addr)
+        })?;
+        let local_addr = listener.local_addr()?;
+        let metrics = match spec.metrics_addr {
+            Some(addr) => {
+                let l = TcpListener::bind(addr).map_err(|e| {
+                    anyhow::anyhow!("bind metrics listener {addr}: {e}")
+                })?;
+                let bound = l.local_addr()?;
+                Some((l, bound))
+            }
+            None => None,
+        };
+
+        let shared = Arc::new(NetShared {
+            session: Arc::new(session),
+            closing: AtomicBool::new(false),
+            conns: Arc::new(BoundedQueue::new(spec.max_connections)),
+            routes: Mutex::new(HashMap::new()),
+            active: AtomicU64::new(0),
+            max_connections: spec.max_connections as u64,
+            accepted: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            replies: AtomicU64::new(0),
+            wire_errors: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+        });
+
+        let accept_shared = shared.clone();
+        let accept_thread =
+            thread::spawn(move || accept_loop(&accept_shared, listener));
+
+        let metrics_addr = metrics.as_ref().map(|(_, addr)| *addr);
+        let metrics_thread = metrics.map(|(listener, _)| {
+            let shared = shared.clone();
+            thread::spawn(move || metrics_loop(&shared, listener))
+        });
+
+        let dispatcher_shared = shared.clone();
+        let dispatcher =
+            thread::spawn(move || dispatch_loop(&dispatcher_shared));
+
+        let conn_threads = (0..config.conn_workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                thread::spawn(move || conn_worker_loop(&shared))
+            })
+            .collect();
+
+        Ok(Self {
+            shared,
+            local_addr,
+            metrics_addr,
+            accept_thread: Some(accept_thread),
+            metrics_thread,
+            dispatcher: Some(dispatcher),
+            conn_threads,
+        })
+    }
+
+    /// The ingest listener's bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The metrics listener's bound address, when the spec named one.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// Live serving roll-up (same maths as [`Session::snapshot`]).
+    pub fn snapshot(&self) -> ShardedReport {
+        self.shared.session.snapshot()
+    }
+
+    /// Drain-then-close shutdown of the whole edge: stop accepting,
+    /// let every admitted connection answer its in-flight requests,
+    /// join every thread, shut the session down, and report.  The
+    /// ordering matters — accepts close *before* the session so no
+    /// request is admitted into a dying fabric, and the session drains
+    /// *before* the dispatcher exits so every deliverable reply is
+    /// written.
+    pub fn shutdown(self) -> anyhow::Result<NetReport> {
+        let Self {
+            shared,
+            local_addr,
+            metrics_addr,
+            accept_thread,
+            metrics_thread,
+            dispatcher,
+            conn_threads,
+        } = self;
+
+        // 1. Stop admissions at the edge; wake the blocking accepts.
+        shared.closing.store(true, Ordering::SeqCst);
+        shared.conns.close();
+        let _ = TcpStream::connect(local_addr);
+        if let Some(handle) = accept_thread {
+            handle.join().expect("accept loop panicked");
+        }
+        if let Some(handle) = metrics_thread {
+            if let Some(addr) = metrics_addr {
+                let _ = TcpStream::connect(addr);
+            }
+            handle.join().expect("metrics loop panicked");
+        }
+
+        // 2. Conn workers observe `closing` on their next poll tick,
+        //    drain their in-flight replies, and exit.
+        for handle in conn_threads {
+            handle.join().expect("conn worker panicked");
+        }
+
+        // 3. Now the session: drain the shard queues, close them; the
+        //    dispatcher keeps writing replies until `recv` reports
+        //    end-of-stream, then exits.
+        shared.session.begin_shutdown();
+        if let Some(handle) = dispatcher {
+            handle.join().expect("dispatcher panicked");
+        }
+
+        let completions_lost = shared.session.completions_lost();
+        let stranded = lock_or_recover(&shared.routes).len() as u64;
+        let shared = Arc::try_unwrap(shared)
+            .map_err(|_| anyhow::anyhow!("front-end state still shared"))?;
+        let session = Arc::try_unwrap(shared.session)
+            .map_err(|_| anyhow::anyhow!("session still shared"))?;
+        let serving = session.shutdown()?;
+        Ok(NetReport {
+            serving,
+            accepted: shared.accepted.load(Ordering::Relaxed),
+            refused: shared.refused.load(Ordering::Relaxed),
+            requests: shared.requests.load(Ordering::Relaxed),
+            replies: shared.replies.load(Ordering::Relaxed),
+            wire_errors: shared.wire_errors.load(Ordering::Relaxed),
+            malformed: shared.malformed.load(Ordering::Relaxed),
+            completions_lost,
+            stranded,
+        })
+    }
+}
+
+// ----------------------------------------------------------- accept loop
+
+/// Blocking accept loop: admit into the conn queue, answer `BUSY` when
+/// the connection bound or the backlog is saturated.  Woken at shutdown
+/// by the self-connect in [`NetServer::shutdown`].
+fn accept_loop(shared: &NetShared, listener: TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        // Admission control: beyond `max_connections`
+        // accepted-but-unfinished connections, answer BUSY and drop —
+        // connection-level backpressure, distinct from per-request shed.
+        if shared.active.load(Ordering::SeqCst) >= shared.max_connections {
+            refuse(shared, stream);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        match shared.conns.push(stream) {
+            Ok(()) => {
+                shared.accepted.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(stream) => {
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                if shared.closing.load(Ordering::SeqCst) {
+                    return;
+                }
+                refuse(shared, stream);
+            }
+        }
+    }
+}
+
+/// Answer `BUSY` (best-effort) and drop the connection.
+fn refuse(shared: &NetShared, mut stream: TcpStream) {
+    shared.refused.fetch_add(1, Ordering::SeqCst);
+    shared.wire_errors.fetch_add(1, Ordering::SeqCst);
+    let busy = Frame::Error(WireError {
+        seq: 0,
+        code: ErrorCode::Busy,
+    });
+    let _ = write_frame(&mut stream, &busy);
+}
+
+// ---------------------------------------------------------- conn workers
+
+/// One pool worker: pull accepted connections off the queue, serve each
+/// to completion.  Exits when the queue is closed and drained.
+fn conn_worker_loop(shared: &NetShared) {
+    loop {
+        match shared.conns.pop_timeout(POLL_TICK) {
+            Some(stream) => {
+                serve_conn(shared, stream);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            None => {
+                if shared.conns.is_closed() && shared.conns.is_empty() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Serve one connection: parse request frames, admit them into the
+/// session (route registered before submit), answer rejections inline;
+/// the dispatcher writes the responses.  On clean EOF or server
+/// shutdown, drain in-flight replies before closing.
+fn serve_conn(shared: &NetShared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let mut reader = match stream.try_clone() {
+        Ok(reader) => reader,
+        Err(_) => return,
+    };
+    let writer = Arc::new(ConnWriter {
+        stream: Mutex::new(stream),
+        pending: AtomicU64::new(0),
+    });
+
+    let mut clean = true;
+    loop {
+        // Shutdown check before every frame, not only on idle ticks — a
+        // client streaming back-to-back frames must not hold a conn
+        // worker (and the shutdown join) hostage.
+        if shared.closing.load(Ordering::SeqCst) {
+            break;
+        }
+        // Idle-poll with `peek` so a tick mid-frame cannot desync the
+        // framing: bytes are only consumed once at least one is visible,
+        // and then the whole frame must arrive within the frame budget.
+        let mut probe = [0u8; 1];
+        match reader.peek(&mut probe) {
+            Ok(0) => break, // clean EOF at a frame boundary
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                continue;
+            }
+            Err(_) => {
+                clean = false;
+                break;
+            }
+        }
+        let _ = reader.set_read_timeout(Some(FRAME_READ_TIMEOUT));
+        let frame = read_frame(&mut reader);
+        let _ = reader.set_read_timeout(Some(POLL_TICK));
+        match frame {
+            Ok(Some(Frame::Request(request))) => {
+                shared.requests.fetch_add(1, Ordering::SeqCst);
+                admit(shared, &writer, request.seq, request);
+            }
+            // Clients speak Requests; a Response/Error from a client is
+            // a protocol violation — answer MALFORMED and drop.
+            Ok(Some(_)) | Err(_) => {
+                shared.malformed.fetch_add(1, Ordering::SeqCst);
+                shared.wire_errors.fetch_add(1, Ordering::SeqCst);
+                writer.send(&Frame::Error(WireError {
+                    seq: 0,
+                    code: ErrorCode::Malformed,
+                }));
+                clean = false;
+                break;
+            }
+            Ok(None) => break, // clean EOF
+        }
+    }
+
+    // Drain phase: a cleanly-closing connection waits for its admitted
+    // requests to answer (the dispatcher decrements `pending` as it
+    // writes), bounded by the drain deadline — a shed completion must
+    // not wedge the worker forever.
+    if clean {
+        let deadline = Instant::now() + DRAIN_DEADLINE;
+        while writer.pending.load(Ordering::SeqCst) > 0
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // The stream drops here; the client sees EOF after the last reply.
+}
+
+/// Admit one wire request: build it with a session-assigned id,
+/// register the reply route *first*, then submit; a rejection unwinds
+/// the route and answers the typed error code inline.
+fn admit(
+    shared: &NetShared,
+    writer: &Arc<ConnWriter>,
+    seq: u64,
+    request: crate::ingest::wire::WireRequest,
+) {
+    let prepared = shared
+        .session
+        .prepare_event(request.features, request.label);
+    let id = prepared.id;
+    lock_or_recover(&shared.routes).insert(
+        id,
+        Route {
+            seq,
+            writer: writer.clone(),
+        },
+    );
+    writer.pending.fetch_add(1, Ordering::SeqCst);
+    if let Err(err) = shared.session.submit(prepared) {
+        lock_or_recover(&shared.routes).remove(&id);
+        writer.pending.fetch_sub(1, Ordering::SeqCst);
+        shared.wire_errors.fetch_add(1, Ordering::SeqCst);
+        writer.send(&Frame::Error(WireError {
+            seq,
+            code: err.code(),
+        }));
+    }
+}
+
+// ------------------------------------------------------------ dispatcher
+
+/// The completion dispatcher: one thread draining [`Session::recv`] and
+/// writing each completion back through its registered route.  Exits at
+/// end-of-stream (session closed, workers done, channel drained) — the
+/// prompt-`recv` contract is what keeps this exit fast.
+fn dispatch_loop(shared: &NetShared) {
+    while let Some(completion) = shared.session.recv() {
+        let route = lock_or_recover(&shared.routes).remove(&completion.id);
+        let Some(Route { seq, writer }) = route else {
+            // A completion for an id the edge never admitted (e.g. an
+            // in-process submitter sharing the session) is not ours.
+            continue;
+        };
+        let ok = writer.send(&Frame::Response(WireResponse {
+            seq,
+            id: completion.id,
+            shard: completion.shard as u32,
+            output: completion.output,
+        }));
+        if ok {
+            shared.replies.fetch_add(1, Ordering::SeqCst);
+        }
+        writer.pending.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ------------------------------------------------------- metrics endpoint
+
+/// Answer every metrics connection with one line-oriented snapshot (see
+/// the module docs for the grammar) and close.
+fn metrics_loop(shared: &NetShared, listener: TcpListener) {
+    loop {
+        let mut stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        let body = render_metrics(shared);
+        let _ = stream.write_all(body.as_bytes());
+        // Stream drops: one snapshot per connection, like an HTTP GET
+        // without the HTTP.
+    }
+}
+
+/// Render one snapshot in the metrics grammar.
+fn render_metrics(shared: &NetShared) -> String {
+    let snap = shared.session.snapshot();
+    let mut out = String::new();
+    out.push_str(&format!("generated {}\n", snap.merged.generated));
+    out.push_str(&format!("completed {}\n", snap.merged.completed));
+    out.push_str(&format!("dropped {}\n", snap.merged.dropped));
+    out.push_str(&format!(
+        "shed_completions {}\n",
+        shared.session.completions_lost()
+    ));
+    out.push_str(&format!(
+        "connections_accepted {}\n",
+        shared.accepted.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "connections_refused {}\n",
+        shared.refused.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!("p50_us {:.1}\n", snap.merged.p50_latency_us));
+    out.push_str(&format!("p99_us {:.1}\n", snap.merged.p99_latency_us));
+    out.push_str(&format!(
+        "throughput_hz {:.1}\n",
+        snap.merged.throughput_hz
+    ));
+    for tier in &snap.per_backend {
+        out.push_str(&format!(
+            "backend {} completed {} dropped {} p50_us {:.1} p99_us {:.1}\n",
+            tier.backend,
+            tier.report.completed,
+            tier.report.dropped,
+            tier.report.p50_latency_us,
+            tier.report.p99_latency_us
+        ));
+    }
+    out.push_str("end\n");
+    out
+}

@@ -58,6 +58,7 @@
 //! construction*: there is only one fabric.
 
 use std::fmt;
+use std::net::SocketAddr;
 use std::str::FromStr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -225,12 +226,40 @@ pub struct ServingSpec {
     /// [`VirtualClock`](super::clock::VirtualClock).
     pub clock: Arc<dyn Clock>,
     /// Record per-request completions on the session channel.  The
-    /// channel is bounded (4× the aggregate queue capacity, at least
-    /// 4096): overflow is shed and counted
-    /// ([`Session::completions_lost`]) rather than stalling workers or
-    /// growing without bound.  Replay wrappers switch this off (nothing
-    /// drains the channel there).
+    /// channel is bounded (see `completion_capacity`): overflow is shed
+    /// and counted ([`Session::completions_lost`]) rather than stalling
+    /// workers or growing without bound.  Replay wrappers switch this
+    /// off (nothing drains the channel there).
     pub completions: bool,
+    /// Explicit completion-channel capacity.  `None` = the automatic
+    /// bound (4× the aggregate queue capacity, at least 4096);
+    /// `Some(0)` is rejected at [`Self::build`] — a zero-capacity
+    /// channel would shed every completion.
+    pub completion_capacity: Option<usize>,
+    /// Bind a TCP ingest listener here ([`Session::serve_listener`]);
+    /// port 0 binds an ephemeral port.  `None` = in-process serving
+    /// only.
+    pub listener: Option<SocketAddr>,
+    /// Expose live [`Session::snapshot`] roll-ups as a line-oriented
+    /// metrics endpoint on this second port (only meaningful with
+    /// `listener`).
+    pub metrics_listener: Option<SocketAddr>,
+    /// Bound on accepted-but-unfinished connections at the ingest
+    /// listener (the accept loop answers `BUSY` beyond it — connection
+    /// admission control, distinct from per-request shed).
+    pub max_connections: usize,
+}
+
+/// Listener settings a spec resolved for its session — what
+/// [`crate::coordinator::net`] consumes when the accept loop starts.
+#[derive(Debug, Clone, Copy)]
+pub struct ListenerSpec {
+    /// Ingest bind address (port 0 = ephemeral).
+    pub addr: SocketAddr,
+    /// Optional metrics bind address.
+    pub metrics_addr: Option<SocketAddr>,
+    /// Accepted-connection bound (`BUSY` beyond it).
+    pub max_connections: usize,
 }
 
 impl Default for ServingSpec {
@@ -259,6 +288,10 @@ impl Default for ServingSpec {
             },
             clock: Arc::new(SystemClock),
             completions: true,
+            completion_capacity: None,
+            listener: None,
+            metrics_listener: None,
+            max_connections: 1024,
         }
     }
 }
@@ -279,6 +312,10 @@ impl fmt::Debug for ServingSpec {
             .field("queue_capacity", &self.queue_capacity)
             .field("source", &self.source)
             .field("completions", &self.completions)
+            .field("completion_capacity", &self.completion_capacity)
+            .field("listener", &self.listener)
+            .field("metrics_listener", &self.metrics_listener)
+            .field("max_connections", &self.max_connections)
             .finish_non_exhaustive()
     }
 }
@@ -357,6 +394,33 @@ impl ServingSpec {
         self
     }
 
+    /// Pin the completion channel's capacity (`None` = automatic bound;
+    /// `Some(0)` is rejected at [`Self::build`]).
+    pub fn with_completion_capacity(mut self, capacity: usize) -> Self {
+        self.completion_capacity = Some(capacity);
+        self
+    }
+
+    /// Bind a TCP ingest listener at `addr` (port 0 = ephemeral); serve
+    /// it with [`Session::serve_listener`].
+    pub fn with_listener(mut self, addr: SocketAddr) -> Self {
+        self.listener = Some(addr);
+        self
+    }
+
+    /// Expose live snapshots as a line-oriented metrics endpoint on a
+    /// second port.
+    pub fn with_metrics_listener(mut self, addr: SocketAddr) -> Self {
+        self.metrics_listener = Some(addr);
+        self
+    }
+
+    /// Bound accepted-but-unfinished connections (`BUSY` beyond it).
+    pub fn with_max_connections(mut self, max: usize) -> Self {
+        self.max_connections = max;
+        self
+    }
+
     /// Validate the spec and resolve it into a [`ServingPlan`] — the one
     /// place every serving invariant is checked, with uniform error
     /// messages (the CLI and the library share it):
@@ -382,6 +446,14 @@ impl ServingSpec {
         anyhow::ensure!(
             self.engine_parallelism >= 1,
             "engine parallelism must be >= 1"
+        );
+        anyhow::ensure!(
+            self.completion_capacity != Some(0),
+            "completion channel capacity must be >= 1"
+        );
+        anyhow::ensure!(
+            self.max_connections >= 1,
+            "max connections must be >= 1"
         );
 
         if !self.backends.is_empty() {
@@ -470,6 +542,12 @@ impl ServingSpec {
             engine_parallelism: self.engine_parallelism,
             clock: self.clock.clone(),
             completions: self.completions,
+            completion_capacity: self.completion_capacity,
+            listener: self.listener.map(|addr| ListenerSpec {
+                addr,
+                metrics_addr: self.metrics_listener,
+                max_connections: self.max_connections,
+            }),
         })
     }
 }
@@ -492,6 +570,10 @@ pub struct ServingPlan {
     pub clock: Arc<dyn Clock>,
     /// Whether the session records per-request completions.
     pub completions: bool,
+    /// Explicit completion-channel capacity (`None` = automatic bound).
+    pub completion_capacity: Option<usize>,
+    /// Resolved listener settings (`None` = in-process serving only).
+    pub listener: Option<ListenerSpec>,
 }
 
 impl ServingPlan {
@@ -703,6 +785,12 @@ impl SessionHandle {
         self.shared.submit(request)?;
         Ok(id)
     }
+
+    /// Build (but do not admit) a request with a session-assigned id —
+    /// see [`Session::prepare_event`].
+    pub fn prepare_event(&self, features: Vec<f32>, label: u32) -> Request {
+        self.shared.next_request(features, label)
+    }
 }
 
 type WorkerHandles = Vec<Vec<JoinHandle<anyhow::Result<()>>>>;
@@ -713,13 +801,20 @@ type WorkerHandles = Vec<Vec<JoinHandle<anyhow::Result<()>>>>;
 pub struct Session {
     shared: Arc<SessionShared>,
     /// `workers[shard][worker]` join handles (the shutdown protocol
-    /// needs the per-shard grouping for its settled check).
-    workers: WorkerHandles,
+    /// needs the per-shard grouping for its settled check).  Behind a
+    /// mutex so [`Self::begin_shutdown`] can run the drain protocol
+    /// through a shared reference while [`Self::shutdown`] later takes
+    /// the handles out to join them.
+    workers: Mutex<WorkerHandles>,
     completions: Mutex<Receiver<Completion>>,
     /// Completions dropped because the bounded channel was full (the
     /// owner was not draining).  Serving itself is unaffected.
     completions_lost: Arc<AtomicU64>,
     started_at: Instant,
+    /// Listener settings carried from the plan
+    /// ([`Session::serve_listener`] consumes them); `None` when the
+    /// spec named no listener or the session came from a raw config.
+    pub(crate) listener_spec: Option<ListenerSpec>,
 }
 
 impl Session {
@@ -747,7 +842,15 @@ impl Session {
             + Sync
             + 'static,
     {
-        Self::start_config(plan.config, plan.clock, plan.completions, factory)
+        let mut session = Self::start_inner(
+            plan.config,
+            plan.clock,
+            plan.completions,
+            plan.completion_capacity,
+            factory,
+        )?;
+        session.listener_spec = plan.listener;
+        Ok(session)
     }
 
     /// Low-level entry over an assembled [`ShardedConfig`] — the path
@@ -766,6 +869,22 @@ impl Session {
             + Sync
             + 'static,
     {
+        Self::start_inner(config, clock, completions, None, factory)
+    }
+
+    fn start_inner<F>(
+        config: ShardedConfig,
+        clock: Arc<dyn Clock>,
+        completions: bool,
+        completion_capacity: Option<usize>,
+        factory: F,
+    ) -> anyhow::Result<Self>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn BatchRunner>>
+            + Send
+            + Sync
+            + 'static,
+    {
         validate_config(&config)?;
         let queues: Vec<Arc<BoundedQueue<Request>>> = (0..config.shards)
             .map(|_| Arc::new(BoundedQueue::new(config.server.queue_capacity)))
@@ -776,15 +895,20 @@ impl Session {
         let started_at = clock.now();
         // The completion channel is bounded — the egress buffer must
         // never grow without bound when the owner is slow to drain.  The
-        // bound is generous (4× the aggregate ingress capacity, at least
-        // 4096) so a consumer that keeps up never loses a completion;
-        // overflow is dropped and counted, never blocking a worker.
-        let completion_bound = config
-            .server
-            .queue_capacity
-            .saturating_mul(config.shards)
-            .saturating_mul(4)
-            .max(4096);
+        // automatic bound is generous (4× the aggregate ingress
+        // capacity, at least 4096) so a consumer that keeps up never
+        // loses a completion; overflow is dropped and counted, never
+        // blocking a worker.  An explicit capacity (already validated
+        // nonzero at `build`) pins the bound instead.
+        let completion_bound = match completion_capacity {
+            Some(capacity) => capacity,
+            None => config
+                .server
+                .queue_capacity
+                .saturating_mul(config.shards)
+                .saturating_mul(4)
+                .max(4096),
+        };
         let (tx, rx) = mpsc::sync_channel::<Completion>(completion_bound);
         let completions_lost = Arc::new(AtomicU64::new(0));
 
@@ -867,10 +991,11 @@ impl Session {
         });
         Ok(Self {
             shared,
-            workers,
+            workers: Mutex::new(workers),
             completions: Mutex::new(rx),
             completions_lost,
             started_at,
+            listener_spec: None,
         })
     }
 
@@ -894,6 +1019,16 @@ impl Session {
         Ok(id)
     }
 
+    /// Build (but do not admit) a request the session way: fresh
+    /// session-assigned id, tier stamp, enqueue instant from the
+    /// serving clock.  Lets a caller learn the id *before* submitting —
+    /// the network dispatcher registers its reply route under the id
+    /// first, so a completion can never arrive for an id it has not
+    /// seen.  Pass the result to [`Self::submit`].
+    pub fn prepare_event(&self, features: Vec<f32>, label: u32) -> Request {
+        self.shared.next_request(features, label)
+    }
+
     /// A clonable submitter handle — hand one to each producer thread
     /// (many sources, one fabric).
     pub fn handle(&self) -> SessionHandle {
@@ -902,15 +1037,32 @@ impl Session {
         }
     }
 
-    /// Blocking receive of the next completion.  `None` once every
-    /// worker has exited (after [`Self::shutdown`] has begun) and the
-    /// channel is drained.  Only meaningful when the spec enabled
-    /// `completions`.  Consumption is serialized, but the inner lock is
-    /// released between waits so a concurrent [`Self::drain`] can make
-    /// progress on an idle session.
+    /// Blocking receive of the next completion.  `None` once the
+    /// session is closed, every worker has exited, and the channel is
+    /// drained.  Only meaningful when the spec enabled `completions`.
+    /// Consumption is serialized, but the inner lock is released
+    /// between waits so a concurrent [`Self::drain`] can make progress
+    /// on an idle session.
     pub fn recv(&self) -> Option<Completion> {
         loop {
             let rx = lock_or_recover(&self.completions);
+            match rx.try_recv() {
+                Ok(completion) => return Some(completion),
+                Err(TryRecvError::Disconnected) => return None,
+                Err(TryRecvError::Empty) => {}
+            }
+            // Empty with the fabric closed and every worker gone: no
+            // sender can ever push again, so report end-of-stream *now*
+            // instead of waiting out the poll timeout — a listener
+            // shutdown's dispatcher drains through here, and a 10 ms
+            // stall per call would serialize into seconds of busy-wait.
+            // One last look catches a completion that raced in between
+            // the empty check and the workers finishing.
+            if self.shared.closed.load(Ordering::SeqCst)
+                && self.workers_finished()
+            {
+                return rx.try_recv().ok();
+            }
             match rx.recv_timeout(Duration::from_millis(10)) {
                 Ok(completion) => return Some(completion),
                 Err(RecvTimeoutError::Disconnected) => return None,
@@ -920,6 +1072,15 @@ impl Session {
                 Err(RecvTimeoutError::Timeout) => {}
             }
         }
+    }
+
+    /// True when every worker thread has exited (or the handles were
+    /// already taken by [`Self::shutdown`]).
+    fn workers_finished(&self) -> bool {
+        let workers = lock_or_recover(&self.workers);
+        workers
+            .iter()
+            .all(|shard| shard.iter().all(|worker| worker.is_finished()))
     }
 
     /// Completions dropped because the bounded completion channel was
@@ -981,18 +1142,21 @@ impl Session {
         generated
     }
 
-    /// Drain-then-close shutdown: stop admitting, wait for every shard's
-    /// queue to empty (or for all its workers to have exited — one dead
-    /// shard cannot wedge the rest), close the queues, join every
-    /// worker, and return the final report.  Worker errors (engine init,
-    /// runner failures) surface here.
-    pub fn shutdown(mut self) -> anyhow::Result<ShardedReport> {
-        let workers = std::mem::take(&mut self.workers);
+    /// The drain half of the shutdown protocol, through a *shared*
+    /// reference: stop admitting, wait for every shard's queue to empty
+    /// (or for all its workers to have exited — one dead shard cannot
+    /// wedge the rest), close the queues.  Workers then exit on their
+    /// own; [`Self::shutdown`] joins them and reports.  Idempotent, and
+    /// callable through an `Arc<Session>` — the network front-end's
+    /// dispatcher thread holds the session shared while shutdown begins.
+    pub fn begin_shutdown(&self) {
         self.shared.closed.store(true, Ordering::SeqCst);
-
         let settled = |shard: usize| {
-            self.shared.queues[shard].is_empty()
-                || workers[shard].iter().all(|w| w.is_finished())
+            self.shared.queues[shard].is_empty() || {
+                let workers = lock_or_recover(&self.workers);
+                workers.is_empty()
+                    || workers[shard].iter().all(|w| w.is_finished())
+            }
         };
         while !(0..self.shared.config.shards).all(settled) {
             thread::sleep(Duration::from_micros(200));
@@ -1000,6 +1164,14 @@ impl Session {
         for queue in &self.shared.queues {
             queue.close();
         }
+    }
+
+    /// Drain-then-close shutdown: [`Self::begin_shutdown`], then join
+    /// every worker and return the final report.  Worker errors (engine
+    /// init, runner failures) surface here.
+    pub fn shutdown(self) -> anyhow::Result<ShardedReport> {
+        self.begin_shutdown();
+        let workers = std::mem::take(&mut *lock_or_recover(&self.workers));
         let mut first_err: Option<anyhow::Error> = None;
         for shard_handles in workers {
             for handle in shard_handles {
@@ -1311,6 +1483,72 @@ mod tests {
         let e = err(ServingSpec::default()
             .with_batch_policy(TierPolicy::parse("a:1:0,b:4:100").unwrap()));
         assert!(e.contains("2 tiers for 1 shards"), "{e}");
+
+        // A zero-capacity completion channel would shed every
+        // completion — rejected up front, same uniform style.
+        let e = err(ServingSpec::default().with_completion_capacity(0));
+        assert!(e.contains("completion channel capacity"), "{e}");
+
+        // Listener admission control needs at least one slot.
+        let e = err(ServingSpec::default().with_max_connections(0));
+        assert!(e.contains("max connections"), "{e}");
+    }
+
+    /// A nonzero explicit completion capacity is honored: a 1-deep
+    /// channel under a 64-request burst must shed (count
+    /// `completions_lost`) instead of growing or blocking a worker.
+    #[test]
+    fn explicit_completion_capacity_bounds_the_channel() {
+        let spec = live_spec().with_completion_capacity(1);
+        assert_eq!(spec.build().unwrap().completion_capacity, Some(1));
+        let session = Session::start(&spec, |_| {
+            Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        for id in 0..64u64 {
+            session.submit(req(id)).unwrap();
+        }
+        // Nothing drains while the burst is served, so at most one
+        // completion can land in the channel; the rest must be shed.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while session.snapshot().merged.completed < 64 {
+            assert!(Instant::now() < deadline, "fabric stalled");
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            session.completions_lost() >= 1,
+            "a 1-deep channel must shed under a 64-request burst"
+        );
+        assert!(session.drain().len() <= 1);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.merged.completed, 64);
+    }
+
+    /// Satellite regression: `recv` on a closed, drained session must
+    /// report end-of-stream promptly (the listener dispatcher's exit
+    /// path), not wait out its 10 ms poll timeout per call.
+    #[test]
+    fn recv_returns_promptly_after_begin_shutdown() {
+        let session = Session::start(&live_spec(), |_| {
+            Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)
+        })
+        .unwrap();
+        session.submit(req(0)).unwrap();
+        assert_eq!(session.recv().expect("served").id, 0);
+        session.begin_shutdown();
+        // Workers may take a beat to observe the closed queues; the
+        // *sum* of 100 recv calls staying far under 100 × 10 ms is what
+        // pins the promptness (the old loop paid the timeout each call).
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            assert!(session.recv().is_none());
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "recv busy-waited {:?} on a closed session",
+            t0.elapsed()
+        );
+        session.shutdown().unwrap();
     }
 
     /// Replicated same-kind backends do not need model-key routing

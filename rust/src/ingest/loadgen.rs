@@ -1,0 +1,532 @@
+//! Open-loop load generation against a live ingest listener — the
+//! "million users" harness.
+//!
+//! The generator is **open-loop**: arrivals follow a fixed schedule
+//! derived from the offered rate, never from the server's responses —
+//! exactly the trigger regime, where the detector does not slow down
+//! because the downstream is saturated.  A closed-loop generator
+//! (send → wait → send) measures its own backoff; an open-loop one
+//! measures the server's shed rate and latency *under the offered
+//! load*, which is the quantity the saturation curves in
+//! `BENCH_serving.json` report.
+//!
+//! Shape: `connections` socket pairs, each with a writer thread (paces
+//! the schedule, frames requests) and a reader thread (matches
+//! `Response`/`Error` frames back by `seq`, records round-trip
+//! latency).  `clients` logical clients are multiplexed over the
+//! connections (the request label carries the client id), so
+//! `--clients 10000` over 32 sockets models ten thousand users without
+//! ten thousand file descriptors.
+//!
+//! Every generated event is accounted for exactly once:
+//!
+//! ```text
+//! generated == completed + shed + closed + lost
+//! ```
+//!
+//! `shed`/`closed` are the server's typed rejections
+//! ([`ErrorCode::Shed`]/[`ErrorCode::Closed`]); `lost` counts events
+//! written but never answered (connection died, or the server shed the
+//! completion itself).  [`LoadReport::check_identity`] asserts it.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::str::FromStr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::ErrorCode;
+use crate::coordinator::LatencyHistogram;
+use crate::ingest::wire::{
+    read_frame, write_frame, Frame, FrameError, WireRequest,
+};
+use crate::util::sync::thread;
+use crate::util::sync::{lock_or_recover, Mutex};
+
+/// Reader poll tick (re-checks the give-up deadline between frames).
+const READ_TICK: Duration = Duration::from_millis(250);
+/// A reader with in-flight requests gives up this long after the last
+/// frame arrived (a wedged server must not hang the harness).
+const QUIET_DEADLINE: Duration = Duration::from_secs(10);
+/// Events per burst in the bursty profile.
+const BURST: usize = 32;
+
+// -------------------------------------------------------------- profiles
+
+/// Arrival process of the open-loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Exponential inter-arrivals at the offered rate — the paper's
+    /// trigger arrivals are Poisson to first order.
+    Poisson,
+    /// Back-to-back bursts of [`BURST`] events separated by idle gaps,
+    /// same mean rate — stresses the queue depth rather than the
+    /// steady-state throughput.
+    Bursty,
+}
+
+impl Profile {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+        }
+    }
+}
+
+impl FromStr for Profile {
+    type Err = anyhow::Error;
+
+    fn from_str(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "poisson" => Ok(Self::Poisson),
+            "bursty" => Ok(Self::Bursty),
+            other => anyhow::bail!(
+                "unknown arrival profile {other:?} (poisson, bursty)"
+            ),
+        }
+    }
+}
+
+// --------------------------------------------------------------- config
+
+/// One load run, fully specified — same config, same schedule.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// The ingest listener to drive.
+    pub addr: SocketAddr,
+    /// Logical clients multiplexed over the connections (the request
+    /// label carries the client id).
+    pub clients: usize,
+    /// Socket connections (one writer + one reader thread each).
+    pub connections: usize,
+    /// Aggregate offered rate across all connections, events/s.
+    pub rate_hz: f64,
+    /// Total events to offer.
+    pub events: usize,
+    /// Arrival process.
+    pub profile: Profile,
+    /// Schedule + payload seed.
+    pub seed: u64,
+    /// Features per event (must match the served model's input arity
+    /// when outputs matter; the fabric itself is shape-agnostic).
+    pub feature_len: usize,
+}
+
+impl LoadConfig {
+    pub fn new(addr: SocketAddr) -> Self {
+        Self {
+            addr,
+            clients: 1,
+            connections: 1,
+            rate_hz: 10_000.0,
+            events: 10_000,
+            profile: Profile::Poisson,
+            seed: 0xC0FFEE,
+            feature_len: 8,
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.clients >= 1, "need at least one client");
+        anyhow::ensure!(
+            self.connections >= 1,
+            "need at least one connection"
+        );
+        anyhow::ensure!(self.events >= 1, "need at least one event");
+        anyhow::ensure!(
+            self.rate_hz > 0.0 && self.rate_hz.is_finite(),
+            "offered rate must be positive"
+        );
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- report
+
+/// Merged outcome of one load run.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Request frames written onto the wire.
+    pub generated: u64,
+    /// `Response` frames received (served requests).
+    pub completed: u64,
+    /// `SHED` rejections (queue-full backpressure) — retryable.
+    pub shed: u64,
+    /// `CLOSED` rejections (session shutting down).
+    pub closed: u64,
+    /// `BUSY` connection refusals (answer no particular request, so
+    /// they sit outside the per-event identity).
+    pub busy: u64,
+    /// Events written but never answered (connection died, or the
+    /// server shed the completion itself).
+    pub lost: u64,
+    /// Client-observed round-trip latency of completed events.
+    pub latency: LatencyHistogram,
+    /// Wall time of the whole run, seconds.
+    pub wall_seconds: f64,
+}
+
+impl LoadReport {
+    /// The end-to-end accounting identity, across the process boundary:
+    /// every generated event is completed, shed, closed, or lost —
+    /// exactly once.
+    pub fn check_identity(&self) -> anyhow::Result<()> {
+        let answered =
+            self.completed + self.shed + self.closed + self.lost;
+        anyhow::ensure!(
+            self.generated == answered,
+            "load accounting broken: generated {} != completed {} + \
+             shed {} + closed {} + lost {}",
+            self.generated,
+            self.completed,
+            self.shed,
+            self.closed,
+            self.lost
+        );
+        Ok(())
+    }
+
+    /// Achieved completion rate, events/s.
+    pub fn completed_hz(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.completed as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+// ------------------------------------------------------------- generator
+
+/// SplitMix64 — the repo's standard seedable generator shape; local so
+/// the schedule needs nothing from the data layer.
+struct SplitMix64(u64);
+
+impl SplitMix64 {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in (0, 1].
+    fn uniform(&mut self) -> f64 {
+        ((self.next() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+}
+
+/// Seconds until the next arrival under `profile` at `rate` ev/s.
+fn inter_arrival(
+    profile: Profile,
+    rate: f64,
+    index: usize,
+    rng: &mut SplitMix64,
+) -> f64 {
+    match profile {
+        Profile::Poisson => -rng.uniform().ln() / rate,
+        // Bursty: BURST back-to-back events, then one gap that restores
+        // the mean rate.
+        Profile::Bursty => {
+            if index % BURST == 0 {
+                BURST as f64 / rate
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ run
+
+/// What one connection's reader thread tallies.
+struct ReadTally {
+    completed: u64,
+    shed: u64,
+    closed: u64,
+    busy: u64,
+    latency: LatencyHistogram,
+}
+
+/// Drive `config.events` at `config.rate_hz` against the listener and
+/// merge the per-connection books.  The run is open-loop: the schedule
+/// never waits for the server.  Callers wanting the identity enforced
+/// chain [`LoadReport::check_identity`].
+pub fn run_load(config: &LoadConfig) -> anyhow::Result<LoadReport> {
+    config.validate()?;
+    let started = Instant::now();
+    let per_conn_rate = config.rate_hz / config.connections as f64;
+
+    let mut joins = Vec::with_capacity(config.connections);
+    for conn in 0..config.connections {
+        // Spread the remainder so every event is offered exactly once.
+        let share = config.events / config.connections
+            + usize::from(conn < config.events % config.connections);
+        if share == 0 {
+            continue;
+        }
+        let config = config.clone();
+        joins.push(thread::spawn(move || {
+            drive_connection(&config, conn, share, per_conn_rate)
+        }));
+    }
+
+    let mut report = LoadReport {
+        generated: 0,
+        completed: 0,
+        shed: 0,
+        closed: 0,
+        busy: 0,
+        lost: 0,
+        latency: LatencyHistogram::new(),
+        wall_seconds: 0.0,
+    };
+    let mut first_err = None;
+    for join in joins {
+        match join.join().expect("load connection panicked") {
+            Ok(conn_report) => {
+                report.generated += conn_report.generated;
+                report.completed += conn_report.completed;
+                report.shed += conn_report.shed;
+                report.closed += conn_report.closed;
+                report.busy += conn_report.busy;
+                report.lost += conn_report.lost;
+                report.latency.merge(&conn_report.latency);
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    report.wall_seconds = started.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// One connection: writer paces the schedule on this thread, a reader
+/// thread matches replies back by `seq`.
+fn drive_connection(
+    config: &LoadConfig,
+    conn: usize,
+    events: usize,
+    rate: f64,
+) -> anyhow::Result<LoadReport> {
+    let stream = TcpStream::connect(config.addr).map_err(|e| {
+        anyhow::anyhow!("connect {} (conn {conn}): {e}", config.addr)
+    })?;
+    let _ = stream.set_nodelay(true);
+    let mut writer = stream.try_clone()?;
+
+    // seq → send instant; the reader removes what it answers, leftovers
+    // are `lost`.
+    let in_flight: Arc<Mutex<HashMap<u64, Instant>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+
+    let reader_map = in_flight.clone();
+    let reader =
+        thread::spawn(move || read_replies(stream, &reader_map));
+
+    let mut rng = SplitMix64(
+        config.seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let start = Instant::now();
+    let mut at = 0.0f64;
+    let mut generated = 0u64;
+    for i in 0..events {
+        at += inter_arrival(config.profile, rate, i, &mut rng);
+        let target = start + Duration::from_secs_f64(at);
+        let now = Instant::now();
+        if target > now {
+            thread::sleep(target - now);
+        }
+        // Open-loop: when behind schedule, send immediately — never
+        // stretch the offered rate to match the server.
+        let seq = i as u64;
+        let label = (rng.next() % config.clients as u64) as u32;
+        let features: Vec<f32> = (0..config.feature_len)
+            .map(|_| (rng.next() % 1000) as f32 / 1000.0)
+            .collect();
+        // Register before writing so a same-instant reply always finds
+        // its send time.
+        lock_or_recover(&in_flight).insert(seq, Instant::now());
+        let frame = Frame::Request(WireRequest {
+            seq,
+            label,
+            features,
+        });
+        if write_frame(&mut writer, &frame).is_err() {
+            // Connection died mid-run (e.g. dropped after BUSY): the
+            // unsent event was never offered.
+            lock_or_recover(&in_flight).remove(&seq);
+            break;
+        }
+        generated += 1;
+    }
+    // Half-close: the server sees a clean EOF, drains our in-flight
+    // replies, then closes — the reader exits on its EOF.
+    let _ = writer.shutdown(Shutdown::Write);
+    drop(writer);
+
+    let tally = reader.join().expect("load reader panicked");
+    let lost = lock_or_recover(&in_flight).len() as u64;
+    Ok(LoadReport {
+        generated,
+        completed: tally.completed,
+        shed: tally.shed,
+        closed: tally.closed,
+        busy: tally.busy,
+        lost,
+        latency: tally.latency,
+        wall_seconds: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Reader half: match every `Response`/`Error` back to its send time;
+/// exit on EOF, a dead connection, or a quiet-deadline expiry.
+fn read_replies(
+    stream: TcpStream,
+    in_flight: &Mutex<HashMap<u64, Instant>>,
+) -> ReadTally {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let mut stream = stream;
+    let mut tally = ReadTally {
+        completed: 0,
+        shed: 0,
+        closed: 0,
+        busy: 0,
+        latency: LatencyHistogram::new(),
+    };
+    let mut last_frame = Instant::now();
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(Frame::Response(resp))) => {
+                last_frame = Instant::now();
+                if let Some(sent) =
+                    lock_or_recover(in_flight).remove(&resp.seq)
+                {
+                    tally.completed += 1;
+                    tally.latency.record(last_frame - sent);
+                }
+            }
+            Ok(Some(Frame::Error(err))) => {
+                last_frame = Instant::now();
+                match err.code {
+                    // Connection-level refusal: answers no event.
+                    ErrorCode::Busy => tally.busy += 1,
+                    code => {
+                        if lock_or_recover(in_flight)
+                            .remove(&err.seq)
+                            .is_some()
+                        {
+                            match code {
+                                ErrorCode::Shed => tally.shed += 1,
+                                ErrorCode::Closed => tally.closed += 1,
+                                // Malformed (or a future code) naming
+                                // a known seq: no retry class —
+                                // re-insert the entry so the event is
+                                // counted in `lost` at run end.
+                                _ => {
+                                    lock_or_recover(in_flight)
+                                        .insert(err.seq, last_frame);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // The server never sends Requests; ignore defensively.
+            Ok(Some(Frame::Request(_))) => {}
+            Ok(None) => break, // clean EOF: all replies in
+            Err(FrameError::Io(ref e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if last_frame.elapsed() > QUIET_DEADLINE {
+                    break; // wedged server: leftovers count as lost
+                }
+            }
+            Err(_) => break, // dead or garbage connection
+        }
+    }
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_parse() {
+        assert_eq!("poisson".parse::<Profile>().unwrap(), Profile::Poisson);
+        assert_eq!("bursty".parse::<Profile>().unwrap(), Profile::Bursty);
+        assert!("uniform".parse::<Profile>().is_err());
+        assert_eq!(Profile::Poisson.name(), "poisson");
+    }
+
+    /// The schedule is deterministic in the seed and open-loop in shape:
+    /// Poisson inter-arrivals average 1/rate, bursty gaps restore the
+    /// mean rate exactly.
+    #[test]
+    fn schedules_hit_their_mean_rate() {
+        let rate = 1000.0;
+        let n = 20_000;
+        let mut rng = SplitMix64(7);
+        let total: f64 = (0..n)
+            .map(|i| inter_arrival(Profile::Poisson, rate, i, &mut rng))
+            .sum();
+        let mean = total / n as f64;
+        assert!(
+            (mean - 1.0 / rate).abs() < 0.1 / rate,
+            "poisson mean inter-arrival {mean} vs expected {}",
+            1.0 / rate
+        );
+
+        let mut rng = SplitMix64(7);
+        let total: f64 = (0..BURST * 100)
+            .map(|i| inter_arrival(Profile::Bursty, rate, i, &mut rng))
+            .sum();
+        let expect = (BURST * 100) as f64 / rate;
+        assert!(
+            (total - expect).abs() < 1e-9,
+            "bursty schedule length {total} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn identity_check_catches_imbalance() {
+        let mut report = LoadReport {
+            generated: 10,
+            completed: 6,
+            shed: 2,
+            closed: 1,
+            busy: 0,
+            lost: 1,
+            latency: LatencyHistogram::new(),
+            wall_seconds: 1.0,
+        };
+        report.check_identity().unwrap();
+        report.lost = 0;
+        let err = report.check_identity().unwrap_err().to_string();
+        assert!(err.contains("accounting broken"), "{err}");
+    }
+
+    #[test]
+    fn config_validation_is_uniform() {
+        let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        let mut config = LoadConfig::new(addr);
+        config.connections = 0;
+        let err = run_load(&config).unwrap_err().to_string();
+        assert!(err.contains("at least one connection"), "{err}");
+        let mut config = LoadConfig::new(addr);
+        config.rate_hz = 0.0;
+        let err = run_load(&config).unwrap_err().to_string();
+        assert!(err.contains("rate must be positive"), "{err}");
+    }
+}

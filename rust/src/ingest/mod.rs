@@ -1,0 +1,14 @@
+//! Network ingest: the typed wire protocol ([`wire`]) the coordinator's
+//! TCP front-end ([`crate::coordinator::net`]) speaks, and the open-loop
+//! load generator ([`loadgen`]) that drives it at saturation.
+//!
+//! The layering is deliberate: this module knows *bytes and sockets on
+//! the client side* — frame encode/decode and load generation — while
+//! `coordinator::net` owns the serving side (accept loop, connection
+//! workers, completion dispatch).  Both share the
+//! [`crate::api::ErrorCode`] numeric space, so a wire-level `SHED` and
+//! an in-process [`SubmitError::Full`](crate::api::SubmitError) are the
+//! same observable event.
+
+pub mod loadgen;
+pub mod wire;

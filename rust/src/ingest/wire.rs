@@ -1,0 +1,453 @@
+//! The length-prefixed binary wire protocol of the network ingest
+//! front-end: typed frames with a versioned header, little-endian
+//! throughout, no external dependencies.
+//!
+//! ## Frame layout
+//!
+//! Every frame is an 8-byte header followed by `len` payload bytes:
+//!
+//! ```text
+//! offset  size  field     value
+//! 0       2     magic     0x4852  (u16 LE)
+//! 2       1     version   1
+//! 3       1     type      1 = Request | 2 = Response | 3 = Error
+//! 4       4     len       payload bytes (u32 LE, <= 1 MiB)
+//! ```
+//!
+//! Payloads (all integers LE, floats as IEEE-754 LE bit patterns —
+//! decode(encode(x)) is bitwise-identical):
+//!
+//! ```text
+//! Request   seq u64 · label u32 · count u32 · features f32 × count
+//! Response  seq u64 · id u64 · shard u32 · count u32 · output f32 × count
+//! Error     seq u64 · code u8          (codes: crate::api::ErrorCode)
+//! ```
+//!
+//! `seq` is a client-chosen correlation id, echoed verbatim in the
+//! answering `Response`/`Error`; `id` is the session-assigned request
+//! id.  A malformed header (bad magic/version/type, oversized `len`) or
+//! a short read is a typed [`FrameError`], never a panic — garbage from
+//! the network must not take a serving thread down.
+
+use std::io::{Read, Write};
+
+use crate::api::ErrorCode;
+
+/// Header magic: `"RH"` little-endian.
+pub const WIRE_MAGIC: u16 = 0x4852;
+/// Protocol revision carried in every header.
+pub const WIRE_VERSION: u8 = 1;
+/// Hard payload cap: a header claiming more is rejected before any
+/// allocation (a garbage `len` must not OOM the server).
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 8;
+
+const TYPE_REQUEST: u8 = 1;
+const TYPE_RESPONSE: u8 = 2;
+const TYPE_ERROR: u8 = 3;
+
+// ---------------------------------------------------------------- frames
+
+/// An inference request: `seq` correlates the answer, `label` rides
+/// through to the completion (ground truth for accuracy accounting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub seq: u64,
+    pub label: u32,
+    pub features: Vec<f32>,
+}
+
+/// A served request's output, bitwise-identical to what an in-process
+/// [`Session::recv`](crate::api::Session::recv) would deliver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    /// Echo of the request's `seq`.
+    pub seq: u64,
+    /// Session-assigned request id.
+    pub id: u64,
+    /// Shard that served the request.
+    pub shard: u32,
+    pub output: Vec<f32>,
+}
+
+/// A typed rejection: `code` distinguishes shed (retryable
+/// backpressure) from closed (session gone) from busy (connection
+/// refused) — see [`ErrorCode`] for the frozen numeric mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireError {
+    /// Echo of the request's `seq` (0 for connection-level errors that
+    /// answer no particular request).
+    pub seq: u64,
+    pub code: ErrorCode,
+}
+
+/// One protocol frame, as sent on the socket.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Request(WireRequest),
+    Response(WireResponse),
+    Error(WireError),
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Why a byte stream failed to parse as a frame.  Every variant is a
+/// recoverable, typed rejection — the decoder never panics on garbage.
+#[derive(Debug)]
+pub enum FrameError {
+    /// First two bytes were not [`WIRE_MAGIC`].
+    BadMagic(u16),
+    /// Unsupported protocol revision.
+    BadVersion(u8),
+    /// Unknown frame type byte.
+    BadType(u8),
+    /// Header `len` exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The stream ended inside a frame (mid-header or mid-payload).
+    Truncated,
+    /// Structurally valid header, inconsistent payload (e.g. `count`
+    /// disagreeing with `len`, unknown error code).
+    BadPayload(&'static str),
+    /// Transport error underneath the framing.
+    Io(std::io::Error),
+}
+
+impl FrameError {
+    /// True when the underlying transport hit a read timeout (the
+    /// server's poll tick, not a protocol violation).
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            Self::Io(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+            )
+        )
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#06x} (want {WIRE_MAGIC:#06x})")
+            }
+            Self::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (want {WIRE_VERSION})")
+            }
+            Self::BadType(t) => write!(f, "unknown frame type {t}"),
+            Self::Oversized(len) => write!(
+                f,
+                "frame payload {len} bytes exceeds cap {MAX_PAYLOAD}"
+            ),
+            Self::Truncated => f.write_str("truncated frame"),
+            Self::BadPayload(why) => write!(f, "bad frame payload: {why}"),
+            Self::Io(e) => write!(f, "frame transport: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Self::Truncated
+        } else {
+            Self::Io(e)
+        }
+    }
+}
+
+// --------------------------------------------------------------- encode
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+impl Frame {
+    /// Frame type byte, as carried in the header.
+    pub fn frame_type(&self) -> u8 {
+        match self {
+            Self::Request(_) => TYPE_REQUEST,
+            Self::Response(_) => TYPE_RESPONSE,
+            Self::Error(_) => TYPE_ERROR,
+        }
+    }
+
+    /// Serialize header + payload into one buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Self::Request(r) => {
+                payload.extend_from_slice(&r.seq.to_le_bytes());
+                payload.extend_from_slice(&r.label.to_le_bytes());
+                payload
+                    .extend_from_slice(&(r.features.len() as u32).to_le_bytes());
+                put_f32s(&mut payload, &r.features);
+            }
+            Self::Response(r) => {
+                payload.extend_from_slice(&r.seq.to_le_bytes());
+                payload.extend_from_slice(&r.id.to_le_bytes());
+                payload.extend_from_slice(&r.shard.to_le_bytes());
+                payload
+                    .extend_from_slice(&(r.output.len() as u32).to_le_bytes());
+                put_f32s(&mut payload, &r.output);
+            }
+            Self::Error(e) => {
+                payload.extend_from_slice(&e.seq.to_le_bytes());
+                payload.push(e.code as u8);
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        out.push(WIRE_VERSION);
+        out.push(self.frame_type());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse one frame from the front of `bytes`; returns the frame and
+    /// the number of bytes consumed.  A slice ending mid-frame is
+    /// [`FrameError::Truncated`].
+    pub fn decode(bytes: &[u8]) -> Result<(Self, usize), FrameError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(FrameError::Truncated);
+        }
+        let (frame_type, len) = check_header(&bytes[..HEADER_LEN])?;
+        let total = HEADER_LEN + len as usize;
+        if bytes.len() < total {
+            return Err(FrameError::Truncated);
+        }
+        let frame = decode_payload(frame_type, &bytes[HEADER_LEN..total])?;
+        Ok((frame, total))
+    }
+}
+
+/// Validate an 8-byte header; returns (type, payload len).
+fn check_header(header: &[u8]) -> Result<(u8, u32), FrameError> {
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != WIRE_MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    if header[2] != WIRE_VERSION {
+        return Err(FrameError::BadVersion(header[2]));
+    }
+    let frame_type = header[3];
+    if !(TYPE_REQUEST..=TYPE_ERROR).contains(&frame_type) {
+        return Err(FrameError::BadType(frame_type));
+    }
+    let len =
+        u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized(len));
+    }
+    Ok((frame_type, len))
+}
+
+// --------------------------------------------------------------- decode
+
+/// A cursor over a payload slice: every read is bounds-checked into a
+/// typed error (no slicing panics on adversarial input).
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&end| end <= self.bytes.len())
+            .ok_or(FrameError::BadPayload("payload shorter than its fields"))?;
+        let out = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32s(&mut self, count: u32) -> Result<Vec<f32>, FrameError> {
+        let n = count as usize;
+        let bytes = self
+            .bytes
+            .len()
+            .checked_sub(self.at)
+            .unwrap_or(0);
+        if n.checked_mul(4).map(|need| need > bytes).unwrap_or(true) {
+            return Err(FrameError::BadPayload(
+                "float count exceeds payload length",
+            ));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<(), FrameError> {
+        if self.at != self.bytes.len() {
+            return Err(FrameError::BadPayload(
+                "trailing bytes after payload fields",
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame, FrameError> {
+    let mut cur = Cursor {
+        bytes: payload,
+        at: 0,
+    };
+    let frame = match frame_type {
+        TYPE_REQUEST => {
+            let seq = cur.u64()?;
+            let label = cur.u32()?;
+            let count = cur.u32()?;
+            let features = cur.f32s(count)?;
+            Frame::Request(WireRequest {
+                seq,
+                label,
+                features,
+            })
+        }
+        TYPE_RESPONSE => {
+            let seq = cur.u64()?;
+            let id = cur.u64()?;
+            let shard = cur.u32()?;
+            let count = cur.u32()?;
+            let output = cur.f32s(count)?;
+            Frame::Response(WireResponse {
+                seq,
+                id,
+                shard,
+                output,
+            })
+        }
+        TYPE_ERROR => {
+            let seq = cur.u64()?;
+            let code = ErrorCode::from_u8(cur.u8()?)
+                .ok_or(FrameError::BadPayload("unknown error code"))?;
+            Frame::Error(WireError { seq, code })
+        }
+        other => return Err(FrameError::BadType(other)),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+// -------------------------------------------------------------- streams
+
+/// Read one frame off a stream.  `Ok(None)` is a *clean* EOF — the peer
+/// closed at a frame boundary; EOF inside a frame is
+/// [`FrameError::Truncated`].  A read timeout surfaces as an `Io` error
+/// with [`FrameError::is_timeout`] true, so pollers can distinguish
+/// their tick from a dead peer.
+pub fn read_frame<R: Read>(reader: &mut R) -> Result<Option<Frame>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: a clean close lands here as Ok(0).
+    let mut first = [0u8; 1];
+    loop {
+        match reader.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    header[0] = first[0];
+    reader.read_exact(&mut header[1..])?;
+    let (frame_type, len) = check_header(&header)?;
+    let mut payload = vec![0u8; len as usize];
+    reader.read_exact(&mut payload)?;
+    decode_payload(frame_type, &payload)
+        .map(Some)
+}
+
+/// Write one frame to a stream (header + payload, flushed).
+pub fn write_frame<W: Write>(
+    writer: &mut W,
+    frame: &Frame,
+) -> std::io::Result<()> {
+    writer.write_all(&frame.encode())?;
+    writer.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_constants() {
+        let frame = Frame::Error(WireError {
+            seq: 7,
+            code: ErrorCode::Shed,
+        });
+        let bytes = frame.encode();
+        assert_eq!(&bytes[..2], &WIRE_MAGIC.to_le_bytes());
+        assert_eq!(bytes[2], WIRE_VERSION);
+        assert_eq!(bytes[3], 3);
+        assert_eq!(bytes.len(), HEADER_LEN + 9);
+    }
+
+    #[test]
+    fn decode_reports_consumed_length_and_ignores_trailing() {
+        let a = Frame::Error(WireError {
+            seq: 1,
+            code: ErrorCode::Closed,
+        });
+        let b = Frame::Request(WireRequest {
+            seq: 2,
+            label: 5,
+            features: vec![1.0, -2.5],
+        });
+        let mut bytes = a.encode();
+        let first_len = bytes.len();
+        bytes.extend_from_slice(&b.encode());
+        let (frame, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(frame, a);
+        assert_eq!(used, first_len);
+        let (frame, _) = Frame::decode(&bytes[used..]).unwrap();
+        assert_eq!(frame, b);
+    }
+
+    #[test]
+    fn payload_count_must_match_length() {
+        // A request whose count field claims more floats than the
+        // payload carries.
+        let good = Frame::Request(WireRequest {
+            seq: 1,
+            label: 0,
+            features: vec![1.0, 2.0],
+        })
+        .encode();
+        let mut lying = good.clone();
+        // count field sits at payload offset 12 (header 8 + seq 8 + label 4).
+        lying[HEADER_LEN + 12] = 200;
+        let err = Frame::decode(&lying).unwrap_err();
+        assert!(matches!(err, FrameError::BadPayload(_)), "{err}");
+    }
+}

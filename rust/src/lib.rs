@@ -21,11 +21,13 @@
 //! the paper mapped to a module and bench target) and `EXPERIMENTS.md`
 //! for paper-vs-measured results.
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod fixed;
 pub mod hls;
+pub mod ingest;
 pub mod model;
 pub mod nn;
 pub mod report;
@@ -36,8 +38,11 @@ pub mod util;
 // session with a typed [`ServingSpec`], start it with
 // [`Session::start`], submit requests from any number of threads, read
 // completions and live snapshots, then shut down for the final report.
-// `coordinator::{Server, ShardedServer}` are replay wrappers over this.
-pub use coordinator::session::{
+// `coordinator::{Server, ShardedServer}` are replay wrappers over this,
+// and [`api`] is the canonical import path (these root re-exports feed
+// through it, plus the stable [`api::ErrorCode`] numeric space shared
+// with the wire protocol).
+pub use api::{
     BackendKind, Completion, ServingPlan, ServingSpec, Session,
     SessionHandle, SubmitError,
 };

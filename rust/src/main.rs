@@ -34,6 +34,13 @@
 //!   holding both ends of the latency/throughput curve.
 //! * `--workers` / `--engine-parallelism` — threads per shard and per
 //!   batch; total budget is `shards × workers × engine-parallelism`.
+//! * `--listen 127.0.0.1:7432` — network serving: instead of replaying a
+//!   synthetic source, put the `ingest::wire` TCP front-end over the live
+//!   session and accept typed request frames for `--serve-for-ms`
+//!   milliseconds (then drain-then-close).  `--metrics-listen` adds the
+//!   line-oriented metrics endpoint, `--max-connections` caps concurrent
+//!   connections (beyond it new ones are answered `BUSY`).  Drive it
+//!   with the `loadgen` binary (`loadgen --addr <addr>`).
 //!
 //! ## Bench smoke (CI)
 //!
@@ -328,6 +335,30 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("queue", "per-shard queue capacity (drop beyond)", Some("4096"))
         .opt("width", "fixed engine: total bits", Some("16"))
         .opt("integer", "fixed engine: integer bits", Some("6"))
+        .opt(
+            "listen",
+            "serve the ingest::wire protocol on this TCP address \
+             (e.g. 127.0.0.1:7432) instead of replaying a synthetic \
+             source; drive it with the `loadgen` binary",
+            None,
+        )
+        .opt(
+            "metrics-listen",
+            "line-oriented metrics endpoint address (with --listen)",
+            None,
+        )
+        .opt(
+            "max-connections",
+            "concurrent connection cap; beyond it new connections are \
+             answered BUSY (with --listen)",
+            Some("1024"),
+        )
+        .opt(
+            "serve-for-ms",
+            "how long to keep the listener up before the drain-then-close \
+             shutdown (with --listen)",
+            Some("10000"),
+        )
         .flag("fixed-interval", "fixed (non-Poisson) arrivals");
     let args = cmd.parse(rest)?;
     let artifacts = artifacts_from(&args);
@@ -338,6 +369,14 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let width: u32 = args.parse_num("width", 16)?;
     let integer: u32 = args.parse_num("integer", 6)?;
     let model_key = args.get_or("model", "top_gru").to_string();
+    let listen: Option<std::net::SocketAddr> =
+        args.get("listen").map(|s| s.parse()).transpose()?;
+    let metrics_listen: Option<std::net::SocketAddr> =
+        args.get("metrics-listen").map(|s| s.parse()).transpose()?;
+    anyhow::ensure!(
+        listen.is_some() || metrics_listen.is_none(),
+        "--metrics-listen requires --listen"
+    );
 
     // The CLI is a thin adapter over the typed session API: every flag
     // parses straight into a ServingSpec field (FromStr), and every
@@ -407,8 +446,12 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             poisson: !args.has("fixed-interval"),
             n_events: args.parse_num("events", d.source.n_events)?,
         },
-        // Replay-to-completion run: nothing drains a completion channel.
-        completions: false,
+        // Replay-to-completion runs drain no completion channel; the
+        // network front-end's dispatcher needs one.
+        completions: listen.is_some(),
+        listener: listen,
+        metrics_listener: metrics_listen,
+        max_connections: args.parse_num("max-connections", d.max_connections)?,
         ..d
     };
     let plan = spec.build()?;
@@ -483,7 +526,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .unwrap_or(&model_key)
         .to_string();
     let generator = generators::for_benchmark(&benchmark, 0xBEEF)?;
-    let report = if plan.shard_kinds.is_empty()
+    let session = if plan.shard_kinds.is_empty()
         && spec.engine == BackendKind::Pjrt
     {
         // PJRT runtime path: the runner sizes itself from the AOT batch
@@ -492,7 +535,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         // percentiles).
         let artifacts = artifacts.clone();
         let key2 = model_key.clone();
-        let session = Session::start_plan(plan, move |_shard| {
+        Session::start_plan(plan, move |_shard| {
             let runtime = Runtime::new(&artifacts)?;
             let buckets = runtime.manifest().batch_buckets(&key2)?;
             for &b in &buckets {
@@ -503,9 +546,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 key: key2.clone(),
                 buckets,
             }) as Box<dyn BatchRunner>)
-        })?;
-        session.replay(generator);
-        session.shutdown()?
+        })?
     } else {
         // Registry path (homogeneous or heterogeneous): each shard
         // builds its resolved BackendKind over the shared weights; an
@@ -521,7 +562,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             (0..plan.config.shards).map(|s| plan.kind_for(s)).collect();
         let runner_caps: Vec<usize> =
             (0..plan.config.shards).map(|s| plan.runner_cap(s)).collect();
-        let session = Session::start_plan(plan, move |shard| {
+        Session::start_plan(plan, move |shard| {
             let engine = shard_kinds[shard].spec().build(&BackendCtx {
                 weights: &weights,
                 fixed_spec: FixedSpec::new(width, integer),
@@ -529,7 +570,47 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             })?;
             Ok(Box::new(EngineRunner::new(engine, runner_caps[shard]))
                 as Box<dyn BatchRunner>)
-        })?;
+        })?
+    };
+
+    let report = if listen.is_some() {
+        // Network run: put the wire front-end over the live session,
+        // hold the listener open for the configured window, then
+        // drain-then-close (same shutdown contract as in-process).
+        let serve_for =
+            Duration::from_millis(args.parse_num("serve-for-ms", 10_000u64)?);
+        let server = session.serve_listener()?;
+        match server.metrics_addr() {
+            Some(m) => println!(
+                "listening on {} (metrics on {m}) for {} ms — drive it \
+                 with `loadgen --addr {}`",
+                server.local_addr(),
+                serve_for.as_millis(),
+                server.local_addr(),
+            ),
+            None => println!(
+                "listening on {} for {} ms — drive it with \
+                 `loadgen --addr {}`",
+                server.local_addr(),
+                serve_for.as_millis(),
+                server.local_addr(),
+            ),
+        }
+        std::thread::sleep(serve_for);
+        let net = server.shutdown()?;
+        println!(
+            "net: accepted {} refused {} requests {} replies {} \
+             wire_errors {} malformed {} stranded {}",
+            net.accepted,
+            net.refused,
+            net.requests,
+            net.replies,
+            net.wire_errors,
+            net.malformed,
+            net.stranded,
+        );
+        net.serving
+    } else {
         session.replay(generator);
         session.shutdown()?
     };

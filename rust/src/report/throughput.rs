@@ -156,11 +156,20 @@ pub struct ServingBenchRow {
     pub max_batch: usize,
     /// Batcher deadline (µs) the row's shards served under.
     pub max_wait_us: u64,
+    /// Offered load, events/s (schema v5): the arrival rate the row was
+    /// measured under — `samples_per_sec` is only meaningful relative
+    /// to it (a saturation curve is rows sharing a config shape across
+    /// offered rates).
+    pub offered_hz: f64,
     pub samples_per_sec: f64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub completed: u64,
     pub dropped: u64,
+    /// Wire-level `SHED` rejections the load generator observed (schema
+    /// v5; 0 for in-process sweeps, whose queue-full drops land in
+    /// `dropped`).
+    pub shed: u64,
 }
 
 /// Shards × policy serving sweep on the synthetic float engine (no
@@ -206,6 +215,7 @@ pub fn shard_sweep(
             // Batcher columns come from the measured config itself, so
             // tuning the sweep can never desynchronize the artifact.
             let batcher = cfg.server.batcher;
+            let offered_hz = cfg.server.source.rate_hz;
             let report = ShardedServer::run(cfg, generator, move |_shard| {
                 let engine = FloatEngine::new(&weights)?;
                 Ok(Box::new(EngineRunner::new(Box::new(engine), 32))
@@ -222,11 +232,13 @@ pub fn shard_sweep(
                 backend: "float".to_string(),
                 max_batch: batcher.max_batch,
                 max_wait_us: batcher.max_wait.as_micros() as u64,
+                offered_hz,
                 samples_per_sec: report.merged.throughput_hz,
                 p50_us: report.merged.p50_latency_us,
                 p99_us: report.merged.p99_latency_us,
                 completed: report.merged.completed,
                 dropped: report.merged.dropped,
+                shed: 0,
             });
         }
     }
@@ -292,11 +304,13 @@ pub fn mixed_backend_sweep(
             backend: name.to_string(),
             max_batch: server.batcher.max_batch,
             max_wait_us: server.batcher.max_wait.as_micros() as u64,
+            offered_hz: server.source.rate_hz,
             samples_per_sec: report.merged.throughput_hz,
             p50_us: report.merged.p50_latency_us,
             p99_us: report.merged.p99_latency_us,
             completed: report.merged.completed,
             dropped: report.merged.dropped,
+            shed: 0,
         });
     }
 
@@ -331,11 +345,13 @@ pub fn mixed_backend_sweep(
             backend: tier.backend.clone(),
             max_batch: tier.batcher.max_batch,
             max_wait_us: tier.batcher.max_wait.as_micros() as u64,
+            offered_hz: server.source.rate_hz,
             samples_per_sec: tier.report.throughput_hz,
             p50_us: tier.report.p50_latency_us,
             p99_us: tier.report.p99_latency_us,
             completed: tier.report.completed,
             dropped: tier.report.dropped,
+            shed: 0,
         });
     }
     Ok(rows)
@@ -408,11 +424,13 @@ pub fn tier_batch_sweep(
             backend: tier.backend.clone(),
             max_batch: tier.batcher.max_batch,
             max_wait_us: tier.batcher.max_wait.as_micros() as u64,
+            offered_hz: 2_000_000.0,
             samples_per_sec: tier.report.throughput_hz,
             p50_us: tier.report.p50_latency_us,
             p99_us: tier.report.p99_latency_us,
             completed: tier.report.completed,
             dropped: tier.report.dropped,
+            shed: 0,
         });
     }
     Ok(rows)
@@ -452,11 +470,13 @@ pub fn session_submit_sweep(
         backend: "float".to_string(),
         max_batch: batcher.max_batch,
         max_wait_us: batcher.max_wait.as_micros() as u64,
+        offered_hz: source.rate_hz,
         samples_per_sec: merged.throughput_hz,
         p50_us: merged.p50_latency_us,
         p99_us: merged.p99_latency_us,
         completed: merged.completed,
         dropped: merged.dropped,
+        shed: 0,
     };
     let mut rows = Vec::new();
 
@@ -518,6 +538,118 @@ pub fn session_submit_sweep(
     Ok(rows)
 }
 
+/// Network saturation curve: the heterogeneous fixed+float session of
+/// [`mixed_backend_sweep`] served over a real TCP listener
+/// ([`Session::serve_listener`]) and driven by the open-loop
+/// [`loadgen`](crate::ingest::loadgen) harness at a ladder of offered
+/// rates (20 k / 100 k / 400 k ev/s) — under-, near-, and
+/// over-saturation.  Each load point contributes:
+///
+/// * one merged row (`loadgen_r{rate}k_merged_w*`, backend `mixed`)
+///   carrying the *client-observed* round-trip p50/p99, the achieved
+///   completion rate, and the wire-level `shed` count — the saturation
+///   curve proper;
+/// * one row per backend tier (`loadgen_r{rate}k_{fixed,float}_w*`)
+///   carrying the server-side per-tier p50/p99 under that offered load
+///   — per-tier latency **under overload**, the quantity the paper's
+///   trigger budget is about.
+///
+/// Every point asserts the end-to-end accounting identity
+/// (`generated == completed + shed + closed + lost`) before reporting —
+/// the first measurement where the identity crosses a process boundary.
+pub fn loadgen_sweep(
+    workers_per_shard: usize,
+    events_per_point: usize,
+) -> anyhow::Result<Vec<ServingBenchRow>> {
+    use crate::ingest::loadgen::{run_load, LoadConfig, Profile};
+
+    let arch = zoo::arch("top", Cell::Gru)?;
+    let weights = Weights::synthetic(&arch, 0x5EED5);
+    let fixed_spec = FixedSpec::new(16, 6);
+    let feature_len = arch.seq_len * arch.input_size;
+    let mut rows = Vec::new();
+
+    for &offered_hz in &[20_000.0f64, 100_000.0, 400_000.0] {
+        let spec = ServingSpec::default()
+            .with_backends(vec![BackendKind::Fixed, BackendKind::Float])
+            .with_shards(2)
+            .with_shard_policy(ShardPolicy::ModelKey)
+            .with_tier_mix(TierMix::new(&[0.9, 0.1], 0x7135)?)
+            .with_workers(workers_per_shard)
+            .with_queue_capacity(8192)
+            .with_listener("127.0.0.1:0".parse()?);
+        let plan = spec.build()?;
+        let caps: Vec<usize> =
+            (0..2).map(|shard| plan.runner_cap(shard)).collect();
+        let kinds: Vec<BackendKind> =
+            (0..2).map(|shard| plan.kind_for(shard)).collect();
+        let factory_weights = weights.clone();
+        let session = Session::start_plan(plan, move |shard| {
+            let engine = kinds[shard].spec().build(&BackendCtx {
+                weights: &factory_weights,
+                fixed_spec,
+                parallelism: 1,
+            })?;
+            Ok(Box::new(EngineRunner::new(engine, caps[shard]))
+                as Box<dyn crate::coordinator::BatchRunner>)
+        })?;
+        let server = session.serve_listener()?;
+
+        let mut load = LoadConfig::new(server.local_addr());
+        load.clients = 1000;
+        load.connections = 4;
+        load.rate_hz = offered_hz;
+        load.events = events_per_point;
+        load.profile = Profile::Poisson;
+        load.feature_len = feature_len;
+        let report = run_load(&load)?;
+        report.check_identity()?;
+        let net = server.shutdown()?;
+
+        let rate_k = (offered_hz / 1000.0) as u64;
+        rows.push(ServingBenchRow {
+            config: format!("loadgen_r{rate_k}k_merged_w{workers_per_shard}"),
+            shards: 2,
+            policy: "model-key".to_string(),
+            workers_per_shard,
+            backend: "mixed".to_string(),
+            max_batch: 0,
+            max_wait_us: 0,
+            offered_hz,
+            // Client-observed numbers: achieved rate and round-trip
+            // latency over the socket.
+            samples_per_sec: report.completed_hz(),
+            p50_us: report.latency.quantile_us(0.5),
+            p99_us: report.latency.quantile_us(0.99),
+            completed: report.completed,
+            dropped: net.serving.merged.dropped,
+            shed: report.shed,
+        });
+        for tier in &net.serving.per_backend {
+            rows.push(ServingBenchRow {
+                config: format!(
+                    "loadgen_r{rate_k}k_{}_w{workers_per_shard}",
+                    tier.backend
+                ),
+                shards: 2,
+                policy: "model-key".to_string(),
+                workers_per_shard,
+                backend: tier.backend.clone(),
+                max_batch: tier.batcher.max_batch,
+                max_wait_us: tier.batcher.max_wait.as_micros() as u64,
+                offered_hz,
+                samples_per_sec: tier.report.throughput_hz,
+                p50_us: tier.report.p50_latency_us,
+                p99_us: tier.report.p99_latency_us,
+                completed: tier.report.completed,
+                dropped: tier.report.dropped,
+                shed: tier.report.dropped,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// Emit the sweep as machine-readable JSON (the CI bench artifact).
 pub fn write_bench_json(
     path: &Path,
@@ -535,7 +667,11 @@ pub fn write_bench_json(
         // the session-API overhead sweep, so the live request path is a
         // tracked trajectory next to the replay path it must keep up
         // with.
-        ("schema_version", json::num(4.0)),
+        // v5: `offered_hz` + `shed` on every row, plus the network
+        // saturation-curve rows (`loadgen_r*`) from the socket-level
+        // loadgen sweep — per-tier p99 under overload becomes a tracked
+        // trajectory, measured across a real process boundary.
+        ("schema_version", json::num(5.0)),
         (
             "rows",
             json::arr(
@@ -552,6 +688,7 @@ pub fn write_bench_json(
                                 "workers_per_shard",
                                 json::num(r.workers_per_shard as f64),
                             ),
+                            ("offered_hz", json::num(r.offered_hz)),
                             (
                                 "samples_per_sec",
                                 json::num(r.samples_per_sec),
@@ -560,6 +697,7 @@ pub fn write_bench_json(
                             ("p99_us", json::num(r.p99_us)),
                             ("completed", json::num(r.completed as f64)),
                             ("dropped", json::num(r.dropped as f64)),
+                            ("shed", json::num(r.shed as f64)),
                         ])
                     })
                     .collect(),
@@ -650,7 +788,7 @@ mod tests {
         assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "serving");
         assert_eq!(
             parsed.req("schema_version").unwrap().as_usize().unwrap(),
-            4
+            5
         );
         let json_rows = parsed.req("rows").unwrap().as_array().unwrap();
         assert_eq!(json_rows.len(), 2);

@@ -1,0 +1,710 @@
+//! Network ingest acceptance suite — the wire protocol and the TCP
+//! front-end over the live `Session`:
+//!
+//! (a) **framing round-trips**: every frame type survives
+//!     encode → decode and write_frame → read_frame bitwise, including
+//!     non-finite floats (compared by bit pattern);
+//! (b) **garbage never panics**: truncation at every byte boundary, bad
+//!     magic/version/type, oversized length claims, lying counts, and
+//!     seeded random byte soup all land in typed `FrameError`s;
+//! (c) **the socket is semantics-free**: a request stream served over
+//!     TCP produces outputs bitwise identical to the same stream
+//!     submitted in-process, for 1 and 4 shards;
+//! (d) **typed backpressure end-to-end**: a full shard queue answers
+//!     `SHED` frames, connection admission control answers `BUSY`, and
+//!     the client-side ledger balances (`sent == responses + sheds`);
+//! (e) **drain-then-close**: shutdown with requests still in flight
+//!     writes every deliverable reply before closing the socket;
+//! (f) **metrics grammar**: the metrics endpoint emits the documented
+//!     line-oriented snapshot, terminated by `end`.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rnn_hls::api::{BackendKind, ErrorCode, ServingSpec, Session};
+use rnn_hls::coordinator::BatchRunner;
+use rnn_hls::ingest::wire::{
+    read_frame, write_frame, Frame, FrameError, WireError, WireRequest,
+    WireResponse, HEADER_LEN, MAX_PAYLOAD, WIRE_MAGIC, WIRE_VERSION,
+};
+use rnn_hls::util::sync::mpsc::{self, Receiver};
+use rnn_hls::util::sync::{lock_or_recover, Mutex};
+
+const FEATURE_LEN: usize = 8;
+
+// ------------------------------------------------------------ test rig
+
+/// Deterministic per-row output: a pure function of the features, so
+/// batch composition, shard routing, and transport cannot change it.
+fn pure_output(row: &[f32]) -> Vec<f32> {
+    let sum: f32 = row.iter().sum();
+    vec![row[0] * 0.5 + row[1], sum * 0.125]
+}
+
+struct PureRunner;
+
+impl BatchRunner for PureRunner {
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let stride = xs.len() / n.max(1);
+        Ok((0..n)
+            .map(|i| pure_output(&xs[i * stride..(i + 1) * stride]))
+            .collect())
+    }
+}
+
+/// Features for event `i` — the index embedded exactly in f32.
+fn features_for(i: u64) -> Vec<f32> {
+    let mut features = vec![0.0f32; FEATURE_LEN];
+    features[0] = i as f32;
+    features[1] = (i % 13) as f32 * 0.25;
+    features
+}
+
+fn listener_spec(shards: usize) -> ServingSpec {
+    ServingSpec {
+        engine: BackendKind::Float, // factory overrides; field unused
+        shards,
+        workers: 2,
+        queue_capacity: 16_384,
+        ..ServingSpec::default()
+    }
+    .with_batcher(8, Duration::from_micros(100))
+    .with_listener("127.0.0.1:0".parse().unwrap())
+}
+
+fn start_pure(spec: &ServingSpec) -> Session {
+    Session::start(spec, |_shard| {
+        Ok(Box::new(PureRunner) as Box<dyn BatchRunner>)
+    })
+    .unwrap()
+}
+
+/// Tiny deterministic generator for the property-style framing tests.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+// --------------------------------------------------- (a) framing round-trip
+
+/// Every frame type round-trips through both the buffer API
+/// (encode/decode) and the stream API (write_frame/read_frame), over a
+/// seeded sweep of shapes including empty and large float vectors.
+#[test]
+fn frames_round_trip_bitwise() {
+    let mut rng = Rng(0xF4A3E);
+    let mut frames = Vec::new();
+    for round in 0..200u64 {
+        let n = (rng.next() % 65) as usize;
+        let floats = |rng: &mut Rng| -> Vec<f32> {
+            (0..n)
+                .map(|_| (rng.next() % 100_000) as f32 * 0.0625 - 3125.0)
+                .collect()
+        };
+        frames.push(match round % 3 {
+            0 => Frame::Request(WireRequest {
+                seq: rng.next(),
+                label: rng.next() as u32,
+                features: floats(&mut rng),
+            }),
+            1 => Frame::Response(WireResponse {
+                seq: rng.next(),
+                id: rng.next(),
+                shard: rng.next() as u32,
+                output: floats(&mut rng),
+            }),
+            _ => Frame::Error(WireError {
+                seq: rng.next(),
+                code: ErrorCode::from_u8((round % 4) as u8 + 1).unwrap(),
+            }),
+        });
+    }
+    for frame in &frames {
+        let bytes = frame.encode();
+        let (decoded, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(&decoded, frame);
+        assert_eq!(used, bytes.len());
+    }
+    // Stream API: all frames concatenated through one reader.
+    let mut stream = Vec::new();
+    for frame in &frames {
+        write_frame(&mut stream, frame).unwrap();
+    }
+    let mut reader = &stream[..];
+    for frame in &frames {
+        let got = read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(&got, frame);
+    }
+    assert!(read_frame(&mut reader).unwrap().is_none(), "clean EOF");
+}
+
+/// Non-finite floats survive by bit pattern (PartialEq would lie about
+/// NaN, so compare `to_bits`).
+#[test]
+fn non_finite_floats_round_trip_by_bits() {
+    let payload = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+    let frame = Frame::Request(WireRequest {
+        seq: 9,
+        label: 3,
+        features: payload.clone(),
+    });
+    let (decoded, _) = Frame::decode(&frame.encode()).unwrap();
+    let Frame::Request(got) = decoded else {
+        panic!("wrong frame type");
+    };
+    let want: Vec<u32> = payload.iter().map(|x| x.to_bits()).collect();
+    let have: Vec<u32> = got.features.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(want, have);
+}
+
+// ------------------------------------------------- (b) garbage rejection
+
+/// Truncation at *every* byte boundary of a valid frame is a typed
+/// `Truncated`, never a panic or a bogus parse.
+#[test]
+fn truncation_at_every_boundary_is_typed() {
+    let frame = Frame::Response(WireResponse {
+        seq: 42,
+        id: 7,
+        shard: 1,
+        output: vec![1.0, -2.5, 0.125],
+    });
+    let bytes = frame.encode();
+    for cut in 0..bytes.len() {
+        let err = Frame::decode(&bytes[..cut]).unwrap_err();
+        assert!(
+            matches!(err, FrameError::Truncated),
+            "cut at {cut}: {err}"
+        );
+        // The stream reader agrees: EOF inside a frame is Truncated,
+        // except the zero-byte case which is a clean end-of-stream.
+        let mut reader = &bytes[..cut];
+        match read_frame(&mut reader) {
+            Ok(None) => assert_eq!(cut, 0, "only empty input is clean EOF"),
+            Ok(Some(_)) => panic!("cut at {cut}: parsed a partial frame"),
+            Err(e) => {
+                assert!(matches!(e, FrameError::Truncated), "cut {cut}: {e}")
+            }
+        }
+    }
+}
+
+/// Corrupted headers land in their specific error variants; a length
+/// claim beyond the cap is rejected before any allocation.
+#[test]
+fn corrupted_headers_are_typed() {
+    let good = Frame::Error(WireError {
+        seq: 1,
+        code: ErrorCode::Shed,
+    })
+    .encode();
+
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(matches!(
+        Frame::decode(&bad_magic).unwrap_err(),
+        FrameError::BadMagic(_)
+    ));
+
+    let mut bad_version = good.clone();
+    bad_version[2] = WIRE_VERSION + 1;
+    assert!(matches!(
+        Frame::decode(&bad_version).unwrap_err(),
+        FrameError::BadVersion(_)
+    ));
+
+    let mut bad_type = good.clone();
+    bad_type[3] = 9;
+    assert!(matches!(
+        Frame::decode(&bad_type).unwrap_err(),
+        FrameError::BadType(9)
+    ));
+
+    let mut oversized = good.clone();
+    oversized[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&oversized).unwrap_err(),
+        FrameError::Oversized(_)
+    ));
+
+    // Unknown error code byte in an otherwise valid Error frame.
+    let mut bad_code = good.clone();
+    let last = bad_code.len() - 1;
+    bad_code[last] = 200;
+    assert!(matches!(
+        Frame::decode(&bad_code).unwrap_err(),
+        FrameError::BadPayload(_)
+    ));
+
+    // Trailing bytes after the payload fields.
+    let mut trailing = good.clone();
+    trailing.extend_from_slice(&[0u8; 3]);
+    let grown = (trailing.len() - HEADER_LEN) as u32;
+    trailing[4..8].copy_from_slice(&grown.to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&trailing).unwrap_err(),
+        FrameError::BadPayload(_)
+    ));
+}
+
+/// Seeded byte soup: the decoder must return *something typed* for any
+/// input (this test passing at all is the no-panic property).
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Rng(0xBAD_BEEF);
+    for _ in 0..500 {
+        let len = (rng.next() % 96) as usize;
+        let mut bytes: Vec<u8> =
+            (0..len).map(|_| rng.next() as u8).collect();
+        let _ = Frame::decode(&bytes);
+        let mut reader = &bytes[..];
+        let _ = read_frame(&mut reader);
+        // Same soup behind a valid magic/version prefix, exercising the
+        // deeper paths.
+        if bytes.len() >= 3 {
+            bytes[..2].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+            bytes[2] = WIRE_VERSION;
+            let _ = Frame::decode(&bytes);
+            let mut reader = &bytes[..];
+            let _ = read_frame(&mut reader);
+        }
+    }
+}
+
+// -------------------------------------- (c) socket ≡ in-process, bitwise
+
+/// Submit `n` events in-process and collect outputs keyed by event
+/// index (via the session-id → index map built at submit time).
+fn serve_in_process(shards: usize, n: u64) -> HashMap<u64, Vec<f32>> {
+    let spec = listener_spec(shards); // listener unused on this path
+    let session = start_pure(&spec);
+    let mut index_of = HashMap::new();
+    for i in 0..n {
+        let request = session.prepare_event(features_for(i), (i % 2) as u32);
+        index_of.insert(request.id, i);
+        session.submit(request).unwrap();
+    }
+    let mut outputs = HashMap::new();
+    for _ in 0..n {
+        let completion = session.recv().expect("fabric alive");
+        let index = index_of[&completion.id];
+        assert!(outputs.insert(index, completion.output).is_none());
+    }
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.completed, n);
+    assert_eq!(report.merged.dropped, 0);
+    outputs
+}
+
+/// Submit the same `n` events over TCP and collect outputs keyed by the
+/// client-chosen `seq` (which *is* the event index).
+fn serve_over_tcp(shards: usize, n: u64) -> HashMap<u64, Vec<f32>> {
+    let session = start_pure(&listener_spec(shards));
+    let server = session.serve_listener().unwrap();
+
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    for i in 0..n {
+        let frame = Frame::Request(WireRequest {
+            seq: i,
+            label: (i % 2) as u32,
+            features: features_for(i),
+        });
+        write_frame(&mut stream, &frame).unwrap();
+    }
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut outputs = HashMap::new();
+    loop {
+        match read_frame(&mut stream).expect("live connection") {
+            Some(Frame::Response(resp)) => {
+                assert!((resp.shard as usize) < shards);
+                assert!(
+                    outputs.insert(resp.seq, resp.output).is_none(),
+                    "seq {} answered twice",
+                    resp.seq
+                );
+            }
+            Some(other) => panic!("unexpected frame {other:?}"),
+            None => break, // server drained our replies, then EOF
+        }
+    }
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests, n);
+    assert_eq!(report.replies, n);
+    assert_eq!(report.serving.merged.completed, n);
+    assert_eq!(report.serving.merged.dropped, 0);
+    assert_eq!(report.stranded, 0, "no orphaned reply routes");
+    assert_eq!(
+        report.serving.merged.generated,
+        report.serving.merged.completed + report.serving.merged.dropped,
+        "the accounting identity holds across the socket"
+    );
+    outputs
+}
+
+/// (c) The TCP path is semantics-free: bitwise-identical outputs to the
+/// in-process submit path, for 1 and 4 shards.
+#[test]
+fn tcp_serving_is_bitwise_identical_to_in_process() {
+    const N: u64 = 500;
+    for shards in [1usize, 4] {
+        let in_process = serve_in_process(shards, N);
+        let over_tcp = serve_over_tcp(shards, N);
+        assert_eq!(in_process.len(), N as usize);
+        assert_eq!(
+            in_process, over_tcp,
+            "shards={shards}: socket outputs must match in-process"
+        );
+    }
+}
+
+// ------------------------------------------- (d) typed backpressure
+
+/// Runner that parks on a gate so the queue can be filled
+/// deterministically (same rig as tests/session_api.rs).
+struct BlockingRunner {
+    gate: Receiver<()>,
+}
+
+impl BatchRunner for BlockingRunner {
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let _ = self.gate.recv();
+        Ok(vec![vec![0.5]; n])
+    }
+}
+
+/// (d) A full shard queue answers typed `SHED` frames over the wire,
+/// and the client-side books balance exactly: every request is either
+/// answered with a response or a shed — none vanish.
+#[test]
+fn queue_full_sheds_over_tcp() {
+    const SENT: u64 = 50;
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        queue_capacity: 1,
+        ..ServingSpec::default()
+    }
+    .with_batcher(1, Duration::ZERO)
+    .with_listener("127.0.0.1:0".parse().unwrap());
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let slot = Arc::new(Mutex::new(Some(gate_rx)));
+    let session = Session::start(&spec, move |_shard| {
+        let gate = lock_or_recover(&slot)
+            .take()
+            .expect("exactly one worker builds a runner");
+        Ok(Box::new(BlockingRunner { gate }) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    let server = session.serve_listener().unwrap();
+
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    for i in 0..SENT {
+        let frame = Frame::Request(WireRequest {
+            seq: i,
+            label: 0,
+            features: features_for(i),
+        });
+        write_frame(&mut stream, &frame).unwrap();
+    }
+    // Wait until every request has touched the queue (each submit
+    // counts `generated` whether admitted or shed) *before* releasing
+    // the wedged worker — otherwise a fast engine could drain the
+    // 1-deep queue between frames and nothing would shed.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.snapshot().merged.generated < SENT {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "requests never reached the queue"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(gate_tx);
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let (mut responses, mut sheds) = (0u64, 0u64);
+    loop {
+        match read_frame(&mut stream).expect("live connection") {
+            Some(Frame::Response(_)) => responses += 1,
+            Some(Frame::Error(err)) => {
+                assert_eq!(err.code, ErrorCode::Shed, "only shed expected");
+                assert!(err.seq < SENT, "shed echoes the request's seq");
+                sheds += 1;
+            }
+            Some(other) => panic!("unexpected frame {other:?}"),
+            None => break,
+        }
+    }
+    assert!(sheds >= 1, "a 1-deep queue behind a wedged worker must shed");
+    assert!(responses >= 1, "admitted requests must still be served");
+    assert_eq!(responses + sheds, SENT, "client ledger must balance");
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests, SENT);
+    // Server-side identity: every attempt counted generated, every
+    // shed is a counted drop, and the two ledgers agree.
+    assert_eq!(report.serving.merged.generated, SENT);
+    assert_eq!(report.serving.merged.completed, responses);
+    assert_eq!(report.serving.merged.dropped, sheds);
+    assert_eq!(report.wire_errors, sheds);
+}
+
+/// (d) Beyond `max_connections` accepted-but-unfinished connections the
+/// accept loop answers `BUSY` — connection-level admission control,
+/// before anything touches the session.
+#[test]
+fn connection_flood_is_answered_busy() {
+    let spec = listener_spec(1).with_max_connections(1);
+    let session = start_pure(&spec);
+    let server = session.serve_listener().unwrap();
+
+    // First connection occupies the only slot (held open, idle).
+    let holder = TcpStream::connect(server.local_addr()).unwrap();
+    // Let the accept loop admit it before the second arrives.
+    std::thread::sleep(Duration::from_millis(200));
+
+    let mut second = TcpStream::connect(server.local_addr()).unwrap();
+    second
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    match read_frame(&mut second).expect("live connection") {
+        Some(Frame::Error(err)) => {
+            assert_eq!(err.code, ErrorCode::Busy);
+            assert_eq!(err.seq, 0, "connection-level: no request seq");
+        }
+        other => panic!("expected BUSY, got {other:?}"),
+    }
+    drop(second);
+    drop(holder);
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.refused, 1);
+    assert_eq!(report.accepted, 1);
+}
+
+/// (d) Garbage bytes on an accepted connection answer `MALFORMED` and
+/// drop the connection — the serving fabric is untouched.
+#[test]
+fn garbage_bytes_answer_malformed() {
+    let session = start_pure(&listener_spec(1));
+    let server = session.serve_listener().unwrap();
+
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    std::io::Write::write_all(&mut stream, b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    match read_frame(&mut stream).expect("live connection") {
+        Some(Frame::Error(err)) => {
+            assert_eq!(err.code, ErrorCode::Malformed)
+        }
+        other => panic!("expected MALFORMED, got {other:?}"),
+    }
+    // The server hangs up after the answer.
+    assert!(matches!(read_frame(&mut stream), Ok(None) | Err(_)));
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.malformed, 1);
+    assert_eq!(report.serving.merged.generated, 0, "fabric untouched");
+}
+
+// ------------------------------------------------ (e) drain-then-close
+
+/// (e) Shutdown with requests still wedged in the engine: the edge
+/// waits (accepts closed, session draining) and every in-flight reply
+/// reaches the client before its socket closes — the drain-then-close
+/// protocol, observed from outside the process.
+#[test]
+fn shutdown_drains_in_flight_replies() {
+    const IN_FLIGHT: u64 = 4;
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        workers: 1,
+        queue_capacity: 64,
+        ..ServingSpec::default()
+    }
+    .with_batcher(1, Duration::ZERO)
+    .with_listener("127.0.0.1:0".parse().unwrap());
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let slot = Arc::new(Mutex::new(Some(gate_rx)));
+    let session = Session::start(&spec, move |_shard| {
+        let gate = lock_or_recover(&slot)
+            .take()
+            .expect("exactly one worker builds a runner");
+        Ok(Box::new(BlockingRunner { gate }) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    let server = session.serve_listener().unwrap();
+    let addr = server.local_addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    for i in 0..IN_FLIGHT {
+        let frame = Frame::Request(WireRequest {
+            seq: i,
+            label: 0,
+            features: features_for(i),
+        });
+        write_frame(&mut stream, &frame).unwrap();
+    }
+    // Wait until the edge has admitted all of them into the session.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.snapshot().merged.generated < IN_FLIGHT {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "requests never admitted"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Shut down with the engine still wedged; release it shortly after,
+    // from another thread — shutdown must block until the replies flow.
+    let release = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        drop(gate_tx);
+    });
+    let report = server.shutdown().unwrap();
+    release.join().unwrap();
+
+    // Every in-flight reply was written before the socket closed.
+    let mut got = 0u64;
+    loop {
+        match read_frame(&mut stream).expect("live connection") {
+            Some(Frame::Response(_)) => got += 1,
+            Some(other) => panic!("unexpected frame {other:?}"),
+            None => break,
+        }
+    }
+    assert_eq!(got, IN_FLIGHT, "drain-then-close must deliver replies");
+    assert_eq!(report.replies, IN_FLIGHT);
+    assert_eq!(report.serving.merged.completed, IN_FLIGHT);
+    assert_eq!(report.stranded, 0);
+}
+
+// --------------------------------------------------- (f) metrics grammar
+
+/// (f) The metrics endpoint answers one snapshot in the documented
+/// grammar: `key value` lines, floats parseable, `end` terminator.
+#[test]
+fn metrics_endpoint_speaks_the_grammar() {
+    const N: u64 = 100;
+    let spec = listener_spec(1)
+        .with_metrics_listener("127.0.0.1:0".parse().unwrap());
+    let session = start_pure(&spec);
+    let server = session.serve_listener().unwrap();
+    let metrics_addr = server.metrics_addr().expect("metrics bound");
+
+    // Serve a little traffic so the counters are non-trivial.
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    for i in 0..N {
+        let frame = Frame::Request(WireRequest {
+            seq: i,
+            label: 0,
+            features: features_for(i),
+        });
+        write_frame(&mut stream, &frame).unwrap();
+    }
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    while read_frame(&mut stream).expect("live connection").is_some() {}
+
+    let mut metrics = TcpStream::connect(metrics_addr).unwrap();
+    metrics
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut body = String::new();
+    metrics.read_to_string(&mut body).unwrap();
+
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.last(), Some(&"end"), "grammar: end terminator");
+    let mut seen = HashMap::new();
+    for line in &lines[..lines.len() - 1] {
+        let mut parts = line.split_whitespace();
+        let key = parts.next().expect("key on every line");
+        if key == "backend" {
+            continue; // homogeneous session: not expected, but legal
+        }
+        let value = parts.next().expect("value on every line");
+        assert!(parts.next().is_none(), "grammar: key value only: {line}");
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "grammar: numeric value: {line}"
+        );
+        seen.insert(key.to_string(), value.to_string());
+    }
+    for key in [
+        "generated",
+        "completed",
+        "dropped",
+        "shed_completions",
+        "connections_accepted",
+        "connections_refused",
+        "p50_us",
+        "p99_us",
+        "throughput_hz",
+    ] {
+        assert!(seen.contains_key(key), "grammar: missing {key}\n{body}");
+    }
+    assert_eq!(seen["generated"], N.to_string());
+    assert_eq!(seen["completed"], N.to_string());
+    assert_eq!(seen["connections_accepted"], "1");
+
+    server.shutdown().unwrap();
+}
+
+// ------------------------------------------------------- spec plumbing
+
+/// A session whose spec named no listener refuses `serve_listener` with
+/// the uniform error style, and the typed error codes line up with the
+/// in-process rejections they mirror.
+#[test]
+fn serve_listener_requires_a_spec_listener() {
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        ..ServingSpec::default()
+    };
+    let session = start_pure(&spec);
+    let err = session.serve_listener().unwrap_err().to_string();
+    assert!(err.contains("no listener"), "{err}");
+
+    // The wire codes are the in-process codes: one mapping, both sides.
+    assert_eq!(ErrorCode::Shed as u8, 1);
+    assert_eq!(ErrorCode::Closed as u8, 2);
+    let spec = ServingSpec {
+        engine: BackendKind::Float,
+        ..ServingSpec::default()
+    };
+    let session = start_pure(&spec);
+    let request = session.prepare_event(features_for(0), 0);
+    session.submit(request).unwrap();
+    let _ = session.recv();
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.completed, 1);
+}

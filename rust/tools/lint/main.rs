@@ -20,6 +20,13 @@
 //!   through `lock_or_recover`, which survives poisoning.
 //! * **R4 unsafe-allowlist** — `unsafe` only in allowlisted files, and
 //!   there only with a `SAFETY:` comment in the preceding lines.
+//! * **R5 net-confinement** — the network front-end
+//!   (`src/coordinator/net*`) and the ingest layer (`src/ingest/`)
+//!   must take atomics and threads through `crate::util::sync` too: no
+//!   `std::sync::atomic` or `std::thread` paths there.  Elsewhere
+//!   `std::sync::atomic` stays legal (R1's scope); these modules are
+//!   newest and fully shim-instrumented, so the model checker sees
+//!   every sync point they touch.
 //!
 //! `lint --self-test` runs a seeded-violation negative suite: every
 //! rule must fire on a synthetic violation and stay quiet on the clean
@@ -45,6 +52,15 @@ const UNSAFE_ALLOWLIST: [&str; 1] = ["src/util/threads.rs"];
 
 /// Tokens whose import from `std::sync` is confined to the shim.
 const GATEWAY_TOKENS: [&str; 4] = ["Mutex", "MutexGuard", "Condvar", "mpsc"];
+
+/// Paths fully confined to the `util::sync` shim (R5): even atomics and
+/// threads, which R1 leaves legal elsewhere, must come through the shim
+/// here so the model checker instruments every sync point.
+const NET_CONFINED_PREFIXES: [&str; 2] =
+    ["src/coordinator/net", "src/ingest/"];
+
+/// Paths R5 forbids in the confined modules.
+const NET_CONFINED_PATHS: [&str; 2] = ["std::sync::atomic", "std::thread"];
 
 /// How far above an `unsafe` keyword the `SAFETY:` comment may sit
 /// (the threads.rs transmute carries an 18-line justification).
@@ -93,7 +109,8 @@ fn main() -> ExitCode {
     if violations.is_empty() {
         println!(
             "lint: {} file(s) clean (R1 sync-gateway, R2 \
-             accounting-ordering, R3 lock-recovery, R4 unsafe-allowlist)",
+             accounting-ordering, R3 lock-recovery, R4 unsafe-allowlist, \
+             R5 net-confinement)",
             files.len()
         );
         ExitCode::SUCCESS
@@ -145,7 +162,40 @@ fn check_file(rel: &str, content: &str) -> Vec<Violation> {
     }
     rule_accounting_ordering(rel, &lines, &mut out);
     rule_unsafe_allowlist(rel, &lines, &raw_lines, allow_unsafe, &mut out);
+    if NET_CONFINED_PREFIXES.iter().any(|p| rel.contains(p)) {
+        rule_net_confinement(rel, &lines, &mut out);
+    }
     out
+}
+
+/// R5: the network/ingest modules route *all* sync — atomics and
+/// threads included — through `crate::util::sync`.
+fn rule_net_confinement(
+    rel: &str,
+    lines: &[String],
+    out: &mut Vec<Violation>,
+) {
+    for (idx, line) in lines.iter().enumerate() {
+        for path in NET_CONFINED_PATHS {
+            if line.contains(path) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "R5",
+                    message: format!(
+                        "`{path}` in a shim-confined module — use \
+                         `crate::util::sync::{}` so the model checker \
+                         instruments it",
+                        if path.ends_with("atomic") {
+                            "atomic"
+                        } else {
+                            "thread"
+                        }
+                    ),
+                });
+            }
+        }
+    }
 }
 
 /// R1: sync primitives enter the crate only through `util::sync`.
@@ -484,6 +534,32 @@ fn self_test() -> ExitCode {
             source: "// SAFETY: lifetimes only; the call frame outlives\n\
                      // every job (collection loop blocks on all reports).\n\
                      let p = unsafe { std::mem::transmute(q) };\n",
+            expect: &[],
+        },
+        Case {
+            name: "R5 fires on std::thread in the net front-end",
+            file: "src/coordinator/net.rs",
+            source: "let h = std::thread::spawn(|| serve());\n",
+            expect: &["R5"],
+        },
+        Case {
+            name: "R5 fires on a std::sync::atomic import in ingest",
+            file: "src/ingest/loadgen.rs",
+            source: "use std::sync::atomic::AtomicU64;\n",
+            expect: &["R5"],
+        },
+        Case {
+            name: "R5 leaves Arc and shim imports alone in ingest",
+            file: "src/ingest/wire.rs",
+            source: "use std::sync::Arc;\n\
+                     use crate::util::sync::thread;\n\
+                     use crate::util::sync::atomic::AtomicU64;\n",
+            expect: &[],
+        },
+        Case {
+            name: "R5 does not apply outside the confined modules",
+            file: "src/coordinator/server.rs",
+            source: "use std::sync::atomic::AtomicU64;\n",
             expect: &[],
         },
     ];
