@@ -38,6 +38,12 @@
 //!   (accepts first, then the session), waits for in-flight requests to
 //!   answer, joins every thread, and only then closes sockets — the
 //!   same protocol [`Session::shutdown`] runs in-process.
+//! * **Never wedged by a peer.**  Every socket carries read *and*
+//!   write timeouts.  A client that stops reading is marked dead on
+//!   its first timed-out reply write and its connection is closed (the
+//!   lost reply counts into [`NetReport::stranded`]), so the single
+//!   dispatcher thread can never be head-of-line-blocked behind one
+//!   peer's full send buffer.
 //!
 //! The optional **metrics endpoint** (second listener) answers every
 //! connection with one line-oriented [`Session::snapshot`] roll-up and
@@ -62,7 +68,7 @@
 
 use std::collections::HashMap;
 use std::io::Write;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -84,6 +90,12 @@ const POLL_TICK: Duration = Duration::from_millis(50);
 /// Once bytes are visible on a connection, the whole frame must follow
 /// within this budget — a peer trickling a frame slower is dropped.
 const FRAME_READ_TIMEOUT: Duration = Duration::from_secs(1);
+/// A reply write must complete within this budget.  Every reply is
+/// written by the single dispatcher thread, so a client that stops
+/// reading (full kernel send buffer) would otherwise head-of-line-block
+/// every other connection — and wedge `shutdown` on the dispatcher
+/// join.  A timed-out write marks the peer dead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(1);
 /// How long a closing connection waits for its in-flight requests to
 /// answer before giving up (shed completions would otherwise wedge it).
 const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
@@ -122,14 +134,34 @@ struct ConnWriter {
     /// Requests admitted on this connection whose reply has not been
     /// written yet — the connection's drain phase waits for zero.
     pending: AtomicU64,
+    /// Set on the first failed/timed-out write: the peer stopped
+    /// reading or hung up.  Later sends return immediately and the
+    /// conn worker skips the drain wait — a dead peer must never hold
+    /// the dispatcher (or shutdown) hostage.
+    dead: AtomicBool,
 }
 
 impl ConnWriter {
     /// Best-effort frame write (a peer that hung up loses its reply;
-    /// serving is unaffected).
+    /// serving is unaffected).  A failed or timed-out write marks the
+    /// connection dead and closes it, so the blocked reply is the last
+    /// time anyone waits on this peer.
     fn send(&self, frame: &Frame) -> bool {
+        if self.dead.load(Ordering::SeqCst) {
+            return false;
+        }
         let mut stream = lock_or_recover(&self.stream);
-        write_frame(&mut *stream, frame).is_ok()
+        match write_frame(&mut *stream, frame) {
+            Ok(()) => true,
+            Err(_) => {
+                self.dead.store(true, Ordering::SeqCst);
+                // Kick the reader half out of its poll too: the conn
+                // worker sees the closed socket and retires the
+                // connection instead of serving a dead peer.
+                let _ = stream.shutdown(Shutdown::Both);
+                false
+            }
+        }
     }
 }
 
@@ -162,6 +194,9 @@ struct NetShared {
     wire_errors: AtomicU64,
     /// Connections dropped for unparseable input.
     malformed: AtomicU64,
+    /// Replies whose write failed or timed out (peer stopped reading
+    /// or vanished) — folded into `NetReport::stranded`.
+    undeliverable: AtomicU64,
 }
 
 // ------------------------------------------------------------- NetServer
@@ -188,8 +223,11 @@ pub struct NetReport {
     /// Completions the bounded session channel shed (their clients never
     /// got a reply frame; `stranded` counts their leftover routes).
     pub completions_lost: u64,
-    /// Reply routes still registered at shutdown (requests whose
-    /// completion was shed or whose client vanished).
+    /// Requests whose reply never reached a client: routes still
+    /// registered at shutdown (completion shed, client gone before its
+    /// answer) plus replies whose write failed or timed out (peer
+    /// stopped reading — the dispatcher drops such peers rather than
+    /// block on them).
     pub stranded: u64,
 }
 
@@ -255,6 +293,7 @@ impl NetServer {
             replies: AtomicU64::new(0),
             wire_errors: AtomicU64::new(0),
             malformed: AtomicU64::new(0),
+            undeliverable: AtomicU64::new(0),
         });
 
         let accept_shared = shared.clone();
@@ -351,7 +390,8 @@ impl NetServer {
         }
 
         let completions_lost = shared.session.completions_lost();
-        let stranded = lock_or_recover(&shared.routes).len() as u64;
+        let stranded = lock_or_recover(&shared.routes).len() as u64
+            + shared.undeliverable.load(Ordering::Relaxed);
         let shared = Arc::try_unwrap(shared)
             .map_err(|_| anyhow::anyhow!("front-end state still shared"))?;
         let session = Arc::try_unwrap(shared.session)
@@ -417,6 +457,9 @@ fn accept_loop(shared: &NetShared, listener: TcpListener) {
 fn refuse(shared: &NetShared, mut stream: TcpStream) {
     shared.refused.fetch_add(1, Ordering::SeqCst);
     shared.wire_errors.fetch_add(1, Ordering::SeqCst);
+    // This write happens on the accept thread: a flooder that never
+    // reads must not stall admissions behind its send buffer.
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let busy = Frame::Error(WireError {
         seq: 0,
         code: ErrorCode::Busy,
@@ -451,6 +494,7 @@ fn conn_worker_loop(shared: &NetShared) {
 fn serve_conn(shared: &NetShared, stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut reader = match stream.try_clone() {
         Ok(reader) => reader,
         Err(_) => return,
@@ -458,6 +502,7 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
     let writer = Arc::new(ConnWriter {
         stream: Mutex::new(stream),
         pending: AtomicU64::new(0),
+        dead: AtomicBool::new(false),
     });
 
     let mut clean = true;
@@ -503,6 +548,14 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
                 shared.requests.fetch_add(1, Ordering::SeqCst);
                 admit(shared, &writer, request.seq, request);
             }
+            // A read timeout mid-frame is a slow-trickling (but maybe
+            // well-formed) peer, not garbage: drop the connection
+            // without the MALFORMED answer or counter — the frame
+            // budget is a liveness bound, not a parse verdict.
+            Err(ref e) if e.is_timeout() => {
+                clean = false;
+                break;
+            }
             // Clients speak Requests; a Response/Error from a client is
             // a protocol violation — answer MALFORMED and drop.
             Ok(Some(_)) | Err(_) => {
@@ -526,6 +579,7 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
     if clean {
         let deadline = Instant::now() + DRAIN_DEADLINE;
         while writer.pending.load(Ordering::SeqCst) > 0
+            && !writer.dead.load(Ordering::SeqCst)
             && Instant::now() < deadline
         {
             thread::sleep(Duration::from_millis(1));
@@ -588,6 +642,11 @@ fn dispatch_loop(shared: &NetShared) {
         }));
         if ok {
             shared.replies.fetch_add(1, Ordering::SeqCst);
+        } else {
+            // Dead peer (write failed or timed out): the reply is
+            // stranded, the connection is closed by `send` — the
+            // dispatcher moves on instead of blocking behind it.
+            shared.undeliverable.fetch_add(1, Ordering::SeqCst);
         }
         writer.pending.fetch_sub(1, Ordering::SeqCst);
     }
@@ -611,6 +670,9 @@ fn metrics_loop(shared: &NetShared, listener: TcpListener) {
         if shared.closing.load(Ordering::SeqCst) {
             return;
         }
+        // One thread serves all metrics scrapes: a non-reading peer
+        // must not block the next one out.
+        let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
         let body = render_metrics(shared);
         let _ = stream.write_all(body.as_bytes());
         // Stream drops: one snapshot per connection, like an HTTP GET

@@ -37,14 +37,17 @@ use std::time::{Duration, Instant};
 
 use crate::api::ErrorCode;
 use crate::coordinator::LatencyHistogram;
-use crate::ingest::wire::{
-    read_frame, write_frame, Frame, FrameError, WireRequest,
-};
+use crate::ingest::wire::{read_frame, write_frame, Frame, WireRequest};
 use crate::util::sync::thread;
 use crate::util::sync::{lock_or_recover, Mutex};
 
 /// Reader poll tick (re-checks the give-up deadline between frames).
 const READ_TICK: Duration = Duration::from_millis(250);
+/// Once a reply's first byte is visible, the whole frame must follow
+/// within this budget (same peek-then-read discipline as the server's
+/// conn workers — `read_frame` has no partial-read buffering, so a
+/// timeout mid-frame would desync the stream).
+const FRAME_READ_TIMEOUT: Duration = Duration::from_secs(5);
 /// A reader with in-flight requests gives up this long after the last
 /// frame arrived (a wedged server must not hang the harness).
 const QUIET_DEADLINE: Duration = Duration::from_secs(10);
@@ -402,7 +405,40 @@ fn read_replies(
     };
     let mut last_frame = Instant::now();
     loop {
-        match read_frame(&mut stream) {
+        // Idle-poll with `peek`, mirroring the server's conn workers: a
+        // READ_TICK timeout must never fire after `read_frame` consumed
+        // part of a frame (the retry would start mid-frame, hit
+        // BadMagic, and abandon the connection with its in-flight
+        // events miscounted as lost).  Bytes are consumed only once at
+        // least one is visible; the whole frame then gets a long
+        // budget.
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => break, // clean EOF: all replies in
+            Ok(_) => {}
+            Err(ref e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if last_frame.elapsed() > QUIET_DEADLINE {
+                    break; // wedged server: leftovers count as lost
+                }
+                continue;
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => break, // dead connection
+        }
+        let _ = stream.set_read_timeout(Some(FRAME_READ_TIMEOUT));
+        let frame = read_frame(&mut stream);
+        let _ = stream.set_read_timeout(Some(READ_TICK));
+        match frame {
             Ok(Some(Frame::Response(resp))) => {
                 last_frame = Instant::now();
                 if let Some(sent) =
@@ -441,18 +477,10 @@ fn read_replies(
             // The server never sends Requests; ignore defensively.
             Ok(Some(Frame::Request(_))) => {}
             Ok(None) => break, // clean EOF: all replies in
-            Err(FrameError::Io(ref e))
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                if last_frame.elapsed() > QUIET_DEADLINE {
-                    break; // wedged server: leftovers count as lost
-                }
-            }
-            Err(_) => break, // dead or garbage connection
+            // With the peek gate above, a timeout here means a frame
+            // trickling slower than the budget — treat the connection
+            // as dead, like any garbage or transport failure.
+            Err(_) => break,
         }
     }
     tally

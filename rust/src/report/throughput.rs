@@ -643,7 +643,10 @@ pub fn loadgen_sweep(
                 p99_us: tier.report.p99_latency_us,
                 completed: tier.report.completed,
                 dropped: tier.report.dropped,
-                shed: tier.report.dropped,
+                // Wire-level shed is a client-side observation, only
+                // available merged; a per-tier row's queue-full drops
+                // are already in `dropped` (see the field docs).
+                shed: 0,
             });
         }
     }
