@@ -3,9 +3,10 @@
 # runnable locally:
 #   ./ci.sh                # full gates: build, test, invariant lint,
 #                          # fmt, clippy, doc
-#   ./ci.sh --bench-smoke  # reduced-iteration serving bench; emits
-#                          # BENCH_serving.json (CI uploads it as an
-#                          # artifact to track the perf trajectory)
+#   ./ci.sh --bench-smoke  # reduced-iteration serving + kernel benches;
+#                          # emits BENCH_serving.json and
+#                          # BENCH_kernels.json (CI uploads both as
+#                          # artifacts to track the perf trajectory)
 #   ./ci.sh --analysis     # concurrency analysis: invariant lint +
 #                          # model-check interleaving suite
 #                          # (cargo test --features model-check)
@@ -72,6 +73,28 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     grep -q '"offered_hz":' BENCH_serving.json
     grep -q '"shed":' BENCH_serving.json
     echo "per-backend rows + batcher columns + session rows + loadgen saturation rows present"
+
+    echo "== bench-smoke: hot_paths --smoke (kernels + allocation) =="
+    cargo bench --bench hot_paths -- --smoke --json "$PWD/BENCH_kernels.json"
+    echo "== bench-smoke: BENCH_kernels.json =="
+    test -s BENCH_kernels.json
+    cat BENCH_kernels.json
+    echo "== bench-smoke: kernel schema check =="
+    # Schema, not perf: scalar rows must always be present, and the
+    # dispatched rows must ride next to them so SIMD-vs-scalar stays
+    # comparable across PRs.  simd_compiled/simd_active record whether
+    # the dispatched rows actually exercised the vector path on this
+    # runner (feature-independent: both keys exist either way).
+    grep -q '"bench":"kernels"' BENCH_kernels.json
+    grep -q '"schema_version":1' BENCH_kernels.json
+    grep -q '"simd_compiled":' BENCH_kernels.json
+    grep -q '"simd_active":' BENCH_kernels.json
+    grep -q '"allocs_per_roundtrip":' BENCH_kernels.json
+    grep -q '"name":"float/matmul_acc"' BENCH_kernels.json
+    grep -q '"name":"float/matmul_acc_scalar"' BENCH_kernels.json
+    grep -q '"name":"fixed/matmul_acc"' BENCH_kernels.json
+    grep -q '"name":"fixed/matmul_acc_scalar"' BENCH_kernels.json
+    echo "kernel rows (dispatched + scalar, both engines) + alloc row present"
     exit 0
 fi
 
@@ -80,6 +103,15 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# The SIMD leg: same build + full suite with the vector kernels compiled
+# in.  tests/kernel_equivalence.rs pins dispatched == scalar bitwise, so
+# this leg is what actually proves the AVX2 path safe to ship; without
+# the feature those tests still run but compare scalar to itself.
+echo "== tier-1: cargo build --release --features simd =="
+cargo build --release -p rnn-hls --features simd
+echo "== tier-1: cargo test -q --features simd =="
+cargo test -q -p rnn-hls --features simd
 
 # Redundant with the full suite above, but pinned as its own gate so the
 # deterministic virtual-clock deadline suite can never be silently

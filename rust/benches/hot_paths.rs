@@ -1,29 +1,211 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimization loop.
 //!
 //! Everything the serving path touches per request, measured in
-//! isolation: fixed/float matvec-bound forwards, LUT activations, queue
-//! handoff, batch formation, JSON parse (startup), PJRT dispatch.
+//! isolation: fixed/float matvec-bound forwards, the raw matmul kernels
+//! (dispatched vs scalar — the SIMD win, tracked in
+//! `BENCH_kernels.json`), LUT activations, queue handoff, batch
+//! formation, allocations per submit→complete round trip on a warm
+//! session, and PJRT dispatch.
+//!
+//! Flags (after `cargo bench --bench hot_paths --`):
+//!
+//! * `--smoke`      — short iteration counts (CI's schema check, not a
+//!                    measurement run)
+//! * `--json PATH`  — also emit the kernel rows + alloc count as
+//!                    machine-readable JSON (`BENCH_kernels.json`)
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use rnn_hls::coordinator::{
-    batcher, BatcherConfig, BoundedQueue, Request, SystemClock,
+    batcher, BatchRunner, BatcherConfig, BoundedQueue, Request,
+    SystemClock,
 };
 use rnn_hls::data::generators;
 use rnn_hls::fixed::{ActTables, FixedSpec, QuantConfig};
 use rnn_hls::model::{zoo, Cell, Weights};
-use rnn_hls::nn::{Engine, FixedEngine, FloatEngine};
+use rnn_hls::nn::{kernels, Engine, FixedEngine, FloatEngine};
 use rnn_hls::runtime::manifest;
-use rnn_hls::util::timing::{bench, bench_for, report_row};
+use rnn_hls::util::json;
+use rnn_hls::util::timing::{bench, bench_for, report_row, Stats};
+use rnn_hls::{ServingSpec, Session};
+
+// ------------------------------------------------- counting allocator
+//
+// Wraps the system allocator with an allocation counter so the bench
+// can report *allocations per request* on the warm serving path — the
+// number the buffer-recycling layer exists to drive down.  Bench-only:
+// library and test code never install a global allocator.
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ------------------------------------------------------ alloc round trip
+
+/// Minimal width-1 runner for the allocation-count session: `run_into`
+/// writes straight into the packed output so the runner itself is
+/// steady-state alloc-free (the default `run` would build per-request
+/// `Vec`s and drown the measurement).
+struct SinkRunner;
+
+impl BatchRunner for SinkRunner {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn run(&mut self, _xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![0.5f32]; n])
+    }
+
+    fn run_into(
+        &mut self,
+        _xs: &[f32],
+        n: usize,
+        out: &mut rnn_hls::nn::PackedOut,
+    ) -> anyhow::Result<()> {
+        out.reset(1);
+        for _ in 0..n {
+            out.push_row(&[0.5f32]);
+        }
+        Ok(())
+    }
+}
+
+/// One submit→complete round trip on the recycled-buffer path: draw a
+/// feature buffer from the session pool, fill, submit, receive.
+fn roundtrip(session: &Session) {
+    let mut features = session.recycled_features();
+    features.resize(120, 0.1f32);
+    let request = session.prepare_event(features, 0);
+    session.submit(request).expect("queue never full here");
+    std::hint::black_box(session.recv().expect("fabric alive"));
+}
+
+/// Allocations per submit→complete round trip on a *warm* session —
+/// feature buffers ping-pong through the pool, the runner writes into
+/// the worker's packed buffer, so what remains is the per-batch floor
+/// (batch Vec, output Arc, channel handoff), not per-request copies.
+fn allocs_per_roundtrip(iters: usize) -> f64 {
+    let spec = ServingSpec {
+        shards: 1,
+        workers: 1,
+        queue_capacity: 64,
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        },
+        ..ServingSpec::default()
+    };
+    let session = Session::start(&spec, |_shard| {
+        Ok(Box::new(SinkRunner) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+    for _ in 0..200 {
+        roundtrip(&session);
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        roundtrip(&session);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    session.shutdown().unwrap();
+    delta as f64 / iters as f64
+}
+
+// ----------------------------------------------------------- json emit
+
+/// Emit the kernel rows + alloc count as the `BENCH_kernels.json` CI
+/// artifact (same idiom as `report::throughput::write_bench_json`).
+fn write_kernels_json(
+    path: &Path,
+    rows: &[(String, Stats)],
+    allocs: f64,
+) -> anyhow::Result<()> {
+    let doc = json::obj(vec![
+        ("bench", json::s("kernels")),
+        ("schema_version", json::num(1.0)),
+        (
+            "simd_compiled",
+            json::num(u64::from(kernels::simd_compiled()) as f64),
+        ),
+        (
+            "simd_active",
+            json::num(u64::from(kernels::simd_active()) as f64),
+        ),
+        ("allocs_per_roundtrip", json::num(allocs)),
+        (
+            "rows",
+            json::arr(
+                rows.iter()
+                    .map(|(name, s)| {
+                        json::obj(vec![
+                            ("name", json::s(name)),
+                            ("mean_ns", json::num(s.mean.as_nanos() as f64)),
+                            ("p50_ns", json::num(s.p50.as_nanos() as f64)),
+                            ("p99_ns", json::num(s.p99.as_nanos() as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut text = doc.to_json();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(())
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path: Option<PathBuf> = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
+
+    // Smoke mode shrinks every loop: CI checks the schema and that each
+    // row executes, not the numbers.
+    let scale = |n: usize| if smoke { (n / 40).max(5) } else { n };
+    let budget = Duration::from_millis(if smoke { 20 } else { 200 });
+
     let q16 = QuantConfig::ptq(FixedSpec::default16_6());
 
     // Activation LUT lookup.
     let tables = ActTables::new(q16);
     let raws: Vec<i64> = (-512..512).map(|i| i * 17).collect();
-    let stats = bench(10, 2000, || {
+    let stats = bench(10, scale(2000), || {
         let mut acc = 0i64;
         for &r in &raws {
             acc = acc.wrapping_add(tables.sigmoid_raw(r, q16.spec));
@@ -32,30 +214,93 @@ fn main() {
     });
     report_row("fixed/sigmoid_lut x1024", &stats);
 
+    // Raw matmul kernels, dispatched vs scalar — serving-shaped
+    // (64 outputs from 72 inputs, batch 8).  With `--features simd` on
+    // an AVX2 host the dispatched rows take the vector path; the pair
+    // of rows is the tracked speedup.
+    let mut kernel_rows: Vec<(String, Stats)> = Vec::new();
+    {
+        let (rows_out, cols_in, batch) = (64usize, 72usize, 8usize);
+        let wt: Vec<f32> = (0..rows_out * cols_in)
+            .map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.13)
+            .collect();
+        let xs: Vec<f32> = (0..batch * cols_in)
+            .map(|i| (i as f32 * 0.37 - 1.5) * 0.61)
+            .collect();
+        let mut ys = vec![0.0f32; batch * rows_out];
+        let stats = bench(100, scale(20_000), || {
+            ys.iter_mut().for_each(|y| *y = 0.0);
+            kernels::matmul_acc_f32(
+                &wt, rows_out, cols_in, &xs, batch, &mut ys,
+            );
+            std::hint::black_box(&ys);
+        });
+        report_row("float/matmul_acc 64x72 b8", &stats);
+        kernel_rows.push(("float/matmul_acc".to_string(), stats));
+        let stats = bench(100, scale(20_000), || {
+            ys.iter_mut().for_each(|y| *y = 0.0);
+            kernels::matmul_acc_f32_scalar(
+                &wt, rows_out, cols_in, &xs, batch, &mut ys,
+            );
+            std::hint::black_box(&ys);
+        });
+        report_row("float/matmul_acc_scalar 64x72 b8", &stats);
+        kernel_rows.push(("float/matmul_acc_scalar".to_string(), stats));
+
+        let wt: Vec<i64> = (0..rows_out * cols_in)
+            .map(|i| (i as i64 * 131 - 64) % (1 << 25))
+            .collect();
+        let xs: Vec<i64> = (0..batch * cols_in)
+            .map(|i| (i as i64 * 57 - 999) % (1 << 25))
+            .collect();
+        let mut ys = vec![0i64; batch * rows_out];
+        let stats = bench(100, scale(20_000), || {
+            ys.iter_mut().for_each(|y| *y = 0);
+            kernels::matmul_acc_i64(
+                &wt, rows_out, cols_in, &xs, batch, &mut ys,
+            );
+            std::hint::black_box(&ys);
+        });
+        report_row("fixed/matmul_acc 64x72 b8", &stats);
+        kernel_rows.push(("fixed/matmul_acc".to_string(), stats));
+        let stats = bench(100, scale(20_000), || {
+            ys.iter_mut().for_each(|y| *y = 0);
+            kernels::matmul_acc_i64_scalar(
+                &wt, rows_out, cols_in, &xs, batch, &mut ys,
+            );
+            std::hint::black_box(&ys);
+        });
+        report_row("fixed/matmul_acc_scalar 64x72 b8", &stats);
+        kernel_rows.push(("fixed/matmul_acc_scalar".to_string(), stats));
+    }
+
     // Generator cost (source thread budget).
     let mut gen = generators::for_benchmark("top", 1).unwrap();
-    let stats = bench(100, 5000, || {
+    let stats = bench(100, scale(5000), || {
         std::hint::black_box(gen.generate());
     });
     report_row("generator/top_event", &stats);
 
-    // Queue push+pop round trip.
+    // Queue push+pop round trip.  The request is moved through the
+    // queue and recovered from the pop — no clone in the timed loop
+    // (cloning a 120-float request used to dominate this row).
     let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(1024));
-    let req = Request {
+    let mut slot = Some(Request {
         id: 0,
         features: vec![0.0f32; 120],
         label: 0,
         route_key: 0,
         enqueued_at: std::time::Instant::now(),
-    };
-    let stats = bench(100, 100_000, || {
-        queue.push(req.clone()).unwrap();
-        std::hint::black_box(queue.pop_timeout(Duration::from_millis(1)));
+    });
+    let stats = bench(100, scale(100_000), || {
+        queue.push(slot.take().unwrap()).unwrap();
+        slot = queue.pop_timeout(Duration::from_millis(1));
+        std::hint::black_box(slot.is_some());
     });
     report_row("queue/push+pop", &stats);
 
     // Batch formation from a pre-filled queue.
-    let stats = bench(10, 2000, || {
+    let stats = bench(10, scale(2000), || {
         for i in 0..10 {
             queue
                 .push(Request {
@@ -80,6 +325,22 @@ fn main() {
     });
     report_row("batcher/form_batch10+pack", &stats);
 
+    // Allocations per submit→complete round trip on a warm session —
+    // the buffer-recycling regression number (per-request buffers come
+    // from pools; what's left is the per-batch floor).
+    let allocs = allocs_per_roundtrip(scale(2000));
+    println!(
+        "session/allocs_per_roundtrip                 {allocs:.2} \
+         (simd_compiled={} simd_active={})",
+        kernels::simd_compiled(),
+        kernels::simd_active()
+    );
+
+    if let Some(path) = &json_path {
+        write_kernels_json(path, &kernel_rows, allocs).unwrap();
+        println!("wrote {}", path.display());
+    }
+
     // Batched engine datapath: sequential vs lockstep vs parallel
     // (synthetic weights — exercises the serving hot path end to end).
     {
@@ -92,7 +353,7 @@ fn main() {
             samples.iter().map(|v| v.as_slice()).collect();
 
         let mut float_engine = FloatEngine::new(&weights).unwrap();
-        let stats = bench_for(Duration::from_millis(200), || {
+        let stats = bench_for(budget, || {
             for x in &xs {
                 std::hint::black_box(float_engine.forward(x));
             }
@@ -100,7 +361,7 @@ fn main() {
         report_row("float/top_gru b64 sequential", &stats);
         for workers in [1usize, 4] {
             float_engine.set_parallelism(workers);
-            let stats = bench_for(Duration::from_millis(200), || {
+            let stats = bench_for(budget, || {
                 std::hint::black_box(float_engine.forward_batch(&xs));
             });
             report_row(&format!("float/top_gru b64 batch w={workers}"), &stats);
@@ -108,14 +369,14 @@ fn main() {
 
         let mut fixed_engine =
             FixedEngine::new(&weights, q16).unwrap();
-        let stats = bench_for(Duration::from_millis(200), || {
+        let stats = bench_for(budget, || {
             for x in &xs {
                 std::hint::black_box(fixed_engine.forward(x));
             }
         });
         report_row("fixed<16,6>/top_gru b64 sequential", &stats);
         fixed_engine.set_parallelism(4);
-        let stats = bench_for(Duration::from_millis(200), || {
+        let stats = bench_for(budget, || {
             std::hint::black_box(fixed_engine.forward_batch(&xs));
         });
         report_row("fixed<16,6>/top_gru b64 batch w=4", &stats);
@@ -123,7 +384,7 @@ fn main() {
 
     // PJRT dispatch (needs artifacts).
     let artifacts = manifest::default_artifacts_dir();
-    if artifacts.join("manifest.json").exists() {
+    if !smoke && artifacts.join("manifest.json").exists() {
         let runtime = rnn_hls::runtime::Runtime::new(&artifacts).unwrap();
         for (key, batch) in
             [("top_gru", 1usize), ("top_gru", 10), ("quickdraw_lstm", 1)]
@@ -136,6 +397,6 @@ fn main() {
             report_row(&format!("pjrt/{key}_b{batch}"), &stats);
         }
     } else {
-        println!("(skip pjrt benches: no artifacts)");
+        println!("(skip pjrt benches: no artifacts or smoke mode)");
     }
 }

@@ -16,7 +16,7 @@
 //! contract.
 
 pub use crate::coordinator::session::{
-    BackendKind, Completion, ServingPlan, ServingSpec, Session,
+    BackendKind, Completion, Output, ServingPlan, ServingSpec, Session,
     SessionHandle, SubmitError,
 };
 

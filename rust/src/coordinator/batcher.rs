@@ -85,12 +85,20 @@ impl Batch {
 
     /// Pack features into one flat buffer (row-major, request order).
     pub fn packed_features(&self) -> Vec<f32> {
-        let mut out =
-            Vec::with_capacity(self.requests.iter().map(|r| r.features.len()).sum());
+        let mut out = Vec::new();
+        self.pack_features_into(&mut out);
+        out
+    }
+
+    /// [`Batch::packed_features`] into a caller-recycled buffer — the
+    /// worker loop reuses one packing buffer per worker, so steady-state
+    /// batches never allocate here (capacity is retained across calls).
+    pub fn pack_features_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.requests.iter().map(|r| r.features.len()).sum());
         for r in &self.requests {
             out.extend_from_slice(&r.features);
         }
-        out
     }
 }
 

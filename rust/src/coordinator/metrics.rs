@@ -154,17 +154,48 @@ impl ServerMetrics {
         self.batch_samples
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
         for (r, probs) in batch.requests.iter().zip(outputs) {
-            self.queue_latency
-                .record(batch.formed_at.saturating_duration_since(r.enqueued_at));
-            self.total_latency
-                .record(done.saturating_duration_since(r.enqueued_at));
-            // SeqCst: `completed` is one leg of the cross-thread
-            // accounting identity (generated == completed + dropped)
-            // that shutdown and the model checker assert.
-            self.completed.fetch_add(1, Ordering::SeqCst);
-            if super::server::predicted_label(probs) == r.label {
-                self.correct.fetch_add(1, Ordering::Relaxed);
-            }
+            self.observe_row(r, probs, batch.formed_at, done);
+        }
+    }
+
+    /// [`Self::observe_batch`] over a packed output buffer — the worker
+    /// loop's allocation-free form.  Row semantics (and every recorded
+    /// value) are identical; only the output layout differs.
+    pub fn observe_batch_packed(
+        &self,
+        batch: &Batch,
+        outputs: &crate::nn::PackedOut,
+        done: Instant,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_samples
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for (r, probs) in batch.requests.iter().zip(outputs.iter_rows()) {
+            self.observe_row(r, probs, batch.formed_at, done);
+        }
+    }
+
+    /// One request's completion record: queue latency
+    /// (`formed_at - enqueued_at`), total latency (`done - enqueued_at`),
+    /// completion and accuracy counts.
+    #[inline]
+    fn observe_row(
+        &self,
+        r: &super::Request,
+        probs: &[f32],
+        formed_at: Instant,
+        done: Instant,
+    ) {
+        self.queue_latency
+            .record(formed_at.saturating_duration_since(r.enqueued_at));
+        self.total_latency
+            .record(done.saturating_duration_since(r.enqueued_at));
+        // SeqCst: `completed` is one leg of the cross-thread
+        // accounting identity (generated == completed + dropped)
+        // that shutdown and the model checker assert.
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        if super::server::predicted_label(probs) == r.label {
+            self.correct.fetch_add(1, Ordering::Relaxed);
         }
     }
 

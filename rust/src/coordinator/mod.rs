@@ -234,6 +234,42 @@
 //! * **Egress shedding.**  The completion channel is bounded;
 //!   `try_send` sheds on overflow and counts `lost` — a worker never
 //!   blocks on a slow consumer, and `sent == delivered + lost`.
+//!
+//! ## Buffer recycling: the zero-allocation steady state
+//!
+//! The hot path (`submit` → batch → forward → completion) recycles
+//! every buffer it touches, so a warm session serves without heap
+//! traffic.  The lifecycle, stage by stage:
+//!
+//! * **Request features.**  Submitters draw `Vec<f32>` buffers from the
+//!   session's feature pool ([`Session::recycled_features`]) instead of
+//!   allocating; after a worker packs a batch it clears each served
+//!   request's `features` and parks it back in the pool — *before*
+//!   sending the completion, so a submit → recv → submit ping-pong
+//!   always finds its previous buffer waiting.  Rejected submits
+//!   re-enter the pool via [`Session::recycle_features`].  The pool is
+//!   bounded (aggregate queue capacity, capped), counts hits/misses
+//!   ([`crate::util::pool::BufferPool`]), and surfaces both in
+//!   [`Session::snapshot`] and the metrics-endpoint grammar
+//!   (`pool_hits` / `pool_misses` / `pool_occupancy`): in steady state
+//!   misses plateau while hits climb.
+//! * **Batch packing.**  Each worker owns one packing buffer, refilled
+//!   by [`Batch::pack_features_into`] (capacity retained), and one
+//!   [`crate::nn::PackedOut`] the runner fills via
+//!   [`server::BatchRunner::run_into`] — no per-batch `Vec<Vec<f32>>`.
+//! * **Engine scratch.**  The engines keep per-worker scratch
+//!   (activations, gate buffers, packed transposes) in bounded pools
+//!   (`FloatEngine::scratch_stats`, `FixedEngine::scratch_stats`);
+//!   after warm-up every `forward_packed_into` is a pool hit.
+//! * **Completion outputs.**  One shared `Arc<[f32]>` per *batch*
+//!   backs every completion's [`session::Output`] (a window, not a
+//!   copy) — the single remaining steady-state allocation on the path,
+//!   one per batch rather than one per request, and built only when a
+//!   completion channel is attached.  The copy to an owned `Vec<f32>`
+//!   happens only at serialization boundaries (the wire frame).
+//!
+//! `tests/kernel_equivalence.rs` pins the contract: after warm-up the
+//! feature-pool and scratch-pool miss counters stop moving.
 
 pub mod batcher;
 pub mod clock;
@@ -256,8 +292,8 @@ pub use server::{
     ServerReport,
 };
 pub use session::{
-    BackendKind, Completion, ListenerSpec, ServingPlan, ServingSpec,
-    Session, SessionHandle, SubmitError,
+    BackendKind, Completion, ListenerSpec, Output, ServingPlan,
+    ServingSpec, Session, SessionHandle, SubmitError,
 };
 pub use sharded::{
     BackendTierStats, Router, ShardPolicy, ShardStats, ShardedConfig,

@@ -60,11 +60,17 @@
 //! p50_us <f64>
 //! p99_us <f64>
 //! throughput_hz <f64>
+//! pool_hits <u64>
+//! pool_misses <u64>
+//! pool_occupancy <u64>
 //! backend <name> completed <u64> dropped <u64> p50_us <f64> p99_us <f64>
 //! end
 //! ```
 //! (`backend` lines appear once per labelled tier, heterogeneous
-//! sessions only.)
+//! sessions only.  The `pool_*` lines are the session's feature-buffer
+//! pool: in a warm steady state `pool_misses` plateaus while
+//! `pool_hits` keeps climbing — a rising miss rate means request
+//! buffers are leaking out of the recycle loop.)
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -74,7 +80,7 @@ use std::time::{Duration, Instant};
 
 use crate::api::ErrorCode;
 use crate::ingest::wire::{
-    read_frame, write_frame, Frame, WireError, WireResponse,
+    read_frame_pooled, write_frame, Frame, WireError, WireResponse,
 };
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::util::sync::thread::{self, JoinHandle};
@@ -505,6 +511,14 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
         dead: AtomicBool::new(false),
     });
 
+    // Per-connection recycled buffers: `payload` is this connection's
+    // raw-bytes scratch; `features` is drawn from the session's feature
+    // pool so a steady-state connection decodes straight into a buffer
+    // a worker already served and returned — the zero-allocation ingest
+    // loop (decode → submit → complete → pool → decode).
+    let mut payload = Vec::new();
+    let mut features = shared.session.recycled_features();
+
     let mut clean = true;
     loop {
         // Shutdown check before every frame, not only on idle ticks — a
@@ -541,12 +555,17 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
             }
         }
         let _ = reader.set_read_timeout(Some(FRAME_READ_TIMEOUT));
-        let frame = read_frame(&mut reader);
+        let frame =
+            read_frame_pooled(&mut reader, &mut payload, &mut features);
         let _ = reader.set_read_timeout(Some(POLL_TICK));
         match frame {
             Ok(Some(Frame::Request(request))) => {
                 shared.requests.fetch_add(1, Ordering::SeqCst);
                 admit(shared, &writer, request.seq, request);
+                // The request took the features buffer (admit recycles
+                // it on rejection); redraw from the pool for the next
+                // frame.
+                features = shared.session.recycled_features();
             }
             // A read timeout mid-frame is a slow-trickling (but maybe
             // well-formed) peer, not garbage: drop the connection
@@ -571,6 +590,8 @@ fn serve_conn(shared: &NetShared, stream: TcpStream) {
             Ok(None) => break, // clean EOF
         }
     }
+    // Park the buffer drawn for the frame that never came.
+    shared.session.recycle_features(features);
 
     // Drain phase: a cleanly-closing connection waits for its admitted
     // requests to answer (the dispatcher decrements `pending` as it
@@ -613,10 +634,14 @@ fn admit(
         lock_or_recover(&shared.routes).remove(&id);
         writer.pending.fetch_sub(1, Ordering::SeqCst);
         shared.wire_errors.fetch_add(1, Ordering::SeqCst);
-        writer.send(&Frame::Error(WireError {
-            seq,
-            code: err.code(),
-        }));
+        let code = err.code();
+        // A rejected request never reaches a worker, so its feature
+        // buffer re-enters the pool here — shed storms must not bleed
+        // capacity out of the recycle loop.
+        shared
+            .session
+            .recycle_features(err.into_request().features);
+        writer.send(&Frame::Error(WireError { seq, code }));
     }
 }
 
@@ -638,7 +663,10 @@ fn dispatch_loop(shared: &NetShared) {
             seq,
             id: completion.id,
             shard: completion.shard as u32,
-            output: completion.output,
+            // The completion's output is a window into the batch's
+            // shared buffer; the wire frame owns its floats, so the
+            // copy happens here, at the serialization boundary.
+            output: completion.output.to_vec(),
         }));
         if ok {
             shared.replies.fetch_add(1, Ordering::SeqCst);
@@ -705,6 +733,9 @@ fn render_metrics(shared: &NetShared) -> String {
         "throughput_hz {:.1}\n",
         snap.merged.throughput_hz
     ));
+    out.push_str(&format!("pool_hits {}\n", snap.pool.hits));
+    out.push_str(&format!("pool_misses {}\n", snap.pool.misses));
+    out.push_str(&format!("pool_occupancy {}\n", snap.pool.occupancy));
     for tier in &snap.per_backend {
         out.push_str(&format!(
             "backend {} completed {} dropped {} p50_us {:.1} p99_us {:.1}\n",

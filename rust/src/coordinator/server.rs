@@ -4,12 +4,14 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::data::generators::Generator;
+use crate::nn::PackedOut;
+use crate::util::pool::BufferPool;
 
 use super::batcher::{next_batch, BatcherConfig};
 use super::clock::{Clock, SystemClock};
 use super::metrics::ServerMetrics;
 use super::queue::BoundedQueue;
-use super::session::{Completion, CompletionSink, Session};
+use super::session::{Completion, CompletionSink, Output, Session};
 use super::sharded::{ShardPolicy, ShardedConfig};
 use super::source::SourceConfig;
 use super::tier::TierMix;
@@ -24,6 +26,37 @@ pub trait BatchRunner {
     fn max_batch(&self) -> usize;
     /// Run `n` samples packed in `xs`; returns per-sample probabilities.
     fn run(&mut self, xs: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>>;
+
+    /// [`BatchRunner::run`], writing rows into a caller-recycled
+    /// [`PackedOut`] — the worker loop's allocation-free entry point.
+    /// The default packs whatever `run` returns (validating one uniform
+    /// row width, since a packed buffer cannot represent ragged rows);
+    /// engine-backed runners override it to write rows directly.
+    fn run_into(
+        &mut self,
+        xs: &[f32],
+        n: usize,
+        out: &mut PackedOut,
+    ) -> anyhow::Result<()> {
+        let rows = self.run(xs, n)?;
+        anyhow::ensure!(
+            rows.len() == n,
+            "runner returned {} rows for {n} samples",
+            rows.len()
+        );
+        let width = rows.first().map(|r| r.len()).unwrap_or(0);
+        out.reset(width);
+        for row in &rows {
+            anyhow::ensure!(
+                row.len() == width,
+                "runner row width {} != {width} (packed rows must be \
+                 uniform)",
+                row.len()
+            );
+            out.push_row(row);
+        }
+        Ok(())
+    }
 }
 
 /// Adapter: any [`crate::nn::Engine`] as a [`BatchRunner`].  The
@@ -59,6 +92,24 @@ impl BatchRunner for EngineRunner {
             xs.len()
         );
         Ok(self.engine.forward_packed(xs, n))
+    }
+
+    /// The serving hot path: straight into the engine's scratch-pooled
+    /// `forward_packed_into` — no per-request `Vec`s on either side.
+    fn run_into(
+        &mut self,
+        xs: &[f32],
+        n: usize,
+        out: &mut PackedOut,
+    ) -> anyhow::Result<()> {
+        let stride = self.engine.arch().seq_len * self.engine.arch().input_size;
+        anyhow::ensure!(
+            xs.len() == n * stride,
+            "packed batch length {} != {n} × {stride}",
+            xs.len()
+        );
+        self.engine.forward_packed_into(xs, n, out);
+        Ok(())
     }
 }
 
@@ -166,14 +217,23 @@ pub fn worker_loop(
     batcher_cfg: &BatcherConfig,
     clock: &dyn Clock,
 ) -> anyhow::Result<()> {
-    worker_loop_with_sink(runner, queue, metrics, batcher_cfg, clock, None)
+    worker_loop_with_sink(
+        runner, queue, metrics, batcher_cfg, clock, None, None,
+    )
 }
 
-/// [`worker_loop`] with an optional completion sink: after a batch's
-/// metrics are recorded, each request's output is forwarded to the
+/// [`worker_loop`] with an optional completion sink and feature pool:
+/// after a batch's metrics are recorded, each request's feature buffer
+/// is recycled into `feature_pool` and its output is forwarded to the
 /// session's completion channel with its enqueue/complete instants.
-/// `None` (the replay wrappers, the plain `worker_loop`) skips the
-/// forwarding entirely — identical hot path, bit for bit.
+/// `None`/`None` (the replay wrappers, the plain `worker_loop`) skips
+/// both — identical hot path, bit for bit.
+///
+/// Steady-state allocation contract: the packing buffer and the
+/// [`PackedOut`] persist across batches (capacity is retained), request
+/// feature buffers return to the pool, and completions share **one**
+/// `Arc<[f32]>` per batch instead of materializing one `Vec` per
+/// request.  Per request, nothing is allocated once the fabric is warm.
 pub(crate) fn worker_loop_with_sink(
     runner: &mut dyn BatchRunner,
     queue: &Arc<BoundedQueue<Request>>,
@@ -181,21 +241,49 @@ pub(crate) fn worker_loop_with_sink(
     batcher_cfg: &BatcherConfig,
     clock: &dyn Clock,
     sink: Option<&CompletionSink>,
+    feature_pool: Option<&BufferPool<Vec<f32>>>,
 ) -> anyhow::Result<()> {
     let cap = runner.max_batch().min(batcher_cfg.max_batch).max(1);
     let local_cfg = BatcherConfig {
         max_batch: cap,
         max_wait: batcher_cfg.max_wait,
     };
+    // Worker-lifetime buffers: packed inputs in, packed rows out.
+    let mut packed: Vec<f32> = Vec::new();
+    let mut out = PackedOut::new();
     while let Some(batch) = next_batch(queue, &local_cfg, clock) {
         let n = batch.len();
-        let packed = batch.packed_features();
-        let outputs = runner.run(&packed, n)?;
-        anyhow::ensure!(outputs.len() == n, "runner output count");
+        batch.pack_features_into(&mut packed);
+        runner.run_into(&packed, n, &mut out)?;
+        anyhow::ensure!(
+            out.rows() == n && out.as_flat().len() == n * out.width(),
+            "runner output count: {} rows for {n} requests",
+            out.rows()
+        );
         let done = clock.now();
-        metrics.observe_batch(&batch, &outputs, done);
-        if let Some(sink) = sink {
-            for (request, output) in batch.requests.into_iter().zip(outputs) {
+        metrics.observe_batch_packed(&batch, &out, done);
+        // One shared buffer per batch backs every completion's output —
+        // built only when someone will receive it.
+        let width = out.width();
+        let shared: Option<Arc<[f32]>> =
+            sink.map(|_| Arc::from(out.as_flat()));
+        for (i, request) in batch.requests.into_iter().enumerate() {
+            let Request {
+                id,
+                features,
+                enqueued_at,
+                ..
+            } = request;
+            // Recycle the feature buffer *before* the completion becomes
+            // visible: a submitter ping-ponging submit → recv → submit
+            // must always find its buffer already pooled (the
+            // zero-allocation regression test pins this order).
+            if let Some(pool) = feature_pool {
+                let mut buf = features;
+                buf.clear();
+                pool.put(buf);
+            }
+            if let (Some(sink), Some(shared)) = (sink, &shared) {
                 // Completions are monitoring, not control flow: a full
                 // channel (owner not draining) or a gone receiver
                 // (session dropped mid-run) must never stall serving —
@@ -203,10 +291,14 @@ pub(crate) fn worker_loop_with_sink(
                 let undelivered = sink
                     .tx
                     .try_send(Completion {
-                        id: request.id,
-                        output,
+                        id,
+                        output: Output::from_shared(
+                            shared.clone(),
+                            i * width,
+                            (i + 1) * width,
+                        ),
                         shard: sink.shard,
-                        enqueued_at: request.enqueued_at,
+                        enqueued_at,
                         completed_at: done,
                     })
                     .is_err();

@@ -68,6 +68,7 @@ use std::time::{Duration, Instant};
 // instrumented types under `--features model-check` — which is what
 // lets `tests/model_check.rs` explore the submit/shutdown/Drop races in
 // this exact code.
+use crate::util::pool::{BufferPool, PoolStats};
 use crate::util::sync::atomic::{
     AtomicBool, AtomicU64, AtomicUsize, Ordering,
 };
@@ -592,14 +593,98 @@ impl ServingPlan {
 
 // ------------------------------------------------------------ Completion
 
+/// One request's output probabilities, shared out of its batch's packed
+/// output buffer: the worker loop builds **one** `Arc<[f32]>` per batch
+/// and every completion in the batch holds a `[start, end)` window into
+/// it — replacing one `Vec` allocation per request with one shared
+/// allocation per batch.  `Output` derefs to `[f32]`, so existing
+/// slice-shaped call sites read through unchanged; use
+/// [`Output::to_vec`] where an owned `Vec<f32>` is genuinely needed.
+#[derive(Clone)]
+pub struct Output {
+    buf: Arc<[f32]>,
+    start: usize,
+    end: usize,
+}
+
+impl Output {
+    /// A `[start, end)` window of a shared batch buffer.
+    pub(crate) fn from_shared(
+        buf: Arc<[f32]>,
+        start: usize,
+        end: usize,
+    ) -> Self {
+        debug_assert!(start <= end && end <= buf.len());
+        Self { buf, start, end }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[self.start..self.end]
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+impl std::ops::Deref for Output {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for Output {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq for Output {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for Output {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for Output {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl From<Vec<f32>> for Output {
+    /// Wrap an owned row (tests, adapters); one window over its own
+    /// buffer.
+    fn from(row: Vec<f32>) -> Self {
+        let buf: Arc<[f32]> = Arc::from(row);
+        let end = buf.len();
+        Self { buf, start: 0, end }
+    }
+}
+
 /// One served request, as delivered on the session's completion channel.
 #[derive(Debug, Clone)]
 pub struct Completion {
     /// The request's id (caller-assigned via [`Session::submit`], or the
     /// source's sequence number in replay runs).
     pub id: u64,
-    /// The engine's output probabilities for this request.
-    pub output: Vec<f32>,
+    /// The engine's output probabilities for this request — a window of
+    /// its batch's shared output buffer (see [`Output`]).
+    pub output: Output,
     /// Shard that served the request.
     pub shard: usize,
     /// When the request entered the fabric (the latency anchor).
@@ -692,6 +777,12 @@ struct SessionShared {
     clock: Arc<dyn Clock>,
     closed: AtomicBool,
     next_id: AtomicU64,
+    /// Recycled request feature buffers: workers return each served
+    /// request's `features` Vec here; submitters draw refills via
+    /// [`Session::recycled_features`].  Sized to the aggregate queue
+    /// capacity (every in-flight request can have a parked twin) so the
+    /// steady state allocates no feature buffers at all.
+    feature_pool: Arc<BufferPool<Vec<f32>>>,
 }
 
 impl SessionShared {
@@ -755,7 +846,7 @@ impl SessionShared {
 
     fn snapshot(&self, started_at: Instant) -> ShardedReport {
         let wall = (self.clock.now() - started_at).as_secs_f64();
-        roll_up(&self.config, &self.metrics, wall)
+        roll_up(&self.config, &self.metrics, wall, self.feature_pool.stats())
     }
 }
 
@@ -791,6 +882,25 @@ impl SessionHandle {
     pub fn prepare_event(&self, features: Vec<f32>, label: u32) -> Request {
         self.shared.next_request(features, label)
     }
+
+    /// Draw a recycled feature buffer — see
+    /// [`Session::recycled_features`].
+    pub fn recycled_features(&self) -> Vec<f32> {
+        self.shared.feature_pool.get_with(Vec::new)
+    }
+
+    /// Return a feature buffer to the pool — see
+    /// [`Session::recycle_features`].
+    pub fn recycle_features(&self, features: Vec<f32>) {
+        recycle(&self.shared.feature_pool, features);
+    }
+}
+
+/// Clear and park a feature buffer (shared by the session-level and
+/// handle-level recycle entry points).
+fn recycle(pool: &BufferPool<Vec<f32>>, mut features: Vec<f32>) {
+    features.clear();
+    pool.put(features);
 }
 
 type WorkerHandles = Vec<Vec<JoinHandle<anyhow::Result<()>>>>;
@@ -912,6 +1022,19 @@ impl Session {
         let (tx, rx) = mpsc::sync_channel::<Completion>(completion_bound);
         let completions_lost = Arc::new(AtomicU64::new(0));
 
+        // Feature-buffer pool: every in-flight request can have a parked
+        // twin (aggregate queue capacity), with a hard ceiling so huge
+        // configs don't pin memory in the free list.
+        let feature_pool: Arc<BufferPool<Vec<f32>>> = Arc::new(
+            BufferPool::new(
+                config
+                    .server
+                    .queue_capacity
+                    .saturating_mul(config.shards)
+                    .min(16384),
+            ),
+        );
+
         // Readiness gate: the tap opens (start returns) only after every
         // worker on every shard has attempted engine construction, so
         // submitters cannot flood the queues while executables compile.
@@ -937,6 +1060,7 @@ impl Session {
                     tx: tx.clone(),
                     lost: completions_lost.clone(),
                 });
+                let feature_pool = feature_pool.clone();
                 shard_handles.push(thread::spawn(
                     move || -> anyhow::Result<()> {
                         // The readiness bump rides a drop guard so a
@@ -966,6 +1090,7 @@ impl Session {
                             &batcher_cfg,
                             &*clock,
                             sink.as_ref(),
+                            Some(&feature_pool),
                         )
                     },
                 ));
@@ -988,6 +1113,7 @@ impl Session {
             clock,
             closed: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
+            feature_pool,
         });
         Ok(Self {
             shared,
@@ -1027,6 +1153,25 @@ impl Session {
     /// seen.  Pass the result to [`Self::submit`].
     pub fn prepare_event(&self, features: Vec<f32>, label: u32) -> Request {
         self.shared.next_request(features, label)
+    }
+
+    /// Draw a recycled feature buffer from the session's pool: cleared,
+    /// with capacity retained from a previously served request.  Fill it
+    /// and pass it to [`Self::submit_event`] / [`Self::prepare_event`];
+    /// the worker loop recycles it automatically once the request is
+    /// served, so a steady-state submit→recv loop allocates no feature
+    /// buffers at all.  Pool hit/miss/occupancy counters surface in
+    /// [`Self::snapshot`] and the metrics endpoint grammar.
+    pub fn recycled_features(&self) -> Vec<f32> {
+        self.shared.feature_pool.get_with(Vec::new)
+    }
+
+    /// Hand a feature buffer back to the pool without serving it — the
+    /// path for buffers recovered from a [`SubmitError`]
+    /// ([`SubmitError::into_request`]`.features`) or abandoned before
+    /// submit.  The buffer is cleared here; only its capacity recycles.
+    pub fn recycle_features(&self, features: Vec<f32>) {
+        recycle(&self.shared.feature_pool, features);
     }
 
     /// A clonable submitter handle — hand one to each producer thread
@@ -1187,7 +1332,12 @@ impl Session {
         }
 
         let wall = (self.shared.clock.now() - self.started_at).as_secs_f64();
-        Ok(roll_up(&self.shared.config, &self.shared.metrics, wall))
+        Ok(roll_up(
+            &self.shared.config,
+            &self.shared.metrics,
+            wall,
+            self.shared.feature_pool.stats(),
+        ))
         // `self` drops here: its Drop re-closes the (already closed)
         // queues, a no-op.
     }
@@ -1274,6 +1424,7 @@ pub(crate) fn roll_up(
     cfg: &ShardedConfig,
     metrics: &[Arc<ServerMetrics>],
     wall: f64,
+    pool: PoolStats,
 ) -> ShardedReport {
     let merged = ServerMetrics::new();
     for shard_metrics in metrics {
@@ -1331,6 +1482,7 @@ pub(crate) fn roll_up(
         merged: ServerReport::from_metrics(&merged, wall),
         per_shard,
         per_backend,
+        pool,
     }
 }
 

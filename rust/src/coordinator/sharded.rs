@@ -266,11 +266,22 @@ pub struct ShardedReport {
     /// Per-backend roll-up; empty unless the session labelled its shards
     /// ([`ShardedConfig::shard_backends`]).
     pub per_backend: Vec<BackendTierStats>,
+    /// Feature-buffer pool counters at snapshot time (the
+    /// zero-allocation steady state: after warm-up, `misses` plateaus
+    /// while `hits` keeps climbing).
+    pub pool: crate::util::pool::PoolStats,
 }
 
 impl ShardedReport {
     pub fn render(&self) -> String {
         let mut out = self.merged.render();
+        out.push_str(&format!(
+            "\nfeature pool       {} hits / {} misses ({} parked, cap {})",
+            self.pool.hits,
+            self.pool.misses,
+            self.pool.occupancy,
+            self.pool.capacity,
+        ));
         if self.shards > 1 {
             out.push_str(&format!(
                 "\nshards             {} ({} routing)",

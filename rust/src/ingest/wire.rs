@@ -288,6 +288,19 @@ impl<'a> Cursor<'a> {
     }
 
     fn f32s(&mut self, count: u32) -> Result<Vec<f32>, FrameError> {
+        let mut out = Vec::new();
+        self.f32s_into(count, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Cursor::f32s`] into a caller-recycled buffer: the buffer is
+    /// cleared and refilled, so its capacity survives across frames and
+    /// a steady-state connection decodes features without allocating.
+    fn f32s_into(
+        &mut self,
+        count: u32,
+        out: &mut Vec<f32>,
+    ) -> Result<(), FrameError> {
         let n = count as usize;
         let bytes = self
             .bytes
@@ -299,12 +312,13 @@ impl<'a> Cursor<'a> {
                 "float count exceeds payload length",
             ));
         }
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         for _ in 0..n {
             let b = self.take(4)?;
             out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
         }
-        Ok(out)
+        Ok(())
     }
 
     fn finish(self) -> Result<(), FrameError> {
@@ -367,6 +381,27 @@ fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame, FrameError> {
 /// with [`FrameError::is_timeout`] true, so pollers can distinguish
 /// their tick from a dead peer.
 pub fn read_frame<R: Read>(reader: &mut R) -> Result<Option<Frame>, FrameError> {
+    read_frame_pooled(reader, &mut Vec::new(), &mut Vec::new())
+}
+
+/// [`read_frame`] with caller-recycled buffers — the zero-allocation
+/// ingest path.  `payload` is the raw-bytes scratch (cleared and
+/// refilled each call, capacity retained); `features` seeds the decoded
+/// [`WireRequest::features`] vector for `Request` frames: it is filled
+/// in place and then moved (`std::mem::take`) into the returned frame,
+/// leaving `features` empty.  Callers refill it for the next frame from
+/// the session's feature pool
+/// ([`Session::recycled_features`](crate::api::Session::recycled_features)),
+/// closing the recycle loop: decode → submit → complete → pool → decode.
+/// Non-`Request` frames leave `features` untouched.
+///
+/// Decoded frames are bitwise-identical to [`read_frame`]'s (the wire
+/// suite asserts it); only the allocation behaviour differs.
+pub fn read_frame_pooled<R: Read>(
+    reader: &mut R,
+    payload: &mut Vec<u8>,
+    features: &mut Vec<f32>,
+) -> Result<Option<Frame>, FrameError> {
     let mut header = [0u8; HEADER_LEN];
     // First byte separately: a clean close lands here as Ok(0).
     let mut first = [0u8; 1];
@@ -381,10 +416,28 @@ pub fn read_frame<R: Read>(reader: &mut R) -> Result<Option<Frame>, FrameError> 
     header[0] = first[0];
     reader.read_exact(&mut header[1..])?;
     let (frame_type, len) = check_header(&header)?;
-    let mut payload = vec![0u8; len as usize];
-    reader.read_exact(&mut payload)?;
-    decode_payload(frame_type, &payload)
-        .map(Some)
+    payload.clear();
+    payload.resize(len as usize, 0);
+    reader.read_exact(payload)?;
+    if frame_type == TYPE_REQUEST {
+        // Decode the hot frame type in place so the features land in
+        // the recycled buffer instead of a fresh allocation.
+        let mut cur = Cursor {
+            bytes: payload,
+            at: 0,
+        };
+        let seq = cur.u64()?;
+        let label = cur.u32()?;
+        let count = cur.u32()?;
+        cur.f32s_into(count, features)?;
+        cur.finish()?;
+        return Ok(Some(Frame::Request(WireRequest {
+            seq,
+            label,
+            features: std::mem::take(features),
+        })));
+    }
+    decode_payload(frame_type, payload).map(Some)
 }
 
 /// Write one frame to a stream (header + payload, flushed).
@@ -432,6 +485,65 @@ mod tests {
         assert_eq!(used, first_len);
         let (frame, _) = Frame::decode(&bytes[used..]).unwrap();
         assert_eq!(frame, b);
+    }
+
+    /// The pooled reader must be a pure allocation optimisation: frames
+    /// it decodes are bitwise-identical to [`read_frame`]'s, the
+    /// `features` seed is consumed by `Request` frames (moved into the
+    /// frame, left empty) and untouched by every other frame type, and
+    /// buffer capacity survives across frames.
+    #[test]
+    fn pooled_read_matches_plain_read_and_recycles_buffers() {
+        let frames = vec![
+            Frame::Request(WireRequest {
+                seq: 1,
+                label: 3,
+                features: vec![1.0, -2.5, f32::MIN_POSITIVE],
+            }),
+            Frame::Error(WireError {
+                seq: 2,
+                code: ErrorCode::Shed,
+            }),
+            Frame::Request(WireRequest {
+                seq: 3,
+                label: 0,
+                features: vec![0.25; 7],
+            }),
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.encode());
+        }
+
+        let mut plain = std::io::Cursor::new(stream.clone());
+        let mut pooled = std::io::Cursor::new(stream);
+        let mut payload = Vec::new();
+        let mut features = Vec::with_capacity(16);
+        for want in &frames {
+            let a = read_frame(&mut plain).unwrap().unwrap();
+            let b =
+                read_frame_pooled(&mut pooled, &mut payload, &mut features)
+                    .unwrap()
+                    .unwrap();
+            assert_eq!(a, b);
+            assert_eq!(&b, want);
+            if matches!(want, Frame::Request(_)) {
+                assert!(
+                    features.is_empty(),
+                    "Request frames take the seed buffer"
+                );
+                // Simulate the serve loop redrawing from the pool.
+                features = Vec::with_capacity(16);
+            }
+        }
+        assert!(read_frame(&mut plain).unwrap().is_none());
+        assert!(read_frame_pooled(&mut pooled, &mut payload, &mut features)
+            .unwrap()
+            .is_none());
+        assert!(
+            payload.capacity() > 0,
+            "payload scratch capacity is retained across frames"
+        );
     }
 
     #[test]

@@ -6,19 +6,31 @@
 //! `accum_t`), then cast back to the layer type; sigmoid/tanh/softmax go
 //! through lookup tables.  Running this engine over the frozen test sets
 //! at different `(W, I)` regenerates the PTQ scan of Fig. 2.
+//!
+//! All integer inner products go through [`super::kernels`]
+//! (`matmul_acc_i64`): integer addition is associative, so the scalar and
+//! SIMD lanes are exact by construction, and [`MAX_WIDTH`] additionally
+//! keeps every raw value inside the 32-bit range the vectorized multiply
+//! requires.  The serving entry point `forward_packed_into` recycles all
+//! recurrence/head temporaries through a scratch pool; with a
+//! sigmoid-output head the steady state allocates nothing (the LUT
+//! softmax's small per-row temporaries are the one documented exception).
 
 use crate::fixed::{
     dequantize, quantize, requantize, ActTables, QuantConfig,
     SoftmaxTables, TableConfig,
 };
 use crate::model::{Arch, Cell, OutputActivation, Weights};
+use crate::util::pool::{BufferPool, PoolStats};
 use crate::util::threads::WorkerPool;
 
-use super::Engine;
+use super::{kernels, BatchRows, Engine, PackedOut};
 
 /// Maximum supported total width: products carry `2W` bits and the widest
 /// accumulation fan-in here is 512 (quickdraw dense head, 2^9), so
-/// `2 * 26 + 9 = 61 < 63` keeps i64 accumulation exact.
+/// `2 * 26 + 9 = 61 < 63` keeps i64 accumulation exact.  The same bound
+/// keeps raw values below 2^26, well inside the i32 range the SIMD
+/// integer multiply (`kernels::matmul_acc_i64`) loads from.
 pub const MAX_WIDTH: u32 = 26;
 
 /// Transposed integer matrix: raw weights at the engine's F, `[out][in]`.
@@ -44,37 +56,30 @@ impl MatTI {
         }
     }
 
-    /// `y[o] += Σ_i x[i] * w[o,i]` — accumulator carries 2F fractional bits.
+    /// `y[o] += Σ_i x[i] * w[o,i]` — accumulator carries 2F fractional
+    /// bits.  A batch-1 [`MatTI::matmul_acc`] through the kernel layer.
     #[inline]
     fn matvec_acc(&self, x: &[i64], y: &mut [i64]) {
         debug_assert_eq!(x.len(), self.cols_in);
         debug_assert_eq!(y.len(), self.rows_out);
-        for (o, yo) in y.iter_mut().enumerate() {
-            let row = &self.data[o * self.cols_in..(o + 1) * self.cols_in];
-            let mut acc = 0i64;
-            for (xi, wi) in x.iter().zip(row) {
-                acc += xi * wi;
-            }
-            *yo += acc;
-        }
+        kernels::matmul_acc_i64(&self.data, self.rows_out, self.cols_in, x, 1, y);
     }
 
     /// Batched `matvec_acc` over packed `[batch][cols_in]` inputs into
     /// packed `[batch][rows_out]` accumulators; the weight row streams
     /// across the whole batch.  Integer arithmetic is exact, so this is
-    /// trivially identical to the per-sample path.
+    /// trivially identical to the per-sample path — and to the SIMD lanes.
     fn matmul_acc(&self, xs: &[i64], batch: usize, ys: &mut [i64]) {
         debug_assert_eq!(xs.len(), batch * self.cols_in);
         debug_assert_eq!(ys.len(), batch * self.rows_out);
-        for (o, row) in self.data.chunks_exact(self.cols_in).enumerate() {
-            for (b, x) in xs.chunks_exact(self.cols_in).enumerate() {
-                let mut acc = 0i64;
-                for (xi, wi) in x.iter().zip(row) {
-                    acc += xi * wi;
-                }
-                ys[b * self.rows_out + o] += acc;
-            }
-        }
+        kernels::matmul_acc_i64(
+            &self.data,
+            self.rows_out,
+            self.cols_in,
+            xs,
+            batch,
+            ys,
+        );
     }
 }
 
@@ -102,6 +107,34 @@ impl DenseLayerI {
     }
 }
 
+/// Per-worker recurrence/head temporaries, recycled through the engine's
+/// scratch pool so steady-state batches allocate nothing.
+#[derive(Default)]
+struct FixedScratch {
+    /// Quantized inputs, packed `[b][seq * input_size]`.
+    x_raw: Vec<i64>,
+    /// Gathered timestep inputs, packed `[b][input_size]`.
+    xt: Vec<i64>,
+    /// Hidden state `[b][h]` (raw); doubles as the dense-head ping buffer.
+    h: Vec<i64>,
+    /// LSTM cell state `[b][h]`.
+    c: Vec<i64>,
+    /// Gate accumulators: LSTM `[b][4h]`, GRU input-half `[b][3h]`.
+    z: Vec<i64>,
+    /// GRU recurrent-half gate accumulators `[b][3h]`.
+    hm: Vec<i64>,
+    /// Dense-head pong buffer (accumulator units).
+    acts: Vec<i64>,
+    /// One output row of cast-back logits.
+    logits: Vec<i64>,
+}
+
+#[inline]
+fn zeroed(buf: &mut Vec<i64>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0);
+}
+
 /// The quantized engine.
 pub struct FixedEngine {
     arch: Arch,
@@ -118,6 +151,8 @@ pub struct FixedEngine {
     softmax: Option<SoftmaxTables>,
     /// Batch-level parallelism for `forward_batch` (default 1 = inline).
     pool: WorkerPool,
+    /// Recycled recurrence/head temporaries (one per in-flight chunk).
+    scratch: BufferPool<FixedScratch>,
 }
 
 impl FixedEngine {
@@ -187,6 +222,7 @@ impl FixedEngine {
             act: ActTables::new(cfg),
             softmax,
             pool: WorkerPool::new(1),
+            scratch: BufferPool::new(32),
         })
     }
 
@@ -207,6 +243,12 @@ impl FixedEngine {
 
     pub fn parallelism(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Scratch-pool counters — the zero-allocation regression tests
+    /// assert misses plateau once the pool is warm.
+    pub fn scratch_stats(&self) -> PoolStats {
+        self.scratch.stats()
     }
 
     /// Cast an accumulator value (2F fractional bits) to the engine type.
@@ -293,57 +335,83 @@ impl FixedEngine {
         h
     }
 
-    /// Final-layer LUT activation for one raw-logit row.
-    fn output_probs(&self, logits: &[i64]) -> Vec<f32> {
+    /// Final-layer LUT activation for one raw-logit row, appended to
+    /// `out`.  Sigmoid is allocation-free; the LUT softmax builds small
+    /// per-row temporaries inside [`SoftmaxTables::softmax_raw`].
+    fn output_probs_into(&self, logits: &[i64], out: &mut Vec<f32>) {
         let spec = self.cfg.spec;
         match self.arch.output_activation {
-            OutputActivation::Sigmoid => logits
-                .iter()
-                .map(|&z| dequantize(self.act.sigmoid_raw(z, spec), spec) as f32)
-                .collect(),
+            OutputActivation::Sigmoid => out.extend(
+                logits
+                    .iter()
+                    .map(|&z| dequantize(self.act.sigmoid_raw(z, spec), spec) as f32),
+            ),
             OutputActivation::Softmax => {
                 let sm = self.softmax.as_ref().expect("softmax tables");
-                sm.softmax_raw(logits, spec)
-                    .iter()
-                    .map(|&p| dequantize(p, spec) as f32)
-                    .collect()
+                out.extend(
+                    sm.softmax_raw(logits, spec)
+                        .iter()
+                        .map(|&p| dequantize(p, spec) as f32),
+                );
             }
         }
+    }
+
+    /// Final-layer LUT activation for one raw-logit row.
+    fn output_probs(&self, logits: &[i64]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(logits.len());
+        self.output_probs_into(logits, &mut out);
+        out
     }
 
     // ---- lockstep batched path (bit-exact integer datapath) ------------
 
-    /// Tile a 2F-bias row across the batch into a packed buffer.
-    fn tile_bias(bias: &[i64], batch: usize) -> Vec<i64> {
-        let mut out = Vec::with_capacity(batch * bias.len());
+    /// Gather timestep `t` of every sample from the packed quantized
+    /// buffer into `xt`.
+    fn gather_step(
+        x_raw: &[i64],
+        stride: usize,
+        t: usize,
+        i_sz: usize,
+        xt: &mut [i64],
+    ) {
+        for bi in 0..xt.len() / i_sz {
+            xt[bi * i_sz..(bi + 1) * i_sz].copy_from_slice(
+                &x_raw[bi * stride + t * i_sz..bi * stride + (t + 1) * i_sz],
+            );
+        }
+    }
+
+    /// Tile a 2F-bias row across the batch, recycling `out`'s capacity.
+    fn tile_bias_into(bias: &[i64], batch: usize, out: &mut Vec<i64>) {
+        out.clear();
+        out.reserve(batch * bias.len());
         for _ in 0..batch {
             out.extend_from_slice(bias);
         }
-        out
     }
 
-    /// Lockstep LSTM over packed raw inputs `[b][seq*i]`; returns `[b][h]`.
-    fn lstm_forward_batch(&self, x_raw: &[i64], b: usize) -> Vec<i64> {
+    /// Lockstep LSTM over the packed quantized inputs in `s.x_raw`;
+    /// leaves the packed `[b][h]` state in `s.h`.
+    fn lstm_forward_batch(&self, b: usize, s: &mut FixedScratch) {
         let h_sz = self.arch.hidden_size;
         let i_sz = self.arch.input_size;
         let stride = self.arch.seq_len * i_sz;
         let spec = self.cfg.spec;
-        let mut h = vec![0i64; b * h_sz];
-        let mut c = vec![0i64; b * h_sz];
-        let mut z = vec![0i64; b * 4 * h_sz];
-        let mut xt = vec![0i64; b * i_sz];
+        zeroed(&mut s.h, b * h_sz);
+        zeroed(&mut s.c, b * h_sz);
+        zeroed(&mut s.z, b * 4 * h_sz);
+        zeroed(&mut s.xt, b * i_sz);
         for t in 0..self.arch.seq_len {
+            Self::gather_step(&s.x_raw, stride, t, i_sz, &mut s.xt);
             for bi in 0..b {
-                xt[bi * i_sz..(bi + 1) * i_sz].copy_from_slice(
-                    &x_raw[bi * stride + t * i_sz..bi * stride + (t + 1) * i_sz],
-                );
-                z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
+                s.z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
                     .copy_from_slice(&self.rnn_b2f);
             }
-            self.rnn_w.matmul_acc(&xt, b, &mut z);
-            self.rnn_u.matmul_acc(&h, b, &mut z);
+            self.rnn_w.matmul_acc(&s.xt, b, &mut s.z);
+            self.rnn_u.matmul_acc(&s.h, b, &mut s.z);
             for bi in 0..b {
-                let zb = &z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
+                let zb = &s.z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
                 for j in 0..h_sz {
                     let zi = self.cast_acc(zb[j]);
                     let zf = self.cast_acc(zb[h_sz + j]);
@@ -353,7 +421,7 @@ impl FixedEngine {
                     let f_g = self.act.sigmoid_raw(zf, spec);
                     let g = self.act.tanh_raw(zc, spec);
                     let o_g = self.act.sigmoid_raw(zo, spec);
-                    let cj = &mut c[bi * h_sz + j];
+                    let cj = &mut s.c[bi * h_sz + j];
                     *cj = self.had(f_g, *cj) + self.had(i_g, g);
                     *cj = crate::fixed::value::overflow(
                         *cj,
@@ -361,39 +429,38 @@ impl FixedEngine {
                         self.cfg.overflow,
                     );
                     let tc = self.act.tanh_raw(*cj, spec);
-                    h[bi * h_sz + j] = self.had(o_g, tc);
+                    s.h[bi * h_sz + j] = self.had(o_g, tc);
                 }
             }
         }
-        h
     }
 
-    /// Lockstep GRU over packed raw inputs `[b][seq*i]`; returns `[b][h]`.
-    fn gru_forward_batch(&self, x_raw: &[i64], b: usize) -> Vec<i64> {
+    /// Lockstep GRU over the packed quantized inputs in `s.x_raw`;
+    /// leaves the packed `[b][h]` state in `s.h` (`s.z` holds the
+    /// input-half gates, `s.hm` the recurrent half).
+    fn gru_forward_batch(&self, b: usize, s: &mut FixedScratch) {
         let h_sz = self.arch.hidden_size;
         let i_sz = self.arch.input_size;
         let stride = self.arch.seq_len * i_sz;
         let spec = self.cfg.spec;
         let b_rec = self.rnn_b_rec2f.as_ref().expect("gru recurrent bias");
         let one = 1i64 << spec.frac();
-        let mut h = vec![0i64; b * h_sz];
-        let mut xm = vec![0i64; b * 3 * h_sz];
-        let mut hm = vec![0i64; b * 3 * h_sz];
-        let mut xt = vec![0i64; b * i_sz];
+        zeroed(&mut s.h, b * h_sz);
+        zeroed(&mut s.z, b * 3 * h_sz);
+        zeroed(&mut s.hm, b * 3 * h_sz);
+        zeroed(&mut s.xt, b * i_sz);
         for t in 0..self.arch.seq_len {
+            Self::gather_step(&s.x_raw, stride, t, i_sz, &mut s.xt);
             for bi in 0..b {
-                xt[bi * i_sz..(bi + 1) * i_sz].copy_from_slice(
-                    &x_raw[bi * stride + t * i_sz..bi * stride + (t + 1) * i_sz],
-                );
-                xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
+                s.z[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
                     .copy_from_slice(&self.rnn_b2f);
-                hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz].copy_from_slice(b_rec);
+                s.hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz].copy_from_slice(b_rec);
             }
-            self.rnn_w.matmul_acc(&xt, b, &mut xm);
-            self.rnn_u.matmul_acc(&h, b, &mut hm);
+            self.rnn_w.matmul_acc(&s.xt, b, &mut s.z);
+            self.rnn_u.matmul_acc(&s.h, b, &mut s.hm);
             for bi in 0..b {
-                let xb = &xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
-                let hb = &hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let xb = &s.z[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let hb = &s.hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
                 for j in 0..h_sz {
                     let z_pre = self.cast_acc(xb[j] + hb[j]);
                     let r_pre = self.cast_acc(xb[h_sz + j] + hb[h_sz + j]);
@@ -406,7 +473,7 @@ impl FixedEngine {
                         self.cfg.overflow,
                     );
                     let g = self.act.tanh_raw(g_pre, spec);
-                    let hj = &mut h[bi * h_sz + j];
+                    let hj = &mut s.h[bi * h_sz + j];
                     let keep = self.had(z_g, *hj);
                     let new = self.had(one - z_g, g);
                     *hj = crate::fixed::value::overflow(
@@ -417,42 +484,61 @@ impl FixedEngine {
                 }
             }
         }
-        h
     }
 
-    /// One worker's share of a batch: quantize the chunk's inputs once,
-    /// run the lockstep recurrence, then the batched dense head.
-    fn forward_chunk(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
-        let b = xs.len();
+    /// One worker's share of a batch: quantize the chunk's inputs once
+    /// into pooled scratch, run the lockstep recurrence, then the batched
+    /// dense head — output rows appended flat to `out`.
+    fn forward_rows_into(
+        &self,
+        rows: BatchRows,
+        s: &mut FixedScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let b = rows.len();
+        if b == 0 {
+            return;
+        }
         let stride = self.arch.seq_len * self.arch.input_size;
-        // Input quantization once per chunk into one packed buffer.
-        let mut x_raw = vec![0i64; b * stride];
-        for (bi, x) in xs.iter().enumerate() {
-            for (k, &v) in x.iter().enumerate() {
-                x_raw[bi * stride + k] = quantize(v as f64, self.cfg);
-            }
+        // Input quantization once per chunk into the packed scratch buffer.
+        s.x_raw.clear();
+        s.x_raw.reserve(b * stride);
+        for bi in 0..b {
+            s.x_raw
+                .extend(rows.row(bi).iter().map(|&v| quantize(v as f64, self.cfg)));
         }
-        let mut h = match self.arch.cell {
-            Cell::Lstm => self.lstm_forward_batch(&x_raw, b),
-            Cell::Gru => self.gru_forward_batch(&x_raw, b),
-        };
+        match self.arch.cell {
+            Cell::Lstm => self.lstm_forward_batch(b, s),
+            Cell::Gru => self.gru_forward_batch(b, s),
+        }
         for layer in &self.dense {
-            let mut y = Self::tile_bias(&layer.b2f, b);
-            layer.w.matmul_acc(&h, b, &mut y);
-            h = y
-                .iter()
-                .map(|&acc| self.cast_acc(acc).max(0)) // ReLU is exact
-                .collect();
+            Self::tile_bias_into(&layer.b2f, b, &mut s.acts);
+            layer.w.matmul_acc(&s.h, b, &mut s.acts);
+            s.h.clear();
+            s.h.extend(
+                s.acts
+                    .iter()
+                    .map(|&acc| self.cast_acc(acc).max(0)), // ReLU is exact
+            );
         }
-        let mut y = Self::tile_bias(&self.out.b2f, b);
-        self.out.w.matmul_acc(&h, b, &mut y);
+        Self::tile_bias_into(&self.out.b2f, b, &mut s.acts);
+        self.out.w.matmul_acc(&s.h, b, &mut s.acts);
         let out_sz = self.out.b2f.len();
-        y.chunks_exact(out_sz)
-            .map(|row| {
-                let logits: Vec<i64> =
-                    row.iter().map(|&acc| self.cast_acc(acc)).collect();
-                self.output_probs(&logits)
-            })
+        for row in s.acts.chunks_exact(out_sz) {
+            s.logits.clear();
+            s.logits.extend(row.iter().map(|&acc| self.cast_acc(acc)));
+            self.output_probs_into(&s.logits, out);
+        }
+    }
+
+    /// One worker's share of a batch in the legacy per-sample layout.
+    fn forward_chunk(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let mut s = self.scratch.get_with(FixedScratch::default);
+        let mut flat = Vec::with_capacity(xs.len() * self.arch.output_size);
+        self.forward_rows_into(BatchRows::Slices(xs), &mut s, &mut flat);
+        self.scratch.put(s);
+        flat.chunks_exact(self.arch.output_size.max(1))
+            .map(|r| r.to_vec())
             .collect()
     }
 }
@@ -492,6 +578,56 @@ impl Engine for FixedEngine {
         }
         self.pool
             .map_chunks(xs.len(), |range| self.forward_chunk(&xs[range]))
+    }
+
+    /// The zero-allocation serving path: quantized inputs and recurrence
+    /// temporaries come from the scratch pool and rows land in the
+    /// caller's recycled `out`.  Single-worker engines (the serving
+    /// default) allocate nothing once the pool is warm — except the LUT
+    /// softmax's per-row temporaries on softmax-output models.
+    fn forward_packed_into(&self, xs: &[f32], n: usize, out: &mut PackedOut) {
+        let stride = self.arch.seq_len * self.arch.input_size;
+        assert_eq!(
+            xs.len(),
+            n * stride,
+            "packed buffer length {} != {} samples x stride {}",
+            xs.len(),
+            n,
+            stride
+        );
+        out.reset(self.arch.output_size);
+        if n == 0 {
+            return;
+        }
+        if self.pool.workers() <= 1 {
+            let mut s = self.scratch.get_with(FixedScratch::default);
+            let mut flat = std::mem::take(&mut out.data);
+            self.forward_rows_into(
+                BatchRows::Packed { xs, stride, start: 0, len: n },
+                &mut s,
+                &mut flat,
+            );
+            out.data = flat;
+            self.scratch.put(s);
+        } else {
+            out.data = self.pool.map_chunks(n, |range| {
+                let mut s = self.scratch.get_with(FixedScratch::default);
+                let mut flat =
+                    Vec::with_capacity(range.len() * self.arch.output_size);
+                self.forward_rows_into(
+                    BatchRows::Packed {
+                        xs,
+                        stride,
+                        start: range.start,
+                        len: range.len(),
+                    },
+                    &mut s,
+                    &mut flat,
+                );
+                self.scratch.put(s);
+                flat
+            });
+        }
     }
 }
 
@@ -681,5 +817,21 @@ mod tests {
             let y = fx.forward(&sample_input(15));
             assert!(y[0] >= -0.01 && y[0] <= 1.01, "w={width} y={}", y[0]);
         }
+    }
+
+    #[test]
+    fn scratch_pool_goes_warm() {
+        let w = tiny_weights("lstm");
+        let fx =
+            FixedEngine::new(&w, QuantConfig::ptq(FixedSpec::new(16, 6))).unwrap();
+        let xs: Vec<f32> = (0..3).flat_map(|_| sample_input(15)).collect();
+        let mut out = PackedOut::new();
+        for _ in 0..10 {
+            fx.forward_packed_into(&xs, 3, &mut out);
+            assert_eq!(out.rows(), 3);
+        }
+        let stats = fx.scratch_stats();
+        assert_eq!(stats.misses, 1, "one scratch build, then recycled");
+        assert_eq!(stats.hits, 9);
     }
 }

@@ -5,13 +5,24 @@
 //! [`WorkerPool`], and each chunk runs the recurrence in lockstep over its
 //! samples so every weight row is streamed across the whole chunk
 //! ([`MatT::matmul_acc`]) instead of being re-fetched per sample.
-//! Per-sample arithmetic order is unchanged, so batched outputs are
-//! bitwise-identical to `forward`.
+//!
+//! Every inner product — per-sample or batched — goes through
+//! [`super::kernels`], whose reduction order is pinned (lane-strided
+//! partial sums + fixed combine tree).  That makes `forward`,
+//! `forward_batch`, and `forward_packed_into` bitwise identical to each
+//! other for any worker count, and identical with the SIMD feature on
+//! or off.
+//!
+//! The serving entry point `forward_packed_into` allocates nothing in
+//! steady state: per-timestep temporaries (`xt`/`h`/`c`/gate buffers)
+//! live in a [`BufferPool`]-recycled [`FloatScratch`], and output rows
+//! are written straight into the caller's [`PackedOut`].
 
 use crate::model::{Arch, Cell, OutputActivation, Weights};
+use crate::util::pool::{BufferPool, PoolStats};
 use crate::util::threads::WorkerPool;
 
-use super::Engine;
+use super::{kernels, BatchRows, Engine, PackedOut};
 
 /// Row-major matrix with Keras orientation `(in, out)`, stored transposed
 /// `(out, in)` so each output's dot product is a contiguous scan.
@@ -38,40 +49,34 @@ impl MatT {
         }
     }
 
-    /// `y[o] += Σ_i x[i] * w[o, i]`
+    /// `y[o] += Σ_i x[i] * w[o, i]` — one sample through the kernel
+    /// layer (a batch-1 [`MatT::matmul_acc`], so the per-dot reduction
+    /// order is identical to the batched path by construction).
     #[inline]
     pub fn matvec_acc(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.cols_in);
         debug_assert_eq!(y.len(), self.rows_out);
-        for (o, yo) in y.iter_mut().enumerate() {
-            let row = &self.data[o * self.cols_in..(o + 1) * self.cols_in];
-            let mut acc = 0.0f32;
-            for (xi, wi) in x.iter().zip(row) {
-                acc += xi * wi;
-            }
-            *yo += acc;
-        }
+        kernels::matmul_acc_f32(&self.data, self.rows_out, self.cols_in, x, 1, y);
     }
 
     /// Batched `matvec_acc` over packed row-major buffers:
     /// `ys[b][o] += Σ_i xs[b][i] * w[o, i]` for every sample `b`.
     ///
     /// The weight row is loaded once per output and streamed across the
-    /// whole batch (cache blocking on the batch axis); the per-(sample,
-    /// output) accumulation order is exactly `matvec_acc`'s, so results
-    /// are bitwise-equal to the per-sample path.
+    /// whole batch (cache blocking on the batch axis); every (sample,
+    /// output) pair reduces in `kernels`' pinned lane order, so results
+    /// are bitwise-equal to the per-sample path — and to the SIMD path.
     pub fn matmul_acc(&self, xs: &[f32], batch: usize, ys: &mut [f32]) {
         debug_assert_eq!(xs.len(), batch * self.cols_in);
         debug_assert_eq!(ys.len(), batch * self.rows_out);
-        for (o, row) in self.data.chunks_exact(self.cols_in).enumerate() {
-            for (b, x) in xs.chunks_exact(self.cols_in).enumerate() {
-                let mut acc = 0.0f32;
-                for (xi, wi) in x.iter().zip(row) {
-                    acc += xi * wi;
-                }
-                ys[b * self.rows_out + o] += acc;
-            }
-        }
+        kernels::matmul_acc_f32(
+            &self.data,
+            self.rows_out,
+            self.cols_in,
+            xs,
+            batch,
+            ys,
+        );
     }
 }
 
@@ -83,6 +88,32 @@ fn sigmoid(x: f32) -> f32 {
 struct DenseLayer {
     w: MatT,
     b: Vec<f32>,
+}
+
+/// Per-worker recurrence/head temporaries, recycled through the
+/// engine's scratch pool so steady-state batches allocate nothing.
+#[derive(Default)]
+struct FloatScratch {
+    /// Gathered timestep inputs, packed `[b][input_size]`.
+    xt: Vec<f32>,
+    /// Hidden state `[b][h]`; doubles as the dense-head ping buffer.
+    h: Vec<f32>,
+    /// LSTM cell state `[b][h]`.
+    c: Vec<f32>,
+    /// Gate pre-activations: LSTM `[b][4h]`, GRU input-half `[b][3h]`.
+    z: Vec<f32>,
+    /// GRU recurrent-half gate pre-activations `[b][3h]`.
+    hm: Vec<f32>,
+    /// Dense-head pong buffer.
+    acts: Vec<f32>,
+    /// Output-layer logits `[b][out]`.
+    logits: Vec<f32>,
+}
+
+#[inline]
+fn zeroed(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
 }
 
 /// f32 inference engine.
@@ -97,6 +128,8 @@ pub struct FloatEngine {
     out: DenseLayer,
     /// Batch-level parallelism for `forward_batch` (default 1 = inline).
     pool: WorkerPool,
+    /// Recycled recurrence/head temporaries (one per in-flight chunk).
+    scratch: BufferPool<FloatScratch>,
 }
 
 impl FloatEngine {
@@ -135,6 +168,7 @@ impl FloatEngine {
                 b: ob.data.clone(),
             },
             pool: WorkerPool::new(1),
+            scratch: BufferPool::new(32),
         })
     }
 
@@ -151,6 +185,12 @@ impl FloatEngine {
 
     pub fn parallelism(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Scratch-pool counters — the zero-allocation regression tests
+    /// assert misses plateau once the pool is warm.
+    pub fn scratch_stats(&self) -> PoolStats {
+        self.scratch.stats()
     }
 
     fn lstm_forward(&self, x: &[f32]) -> Vec<f32> {
@@ -200,131 +240,172 @@ impl FloatEngine {
         h
     }
 
-    /// Final-layer activation for one logit row.
-    fn output_probs(&self, y: &[f32]) -> Vec<f32> {
+    /// Final-layer activation for one logit row, appended to `out`.
+    fn output_probs_into(&self, y: &[f32], out: &mut Vec<f32>) {
         match self.arch.output_activation {
-            OutputActivation::Sigmoid => y.iter().map(|&v| sigmoid(v)).collect(),
+            OutputActivation::Sigmoid => {
+                out.extend(y.iter().map(|&v| sigmoid(v)));
+            }
             OutputActivation::Softmax => {
                 let max = y.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let exps: Vec<f32> = y.iter().map(|&v| (v - max).exp()).collect();
-                let sum: f32 = exps.iter().sum();
-                exps.iter().map(|&e| e / sum).collect()
+                let mut sum = 0.0f32;
+                for &v in y {
+                    sum += (v - max).exp();
+                }
+                out.extend(y.iter().map(|&v| (v - max).exp() / sum));
             }
         }
+    }
+
+    /// Final-layer activation for one logit row.
+    fn output_probs(&self, y: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(y.len());
+        self.output_probs_into(y, &mut out);
+        out
     }
 
     // ---- lockstep batched path (bitwise-identical per sample) ----------
 
     /// Gather timestep `t` of every sample into a packed `[b][i_sz]` buffer.
-    fn gather_step(xs: &[&[f32]], t: usize, i_sz: usize, xt: &mut [f32]) {
-        for (bi, x) in xs.iter().enumerate() {
+    fn gather_step(rows: &BatchRows, t: usize, i_sz: usize, xt: &mut [f32]) {
+        for bi in 0..rows.len() {
+            let x = rows.row(bi);
             xt[bi * i_sz..(bi + 1) * i_sz]
                 .copy_from_slice(&x[t * i_sz..(t + 1) * i_sz]);
         }
     }
 
-    /// Tile a bias row across the batch into a packed `[b][len]` buffer.
-    fn tile_bias(bias: &[f32], batch: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(batch * bias.len());
+    /// Tile a bias row across the batch, recycling `out`'s capacity.
+    fn tile_bias_into(bias: &[f32], batch: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(batch * bias.len());
         for _ in 0..batch {
             out.extend_from_slice(bias);
         }
-        out
     }
 
-    /// Lockstep LSTM over a chunk of samples; returns packed `[b][h]`.
-    fn lstm_forward_batch(&self, xs: &[&[f32]]) -> Vec<f32> {
-        let b = xs.len();
+    /// Lockstep LSTM over a chunk; leaves the packed `[b][h]` state in
+    /// `s.h`.
+    fn lstm_forward_batch(&self, rows: &BatchRows, s: &mut FloatScratch) {
+        let b = rows.len();
         let h_sz = self.arch.hidden_size;
         let i_sz = self.arch.input_size;
-        let mut h = vec![0.0f32; b * h_sz];
-        let mut c = vec![0.0f32; b * h_sz];
-        let mut z = vec![0.0f32; b * 4 * h_sz];
-        let mut xt = vec![0.0f32; b * i_sz];
+        zeroed(&mut s.h, b * h_sz);
+        zeroed(&mut s.c, b * h_sz);
+        zeroed(&mut s.z, b * 4 * h_sz);
+        zeroed(&mut s.xt, b * i_sz);
         for t in 0..self.arch.seq_len {
-            Self::gather_step(xs, t, i_sz, &mut xt);
+            Self::gather_step(rows, t, i_sz, &mut s.xt);
             for bi in 0..b {
-                z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
+                s.z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz]
                     .copy_from_slice(&self.rnn_b);
             }
-            self.rnn_w.matmul_acc(&xt, b, &mut z);
-            self.rnn_u.matmul_acc(&h, b, &mut z);
+            self.rnn_w.matmul_acc(&s.xt, b, &mut s.z);
+            self.rnn_u.matmul_acc(&s.h, b, &mut s.z);
             for bi in 0..b {
-                let zb = &z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
+                let zb = &s.z[bi * 4 * h_sz..(bi + 1) * 4 * h_sz];
                 for j in 0..h_sz {
                     let i_g = sigmoid(zb[j]);
                     let f_g = sigmoid(zb[h_sz + j]);
                     let g = zb[2 * h_sz + j].tanh();
                     let o_g = sigmoid(zb[3 * h_sz + j]);
-                    let cj = &mut c[bi * h_sz + j];
+                    let cj = &mut s.c[bi * h_sz + j];
                     *cj = f_g * *cj + i_g * g;
-                    h[bi * h_sz + j] = o_g * cj.tanh();
+                    s.h[bi * h_sz + j] = o_g * cj.tanh();
                 }
             }
         }
-        h
     }
 
-    /// Lockstep GRU over a chunk of samples; returns packed `[b][h]`.
-    fn gru_forward_batch(&self, xs: &[&[f32]]) -> Vec<f32> {
-        let b = xs.len();
+    /// Lockstep GRU over a chunk; leaves the packed `[b][h]` state in
+    /// `s.h` (`s.z` holds the input-half gates, `s.hm` the recurrent
+    /// half).
+    fn gru_forward_batch(&self, rows: &BatchRows, s: &mut FloatScratch) {
+        let b = rows.len();
         let h_sz = self.arch.hidden_size;
         let i_sz = self.arch.input_size;
         let b_rec = self.rnn_b_rec.as_ref().expect("gru has recurrent bias");
-        let mut h = vec![0.0f32; b * h_sz];
-        let mut xm = vec![0.0f32; b * 3 * h_sz];
-        let mut hm = vec![0.0f32; b * 3 * h_sz];
-        let mut xt = vec![0.0f32; b * i_sz];
+        zeroed(&mut s.h, b * h_sz);
+        zeroed(&mut s.z, b * 3 * h_sz);
+        zeroed(&mut s.hm, b * 3 * h_sz);
+        zeroed(&mut s.xt, b * i_sz);
         for t in 0..self.arch.seq_len {
-            Self::gather_step(xs, t, i_sz, &mut xt);
+            Self::gather_step(rows, t, i_sz, &mut s.xt);
             for bi in 0..b {
-                xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
+                s.z[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
                     .copy_from_slice(&self.rnn_b);
-                hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz].copy_from_slice(b_rec);
+                s.hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz]
+                    .copy_from_slice(b_rec);
             }
-            self.rnn_w.matmul_acc(&xt, b, &mut xm);
-            self.rnn_u.matmul_acc(&h, b, &mut hm);
+            self.rnn_w.matmul_acc(&s.xt, b, &mut s.z);
+            self.rnn_u.matmul_acc(&s.h, b, &mut s.hm);
             for bi in 0..b {
-                let xb = &xm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
-                let hb = &hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let xb = &s.z[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
+                let hb = &s.hm[bi * 3 * h_sz..(bi + 1) * 3 * h_sz];
                 for j in 0..h_sz {
                     let z_g = sigmoid(xb[j] + hb[j]);
                     let r_g = sigmoid(xb[h_sz + j] + hb[h_sz + j]);
-                    let g = (xb[2 * h_sz + j] + r_g * hb[2 * h_sz + j]).tanh();
-                    let hj = &mut h[bi * h_sz + j];
+                    let g =
+                        (xb[2 * h_sz + j] + r_g * hb[2 * h_sz + j]).tanh();
+                    let hj = &mut s.h[bi * h_sz + j];
                     *hj = z_g * *hj + (1.0 - z_g) * g;
                 }
             }
         }
-        h
     }
 
-    /// Dense head + output activation over a packed `[b][h]` state.
-    fn head_forward_batch(&self, mut h: Vec<f32>, b: usize) -> Vec<Vec<f32>> {
+    /// Dense head + output activation over the packed `[b][h]` state in
+    /// `s.h`; appends `b * output_size` probabilities to `out`.
+    fn head_forward_into(
+        &self,
+        b: usize,
+        s: &mut FloatScratch,
+        out: &mut Vec<f32>,
+    ) {
         for layer in &self.dense {
-            let mut y = Self::tile_bias(&layer.b, b);
-            layer.w.matmul_acc(&h, b, &mut y);
-            for v in &mut y {
+            Self::tile_bias_into(&layer.b, b, &mut s.acts);
+            layer.w.matmul_acc(&s.h, b, &mut s.acts);
+            for v in &mut s.acts {
                 *v = v.max(0.0); // ReLU head (paper §4)
             }
-            h = y;
+            std::mem::swap(&mut s.h, &mut s.acts);
         }
-        let mut y = Self::tile_bias(&self.out.b, b);
-        self.out.w.matmul_acc(&h, b, &mut y);
+        Self::tile_bias_into(&self.out.b, b, &mut s.logits);
+        self.out.w.matmul_acc(&s.h, b, &mut s.logits);
         let out_sz = self.out.b.len();
-        y.chunks_exact(out_sz)
-            .map(|row| self.output_probs(row))
-            .collect()
+        for row in s.logits.chunks_exact(out_sz) {
+            self.output_probs_into(row, out);
+        }
     }
 
-    /// One worker's share of a batch: lockstep recurrence + batched head.
+    /// One worker's share of a batch: lockstep recurrence + batched
+    /// head, output rows appended flat to `out`.
+    fn forward_rows_into(
+        &self,
+        rows: BatchRows,
+        s: &mut FloatScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let b = rows.len();
+        if b == 0 {
+            return;
+        }
+        match self.arch.cell {
+            Cell::Lstm => self.lstm_forward_batch(&rows, s),
+            Cell::Gru => self.gru_forward_batch(&rows, s),
+        }
+        self.head_forward_into(b, s, out);
+    }
+
+    /// One worker's share of a batch in the legacy per-sample layout.
     fn forward_chunk(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
-        let b = xs.len();
-        let h = match self.arch.cell {
-            Cell::Lstm => self.lstm_forward_batch(xs),
-            Cell::Gru => self.gru_forward_batch(xs),
-        };
-        self.head_forward_batch(h, b)
+        let mut s = self.scratch.get_with(FloatScratch::default);
+        let mut flat = Vec::with_capacity(xs.len() * self.arch.output_size);
+        self.forward_rows_into(BatchRows::Slices(xs), &mut s, &mut flat);
+        self.scratch.put(s);
+        flat.chunks_exact(self.arch.output_size.max(1))
+            .map(|r| r.to_vec())
+            .collect()
     }
 }
 
@@ -362,6 +443,57 @@ impl Engine for FloatEngine {
         self.pool
             .map_chunks(xs.len(), |range| self.forward_chunk(&xs[range]))
     }
+
+    /// The zero-allocation serving path: recurrence temporaries come
+    /// from the scratch pool and rows land in the caller's recycled
+    /// `out`.  Single-worker engines (the serving default — each
+    /// coordinator worker owns its engine) allocate nothing once the
+    /// pool is warm; multi-worker engines allocate one chunk buffer per
+    /// worker inside `map_chunks`.
+    fn forward_packed_into(&self, xs: &[f32], n: usize, out: &mut PackedOut) {
+        let stride = self.arch.seq_len * self.arch.input_size;
+        assert_eq!(
+            xs.len(),
+            n * stride,
+            "packed buffer length {} != {} samples x stride {}",
+            xs.len(),
+            n,
+            stride
+        );
+        out.reset(self.arch.output_size);
+        if n == 0 {
+            return;
+        }
+        if self.pool.workers() <= 1 {
+            let mut s = self.scratch.get_with(FloatScratch::default);
+            let mut flat = std::mem::take(&mut out.data);
+            self.forward_rows_into(
+                BatchRows::Packed { xs, stride, start: 0, len: n },
+                &mut s,
+                &mut flat,
+            );
+            out.data = flat;
+            self.scratch.put(s);
+        } else {
+            out.data = self.pool.map_chunks(n, |range| {
+                let mut s = self.scratch.get_with(FloatScratch::default);
+                let mut flat =
+                    Vec::with_capacity(range.len() * self.arch.output_size);
+                self.forward_rows_into(
+                    BatchRows::Packed {
+                        xs,
+                        stride,
+                        start: range.start,
+                        len: range.len(),
+                    },
+                    &mut s,
+                    &mut flat,
+                );
+                self.scratch.put(s);
+                flat
+            });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -395,5 +527,23 @@ mod tests {
         assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
         assert!(sigmoid(10.0) > 0.9999);
         assert!(sigmoid(-10.0) < 0.0001);
+    }
+
+    #[test]
+    fn scratch_pool_goes_warm() {
+        use crate::model::{zoo, Cell};
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        let weights = crate::model::Weights::synthetic(&arch, 7);
+        let engine = FloatEngine::new(&weights).unwrap();
+        let stride = arch.seq_len * arch.input_size;
+        let xs = vec![0.25f32; 3 * stride];
+        let mut out = PackedOut::new();
+        for _ in 0..10 {
+            engine.forward_packed_into(&xs, 3, &mut out);
+            assert_eq!(out.rows(), 3);
+        }
+        let stats = engine.scratch_stats();
+        assert_eq!(stats.misses, 1, "one scratch build, then recycled");
+        assert_eq!(stats.hits, 9);
     }
 }

@@ -1,0 +1,424 @@
+//! Vectorized inner-product kernels — the one place the engines compute
+//! dot products, scalar or SIMD.
+//!
+//! This is the software analogue of the paper's ReuseFactor=1 full
+//! unroll: saturate the multiplier lanes every cycle.  Two datapaths:
+//!
+//! * **f32** (`FloatEngine`) — the reduction order is *pinned*: partial
+//!   sums are kept in [`F32_LANES`] lanes filled lane-strided
+//!   (`acc[l] += x[c*L + l] * w[c*L + l]` for whole chunks in increasing
+//!   `c`, then tail element `j` into lane `j`), combined by the fixed
+//!   tree `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`.  The scalar fallback
+//!   implements exactly this order, and the AVX2 path performs the
+//!   identical per-lane multiply-then-add (no FMA — fused contraction
+//!   would change the rounding), so **float results are bitwise
+//!   identical** with `--features simd` on or off, on every target.
+//! * **i64** (`FixedEngine`) — integer addition is associative, so any
+//!   reduction order is exact; the scalar path is a plain sequential
+//!   sum.  The AVX2 path uses `_mm256_mul_epi32` (signed 32×32→64 from
+//!   each 64-bit lane's low half), exact because the fixed engine's
+//!   `MAX_WIDTH = 26` bounds every raw value well inside `i32`.
+//!
+//! Dispatch happens once per matrix multiply (`matmul_acc_*`), not per
+//! dot product: with `--features simd` on x86_64 an AVX2-capable host
+//! takes the vector path (runtime `is_x86_feature_detected!`), anything
+//! else falls back to the canonical scalar loops.  `tests/
+//! kernel_equivalence.rs` pins SIMD ≡ scalar bitwise for raw kernels
+//! and whole engines across odd shapes; `benches/hot_paths.rs` tracks
+//! the throughput win in `BENCH_kernels.json`.
+
+/// f32 accumulator lanes (one AVX2 `__m256` register).
+pub const F32_LANES: usize = 8;
+/// i64 accumulator lanes (one AVX2 `__m256i` register).
+pub const I64_LANES: usize = 4;
+
+/// Whether the vector kernels were compiled in (`--features simd` on a
+/// target we have lanes for).
+#[inline]
+pub fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Whether the vector kernels are actually taken on this host (compiled
+/// in *and* the CPU reports AVX2).
+#[inline]
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// The pinned f32 lane-combination tree.  Shared verbatim by the scalar
+/// and AVX2 paths — this is what makes them bitwise interchangeable.
+#[inline]
+fn reduce_f32(acc: &[f32; F32_LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Canonical f32 dot product: lane-strided partial sums, fixed tree
+/// reduction.  This *is* the contract; the AVX2 path mirrors it.
+#[inline]
+pub fn dot_f32_scalar(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = [0.0f32; F32_LANES];
+    for (xc, wc) in x.chunks_exact(F32_LANES).zip(w.chunks_exact(F32_LANES)) {
+        for ((a, xi), wi) in acc.iter_mut().zip(xc).zip(wc) {
+            *a += xi * wi;
+        }
+    }
+    let tail = x.len() - x.len() % F32_LANES;
+    for ((a, xi), wi) in acc.iter_mut().zip(&x[tail..]).zip(&w[tail..]) {
+        *a += xi * wi;
+    }
+    reduce_f32(&acc)
+}
+
+/// i64 dot product — integer addition is associative, so the plain
+/// sequential sum is the canonical (and exact) order.
+#[inline]
+pub fn dot_i64_scalar(x: &[i64], w: &[i64]) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = 0i64;
+    for (xi, wi) in x.iter().zip(w) {
+        acc += xi * wi;
+    }
+    acc
+}
+
+/// f32 dot product, dispatched (AVX2 where compiled + detected).
+#[inline]
+pub fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just confirmed at runtime.
+        return unsafe { x86::dot_f32_avx2(x, w) };
+    }
+    dot_f32_scalar(x, w)
+}
+
+/// i64 dot product, dispatched (AVX2 where compiled + detected).
+#[inline]
+pub fn dot_i64(x: &[i64], w: &[i64]) -> i64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        debug_assert!(fits_i32(x) && fits_i32(w), "mul_epi32 precondition");
+        // SAFETY: AVX2 support was just confirmed at runtime.
+        return unsafe { x86::dot_i64_avx2(x, w) };
+    }
+    dot_i64_scalar(x, w)
+}
+
+/// `ys[b * rows_out + o] += Σ_i xs[b * cols_in + i] * wt[o * cols_in + i]`
+/// — the scalar reference, identical accumulation order to
+/// [`dot_f32_scalar`] per (sample, output) pair.
+pub fn matmul_acc_f32_scalar(
+    wt: &[f32],
+    rows_out: usize,
+    cols_in: usize,
+    xs: &[f32],
+    batch: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(wt.len(), rows_out * cols_in);
+    debug_assert_eq!(xs.len(), batch * cols_in);
+    debug_assert_eq!(ys.len(), batch * rows_out);
+    for (o, row) in wt.chunks_exact(cols_in).enumerate() {
+        for (b, x) in xs.chunks_exact(cols_in).enumerate() {
+            ys[b * rows_out + o] += dot_f32_scalar(x, row);
+        }
+    }
+}
+
+/// Batched f32 matmul-accumulate, dispatched once per call.
+pub fn matmul_acc_f32(
+    wt: &[f32],
+    rows_out: usize,
+    cols_in: usize,
+    xs: &[f32],
+    batch: usize,
+    ys: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        debug_assert_eq!(wt.len(), rows_out * cols_in);
+        debug_assert_eq!(xs.len(), batch * cols_in);
+        debug_assert_eq!(ys.len(), batch * rows_out);
+        // SAFETY: AVX2 support was just confirmed at runtime.
+        unsafe { x86::matmul_acc_f32_avx2(wt, rows_out, cols_in, xs, batch, ys) };
+        return;
+    }
+    matmul_acc_f32_scalar(wt, rows_out, cols_in, xs, batch, ys);
+}
+
+/// i64 variant of [`matmul_acc_f32_scalar`]; exact under any order.
+pub fn matmul_acc_i64_scalar(
+    wt: &[i64],
+    rows_out: usize,
+    cols_in: usize,
+    xs: &[i64],
+    batch: usize,
+    ys: &mut [i64],
+) {
+    debug_assert_eq!(wt.len(), rows_out * cols_in);
+    debug_assert_eq!(xs.len(), batch * cols_in);
+    debug_assert_eq!(ys.len(), batch * rows_out);
+    for (o, row) in wt.chunks_exact(cols_in).enumerate() {
+        for (b, x) in xs.chunks_exact(cols_in).enumerate() {
+            ys[b * rows_out + o] += dot_i64_scalar(x, row);
+        }
+    }
+}
+
+/// Batched i64 matmul-accumulate, dispatched once per call.
+///
+/// SIMD precondition (debug-asserted): every value fits `i32`.  The
+/// fixed engine's `MAX_WIDTH = 26` keeps raw values under 2^26, far
+/// inside the bound, so the `_mm256_mul_epi32` low-half multiply is
+/// exact.
+pub fn matmul_acc_i64(
+    wt: &[i64],
+    rows_out: usize,
+    cols_in: usize,
+    xs: &[i64],
+    batch: usize,
+    ys: &mut [i64],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        debug_assert_eq!(wt.len(), rows_out * cols_in);
+        debug_assert_eq!(xs.len(), batch * cols_in);
+        debug_assert_eq!(ys.len(), batch * rows_out);
+        debug_assert!(fits_i32(xs) && fits_i32(wt), "mul_epi32 precondition");
+        // SAFETY: AVX2 support was just confirmed at runtime.
+        unsafe { x86::matmul_acc_i64_avx2(wt, rows_out, cols_in, xs, batch, ys) };
+        return;
+    }
+    matmul_acc_i64_scalar(wt, rows_out, cols_in, xs, batch, ys);
+}
+
+/// Debug-only guard for the `_mm256_mul_epi32` low-half precondition.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn fits_i32(vals: &[i64]) -> bool {
+    vals.iter().all(|&v| i32::try_from(v).is_ok())
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! AVX2 lane implementations.  Every function is `unsafe` only for
+    //! the `#[target_feature]` contract: the *sole* precondition is
+    //! that the host supports AVX2, which the dispatchers in the parent
+    //! module verify with `is_x86_feature_detected!` before every call.
+    //! All memory access below stays in bounds by construction
+    //! (`chunks_exact` + checked tails), so no other obligation exists.
+
+    use core::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_ps, _mm256_loadu_ps,
+        _mm256_loadu_si256, _mm256_mul_epi32, _mm256_mul_ps,
+        _mm256_setzero_ps, _mm256_setzero_si256, _mm256_storeu_ps,
+        _mm256_storeu_si256,
+    };
+
+    use super::{reduce_f32, F32_LANES, I64_LANES};
+
+    // SAFETY: `unsafe fn` only for the target-feature contract — the
+    // dispatcher confirms AVX2 before every call (module doc above).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_f32_avx2(x: &[f32], w: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), w.len());
+        let chunks = x.len() / F32_LANES;
+        // SAFETY: (whole function) AVX2 is guaranteed by the caller per
+        // the module contract; every pointer below is derived from a
+        // slice and offset strictly inside its length (`c * 8 + 8 <=
+        // chunks * 8 <= len`), and unaligned loads/stores are used
+        // throughout, so alignment is irrelevant.
+        let mut acc = unsafe { _mm256_setzero_ps() };
+        for c in 0..chunks {
+            let base = c * F32_LANES;
+            // SAFETY: base + 8 <= x.len() and w.len(); loadu has no
+            // alignment requirement.
+            let xv = unsafe { _mm256_loadu_ps(x.as_ptr().add(base)) };
+            let wv = unsafe { _mm256_loadu_ps(w.as_ptr().add(base)) };
+            // Multiply then add, NOT fmadd: the scalar fallback rounds
+            // after the multiply, and bitwise identity is the contract.
+            // SAFETY: pure register arithmetic under confirmed AVX2.
+            acc = unsafe { _mm256_add_ps(acc, _mm256_mul_ps(xv, wv)) };
+        }
+        let mut lanes = [0.0f32; F32_LANES];
+        // SAFETY: `lanes` is exactly 8 f32s; storeu is unaligned-safe.
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+        let tail = x.len() - x.len() % F32_LANES;
+        for ((a, xi), wi) in lanes.iter_mut().zip(&x[tail..]).zip(&w[tail..]) {
+            *a += xi * wi;
+        }
+        reduce_f32(&lanes)
+    }
+
+    // SAFETY: `unsafe fn` only for the target-feature contract — the
+    // dispatcher confirms AVX2 before every call (module doc above).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i64_avx2(x: &[i64], w: &[i64]) -> i64 {
+        debug_assert_eq!(x.len(), w.len());
+        let chunks = x.len() / I64_LANES;
+        // SAFETY: (whole function) AVX2 per the module contract; all
+        // loads are unaligned (`loadu`) from offsets bounded by
+        // `chunks * 4 <= len`, and the store target is a local array of
+        // exactly 4 i64s.
+        let mut acc = unsafe { _mm256_setzero_si256() };
+        for c in 0..chunks {
+            let base = c * I64_LANES;
+            // SAFETY: base + 4 <= x.len() and w.len().
+            let xv = unsafe {
+                _mm256_loadu_si256(x.as_ptr().add(base) as *const __m256i)
+            };
+            let wv = unsafe {
+                _mm256_loadu_si256(w.as_ptr().add(base) as *const __m256i)
+            };
+            // mul_epi32 multiplies each 64-bit lane's low 32 bits,
+            // sign-extended — exact while |values| < 2^31 (debug-
+            // asserted in the dispatcher; MAX_WIDTH = 26 upstream).
+            // SAFETY: pure register arithmetic under confirmed AVX2.
+            acc = unsafe { _mm256_add_epi64(acc, _mm256_mul_epi32(xv, wv)) };
+        }
+        let mut lanes = [0i64; I64_LANES];
+        // SAFETY: `lanes` is exactly one __m256i wide.
+        unsafe {
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc)
+        };
+        let mut total = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        let tail = x.len() - x.len() % I64_LANES;
+        for (xi, wi) in x[tail..].iter().zip(&w[tail..]) {
+            total += xi * wi;
+        }
+        total
+    }
+
+    // SAFETY: `unsafe fn` only for the target-feature contract — the
+    // dispatcher confirms AVX2 before every call (module doc above).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_acc_f32_avx2(
+        wt: &[f32],
+        rows_out: usize,
+        cols_in: usize,
+        xs: &[f32],
+        batch: usize,
+        ys: &mut [f32],
+    ) {
+        for (o, row) in wt.chunks_exact(cols_in).enumerate() {
+            for (b, x) in xs.chunks_exact(cols_in).enumerate() {
+                // SAFETY: same target-feature contract as this caller;
+                // AVX2 was confirmed before entering the avx2 matmul.
+                ys[b * rows_out + o] += unsafe { dot_f32_avx2(x, row) };
+            }
+        }
+    }
+
+    // SAFETY: `unsafe fn` only for the target-feature contract — the
+    // dispatcher confirms AVX2 before every call (module doc above).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_acc_i64_avx2(
+        wt: &[i64],
+        rows_out: usize,
+        cols_in: usize,
+        xs: &[i64],
+        batch: usize,
+        ys: &mut [i64],
+    ) {
+        for (o, row) in wt.chunks_exact(cols_in).enumerate() {
+            for (b, x) in xs.chunks_exact(cols_in).enumerate() {
+                // SAFETY: same target-feature contract as this caller;
+                // AVX2 was confirmed before entering the avx2 matmul.
+                ys[b * rows_out + o] += unsafe { dot_i64_avx2(x, row) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_inputs(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> =
+            (0..n).map(|i| (i as f32 * 0.37 - 1.5) * 0.61).collect();
+        let w: Vec<f32> =
+            (0..n).map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.13).collect();
+        (x, w)
+    }
+
+    /// The scalar kernel is *defined* by the lane-strided order; this
+    /// pins it against an independent re-implementation so refactors
+    /// can't silently change the contract.
+    #[test]
+    fn scalar_f32_order_is_lane_strided() {
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let (x, w) = f32_inputs(n);
+            let mut acc = [0.0f32; F32_LANES];
+            for (j, (xi, wi)) in x.iter().zip(&w).enumerate() {
+                acc[j % F32_LANES] += xi * wi;
+            }
+            let want = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            assert_eq!(dot_f32_scalar(&x, &w).to_bits(), want.to_bits(), "{n}");
+        }
+    }
+
+    /// Whatever path `dot_*` dispatches to must agree bitwise with the
+    /// scalar reference (trivially true without `--features simd`; the
+    /// real assertion when the AVX2 path is live).
+    #[test]
+    fn dispatched_dot_matches_scalar_bitwise() {
+        for n in [0usize, 1, 5, 8, 13, 16, 31, 96, 257] {
+            let (x, w) = f32_inputs(n);
+            assert_eq!(
+                dot_f32(&x, &w).to_bits(),
+                dot_f32_scalar(&x, &w).to_bits(),
+                "f32 n={n} (simd_active={})",
+                simd_active()
+            );
+            let xi: Vec<i64> =
+                (0..n).map(|i| (i as i64 * 977 - 800) % (1 << 25)).collect();
+            let wi: Vec<i64> =
+                (0..n).map(|i| (i as i64 * 313 - 999) % (1 << 25)).collect();
+            assert_eq!(
+                dot_i64(&xi, &wi),
+                dot_i64_scalar(&xi, &wi),
+                "i64 n={n}"
+            );
+        }
+    }
+
+    /// Matmul over odd shapes: every (rows, cols, batch) cell of the
+    /// dispatched kernel equals the scalar kernel bitwise.
+    #[test]
+    fn dispatched_matmul_matches_scalar_bitwise() {
+        for (rows, cols, batch) in
+            [(1usize, 1usize, 1usize), (3, 7, 2), (5, 9, 3), (4, 24, 8)]
+        {
+            let (wt, _) = f32_inputs(rows * cols);
+            let (xs, _) = f32_inputs(batch * cols);
+            let mut a = vec![0.25f32; batch * rows];
+            let mut b = a.clone();
+            matmul_acc_f32(&wt, rows, cols, &xs, batch, &mut a);
+            matmul_acc_f32_scalar(&wt, rows, cols, &xs, batch, &mut b);
+            let abits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bbits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(abits, bbits, "f32 {rows}x{cols} b{batch}");
+
+            let wt: Vec<i64> =
+                (0..rows * cols).map(|i| i as i64 * 131 - 64).collect();
+            let xs: Vec<i64> =
+                (0..batch * cols).map(|i| i as i64 * 57 - 999).collect();
+            let mut a = vec![7i64; batch * rows];
+            let mut b = a.clone();
+            matmul_acc_i64(&wt, rows, cols, &xs, batch, &mut a);
+            matmul_acc_i64_scalar(&wt, rows, cols, &xs, batch, &mut b);
+            assert_eq!(a, b, "i64 {rows}x{cols} b{batch}");
+        }
+    }
+}

@@ -12,19 +12,118 @@
 //!   hands each coordinator shard a different engine kind (`fixed` for
 //!   the trigger tier, `float` for the offline tier, a reserved `pjrt`
 //!   slot).
+//! * [`kernels`] — the vectorized inner-product layer both engines sit
+//!   on: scalar loops always available, AVX2 lanes behind `--features
+//!   simd`, bitwise-identical by a pinned reduction order.
 //!
 //! All engines implement [`Engine`], so the evaluation/serving layers are
-//! engine-agnostic.
+//! engine-agnostic.  The serving hot path uses
+//! [`Engine::forward_packed_into`] with a caller-recycled [`PackedOut`]
+//! so the steady state materializes no per-request `Vec`s.
 
 pub mod backend;
 pub mod fixed_engine;
 pub mod float_engine;
+pub mod kernels;
 
 pub use backend::{BackendCtx, BackendSpec};
 pub use fixed_engine::FixedEngine;
 pub use float_engine::FloatEngine;
 
 use crate::model::Arch;
+
+/// Reusable packed output buffer: `rows()` rows of `width()` f32s each,
+/// stored flat.  The coordinator's worker loop owns one per worker and
+/// [`PackedOut::reset`]s it per batch, so the engine output path
+/// recycles one allocation for the life of the worker.
+#[derive(Debug, Default, Clone)]
+pub struct PackedOut {
+    pub(crate) data: Vec<f32>,
+    pub(crate) width: usize,
+}
+
+impl PackedOut {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear and set the row width; capacity is retained.
+    pub fn reset(&mut self, width: usize) {
+        self.data.clear();
+        self.width = width;
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.width);
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.width == 0 {
+            0
+        } else {
+            self.data.len() / self.width
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.width.max(1))
+    }
+
+    /// The flat `[rows * width]` buffer.
+    pub fn as_flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Copy out as the legacy per-sample layout.
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        self.iter_rows().map(|r| r.to_vec()).collect()
+    }
+}
+
+/// A borrowed view of a batch's input rows — either the slice-of-slices
+/// layout (`forward_batch`) or a window of the coordinator's packed
+/// buffer (`forward_packed_into`).  Both engines run their lockstep
+/// recurrence off this one view, so the two entry points share a single
+/// code path and bitwise identity between them holds by construction.
+#[derive(Clone, Copy)]
+pub(crate) enum BatchRows<'a> {
+    Slices(&'a [&'a [f32]]),
+    Packed {
+        xs: &'a [f32],
+        stride: usize,
+        start: usize,
+        len: usize,
+    },
+}
+
+impl BatchRows<'_> {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            BatchRows::Slices(rows) => rows.len(),
+            BatchRows::Packed { len, .. } => *len,
+        }
+    }
+
+    pub(crate) fn row(&self, i: usize) -> &[f32] {
+        match self {
+            BatchRows::Slices(rows) => rows[i],
+            BatchRows::Packed { xs, stride, start, len } => {
+                debug_assert!(i < *len);
+                let at = (start + i) * stride;
+                &xs[at..at + stride]
+            }
+        }
+    }
+}
 
 /// A model that maps one input sequence to output probabilities.
 pub trait Engine: Send + Sync {
@@ -57,6 +156,21 @@ pub trait Engine: Send + Sync {
     /// first (the coordinator's `EngineRunner` does, returning an error
     /// instead of panicking).
     fn forward_packed(&self, xs: &[f32], n: usize) -> Vec<Vec<f32>> {
+        let mut out = PackedOut::new();
+        self.forward_packed_into(xs, n, &mut out);
+        out.to_vecs()
+    }
+
+    /// [`Engine::forward_packed`], writing into a caller-recycled
+    /// [`PackedOut`] instead of materializing `Vec<Vec<f32>>` — the
+    /// allocation-free serving entry point (`worker_loop_with_sink`
+    /// reuses one `PackedOut` per worker).  Same bitwise contract and
+    /// the same hard length `assert` as `forward_packed`.
+    ///
+    /// The default delegates through [`Engine::forward_batch`]; the
+    /// in-tree engines override it with scratch-pooled implementations
+    /// that write rows straight into `out`.
+    fn forward_packed_into(&self, xs: &[f32], n: usize, out: &mut PackedOut) {
         let stride = self.arch().seq_len * self.arch().input_size;
         assert_eq!(
             xs.len(),
@@ -67,7 +181,12 @@ pub trait Engine: Send + Sync {
             stride
         );
         let refs: Vec<&[f32]> = xs.chunks_exact(stride).collect();
-        self.forward_batch(&refs)
+        let rows = self.forward_batch(&refs);
+        out.reset(self.arch().output_size);
+        for row in &rows {
+            assert_eq!(row.len(), out.width(), "engine output width");
+            out.push_row(row);
+        }
     }
 }
 

@@ -23,9 +23,14 @@
 //!   re-exports in normal builds, the "loom-lite" model checker under
 //!   `--features model-check` (the loom slice we use; deterministic
 //!   interleaving exploration with seed/trace replay).
+//! * [`pool`]    — the bounded [`pool::BufferPool`] free list behind the
+//!   zero-allocation steady state (request feature buffers, engine
+//!   scratch), built entirely on the [`sync`] gateway's shim surface
+//!   and treated by `tools/lint` as gateway-confined alongside it.
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod sync;

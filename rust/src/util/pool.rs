@@ -1,0 +1,162 @@
+//! Buffer recycling for the zero-allocation steady state.
+//!
+//! [`BufferPool`] is a capacity-bounded free list of reusable buffers
+//! (feature `Vec<f32>`s on the request path, engine scratch on the
+//! compute path).  `get_with` pops a recycled buffer or builds a fresh
+//! one; `put` hands it back, dropping beyond the cap so an arrival
+//! burst can't pin memory forever.  Hit/miss/occupancy counters feed
+//! the serving metrics grammar (`pool_hits` / `pool_misses` /
+//! `pool_occupancy`), which is also how the zero-allocation regression
+//! test observes the steady state: after warm-up, misses plateau.
+//!
+//! Concurrency: one `util::sync` gateway `Mutex` around the free list
+//! (uncontended in steady state — pops and pushes are O(1)), counters
+//! on shim atomics with `Relaxed` ordering (they are diagnostics, not
+//! part of the `generated == completed + dropped` accounting identity,
+//! which is why they do not take `SeqCst`).  Like the queue, the pool
+//! builds only on the gateway's shim surface, so the model checker can
+//! instrument it under `--features model-check`.
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{lock_or_recover, Mutex};
+
+/// A bounded free list of reusable buffers.
+#[derive(Debug)]
+pub struct BufferPool<T> {
+    slots: Mutex<Vec<T>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Point-in-time pool counters, merged into serving snapshots.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `get_with` calls served from a recycled buffer.
+    pub hits: u64,
+    /// `get_with` calls that had to construct a fresh buffer.
+    pub misses: u64,
+    /// Buffers currently parked in the free list.
+    pub occupancy: usize,
+    /// Free-list bound: `put` beyond this drops the buffer.
+    pub capacity: usize,
+}
+
+impl PoolStats {
+    /// Fold another pool's counters into this roll-up.
+    pub fn absorb(&mut self, other: &PoolStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.occupancy += other.occupancy;
+        self.capacity += other.capacity;
+    }
+}
+
+impl<T> BufferPool<T> {
+    /// A pool retaining at most `cap` parked buffers (min 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            slots: Mutex::new(Vec::new()),
+            cap: cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Pop a recycled buffer, or build one with `make`.  The caller is
+    /// responsible for clearing recycled state (`put` on the feature
+    /// path stores cleared `Vec`s, so capacity — not contents — is what
+    /// recycles).
+    pub fn get_with(&self, make: impl FnOnce() -> T) -> T {
+        let recycled = lock_or_recover(&self.slots).pop();
+        match recycled {
+            Some(buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                make()
+            }
+        }
+    }
+
+    /// Park a buffer for reuse; silently dropped once `cap` buffers are
+    /// already parked.
+    pub fn put(&self, buf: T) {
+        let mut slots = lock_or_recover(&self.slots);
+        if slots.len() < self.cap {
+            slots.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            occupancy: lock_or_recover(&self.slots).len(),
+            capacity: self.cap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_and_counts() {
+        let pool: BufferPool<Vec<f32>> = BufferPool::new(4);
+        let mut a = pool.get_with(Vec::new); // miss
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let ptr = a.as_ptr();
+        a.clear();
+        pool.put(a);
+        let b = pool.get_with(Vec::new); // hit: same allocation back
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.is_empty() && b.capacity() >= 3);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.occupancy, s.capacity), (1, 1, 0, 4));
+    }
+
+    #[test]
+    fn cap_bounds_the_free_list() {
+        let pool: BufferPool<Vec<u8>> = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.put(Vec::new());
+        }
+        assert_eq!(pool.stats().occupancy, 2);
+        // Draining past the parked buffers turns into misses again.
+        for _ in 0..3 {
+            let _ = pool.get_with(Vec::new);
+        }
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.occupancy), (2, 1, 0));
+    }
+
+    #[test]
+    fn steady_state_stops_missing() {
+        let pool: BufferPool<Vec<f32>> = BufferPool::new(8);
+        // Warm-up: one buffer in flight at a time.
+        for round in 0..100 {
+            let mut buf = pool.get_with(Vec::new);
+            buf.resize(120, round as f32);
+            buf.clear();
+            pool.put(buf);
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "steady state must not allocate");
+        assert_eq!(s.hits, 99);
+    }
+
+    #[test]
+    fn stats_absorb_rolls_up() {
+        let mut total = PoolStats::default();
+        total.absorb(&PoolStats { hits: 2, misses: 1, occupancy: 3, capacity: 8 });
+        total.absorb(&PoolStats { hits: 5, misses: 0, occupancy: 1, capacity: 8 });
+        assert_eq!(
+            total,
+            PoolStats { hits: 7, misses: 1, occupancy: 4, capacity: 16 }
+        );
+    }
+}

@@ -1,0 +1,341 @@
+//! Kernel & memory acceptance suite for the SIMD + zero-allocation
+//! redesign:
+//!
+//! (a) the dispatched kernels (`nn::kernels`) are **bitwise identical**
+//!     to their scalar references on odd shapes, for both datapaths —
+//!     trivially true without `--features simd`, the real assertion
+//!     when the AVX2 path is live;
+//! (b) every engine entry point — `forward`, `forward_batch`,
+//!     `forward_packed`, `forward_packed_into` — produces bitwise
+//!     identical outputs, for LSTM and GRU, batch 1/3/8, workers
+//!     1/2/8, on both engines (the packed serving path may change
+//!     memory layout and scheduling, never arithmetic);
+//! (c) the buffer-recycling layer reaches a zero-allocation steady
+//!     state: the session feature pool and the engine scratch pools
+//!     stop missing once warm (misses plateau while hits climb), and
+//!     the pooled serving path end-to-end (EngineRunner + packed
+//!     output + shared-Arc completions) still matches direct engine
+//!     calls bitwise.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use rnn_hls::coordinator::{BatchRunner, BatcherConfig, EngineRunner};
+use rnn_hls::fixed::{FixedSpec, QuantConfig};
+use rnn_hls::model::{zoo, Cell, Weights};
+use rnn_hls::nn::{kernels, Engine, FixedEngine, FloatEngine, PackedOut};
+use rnn_hls::{ServingSpec, Session};
+
+// ---------------------------------------------------- (a) raw kernels
+
+fn f32_vec(n: usize, salt: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((i * 7 + salt * 11) % 23) as f32 * 0.13 - 1.1)
+        .collect()
+}
+
+fn i64_vec(n: usize, salt: usize) -> Vec<i64> {
+    (0..n)
+        .map(|i| ((i as i64 * 977 + salt as i64 * 131) - 9000) % (1 << 25))
+        .collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn dispatched_dot_matches_scalar_bitwise_on_odd_lengths() {
+    for n in [0usize, 1, 2, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 127] {
+        let (x, w) = (f32_vec(n, 1), f32_vec(n, 2));
+        assert_eq!(
+            kernels::dot_f32(&x, &w).to_bits(),
+            kernels::dot_f32_scalar(&x, &w).to_bits(),
+            "f32 n={n} (simd_active={})",
+            kernels::simd_active()
+        );
+        let (xi, wi) = (i64_vec(n, 3), i64_vec(n, 4));
+        assert_eq!(
+            kernels::dot_i64(&xi, &wi),
+            kernels::dot_i64_scalar(&xi, &wi),
+            "i64 n={n}"
+        );
+    }
+}
+
+#[test]
+fn dispatched_matmul_matches_scalar_bitwise_on_odd_shapes() {
+    for (rows, cols, batch) in [
+        (1usize, 1usize, 1usize),
+        (2, 3, 1),
+        (3, 7, 2),
+        (5, 9, 3),
+        (7, 13, 5),
+        (8, 8, 8),
+        (11, 27, 4),
+    ] {
+        let wt = f32_vec(rows * cols, 5);
+        let xs = f32_vec(batch * cols, 6);
+        // Non-zero initial accumulators: matmul_acc *accumulates*.
+        let mut a = vec![0.625f32; batch * rows];
+        let mut b = a.clone();
+        kernels::matmul_acc_f32(&wt, rows, cols, &xs, batch, &mut a);
+        kernels::matmul_acc_f32_scalar(&wt, rows, cols, &xs, batch, &mut b);
+        assert_eq!(bits(&a), bits(&b), "f32 {rows}x{cols} b{batch}");
+
+        let wt = i64_vec(rows * cols, 7);
+        let xs = i64_vec(batch * cols, 8);
+        let mut a = vec![17i64; batch * rows];
+        let mut b = a.clone();
+        kernels::matmul_acc_i64(&wt, rows, cols, &xs, batch, &mut a);
+        kernels::matmul_acc_i64_scalar(&wt, rows, cols, &xs, batch, &mut b);
+        assert_eq!(a, b, "i64 {rows}x{cols} b{batch}");
+    }
+}
+
+// ------------------------------------------------ (b) engine entry points
+
+/// Deterministic sample `s` for an engine with the given input stride.
+fn sample(stride: usize, s: usize) -> Vec<f32> {
+    (0..stride)
+        .map(|i| ((i * 7 + s * 13) % 19) as f32 * 0.05 - 0.4)
+        .collect()
+}
+
+/// Assert `forward` ≡ `forward_batch` ≡ `forward_packed` ≡
+/// `forward_packed_into` bitwise, across batch sizes and worker counts.
+fn assert_entry_points_agree(make: &dyn Fn() -> Box<dyn Engine>, tag: &str) {
+    let engine = make();
+    let stride = engine.arch().seq_len * engine.arch().input_size;
+    for batch in [1usize, 3, 8] {
+        let samples: Vec<Vec<f32>> =
+            (0..batch).map(|s| sample(stride, s)).collect();
+        let refs: Vec<&[f32]> =
+            samples.iter().map(|v| v.as_slice()).collect();
+        let packed: Vec<f32> =
+            samples.iter().flat_map(|v| v.iter().copied()).collect();
+        let per_sample: Vec<Vec<f32>> =
+            refs.iter().map(|x| engine.forward(x)).collect();
+        let batched = engine.forward_batch(&refs);
+        let packed_rows = engine.forward_packed(&packed, batch);
+        let mut out = PackedOut::new();
+        engine.forward_packed_into(&packed, batch, &mut out);
+        for (i, want) in per_sample.iter().enumerate() {
+            assert_eq!(
+                bits(&batched[i]),
+                bits(want),
+                "{tag} b{batch} sample {i}: forward_batch"
+            );
+            assert_eq!(
+                bits(&packed_rows[i]),
+                bits(want),
+                "{tag} b{batch} sample {i}: forward_packed"
+            );
+            assert_eq!(
+                bits(out.row(i)),
+                bits(want),
+                "{tag} b{batch} sample {i}: packed_into"
+            );
+        }
+        assert_eq!(out.rows(), batch, "{tag}: row count");
+        assert_eq!(
+            out.width(),
+            engine.arch().output_size,
+            "{tag}: row width"
+        );
+    }
+}
+
+#[test]
+fn float_engine_entry_points_bitwise_identical() {
+    for cell in [Cell::Lstm, Cell::Gru] {
+        for workers in [1usize, 2, 8] {
+            let arch = zoo::arch("top", cell).unwrap();
+            let weights = Weights::synthetic(&arch, 0x5EED);
+            assert_entry_points_agree(
+                &move || {
+                    Box::new(
+                        FloatEngine::new(&weights)
+                            .unwrap()
+                            .with_parallelism(workers),
+                    ) as Box<dyn Engine>
+                },
+                &format!("float/{cell:?} w{workers}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_engine_entry_points_bitwise_identical() {
+    let q16 = QuantConfig::ptq(FixedSpec::default16_6());
+    for cell in [Cell::Lstm, Cell::Gru] {
+        for workers in [1usize, 2, 8] {
+            let arch = zoo::arch("top", cell).unwrap();
+            let weights = Weights::synthetic(&arch, 0x5EED);
+            assert_entry_points_agree(
+                &move || {
+                    Box::new(
+                        FixedEngine::new(&weights, q16)
+                            .unwrap()
+                            .with_parallelism(workers),
+                    ) as Box<dyn Engine>
+                },
+                &format!("fixed/{cell:?} w{workers}"),
+            );
+        }
+    }
+}
+
+// --------------------------------------------- (c) zero-alloc steady state
+
+/// Engine scratch pools go warm through the public packed entry point:
+/// one miss to build the scratch, hits forever after.
+#[test]
+fn engine_scratch_pools_plateau_through_packed_path() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 9);
+    let stride = arch.seq_len * arch.input_size;
+    let packed: Vec<f32> = (0..3)
+        .flat_map(|s| sample(stride, s))
+        .collect();
+
+    let float = FloatEngine::new(&weights).unwrap();
+    let fixed =
+        FixedEngine::new(&weights, QuantConfig::ptq(FixedSpec::default16_6()))
+            .unwrap();
+    let mut out = PackedOut::new();
+    for _ in 0..10 {
+        float.forward_packed_into(&packed, 3, &mut out);
+        fixed.forward_packed_into(&packed, 3, &mut out);
+    }
+    for (tag, stats) in
+        [("float", float.scratch_stats()), ("fixed", fixed.scratch_stats())]
+    {
+        assert_eq!(stats.misses, 1, "{tag}: one cold scratch build");
+        assert_eq!(stats.hits, 9, "{tag}: every later call reuses it");
+    }
+}
+
+/// The session feature pool reaches zero-miss steady state under the
+/// submit → recv → submit ping-pong: the worker recycles each request's
+/// buffer *before* sending its completion, so a single-threaded client
+/// always finds its previous buffer parked.
+#[test]
+fn session_feature_pool_plateaus_in_steady_state() {
+    struct Width1;
+    impl BatchRunner for Width1 {
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn run(
+            &mut self,
+            _xs: &[f32],
+            n: usize,
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(vec![vec![1.0f32]; n])
+        }
+    }
+
+    let spec = ServingSpec {
+        shards: 1,
+        workers: 1,
+        queue_capacity: 64,
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        },
+        ..ServingSpec::default()
+    };
+    let session = Session::start(&spec, |_shard| {
+        Ok(Box::new(Width1) as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+
+    let roundtrip = |session: &Session| {
+        let mut features = session.recycled_features();
+        features.resize(16, 0.5f32);
+        let request = session.prepare_event(features, 0);
+        session.submit(request).unwrap();
+        session.recv().expect("fabric alive");
+    };
+
+    for _ in 0..50 {
+        roundtrip(&session);
+    }
+    let warm = session.snapshot().pool;
+    for _ in 0..100 {
+        roundtrip(&session);
+    }
+    let steady = session.snapshot().pool;
+    assert_eq!(
+        steady.misses, warm.misses,
+        "a warm session must stop allocating feature buffers \
+         (misses {} -> {})",
+        warm.misses, steady.misses
+    );
+    assert!(
+        steady.hits >= warm.hits + 100,
+        "every steady-state draw is a pool hit ({} -> {})",
+        warm.hits,
+        steady.hits
+    );
+    session.shutdown().unwrap();
+}
+
+/// End-to-end bitwise check of the pooled serving path: a live session
+/// over a real engine (EngineRunner → forward_packed_into → shared-Arc
+/// completion windows) must reproduce direct `Engine::forward` calls
+/// bit for bit, under real batching and two workers.
+#[test]
+fn pooled_serving_path_matches_direct_forward_bitwise() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let weights = Weights::synthetic(&arch, 0xA11);
+    let stride = arch.seq_len * arch.input_size;
+    let reference = FloatEngine::new(&weights).unwrap();
+
+    let spec = ServingSpec {
+        shards: 1,
+        workers: 2,
+        queue_capacity: 1024,
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+        },
+        ..ServingSpec::default()
+    };
+    let factory_weights = weights.clone();
+    let session = Session::start(&spec, move |_shard| {
+        let engine = FloatEngine::new(&factory_weights)?;
+        Ok(Box::new(EngineRunner::new(Box::new(engine), 8))
+            as Box<dyn BatchRunner>)
+    })
+    .unwrap();
+
+    const N: usize = 40;
+    let mut index_of = HashMap::new();
+    for i in 0..N {
+        let mut features = session.recycled_features();
+        features.clear();
+        features.extend_from_slice(&sample(stride, i));
+        let request = session.prepare_event(features, 0);
+        index_of.insert(request.id, i);
+        session.submit(request).unwrap();
+    }
+    let mut seen = 0usize;
+    for _ in 0..N {
+        let completion = session.recv().expect("fabric alive");
+        let i = index_of[&completion.id];
+        let want = reference.forward(&sample(stride, i));
+        assert_eq!(
+            bits(&completion.output),
+            bits(&want),
+            "sample {i} over the pooled path"
+        );
+        seen += 1;
+    }
+    assert_eq!(seen, N);
+    let report = session.shutdown().unwrap();
+    assert_eq!(report.merged.completed, N as u64);
+    assert_eq!(report.merged.dropped, 0);
+}

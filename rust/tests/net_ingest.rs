@@ -301,7 +301,9 @@ fn serve_in_process(shards: usize, n: u64) -> HashMap<u64, Vec<f32>> {
     for _ in 0..n {
         let completion = session.recv().expect("fabric alive");
         let index = index_of[&completion.id];
-        assert!(outputs.insert(index, completion.output).is_none());
+        assert!(outputs
+            .insert(index, completion.output.to_vec())
+            .is_none());
     }
     let report = session.shutdown().unwrap();
     assert_eq!(report.merged.completed, n);
@@ -669,6 +671,9 @@ fn metrics_endpoint_speaks_the_grammar() {
         "p50_us",
         "p99_us",
         "throughput_hz",
+        "pool_hits",
+        "pool_misses",
+        "pool_occupancy",
     ] {
         assert!(seen.contains_key(key), "grammar: missing {key}\n{body}");
     }

@@ -188,7 +188,7 @@ fn run_live(
         assert!(completion.completed_at >= completion.enqueued_at);
         assert!(
             completions
-                .insert(completion.id, completion.output)
+                .insert(completion.id, completion.output.to_vec())
                 .is_none(),
             "completion {} delivered twice",
             completion.id
@@ -259,7 +259,7 @@ fn concurrent_submitters_produce_deterministic_output_set() {
         let mut completions = HashMap::new();
         for _ in 0..2_000 {
             let completion = session.recv().expect("fabric alive");
-            completions.insert(completion.id, completion.output);
+            completions.insert(completion.id, completion.output.to_vec());
         }
         let report = session.shutdown().unwrap();
         assert_eq!(report.merged.generated, 2_000);

@@ -18,15 +18,20 @@
 //! * **R3 lock-recovery** — no `.unwrap()` / `.expect(` on a statement
 //!   containing `.lock()` outside the shim: lock acquisition goes
 //!   through `lock_or_recover`, which survives poisoning.
-//! * **R4 unsafe-allowlist** — `unsafe` only in allowlisted files, and
-//!   there only with a `SAFETY:` comment in the preceding lines.
-//! * **R5 net-confinement** — the network front-end
-//!   (`src/coordinator/net*`) and the ingest layer (`src/ingest/`)
-//!   must take atomics and threads through `crate::util::sync` too: no
+//! * **R4 unsafe-allowlist** — `unsafe` only in allowlisted files
+//!   (`util/threads.rs` for the scoped-thread transmute,
+//!   `nn/kernels.rs` for the SIMD intrinsics), and there only with a
+//!   `SAFETY:` comment in the preceding lines.
+//! * **R5 shim-confinement** — the network front-end
+//!   (`src/coordinator/net*`), the ingest layer (`src/ingest/`), and
+//!   the buffer-pool primitive (`src/util/pool.rs`) must take atomics
+//!   and threads through `crate::util::sync` too: no
 //!   `std::sync::atomic` or `std::thread` paths there.  Elsewhere
-//!   `std::sync::atomic` stays legal (R1's scope); these modules are
-//!   newest and fully shim-instrumented, so the model checker sees
-//!   every sync point they touch.
+//!   `std::sync::atomic` stays legal (R1's scope); these modules sit
+//!   on the cross-thread hot path and are fully shim-instrumented, so
+//!   the model checker sees every sync point they touch.  The pool is
+//!   confined because it *is* a sync primitive: every worker thread
+//!   and every ingest connection recycles buffers through it.
 //!
 //! `lint --self-test` runs a seeded-violation negative suite: every
 //! rule must fire on a synthetic violation and stay quiet on the clean
@@ -47,20 +52,24 @@ use std::process::ExitCode;
 /// Counters participating in a cross-thread accounting identity.
 const ACCOUNTING: [&str; 4] = ["generated", "dropped", "completed", "lost"];
 
-/// Files allowed to contain `unsafe` (each use still needs `SAFETY:`).
-const UNSAFE_ALLOWLIST: [&str; 1] = ["src/util/threads.rs"];
+/// Files allowed to contain `unsafe` (each use still needs `SAFETY:`):
+/// the scoped-thread lifetime transmute and the AVX2 kernel lanes.
+const UNSAFE_ALLOWLIST: [&str; 2] =
+    ["src/util/threads.rs", "src/nn/kernels.rs"];
 
 /// Tokens whose import from `std::sync` is confined to the shim.
 const GATEWAY_TOKENS: [&str; 4] = ["Mutex", "MutexGuard", "Condvar", "mpsc"];
 
 /// Paths fully confined to the `util::sync` shim (R5): even atomics and
 /// threads, which R1 leaves legal elsewhere, must come through the shim
-/// here so the model checker instruments every sync point.
-const NET_CONFINED_PREFIXES: [&str; 2] =
-    ["src/coordinator/net", "src/ingest/"];
+/// here so the model checker instruments every sync point.  The buffer
+/// pool is on this list because it is itself a cross-thread primitive —
+/// workers and ingest connections recycle buffers through it.
+const SHIM_CONFINED_PREFIXES: [&str; 3] =
+    ["src/coordinator/net", "src/ingest/", "src/util/pool.rs"];
 
 /// Paths R5 forbids in the confined modules.
-const NET_CONFINED_PATHS: [&str; 2] = ["std::sync::atomic", "std::thread"];
+const SHIM_CONFINED_PATHS: [&str; 2] = ["std::sync::atomic", "std::thread"];
 
 /// How far above an `unsafe` keyword the `SAFETY:` comment may sit
 /// (the threads.rs transmute carries an 18-line justification).
@@ -110,7 +119,7 @@ fn main() -> ExitCode {
         println!(
             "lint: {} file(s) clean (R1 sync-gateway, R2 \
              accounting-ordering, R3 lock-recovery, R4 unsafe-allowlist, \
-             R5 net-confinement)",
+             R5 shim-confinement)",
             files.len()
         );
         ExitCode::SUCCESS
@@ -162,21 +171,21 @@ fn check_file(rel: &str, content: &str) -> Vec<Violation> {
     }
     rule_accounting_ordering(rel, &lines, &mut out);
     rule_unsafe_allowlist(rel, &lines, &raw_lines, allow_unsafe, &mut out);
-    if NET_CONFINED_PREFIXES.iter().any(|p| rel.contains(p)) {
-        rule_net_confinement(rel, &lines, &mut out);
+    if SHIM_CONFINED_PREFIXES.iter().any(|p| rel.contains(p)) {
+        rule_shim_confinement(rel, &lines, &mut out);
     }
     out
 }
 
-/// R5: the network/ingest modules route *all* sync — atomics and
-/// threads included — through `crate::util::sync`.
-fn rule_net_confinement(
+/// R5: the network/ingest modules and the pool primitive route *all*
+/// sync — atomics and threads included — through `crate::util::sync`.
+fn rule_shim_confinement(
     rel: &str,
     lines: &[String],
     out: &mut Vec<Violation>,
 ) {
     for (idx, line) in lines.iter().enumerate() {
-        for path in NET_CONFINED_PATHS {
+        for path in SHIM_CONFINED_PATHS {
             if line.contains(path) {
                 out.push(Violation {
                     file: rel.to_string(),
@@ -560,6 +569,39 @@ fn self_test() -> ExitCode {
             name: "R5 does not apply outside the confined modules",
             file: "src/coordinator/server.rs",
             source: "use std::sync::atomic::AtomicU64;\n",
+            expect: &[],
+        },
+        Case {
+            name: "R4 fires on kernel unsafe without SAFETY",
+            file: "src/nn/kernels.rs",
+            source: "let acc = unsafe { _mm256_setzero_ps() };\n",
+            expect: &["R4"],
+        },
+        Case {
+            name: "R4 passes kernel unsafe with a SAFETY comment",
+            file: "src/nn/kernels.rs",
+            source: "// SAFETY: AVX2 confirmed by the dispatcher; loads\n\
+                     // stay inside the slice by construction.\n\
+                     let acc = unsafe { _mm256_setzero_ps() };\n",
+            expect: &[],
+        },
+        Case {
+            name: "R1 fires on a direct Mutex import in the pool primitive",
+            file: "src/util/pool.rs",
+            source: "use std::sync::Mutex;\n",
+            expect: &["R1"],
+        },
+        Case {
+            name: "R5 fires on a std::sync::atomic import in the pool",
+            file: "src/util/pool.rs",
+            source: "use std::sync::atomic::{AtomicU64, Ordering};\n",
+            expect: &["R5"],
+        },
+        Case {
+            name: "pool primitive on shim imports is clean",
+            file: "src/util/pool.rs",
+            source: "use crate::util::sync::atomic::{AtomicU64, Ordering};\n\
+                     use crate::util::sync::{lock_or_recover, Mutex};\n",
             expect: &[],
         },
     ];
