@@ -95,6 +95,28 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     grep -q '"name":"fixed/matmul_acc"' BENCH_kernels.json
     grep -q '"name":"fixed/matmul_acc_scalar"' BENCH_kernels.json
     echo "kernel rows (dispatched + scalar, both engines) + alloc row present"
+
+    echo "== bench-smoke: accuracy sweep (bundled trained checkpoint) =="
+    # Real-weights accuracy artifact: the bundled top_gru fixture + frozen
+    # test slice through the float engine and the fixed-point ladder.
+    cargo run --release -p rnn-hls --bin rnn-hls -- accuracy \
+        --json "$PWD/BENCH_accuracy.json"
+    echo "== bench-smoke: BENCH_accuracy.json =="
+    test -s BENCH_accuracy.json
+    cat BENCH_accuracy.json
+    echo "== bench-smoke: accuracy schema check =="
+    # Schema, not values: the AUC goldens themselves are pinned by the
+    # tier-1 accuracy_golden suite; here the artifact must carry the
+    # float baseline plus per-precision rows (width/integer emitted
+    # adjacently, so the pair greps as one anchored unit).
+    grep -q '"bench":"accuracy"' BENCH_accuracy.json
+    grep -q '"schema_version":1' BENCH_accuracy.json
+    grep -q '"key":"top_gru"' BENCH_accuracy.json
+    grep -q '"auc_float":' BENCH_accuracy.json
+    grep -q '"width":16,"integer":6,' BENCH_accuracy.json
+    grep -q '"width":20,"integer":8,' BENCH_accuracy.json
+    grep -q '"delta":' BENCH_accuracy.json
+    echo "accuracy rows (float baseline + fixed ladder) present"
     exit 0
 fi
 
@@ -124,6 +146,16 @@ cargo test -q --test tier_batching
 # guard on the socket path, so they get their own pinned gate.
 echo "== tier-1: cargo test -q --test net_ingest (wire + socket suite) =="
 cargo test -q --test net_ingest
+
+# And for the accuracy contract: the golden suite pins the float AUC of
+# the bundled trained checkpoint against the python reference and the
+# fixed-vs-float deltas across the precision ladder — the only guard
+# that the weight importers produce a *working* network, not just
+# well-shaped tensors.
+echo "== tier-1: cargo test -q --test accuracy_golden (import + AUC goldens) =="
+cargo test -q --test accuracy_golden
+echo "== tier-1: cargo test -q --test weight_import (ONNX/JSON importers) =="
+cargo test -q --test weight_import
 
 # Invariant lint (tools/lint): sync primitives confined to the
 # util::sync gateway, SeqCst on accounting writes, lock_or_recover

@@ -1,0 +1,246 @@
+"""Build the committed test fixtures for the rust weight-import layer.
+
+Trains the real ``top_gru`` benchmark with :func:`compile.train.train_one`
+(the same pipeline ``make artifacts`` runs) and freezes three small files
+under ``rust/tests/fixtures/``:
+
+* ``top_gru.json``      — the JSON interchange doc (``params_to_json``)
+* ``top_gru.onnx``      — the same checkpoint as an ONNX graph, written in
+  ONNX's *native* layouts so the rust reader has real conversion work to
+  do: ``GRU`` with ``W (1, 3H, I)`` / ``R (1, 3H, H)`` / ``B (1, 6H)``
+  (gate blocks ``[z, r, h]``, ``linear_before_reset=1`` = Keras
+  ``reset_after``), and ``Gemm`` head layers with ``transB=1`` (weights
+  stored ``(out, in)``).
+* ``top_test_slice.bin``— a few hundred events of the frozen top-tagging
+  test stream in the ``RNNDAT01`` container (seed ``SEED_TEST``).
+* ``top_gru.meta.json`` — training metadata + the float AUC on the slice
+  (the reference the rust golden accuracy suite pins against).
+
+The ONNX bytes are a hand-rolled protobuf encoding (no ``onnx`` package
+on this image); the subset written here is exactly the subset
+``rust/src/model/import/onnx.rs`` reads back.
+
+Reproducibility: ``train_one`` seeds its initializer from
+``hash(arch.key)``, so regeneration must run with ``PYTHONHASHSEED=0``:
+
+    cd python && PYTHONHASHSEED=0 python3 -m compile.export_fixtures
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import numpy as np
+
+from compile import data as datamod
+from compile import model as modelmod
+from compile import train as trainmod
+
+SLICE_N = 400
+
+# ---------------------------------------------------------------------------
+# Minimal protobuf wire-format writers (the ONNX subset we emit).
+# ---------------------------------------------------------------------------
+
+
+def _varint(n: int) -> bytes:
+    out = bytearray()
+    while True:
+        byte = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(byte | 0x80)
+        else:
+            out.append(byte)
+            return bytes(out)
+
+
+def _tag(field: int, wire: int) -> bytes:
+    return _varint((field << 3) | wire)
+
+
+def _p_int(field: int, n: int) -> bytes:
+    return _tag(field, 0) + _varint(n)
+
+
+def _p_bytes(field: int, payload: bytes) -> bytes:
+    return _tag(field, 2) + _varint(len(payload)) + payload
+
+
+def _p_str(field: int, s: str) -> bytes:
+    return _p_bytes(field, s.encode("utf-8"))
+
+
+def _tensor(name: str, dims: tuple[int, ...], data: np.ndarray) -> bytes:
+    """TensorProto: dims(1) data_type(2)=FLOAT name(8) raw_data(9)."""
+    body = b"".join(_p_int(1, d) for d in dims)
+    body += _p_int(2, 1)  # FLOAT
+    body += _p_str(8, name)
+    body += _p_bytes(9, np.ascontiguousarray(data, "<f4").tobytes())
+    return body
+
+
+def _attr_int(name: str, value: int) -> bytes:
+    # AttributeProto: name(1) i(3) type(20)=INT(2)
+    return _p_str(1, name) + _p_int(3, value) + _p_int(20, 2)
+
+
+def _attr_str(name: str, value: str) -> bytes:
+    # AttributeProto: name(1) s(4) type(20)=STRING(3)
+    return _p_str(1, name) + _p_str(4, value) + _p_int(20, 3)
+
+
+def _node(
+    op_type: str,
+    inputs: list[str],
+    outputs: list[str],
+    name: str,
+    attrs: list[bytes] | None = None,
+) -> bytes:
+    body = b"".join(_p_str(1, i) for i in inputs)
+    body += b"".join(_p_str(2, o) for o in outputs)
+    body += _p_str(3, name)
+    body += _p_str(4, op_type)
+    body += b"".join(_p_bytes(5, a) for a in (attrs or []))
+    return body
+
+
+def _value_info(name: str, shape: tuple[int, ...]) -> bytes:
+    """ValueInfoProto with a float tensor type of the given static shape."""
+    dims = b"".join(_p_bytes(1, _p_int(1, d)) for d in shape)
+    tensor_shape = _p_bytes(2, dims)
+    tensor_type = _p_int(1, 1) + tensor_shape  # elem_type FLOAT + shape
+    type_proto = _p_bytes(1, tensor_type)
+    return _p_str(1, name) + _p_bytes(2, type_proto)
+
+
+def onnx_export(a: modelmod.Arch, params: dict) -> bytes:
+    """Serialize a trained checkpoint as an ONNX ModelProto.
+
+    Layout conversions applied (the inverse of what the rust reader does):
+    recurrent kernels transpose from Keras ``(I, GH)`` to ONNX
+    ``(1, GH, I)``; LSTM gate blocks reorder from Keras ``[i, f, c, o]``
+    to ONNX ``[i, o, f, c]``; the single Keras LSTM bias becomes ONNX's
+    ``Wb`` half with ``Rb = 0``; GRU keeps ``[z, r, h]`` (identical in
+    both conventions) and stacks its two Keras bias rows into ``(1, 6H)``.
+    """
+    h = a.hidden_size
+    w = np.asarray(params["rnn"]["w"], np.float32)  # (I, GH)
+    u = np.asarray(params["rnn"]["u"], np.float32)  # (H, GH)
+    b = np.asarray(params["rnn"]["b"], np.float32)
+
+    def blocks(mat: np.ndarray, order: list[int]) -> np.ndarray:
+        """Transpose (in, G*H) to (G*H, in) with gate blocks reordered."""
+        t = mat.T  # (GH, in)
+        return np.concatenate([t[g * h : (g + 1) * h] for g in order])
+
+    if a.cell == "lstm":
+        order = [0, 3, 1, 2]  # ONNX [i, o, f, c] from Keras [i, f, c, o]
+        w_on = blocks(w, order)[None]  # (1, 4H, I)
+        r_on = blocks(u, order)[None]  # (1, 4H, H)
+        wb = np.concatenate([b[g * h : (g + 1) * h] for g in order])
+        b_on = np.concatenate([wb, np.zeros(4 * h, np.float32)])[None]
+        op, n_b = "LSTM", 8 * h
+    else:
+        w_on = blocks(w, [0, 1, 2])[None]  # (1, 3H, I), [z, r, h] kept
+        r_on = blocks(u, [0, 1, 2])[None]
+        b_on = np.concatenate([b[0], b[1]])[None]  # (1, 6H): Wb | Rb
+        op, n_b = "GRU", 6 * h
+
+    initializers = [
+        _tensor("rnn.W", w_on.shape, w_on),
+        _tensor("rnn.R", r_on.shape, r_on),
+        _tensor("rnn.B", (1, n_b), b_on),
+    ]
+    attrs = [_attr_int("hidden_size", h), _attr_str("direction", "forward")]
+    if a.cell == "gru":
+        attrs.append(_attr_int("linear_before_reset", 1))
+    nodes = [
+        _node(op, ["x", "rnn.W", "rnn.R", "rnn.B"], ["rnn_y", "rnn_h"],
+              "rnn", attrs),
+    ]
+    # ONNX LSTM/GRU Y_h output is (num_dirs, B, H); flatten to (B, H) for
+    # the head (the rust reader ignores shaping nodes by design).
+    nodes.append(_node("Squeeze", ["rnn_h"], ["state"], "squeeze"))
+
+    prev = "state"
+    head = [(f"dense{i}", True) for i in range(len(a.dense_sizes))]
+    head.append(("out", False))
+    for lname, relu in head:
+        wl = np.asarray(params[lname]["w"], np.float32)  # (in, out)
+        bl = np.asarray(params[lname]["b"], np.float32)
+        initializers.append(_tensor(f"{lname}.w", wl.T.shape, wl.T))
+        initializers.append(_tensor(f"{lname}.b", bl.shape, bl))
+        out_name = f"{lname}_z"
+        nodes.append(
+            _node("Gemm", [prev, f"{lname}.w", f"{lname}.b"], [out_name],
+                  lname, [_attr_int("transB", 1)])
+        )
+        prev = out_name
+        if relu:
+            nodes.append(_node("Relu", [prev], [f"{lname}_a"], f"{lname}_relu"))
+            prev = f"{lname}_a"
+    act = "Sigmoid" if a.output_activation == "sigmoid" else "Softmax"
+    nodes.append(_node(act, [prev], ["probs"], "output_activation"))
+
+    graph = b"".join(_p_bytes(1, n) for n in nodes)
+    graph += _p_str(2, a.key)
+    graph += b"".join(_p_bytes(5, t) for t in initializers)
+    graph += _p_bytes(11, _value_info("x", (1, a.seq_len, a.input_size)))
+    graph += _p_bytes(12, _value_info("probs", (1, a.output_size)))
+
+    model = _p_int(1, 8)  # ir_version
+    model += _p_str(2, "rnn-hls export_fixtures")
+    model += _p_bytes(7, graph)
+    model += _p_bytes(8, _p_str(1, "") + _p_int(2, 14))  # opset 14
+    return model
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../rust/tests/fixtures")
+    ap.add_argument("--key", default="top_gru")
+    ap.add_argument("--slice", type=int, default=SLICE_N)
+    args = ap.parse_args()
+
+    name, cell = args.key.rsplit("_", 1)
+    a = modelmod.arch(name, cell)
+    os.makedirs(args.out, exist_ok=True)
+
+    print(f"training {a.key} ({a.param_count()} params)")
+    params, meta = trainmod.train_one(a)
+
+    with open(os.path.join(args.out, f"{a.key}.json"), "w") as f:
+        f.write(modelmod.params_to_json(a, params))
+    with open(os.path.join(args.out, f"{a.key}.onnx"), "wb") as f:
+        f.write(onnx_export(a, params))
+
+    x, y = datamod.generate(name, trainmod.SEED_TEST, args.slice)
+    slice_path = os.path.join(args.out, f"{name}_test_slice.bin")
+    datamod.write_dataset(slice_path, x, y, datamod.N_CLASSES[name])
+
+    # Reference float AUC on the *slice* — what the rust golden suite pins.
+    import jax.numpy as jnp
+
+    probs = np.asarray(
+        modelmod.forward(params, jnp.asarray(x), a)
+    )
+    slice_auc = trainmod.mean_auc(probs, y, datamod.N_CLASSES[name])
+    meta["slice_n"] = args.slice
+    meta["slice_float_auc"] = slice_auc
+    with open(os.path.join(args.out, f"{a.key}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"slice float AUC ({args.slice} events): {slice_auc:.4f}")
+    print(f"wrote fixtures to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,14 +39,36 @@ impl Dataset {
                 as usize
         };
         let (n, seq_len, n_feat, n_classes) = (word(0), word(1), word(2), word(3));
-        let data_bytes = n * seq_len * n_feat * 4;
-        let want = 24 + data_bytes + n * 4;
+        // Header words are untrusted input: reject zero dims and size
+        // arithmetic that overflows usize before the length check (and
+        // before any allocation sized from them).
+        anyhow::ensure!(
+            n > 0 && seq_len > 0 && n_feat > 0 && n_classes > 0,
+            "dataset header has a zero dimension \
+             (n={n}, seq={seq_len}, feat={n_feat}, classes={n_classes})"
+        );
+        let overflow = || {
+            anyhow::anyhow!(
+                "dataset header overflows \
+                 (n={n}, seq={seq_len}, feat={n_feat})"
+            )
+        };
+        let elems = n
+            .checked_mul(seq_len)
+            .and_then(|v| v.checked_mul(n_feat))
+            .ok_or_else(overflow)?;
+        let data_bytes = elems.checked_mul(4).ok_or_else(overflow)?;
+        let labels_bytes = n.checked_mul(4).ok_or_else(overflow)?;
+        let want = 24usize
+            .checked_add(data_bytes)
+            .and_then(|v| v.checked_add(labels_bytes))
+            .ok_or_else(overflow)?;
         anyhow::ensure!(
             bytes.len() == want,
             "dataset length {} != expected {want} (n={n}, seq={seq_len}, feat={n_feat})",
             bytes.len()
         );
-        let mut data = Vec::with_capacity(n * seq_len * n_feat);
+        let mut data = Vec::with_capacity(elems);
         for chunk in bytes[24..24 + data_bytes].chunks_exact(4) {
             data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
@@ -156,6 +178,53 @@ mod tests {
     fn rejects_truncated_payload() {
         let bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
         assert!(Dataset::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    /// Patch one u32 header word (0 = n, 1 = seq, 2 = feat, 3 = classes).
+    fn poke_header(bytes: &mut [u8], word: usize, value: u32) {
+        bytes[8 + 4 * word..12 + 4 * word].copy_from_slice(&value.to_le_bytes());
+    }
+
+    #[test]
+    fn rejects_overflowing_header_dims() {
+        // Each of n/seq/feat at u32::MAX (and all three together) must be
+        // a clean error — the unchecked product used to overflow usize on
+        // 32-bit and produce a bogus length check.
+        for word in 0..3 {
+            let mut bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
+            poke_header(&mut bytes, word, u32::MAX);
+            let err = Dataset::from_bytes(&bytes).unwrap_err().to_string();
+            assert!(
+                err.contains("!=") || err.contains("overflows"),
+                "word {word}: {err}"
+            );
+        }
+        let mut bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
+        for word in 0..3 {
+            poke_header(&mut bytes, word, u32::MAX);
+        }
+        // (2^32-1)^3 * 4 overflows even 64-bit usize.
+        let err = Dataset::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_dims() {
+        for word in 0..4 {
+            let mut bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
+            poke_header(&mut bytes, word, 0);
+            let err = Dataset::from_bytes(&bytes).unwrap_err().to_string();
+            assert!(err.contains("zero dimension"), "word {word}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_huge_n_with_short_payload() {
+        // A header claiming a billion samples over a 40-byte body must
+        // fail the length check without allocating gigabytes first.
+        let mut bytes = encode(3, 2, 1, &[(vec![0.0; 6], 0)]);
+        poke_header(&mut bytes, 0, 1_000_000_000);
+        assert!(Dataset::from_bytes(&bytes).is_err());
     }
 
     #[test]

@@ -2,18 +2,24 @@
 
 /// Binary ROC AUC via the Mann–Whitney U statistic with midrank tie
 /// handling.  Degenerate label sets return 0.5.
+///
+/// NaN scores carry no ranking information (a degenerate softmax or a
+/// saturating fixed-point path can emit them): they are counted and
+/// excluded rather than panicking, so one bad sample cannot take down a
+/// whole accuracy sweep.  ±Inf scores are finite ranks (`total_cmp`
+/// order).  Callers that treat NaN as a hard error run
+/// [`require_finite`] up front.
 pub fn binary_auc(scores: &[f32], labels: &[bool]) -> f64 {
     assert_eq!(scores.len(), labels.len());
-    let n_pos = labels.iter().filter(|&&l| l).count();
-    let n_neg = labels.len() - n_pos;
+    let mut order: Vec<usize> =
+        (0..scores.len()).filter(|&i| !scores[i].is_nan()).collect();
+    let n_pos = order.iter().filter(|&&i| labels[i]).count();
+    let n_neg = order.len() - n_pos;
     if n_pos == 0 || n_neg == 0 {
         return 0.5;
     }
-    // Sort indices by score; assign midranks over tie groups.
-    let mut order: Vec<usize> = (0..scores.len()).collect();
-    order.sort_by(|&a, &b| {
-        scores[a].partial_cmp(&scores[b]).expect("finite scores")
-    });
+    // Sort kept indices by score; assign midranks over tie groups.
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     let mut ranks = vec![0.0f64; scores.len()];
     let mut i = 0;
     while i < order.len() {
@@ -27,14 +33,25 @@ pub fn binary_auc(scores: &[f32], labels: &[bool]) -> f64 {
         }
         i = j + 1;
     }
-    let r_pos: f64 = ranks
-        .iter()
-        .zip(labels)
-        .filter(|(_, &l)| l)
-        .map(|(&r, _)| r)
-        .sum();
+    let r_pos: f64 =
+        order.iter().filter(|&&i| labels[i]).map(|&i| ranks[i]).sum();
     let u = r_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
     u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Reject non-finite probabilities up front, naming the first offending
+/// sample and class — for callers that want NaN/±Inf to be a typed
+/// error instead of [`binary_auc`]'s count-and-exclude policy.
+pub fn require_finite(probs: &[Vec<f32>]) -> anyhow::Result<()> {
+    for (i, row) in probs.iter().enumerate() {
+        for (k, &p) in row.iter().enumerate() {
+            anyhow::ensure!(
+                p.is_finite(),
+                "non-finite probability {p} at sample {i}, class {k}"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// One-vs-rest AUC per class; `probs` is row-major `[n][n_classes]`.
@@ -97,6 +114,48 @@ mod tests {
     fn degenerate_labels_are_half() {
         assert_eq!(binary_auc(&[0.1, 0.9], &[true, true]), 0.5);
         assert_eq!(binary_auc(&[0.1, 0.9], &[false, false]), 0.5);
+    }
+
+    #[test]
+    fn nan_scores_are_excluded_not_fatal() {
+        // A perfect separation plus one NaN: the NaN sample drops out
+        // and the remaining ranking is still perfect.
+        let scores = [0.9, 0.8, f32::NAN, 0.2, 0.1];
+        let labels = [true, true, true, false, false];
+        assert_eq!(binary_auc(&scores, &labels), 1.0);
+        // NaN on the negative side likewise.
+        let scores = [0.9, 0.8, f32::NAN, 0.1];
+        let labels = [true, true, false, false];
+        assert_eq!(binary_auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn all_nan_scores_are_chance() {
+        let scores = [f32::NAN, f32::NAN, f32::NAN];
+        let labels = [true, false, true];
+        assert_eq!(binary_auc(&scores, &labels), 0.5);
+    }
+
+    #[test]
+    fn infinities_rank_without_panicking() {
+        // +Inf outranks everything, -Inf ranks below everything.
+        let scores = [f32::INFINITY, 0.5, f32::NEG_INFINITY, 0.2];
+        let labels = [true, true, false, false];
+        assert_eq!(binary_auc(&scores, &labels), 1.0);
+        let labels_inv = [false, false, true, true];
+        assert_eq!(binary_auc(&scores, &labels_inv), 0.0);
+    }
+
+    #[test]
+    fn require_finite_names_the_offender() {
+        let good = vec![vec![0.2, 0.8], vec![0.9, 0.1]];
+        assert!(require_finite(&good).is_ok());
+        let bad = vec![vec![0.2, 0.8], vec![f32::NAN, 0.1]];
+        let err = require_finite(&bad).unwrap_err().to_string();
+        assert!(err.contains("sample 1"), "{err}");
+        assert!(err.contains("class 0"), "{err}");
+        let inf = vec![vec![f32::INFINITY]];
+        assert!(require_finite(&inf).is_err());
     }
 
     #[test]

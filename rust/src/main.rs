@@ -63,7 +63,7 @@ use rnn_hls::fixed::FixedSpec;
 use rnn_hls::hls::{paper, HlsConfig, HlsDesign, ReuseFactor, RnnMode};
 use rnn_hls::model::Weights;
 use rnn_hls::nn::{BackendCtx, BackendSpec};
-use rnn_hls::report::{fig2, resources, tables, throughput};
+use rnn_hls::report::{accuracy, fig2, resources, tables, throughput};
 use rnn_hls::runtime::{manifest, Runtime};
 use rnn_hls::util::cli::Command;
 
@@ -85,6 +85,7 @@ fn run() -> anyhow::Result<()> {
     };
     match sub {
         "report" => cmd_report(&rest),
+        "accuracy" => cmd_accuracy(&rest),
         "serve" => cmd_serve(&rest),
         "sweep" => cmd_sweep(&rest),
         "golden" => cmd_golden(&rest),
@@ -104,6 +105,9 @@ fn usage() -> String {
        report <what>   regenerate paper tables/figures\n\
                        what: table1|table2|table3|table4|table5|fig2|\n\
                              fig345|fig6|throughput|all\n\
+       accuracy        float-vs-fixed AUC sweep over a real checkpoint\n\
+                       (--weights <path.json|path.onnx>; defaults to the\n\
+                       bundled trained top_gru fixture + test slice)\n\
        serve           run the trigger-style serving coordinator\n\
                        (--shards N partitions the stream across N\n\
                        coordinator shards; --shard-policy picks routing)\n\
@@ -219,6 +223,87 @@ fn cmd_report(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+// -------------------------------------------------------------- accuracy
+
+/// Bundled fixture defaults: a real trained checkpoint plus a frozen
+/// test-stream slice committed under `tests/fixtures/`, so
+/// `rnn-hls accuracy` answers the paper's Fig. 2 question on a bare
+/// checkout (no `make artifacts` needed).
+const DEFAULT_WEIGHTS: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/top_gru.json");
+const DEFAULT_DATASET: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/fixtures/top_test_slice.bin"
+);
+
+fn cmd_accuracy(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "accuracy",
+        "float-vs-fixed AUC sweep over a real checkpoint",
+    )
+    .opt(
+        "weights",
+        "checkpoint path, .json (interchange doc) or .onnx",
+        Some(DEFAULT_WEIGHTS),
+    )
+    .opt("dataset", "RNNDAT01 evaluation set", Some(DEFAULT_DATASET))
+    .opt(
+        "model",
+        "architecture hint for foreign .onnx files whose graph name is \
+         not a zoo key (e.g. top_gru)",
+        None,
+    )
+    .opt(
+        "specs",
+        "fixed-point ladder, comma-separated WIDTH:INTEGER",
+        Some("8:4,12:6,16:6,20:8"),
+    )
+    .opt("samples", "cap evaluated events (0 = all)", Some("0"))
+    .opt("workers", "evaluation threads", Some("4"))
+    .opt("json", "write the BENCH_accuracy.json artifact here", None);
+    let args = cmd.parse(rest)?;
+
+    let hint = match args.get("model") {
+        Some(key) => {
+            let (benchmark, cell) = key.rsplit_once('_').ok_or_else(|| {
+                anyhow::anyhow!("model key {key:?} is not <benchmark>_<cell>")
+            })?;
+            Some(rnn_hls::model::zoo::arch(benchmark, cell.parse()?)?)
+        }
+        None => None,
+    };
+    let weights_path = PathBuf::from(args.get_or("weights", DEFAULT_WEIGHTS));
+    let weights = Weights::load_path(&weights_path, hint.as_ref())?;
+    println!(
+        "loaded {} ({} params) from {}",
+        weights.arch.key(),
+        weights.arch.param_count(),
+        weights_path.display()
+    );
+
+    let ds = rnn_hls::data::Dataset::load(args.get_or("dataset", DEFAULT_DATASET))?;
+    let samples: usize = args.parse_num("samples", 0usize)?;
+    let ds = if samples > 0 { ds.truncated(samples) } else { ds };
+    let specs =
+        accuracy::parse_specs(args.get_or("specs", "8:4,12:6,16:6,20:8"))?;
+    let workers: usize = args.parse_num("workers", 4usize)?;
+
+    let report = accuracy::run(&weights, &ds, &specs, workers)?;
+    println!("{}", accuracy::render(&report));
+    match accuracy::shape_check(&report) {
+        Ok(()) => println!("accuracy shape check OK: {}", report.key),
+        Err(e) => println!("accuracy shape check WARN: {e}"),
+    }
+    if let Some(path) = args.get("json") {
+        let path = accuracy::write_bench_json(
+            std::path::Path::new(path),
+            std::slice::from_ref(&report),
+        )?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 // ----------------------------------------------------------------- serve
 
 struct PjrtRunner {
@@ -249,11 +334,27 @@ impl BatchRunner for PjrtRunner {
 /// can still exercise the full serving path (same seed → same model).
 /// An explicit `--artifacts` that lacks the file stays a hard error — a
 /// typo'd path must not silently serve a random model.
+///
+/// An explicit `--weights <path>` (json or onnx, via the import layer)
+/// supersedes the artifacts lookup entirely; the checkpoint's
+/// architecture must match the requested model key so a tier-routed
+/// session never serves the wrong network.
 fn weights_or_synthetic(
     artifacts: &std::path::Path,
     key: &str,
     explicit_artifacts: bool,
+    weights_path: Option<&std::path::Path>,
 ) -> anyhow::Result<Weights> {
+    if let Some(p) = weights_path {
+        let w = Weights::load_path(p, None)?;
+        anyhow::ensure!(
+            w.arch.key() == key,
+            "--weights {} holds {} but --model is {key}",
+            p.display(),
+            w.arch.key()
+        );
+        return Ok(w);
+    }
     let path = artifacts.join("weights").join(format!("{key}.json"));
     if path.exists() || explicit_artifacts {
         return Weights::load(path);
@@ -290,6 +391,14 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("serve", "trigger-style serving demo")
         .opt("artifacts", "artifacts directory", None)
         .opt("model", "model key", Some("top_gru"))
+        .opt(
+            "weights",
+            "explicit checkpoint path (.json or .onnx) for the rust \
+             engines; overrides the artifacts lookup and the synthetic \
+             fallback (ignored by --engine pjrt, which loads compiled \
+             artifacts)",
+            None,
+        )
         .opt("engine", "pjrt | fixed | float", Some("pjrt"))
         .opt("rate", "event rate (events/s)", Some("20000"))
         .opt("events", "number of events", Some("50000"))
@@ -555,8 +664,13 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         // follows its shard's (tier-resolved) batcher, so a
         // deep-batching offline tier is never clamped to the shared
         // --max-batch.
-        let weights =
-            weights_or_synthetic(&artifacts, &model_key, explicit_artifacts)?;
+        let weights_flag = args.get("weights").map(PathBuf::from);
+        let weights = weights_or_synthetic(
+            &artifacts,
+            &model_key,
+            explicit_artifacts,
+            weights_flag.as_deref(),
+        )?;
         let parallelism = plan.engine_parallelism;
         let shard_kinds: Vec<BackendKind> =
             (0..plan.config.shards).map(|s| plan.kind_for(s)).collect();

@@ -1,0 +1,427 @@
+//! Weight import: named-tensor loading from checkpoint files.
+//!
+//! A `VarBuilder`-style loader (after `candle-nn`'s `var_builder`): a
+//! [`TensorSource`] yields named f32 tensors, a [`VarBuilder`] fetches
+//! them shape-checked, and [`Weights::from_source`] assembles the
+//! canonical layer map that `validate_shapes` pins.  Two concrete
+//! sources exist:
+//!
+//! * [`JsonSource`] — the JSON interchange doc written by
+//!   `python/compile/model.py::params_to_json` (Keras-layout tensors,
+//!   already in the canonical naming).
+//! * [`OnnxSource`] — a minimal in-tree ONNX graph reader (pure-std
+//!   protobuf-subset decode, see [`onnx`]) that maps `LSTM`/`GRU`/`Gemm`
+//!   initializers from ONNX's native layouts (`[num_dirs, G*H, I]`
+//!   gate-blocked kernels, `iofc` LSTM gate order, `transB` Gemm
+//!   weights) onto the same canonical names.
+//!
+//! Canonical tensor names are `<layer>.<tensor>` over the `Weights`
+//! layer naming: `rnn.w`, `rnn.u`, `rnn.b`, `dense0.w`, `dense0.b`, …,
+//! `out.w`, `out.b`.
+//!
+//! Every failure is a typed [`ImportError`] naming the offending tensor
+//! — imported files are untrusted input, so nothing here panics on bad
+//! bytes.
+
+pub mod onnx;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::parse;
+
+use super::arch::Arch;
+use super::weights::{Tensor, Weights};
+
+pub use onnx::OnnxSource;
+
+/// Typed import failure.  Variants name the offending tensor (by its
+/// canonical or in-file name) so a mis-exported checkpoint is
+/// diagnosable from the message alone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ImportError {
+    /// A tensor the architecture requires is absent.
+    MissingTensor { name: String },
+    /// A tensor exists but with the wrong shape (after any layout
+    /// conversion the reader applies).
+    ShapeMismatch {
+        name: String,
+        want: Vec<usize>,
+        got: Vec<usize>,
+    },
+    /// A tensor is not f32 (`data_type` for ONNX).
+    BadDtype { name: String, got: String },
+    /// The file decodes but uses a construct outside the supported
+    /// subset (e.g. bidirectional RNNs, non-`reset_after` GRUs).
+    Unsupported { what: String },
+    /// The file contents contradict the requested architecture.
+    ArchMismatch { detail: String },
+    /// The container bytes themselves do not decode.
+    Malformed { detail: String },
+}
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImportError::MissingTensor { name } => {
+                write!(f, "missing tensor {name:?}")
+            }
+            ImportError::ShapeMismatch { name, want, got } => {
+                write!(f, "tensor {name:?} has shape {got:?}, want {want:?}")
+            }
+            ImportError::BadDtype { name, got } => {
+                write!(f, "tensor {name:?} has dtype {got} (want f32)")
+            }
+            ImportError::Unsupported { what } => {
+                write!(f, "unsupported: {what}")
+            }
+            ImportError::ArchMismatch { detail } => {
+                write!(f, "architecture mismatch: {detail}")
+            }
+            ImportError::Malformed { detail } => {
+                write!(f, "malformed model file: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+/// A container of named f32 tensors.  `take` transfers ownership so the
+/// loader can detect tensors the architecture never asked for.
+pub trait TensorSource {
+    /// The architecture the container records, when it records one.
+    fn arch(&self) -> Option<&Arch>;
+    /// Remove and return the tensor with this canonical name.
+    fn take(&mut self, name: &str) -> Option<Tensor>;
+    /// Names of the tensors not yet taken.
+    fn remaining(&self) -> Vec<String>;
+}
+
+/// Shape-checked fetches over a [`TensorSource`].
+pub struct VarBuilder<'a> {
+    source: &'a mut dyn TensorSource,
+}
+
+impl<'a> VarBuilder<'a> {
+    pub fn new(source: &'a mut dyn TensorSource) -> Self {
+        Self { source }
+    }
+
+    /// Fetch `name`, requiring exactly `shape`.
+    pub fn get(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+    ) -> Result<Tensor, ImportError> {
+        let t = self.source.take(name).ok_or_else(|| {
+            ImportError::MissingTensor { name: name.to_string() }
+        })?;
+        if t.shape != shape {
+            return Err(ImportError::ShapeMismatch {
+                name: name.to_string(),
+                want: shape.to_vec(),
+                got: t.shape,
+            });
+        }
+        Ok(t)
+    }
+}
+
+impl Weights {
+    /// Assemble [`Weights`] for `arch` from any [`TensorSource`], taking
+    /// every tensor the architecture requires at its pinned shape and
+    /// rejecting leftovers.  Runs the same parameter-count and shape
+    /// validation as the JSON path.
+    pub fn from_source(
+        arch: &Arch,
+        source: &mut dyn TensorSource,
+    ) -> anyhow::Result<Weights> {
+        if let Some(sa) = source.arch() {
+            if sa != arch {
+                return Err(ImportError::ArchMismatch {
+                    detail: format!(
+                        "file describes {} but {} was requested",
+                        sa.key(),
+                        arch.key()
+                    ),
+                }
+                .into());
+            }
+        }
+        let g = arch.cell.gates();
+        let (i, h) = (arch.input_size, arch.hidden_size);
+        let rnn_b_shape: Vec<usize> = match arch.cell {
+            super::arch::Cell::Lstm => vec![4 * h],
+            super::arch::Cell::Gru => vec![2, 3 * h],
+        };
+
+        let mut vb = VarBuilder::new(source);
+        let mut layers: BTreeMap<String, BTreeMap<String, Tensor>> =
+            BTreeMap::new();
+        let mut put = |vb: &mut VarBuilder,
+                       layers: &mut BTreeMap<String, BTreeMap<String, Tensor>>,
+                       layer: &str,
+                       tensor: &str,
+                       shape: &[usize]|
+         -> Result<(), ImportError> {
+            let t = vb.get(&format!("{layer}.{tensor}"), shape)?;
+            layers
+                .entry(layer.to_string())
+                .or_default()
+                .insert(tensor.to_string(), t);
+            Ok(())
+        };
+
+        put(&mut vb, &mut layers, "rnn", "w", &[i, g * h])?;
+        put(&mut vb, &mut layers, "rnn", "u", &[h, g * h])?;
+        put(&mut vb, &mut layers, "rnn", "b", &rnn_b_shape)?;
+        let mut prev = h;
+        for (idx, &size) in arch.dense_sizes.iter().enumerate() {
+            let layer = format!("dense{idx}");
+            put(&mut vb, &mut layers, &layer, "w", &[prev, size])?;
+            put(&mut vb, &mut layers, &layer, "b", &[size])?;
+            prev = size;
+        }
+        put(&mut vb, &mut layers, "out", "w", &[prev, arch.output_size])?;
+        put(&mut vb, &mut layers, "out", "b", &[arch.output_size])?;
+
+        let leftover = source.remaining();
+        if !leftover.is_empty() {
+            return Err(ImportError::Unsupported {
+                what: format!(
+                    "checkpoint carries tensors {} has no use for: {leftover:?}",
+                    arch.key()
+                ),
+            }
+            .into());
+        }
+        Weights::from_parts(arch.clone(), layers)
+    }
+
+    /// Load a checkpoint by path, dispatching on the extension:
+    /// `.json` (interchange doc) or `.onnx`.  `arch` is optional for
+    /// both formats — the JSON doc embeds it, and the ONNX reader
+    /// infers it when the graph name is a model-zoo key — but when
+    /// given it is enforced against the file.
+    pub fn load_path(
+        path: impl AsRef<Path>,
+        arch: Option<&Arch>,
+    ) -> anyhow::Result<Weights> {
+        let path = path.as_ref();
+        let ext = path
+            .extension()
+            .and_then(|e| e.to_str())
+            .unwrap_or("")
+            .to_ascii_lowercase();
+        match ext.as_str() {
+            "json" => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    anyhow::anyhow!("reading weights {}: {e}", path.display())
+                })?;
+                let mut src = JsonSource::parse(&text)?;
+                let a = match arch {
+                    Some(a) => a.clone(),
+                    None => src.arch.clone(),
+                };
+                Weights::from_source(&a, &mut src)
+            }
+            "onnx" => {
+                let bytes = std::fs::read(path).map_err(|e| {
+                    anyhow::anyhow!("reading weights {}: {e}", path.display())
+                })?;
+                let mut src = OnnxSource::parse(&bytes, arch)?;
+                let a = src.arch.clone();
+                Weights::from_source(&a, &mut src)
+            }
+            other => anyhow::bail!(
+                "unsupported weights extension {other:?} for {} \
+                 (want .json or .onnx)",
+                path.display()
+            ),
+        }
+    }
+}
+
+/// The JSON interchange doc (`params_to_json`) as a [`TensorSource`]:
+/// tensors flatten to `<layer>.<tensor>` names, the embedded `arch` is
+/// exposed, and the declared `param_count` is cross-checked against the
+/// tensors actually present.
+pub struct JsonSource {
+    pub arch: Arch,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl JsonSource {
+    pub fn parse(text: &str) -> Result<Self, ImportError> {
+        let malformed = |detail: String| ImportError::Malformed { detail };
+        let doc = parse(text).map_err(|e| malformed(format!("json: {e}")))?;
+        let arch = doc
+            .req("arch")
+            .and_then(Arch::from_json)
+            .map_err(|e| malformed(format!("arch: {e}")))?;
+        let declared = doc
+            .req("param_count")
+            .and_then(|v| v.as_usize())
+            .map_err(|e| malformed(format!("param_count: {e}")))?;
+        let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+        let mut total = 0usize;
+        let layers = doc
+            .req("layers")
+            .and_then(|v| v.as_array().map(<[_]>::to_vec))
+            .map_err(|e| malformed(format!("layers: {e}")))?;
+        for entry in &layers {
+            let lname = entry
+                .req("name")
+                .and_then(|v| v.as_str().map(str::to_string))
+                .map_err(|e| malformed(format!("layer name: {e}")))?;
+            let pairs = entry
+                .as_object()
+                .map_err(|e| malformed(format!("layer {lname:?}: {e}")))?;
+            for (key, val) in pairs {
+                if key == "name" {
+                    continue;
+                }
+                let name = format!("{lname}.{key}");
+                let shape = val
+                    .req("shape")
+                    .and_then(|v| v.as_usize_vec())
+                    .map_err(|e| malformed(format!("{name}: {e}")))?;
+                let data = val
+                    .req("data")
+                    .and_then(|v| v.as_f32_vec())
+                    .map_err(|e| malformed(format!("{name}: {e}")))?;
+                let numel: usize = shape.iter().product();
+                if numel != data.len() {
+                    return Err(ImportError::ShapeMismatch {
+                        name,
+                        want: shape,
+                        got: vec![data.len()],
+                    });
+                }
+                total += data.len();
+                if tensors.insert(name.clone(), Tensor { shape, data }).is_some()
+                {
+                    return Err(malformed(format!("duplicate tensor {name:?}")));
+                }
+            }
+        }
+        if total != declared {
+            return Err(malformed(format!(
+                "declared param_count {declared} but tensors hold {total}"
+            )));
+        }
+        Ok(Self { arch, tensors })
+    }
+}
+
+impl TensorSource for JsonSource {
+    fn arch(&self) -> Option<&Arch> {
+        Some(&self.arch)
+    }
+    fn take(&mut self, name: &str) -> Option<Tensor> {
+        self.tensors.remove(name)
+    }
+    fn remaining(&self) -> Vec<String> {
+        self.tensors.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::test_support::tiny_lstm_json;
+    use crate::model::{zoo, Cell};
+
+    #[test]
+    fn json_source_yields_canonical_names() {
+        let mut src = JsonSource::parse(&tiny_lstm_json()).unwrap();
+        assert_eq!(src.arch.key(), "top_lstm");
+        let names = src.remaining();
+        assert!(names.contains(&"rnn.w".to_string()), "{names:?}");
+        assert!(names.contains(&"out.b".to_string()), "{names:?}");
+        assert_eq!(names.len(), 7);
+        let w = src.take("rnn.w").unwrap();
+        assert_eq!(w.shape, vec![2, 4]);
+        assert!(src.take("rnn.w").is_none(), "take transfers ownership");
+    }
+
+    #[test]
+    fn from_source_matches_from_json() {
+        let a = Weights::from_json(&tiny_lstm_json()).unwrap();
+        let mut src = JsonSource::parse(&tiny_lstm_json()).unwrap();
+        let arch = src.arch.clone();
+        let b = Weights::from_source(&arch, &mut src).unwrap();
+        assert_eq!(
+            a.tensor("rnn", "w").unwrap().data,
+            b.tensor("rnn", "w").unwrap().data
+        );
+    }
+
+    #[test]
+    fn missing_tensor_is_typed_and_named() {
+        let doc = tiny_lstm_json().replace("\"u\"", "\"u_typo\"");
+        let err = match JsonSource::parse(&doc) {
+            Ok(mut src) => {
+                let arch = src.arch.clone();
+                Weights::from_source(&arch, &mut src).unwrap_err()
+            }
+            Err(e) => e.into(),
+        };
+        let imp = err.downcast_ref::<ImportError>().expect("typed error");
+        match imp {
+            ImportError::MissingTensor { name } => assert_eq!(name, "rnn.u"),
+            other => panic!("want MissingTensor, got {other}"),
+        }
+    }
+
+    #[test]
+    fn leftover_tensor_is_rejected() {
+        let doc = tiny_lstm_json().replace(
+            "{\"name\": \"out\",",
+            "{\"name\": \"out\",
+                 \"extra\": {\"shape\": [1], \"data\": [0.0]},",
+        );
+        // Extra params break the declared count first; fix it up.
+        let doc = doc.replace("\"param_count\": 23", "\"param_count\": 24");
+        let mut src = JsonSource::parse(&doc).unwrap();
+        let arch = src.arch.clone();
+        let err = Weights::from_source(&arch, &mut src).unwrap_err();
+        assert!(err.to_string().contains("out.extra"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed_and_named() {
+        let mut src = JsonSource::parse(&tiny_lstm_json()).unwrap();
+        let err = VarBuilder::new(&mut src).get("rnn.w", &[4, 2]).unwrap_err();
+        match err {
+            ImportError::ShapeMismatch { name, want, got } => {
+                assert_eq!(name, "rnn.w");
+                assert_eq!(want, vec![4, 2]);
+                assert_eq!(got, vec![2, 4]);
+            }
+            other => panic!("want ShapeMismatch, got {other}"),
+        }
+    }
+
+    #[test]
+    fn arch_mismatch_is_rejected() {
+        let mut src = JsonSource::parse(&tiny_lstm_json()).unwrap();
+        let gru = zoo::arch("top", Cell::Gru).unwrap();
+        let err = Weights::from_source(&gru, &mut src).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ImportError>(),
+                Some(ImportError::ArchMismatch { .. })
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn load_path_rejects_unknown_extension() {
+        let err = Weights::load_path("weights.safetensors", None).unwrap_err();
+        assert!(err.to_string().contains("safetensors"), "{err}");
+        assert!(err.to_string().contains(".onnx"), "{err}");
+    }
+}

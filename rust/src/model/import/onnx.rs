@@ -1,0 +1,815 @@
+//! Minimal in-tree ONNX reader for the RNN checkpoint subset.
+//!
+//! A pure-std protobuf-subset decoder (varint + length-delimited fields,
+//! nothing generated) over the ONNX `ModelProto` schema, followed by a
+//! layout mapper that turns the graph's `LSTM`/`GRU`/`Gemm` initializers
+//! into the Keras-convention tensors [`Weights`] pins:
+//!
+//! | ONNX | canonical tensor | conversion |
+//! |---|---|---|
+//! | `W (1, G·H, I)` | `rnn.w (I, G·H)` | transpose + gate-block reorder |
+//! | `R (1, G·H, H)` | `rnn.u (H, G·H)` | transpose + gate-block reorder |
+//! | LSTM `B (1, 8H)` | `rnn.b (4H)` | `Wb + Rb`, gate-block reorder |
+//! | GRU `B (1, 6H)` | `rnn.b (2, 3H)` | rows stack as `Wb`, `Rb` |
+//! | `Gemm B` (`transB=1`) | `<layer>.w (in, out)` | transpose |
+//! | `Gemm C` | `<layer>.b (out)` | copy |
+//!
+//! Gate orders: ONNX LSTM blocks are `iofc`, Keras `ifco`; ONNX GRU
+//! blocks are `zrh`, same as Keras.  Only forward single-direction RNNs
+//! map onto [`Weights`], and GRUs must carry `linear_before_reset=1`
+//! (Keras `reset_after`) or the two-row bias has no equivalent.
+//!
+//! Everything else in the graph — `Squeeze`/`Reshape` shaping, `Relu`
+//! head activations, the final `Sigmoid`/`Softmax` — is walked for
+//! validation but contributes no tensors.  All decode errors are typed
+//! [`ImportError`]s; malformed bytes must never panic.
+//!
+//! [`Weights`]: crate::model::Weights
+
+use std::collections::BTreeMap;
+
+use super::{ImportError, TensorSource};
+use crate::model::arch::{Arch, Cell, OutputActivation};
+use crate::model::weights::Tensor;
+use crate::model::zoo;
+
+/// An ONNX checkpoint decoded down to canonical named tensors.
+pub struct OnnxSource {
+    pub arch: Arch,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl OnnxSource {
+    /// Decode an ONNX `ModelProto` and map its initializers onto the
+    /// canonical tensor names.  When `arch_hint` is `None` the
+    /// architecture is inferred from the graph name (a model-zoo key
+    /// like `top_gru`); a hint is enforced against the graph contents
+    /// either way.
+    pub fn parse(
+        bytes: &[u8],
+        arch_hint: Option<&Arch>,
+    ) -> Result<Self, ImportError> {
+        let graph = decode_model(bytes)?;
+        convert(&graph, arch_hint)
+    }
+}
+
+impl TensorSource for OnnxSource {
+    fn arch(&self) -> Option<&Arch> {
+        Some(&self.arch)
+    }
+    fn take(&mut self, name: &str) -> Option<Tensor> {
+        self.tensors.remove(name)
+    }
+    fn remaining(&self) -> Vec<String> {
+        self.tensors.keys().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protobuf wire-format reader (the subset ONNX files use).
+// ---------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn err(&self, what: &str) -> ImportError {
+        ImportError::Malformed {
+            detail: format!("{what} at byte {}", self.pos),
+        }
+    }
+
+    fn byte(&mut self) -> Result<u8, ImportError> {
+        let b = *self
+            .buf
+            .get(self.pos)
+            .ok_or_else(|| self.err("unexpected end of message"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64, ImportError> {
+        let mut out: u64 = 0;
+        for i in 0..10u32 {
+            let b = self.byte()?;
+            if i == 9 && b > 1 {
+                return Err(self.err("varint overflows u64"));
+            }
+            out |= u64::from(b & 0x7f) << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+        }
+        Err(self.err("varint longer than 10 bytes"))
+    }
+
+    /// Field key: `(field_number, wire_type)`.
+    fn key(&mut self) -> Result<(u64, u8), ImportError> {
+        let k = self.varint()?;
+        Ok((k >> 3, (k & 7) as u8))
+    }
+
+    /// Length-delimited payload (wire type 2).
+    fn ld(&mut self) -> Result<&'a [u8], ImportError> {
+        let len = usize::try_from(self.varint()?)
+            .map_err(|_| self.err("length overflows usize"))?;
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.err("truncated length-delimited field"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn fixed32(&mut self) -> Result<[u8; 4], ImportError> {
+        let end = self
+            .pos
+            .checked_add(4)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.err("truncated fixed32"))?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(&self.buf[self.pos..end]);
+        self.pos = end;
+        Ok(a)
+    }
+
+    fn skip(&mut self, wire: u8) -> Result<(), ImportError> {
+        match wire {
+            0 => {
+                self.varint()?;
+            }
+            1 => {
+                self.pos = self
+                    .pos
+                    .checked_add(8)
+                    .filter(|&e| e <= self.buf.len())
+                    .ok_or_else(|| self.err("truncated fixed64"))?;
+            }
+            2 => {
+                self.ld()?;
+            }
+            5 => {
+                self.fixed32()?;
+            }
+            other => {
+                return Err(self.err(&format!("unsupported wire type {other}")))
+            }
+        }
+        Ok(())
+    }
+}
+
+fn utf8(bytes: &[u8], what: &str) -> Result<String, ImportError> {
+    String::from_utf8(bytes.to_vec()).map_err(|_| ImportError::Malformed {
+        detail: format!("{what} is not valid utf-8"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// ModelProto → Graph decode.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct RawTensor {
+    name: String,
+    dims: Vec<usize>,
+    dtype: u64,
+    data: Vec<f32>,
+}
+
+#[derive(Default)]
+struct Node {
+    op: String,
+    name: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    ints: BTreeMap<String, i64>,
+    floats: BTreeMap<String, f32>,
+    strs: BTreeMap<String, String>,
+}
+
+#[derive(Default)]
+struct Graph {
+    name: String,
+    nodes: Vec<Node>,
+    inits: BTreeMap<String, RawTensor>,
+}
+
+fn decode_model(bytes: &[u8]) -> Result<Graph, ImportError> {
+    let mut r = Reader::new(bytes);
+    let mut graph = None;
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (7, 2) => graph = Some(decode_graph(r.ld()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    graph.ok_or(ImportError::Malformed {
+        detail: "model carries no graph".into(),
+    })
+}
+
+fn decode_graph(bytes: &[u8]) -> Result<Graph, ImportError> {
+    let mut r = Reader::new(bytes);
+    let mut g = Graph::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => g.nodes.push(decode_node(r.ld()?)?),
+            (2, 2) => g.name = utf8(r.ld()?, "graph name")?,
+            (5, 2) => {
+                let t = decode_tensor(r.ld()?)?;
+                g.inits.insert(t.name.clone(), t);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(g)
+}
+
+fn decode_node(bytes: &[u8]) -> Result<Node, ImportError> {
+    let mut r = Reader::new(bytes);
+    let mut n = Node::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => n.inputs.push(utf8(r.ld()?, "node input")?),
+            (2, 2) => n.outputs.push(utf8(r.ld()?, "node output")?),
+            (3, 2) => n.name = utf8(r.ld()?, "node name")?,
+            (4, 2) => n.op = utf8(r.ld()?, "node op_type")?,
+            (5, 2) => decode_attr(r.ld()?, &mut n)?,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(n)
+}
+
+fn decode_attr(bytes: &[u8], node: &mut Node) -> Result<(), ImportError> {
+    let mut r = Reader::new(bytes);
+    let mut name = String::new();
+    let mut ival = None;
+    let mut fval = None;
+    let mut sval = None;
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => name = utf8(r.ld()?, "attribute name")?,
+            (2, 5) => fval = Some(f32::from_le_bytes(r.fixed32()?)),
+            (3, 0) => ival = Some(r.varint()? as i64),
+            (4, 2) => sval = Some(utf8(r.ld()?, "attribute string")?),
+            _ => r.skip(wire)?,
+        }
+    }
+    if name.is_empty() {
+        return Err(ImportError::Malformed {
+            detail: "attribute without a name".into(),
+        });
+    }
+    if let Some(v) = ival {
+        node.ints.insert(name.clone(), v);
+    }
+    if let Some(v) = fval {
+        node.floats.insert(name.clone(), v);
+    }
+    if let Some(v) = sval {
+        node.strs.insert(name, v);
+    }
+    Ok(())
+}
+
+fn decode_tensor(bytes: &[u8]) -> Result<RawTensor, ImportError> {
+    let mut r = Reader::new(bytes);
+    let mut t = RawTensor::default();
+    let mut raw: Option<&[u8]> = None;
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 0) => t.dims.push(
+                usize::try_from(r.varint()?)
+                    .map_err(|_| r.err("tensor dim overflows usize"))?,
+            ),
+            (1, 2) => {
+                // Packed repeated dims.
+                let mut pr = Reader::new(r.ld()?);
+                while !pr.done() {
+                    t.dims.push(
+                        usize::try_from(pr.varint()?).map_err(|_| {
+                            pr.err("tensor dim overflows usize")
+                        })?,
+                    );
+                }
+            }
+            (2, 0) => t.dtype = r.varint()?,
+            (4, 2) => {
+                // Packed float_data.
+                let chunk = r.ld()?;
+                if chunk.len() % 4 != 0 {
+                    return Err(r.err("float_data not a multiple of 4 bytes"));
+                }
+                t.data.extend(
+                    chunk
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+                );
+            }
+            (4, 5) => t.data.push(f32::from_le_bytes(r.fixed32()?)),
+            (8, 2) => t.name = utf8(r.ld()?, "tensor name")?,
+            (9, 2) => raw = Some(r.ld()?),
+            _ => r.skip(wire)?,
+        }
+    }
+    // `data_type` 1 is FLOAT; everything else is rejected up front so a
+    // double/int64 export fails loudly instead of misparsing.
+    if t.dtype != 1 {
+        return Err(ImportError::BadDtype {
+            name: t.name,
+            got: match t.dtype {
+                7 => "INT64".into(),
+                10 => "FLOAT16".into(),
+                11 => "DOUBLE".into(),
+                other => format!("data_type {other}"),
+            },
+        });
+    }
+    if let Some(raw) = raw {
+        if raw.len() % 4 != 0 {
+            return Err(ImportError::Malformed {
+                detail: format!(
+                    "tensor {:?} raw_data length {} is not a multiple of 4",
+                    t.name,
+                    raw.len()
+                ),
+            });
+        }
+        t.data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+    }
+    let numel = t
+        .dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| ImportError::Malformed {
+            detail: format!("tensor {:?} dims {:?} overflow", t.name, t.dims),
+        })?;
+    if numel != t.data.len() {
+        return Err(ImportError::Malformed {
+            detail: format!(
+                "tensor {:?} carries {} elements but dims {:?} say {numel}",
+                t.name,
+                t.data.len(),
+                t.dims
+            ),
+        });
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------
+// Graph → canonical tensors.
+// ---------------------------------------------------------------------
+
+fn convert(
+    graph: &Graph,
+    arch_hint: Option<&Arch>,
+) -> Result<OnnxSource, ImportError> {
+    let rnn_nodes: Vec<&Node> = graph
+        .nodes
+        .iter()
+        .filter(|n| n.op == "LSTM" || n.op == "GRU")
+        .collect();
+    let rnn = match rnn_nodes.as_slice() {
+        [one] => *one,
+        other => {
+            return Err(ImportError::Unsupported {
+                what: format!(
+                    "expected exactly one LSTM/GRU node, found {}",
+                    other.len()
+                ),
+            })
+        }
+    };
+    let cell = if rnn.op == "LSTM" { Cell::Lstm } else { Cell::Gru };
+    let arch = resolve_arch(graph, cell, arch_hint)?;
+
+    if let Some(d) = rnn.strs.get("direction") {
+        if d != "forward" {
+            return Err(ImportError::Unsupported {
+                what: format!(
+                    "direction {d:?} (only forward single-direction RNNs \
+                     map onto Weights)"
+                ),
+            });
+        }
+    }
+    if let Some(&hs) = rnn.ints.get("hidden_size") {
+        if hs != arch.hidden_size as i64 {
+            return Err(ImportError::ArchMismatch {
+                detail: format!(
+                    "hidden_size attribute {hs} != {} of {}",
+                    arch.hidden_size,
+                    arch.key()
+                ),
+            });
+        }
+    }
+    if cell == Cell::Gru
+        && rnn.ints.get("linear_before_reset").copied().unwrap_or(0) != 1
+    {
+        return Err(ImportError::Unsupported {
+            what: "GRU without linear_before_reset=1 (Keras reset_after): \
+                   its bias layout has no Weights equivalent"
+                .into(),
+        });
+    }
+    for extra in rnn.inputs.iter().skip(4) {
+        if !extra.is_empty() {
+            return Err(ImportError::Unsupported {
+                what: format!(
+                    "{} optional input {extra:?} (sequence_lens / initial \
+                     state / peepholes)",
+                    rnn.op
+                ),
+            });
+        }
+    }
+
+    let g = cell.gates();
+    let (i, h) = (arch.input_size, arch.hidden_size);
+    // Keras gate block `k` reads ONNX gate block `order[k]`:
+    // LSTM `ifco` ← `iofc`, GRU `zrh` ← `zrh`.
+    let order: &[usize] = match cell {
+        Cell::Lstm => &[0, 2, 3, 1],
+        Cell::Gru => &[0, 1, 2],
+    };
+
+    let input_name = |idx: usize, what: &str| -> Result<&str, ImportError> {
+        match rnn.inputs.get(idx) {
+            Some(s) if !s.is_empty() => Ok(s.as_str()),
+            _ => Err(ImportError::MissingTensor {
+                name: format!("{what} ({} input #{idx})", rnn.op),
+            }),
+        }
+    };
+    let init = |name: &str| -> Result<&RawTensor, ImportError> {
+        graph.inits.get(name).ok_or_else(|| ImportError::MissingTensor {
+            name: name.to_string(),
+        })
+    };
+
+    let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+    tensors
+        .insert("rnn.w".into(), unblock(init(input_name(1, "W")?)?, h, i, order)?);
+    tensors
+        .insert("rnn.u".into(), unblock(init(input_name(2, "R")?)?, h, h, order)?);
+    tensors
+        .insert("rnn.b".into(), rnn_bias(init(input_name(3, "B")?)?, cell, h, order)?);
+
+    // The dense head hangs off the final hidden state (Y_h, output #1).
+    let mut cur = rnn
+        .outputs
+        .iter()
+        .rev()
+        .find(|s| !s.is_empty())
+        .cloned()
+        .ok_or_else(|| ImportError::Malformed {
+            detail: format!("{} node has no outputs", rnn.op),
+        })?;
+
+    let mut head: Vec<(String, usize, bool)> = arch
+        .dense_sizes
+        .iter()
+        .enumerate()
+        .map(|(idx, &size)| (format!("dense{idx}"), size, true))
+        .collect();
+    head.push(("out".into(), arch.output_size, false));
+
+    let mut prev = h;
+    for (lname, size, relu) in head {
+        let node = next_significant(graph, &mut cur)?;
+        if node.op != "Gemm" {
+            return Err(ImportError::Unsupported {
+                what: format!(
+                    "op {:?} in the dense head (expected Gemm for {lname})",
+                    node.op
+                ),
+            });
+        }
+        for (attr, want) in [("alpha", 1.0f32), ("beta", 1.0)] {
+            if let Some(&v) = node.floats.get(attr) {
+                if v != want {
+                    return Err(ImportError::Unsupported {
+                        what: format!(
+                            "Gemm {lname} with {attr}={v} (only 1.0 maps \
+                             onto Weights)"
+                        ),
+                    });
+                }
+            }
+        }
+        if node.ints.get("transA").copied().unwrap_or(0) != 0 {
+            return Err(ImportError::Unsupported {
+                what: format!("Gemm {lname} with transA=1"),
+            });
+        }
+        let wn = node.inputs.get(1).filter(|s| !s.is_empty()).ok_or_else(
+            || ImportError::MissingTensor {
+                name: format!("{lname}.w (Gemm weight input)"),
+            },
+        )?;
+        let bn = node.inputs.get(2).filter(|s| !s.is_empty()).ok_or_else(
+            || ImportError::Unsupported {
+                what: format!("Gemm {lname} without a bias input"),
+            },
+        )?;
+        let transb = node.ints.get("transB").copied().unwrap_or(0) != 0;
+        tensors.insert(
+            format!("{lname}.w"),
+            gemm_weight(init(wn)?, prev, size, transb)?,
+        );
+        let bt = init(bn)?;
+        if bt.dims != [size] {
+            return Err(ImportError::ShapeMismatch {
+                name: bt.name.clone(),
+                want: vec![size],
+                got: bt.dims.clone(),
+            });
+        }
+        tensors.insert(
+            format!("{lname}.b"),
+            Tensor { shape: vec![size], data: bt.data.clone() },
+        );
+        cur = first_output(node)?.to_string();
+        if relu {
+            let act = next_significant(graph, &mut cur)?;
+            if act.op != "Relu" {
+                return Err(ImportError::Unsupported {
+                    what: format!(
+                        "activation {:?} after {lname} (the Keras head \
+                         uses ReLU)",
+                        act.op
+                    ),
+                });
+            }
+            cur = first_output(act)?.to_string();
+        }
+        prev = size;
+    }
+
+    let act = next_significant(graph, &mut cur)?;
+    let want_act = match arch.output_activation {
+        OutputActivation::Sigmoid => "Sigmoid",
+        OutputActivation::Softmax => "Softmax",
+    };
+    if act.op != want_act {
+        return Err(ImportError::ArchMismatch {
+            detail: format!(
+                "output activation {:?} but {} ends with {want_act}",
+                act.op,
+                arch.key()
+            ),
+        });
+    }
+
+    Ok(OnnxSource { arch, tensors })
+}
+
+fn resolve_arch(
+    graph: &Graph,
+    cell: Cell,
+    hint: Option<&Arch>,
+) -> Result<Arch, ImportError> {
+    if let Some(a) = hint {
+        if a.cell != cell {
+            return Err(ImportError::ArchMismatch {
+                detail: format!(
+                    "graph holds a {} but {} was requested",
+                    cell.label(),
+                    a.key()
+                ),
+            });
+        }
+        return Ok(a.clone());
+    }
+    let inferred = graph.name.rsplit_once('_').and_then(|(name, cell_str)| {
+        let c: Cell = cell_str.parse().ok()?;
+        zoo::arch(name, c).ok()
+    });
+    match inferred {
+        Some(a) if a.cell == cell => Ok(a),
+        Some(a) => Err(ImportError::ArchMismatch {
+            detail: format!(
+                "graph name {:?} says {} but the graph holds a {} node",
+                graph.name,
+                a.cell.label(),
+                cell.label()
+            ),
+        }),
+        None => Err(ImportError::Unsupported {
+            what: format!(
+                "graph name {:?} is not a model-zoo key; pass the \
+                 architecture explicitly",
+                graph.name
+            ),
+        }),
+    }
+}
+
+/// ONNX recurrent kernel `(1, G·H, cols)` (gate-blocked rows) → Keras
+/// `(cols, G·H)`: transpose, with Keras gate block `k` reading ONNX
+/// block `order[k]`.
+fn unblock(
+    t: &RawTensor,
+    h: usize,
+    cols: usize,
+    order: &[usize],
+) -> Result<Tensor, ImportError> {
+    let gh = order.len() * h;
+    let want = vec![1, gh, cols];
+    if t.dims != want {
+        return Err(ImportError::ShapeMismatch {
+            name: t.name.clone(),
+            want,
+            got: t.dims.clone(),
+        });
+    }
+    let mut data = vec![0.0f32; gh * cols];
+    for (kb, &ob) in order.iter().enumerate() {
+        for j in 0..h {
+            let src_row = ob * h + j;
+            let dst_col = kb * h + j;
+            for c in 0..cols {
+                data[c * gh + dst_col] = t.data[src_row * cols + c];
+            }
+        }
+    }
+    Ok(Tensor { shape: vec![cols, gh], data })
+}
+
+/// ONNX RNN bias `(1, 2·G·H)` = `Wb | Rb` → the Keras bias layout.
+fn rnn_bias(
+    t: &RawTensor,
+    cell: Cell,
+    h: usize,
+    order: &[usize],
+) -> Result<Tensor, ImportError> {
+    let g = order.len();
+    let want = vec![1, 2 * g * h];
+    if t.dims != want {
+        return Err(ImportError::ShapeMismatch {
+            name: t.name.clone(),
+            want,
+            got: t.dims.clone(),
+        });
+    }
+    match cell {
+        Cell::Lstm => {
+            // Keras LSTM has one bias vector; ONNX splits Wb | Rb.  Sum
+            // them — the standard Keras→ONNX export writes Rb = 0, which
+            // makes the sum bit-exact.
+            let mut data = vec![0.0f32; 4 * h];
+            for (kb, &ob) in order.iter().enumerate() {
+                for j in 0..h {
+                    data[kb * h + j] =
+                        t.data[ob * h + j] + t.data[(g + ob) * h + j];
+                }
+            }
+            Ok(Tensor { shape: vec![4 * h], data })
+        }
+        Cell::Gru => {
+            // `zrh` blocks already match Keras; the two halves stack as
+            // rows of the `(2, 3H)` reset_after bias (row 0 = input
+            // bias Wb, row 1 = recurrent bias Rb).
+            Ok(Tensor { shape: vec![2, 3 * h], data: t.data.clone() })
+        }
+    }
+}
+
+/// Gemm weight → Keras `(in, out)`; `transB=1` stores `(out, in)`.
+fn gemm_weight(
+    t: &RawTensor,
+    input: usize,
+    output: usize,
+    transb: bool,
+) -> Result<Tensor, ImportError> {
+    let want = if transb { vec![output, input] } else { vec![input, output] };
+    if t.dims != want {
+        return Err(ImportError::ShapeMismatch {
+            name: t.name.clone(),
+            want,
+            got: t.dims.clone(),
+        });
+    }
+    if !transb {
+        return Ok(Tensor { shape: vec![input, output], data: t.data.clone() });
+    }
+    let mut data = vec![0.0f32; input * output];
+    for r in 0..output {
+        for c in 0..input {
+            data[c * output + r] = t.data[r * input + c];
+        }
+    }
+    Ok(Tensor { shape: vec![input, output], data })
+}
+
+fn consumer<'g>(graph: &'g Graph, output: &str) -> Option<&'g Node> {
+    graph
+        .nodes
+        .iter()
+        .find(|n| n.inputs.iter().any(|i| i == output))
+}
+
+fn first_output(node: &Node) -> Result<&str, ImportError> {
+    node.outputs
+        .first()
+        .map(String::as_str)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| ImportError::Malformed {
+            detail: format!("node {:?} has no output", node.name),
+        })
+}
+
+/// Follow the data flow from `cur` to the next non-shaping node,
+/// stepping through `Squeeze`/`Reshape`/… outputs.  Bounded by the node
+/// count so a malformed self-referential graph errors instead of
+/// spinning.
+fn next_significant<'g>(
+    graph: &'g Graph,
+    cur: &mut String,
+) -> Result<&'g Node, ImportError> {
+    for _ in 0..=graph.nodes.len() {
+        let node = consumer(graph, cur).ok_or_else(|| {
+            ImportError::Malformed {
+                detail: format!("dangling graph: nothing consumes {cur:?}"),
+            }
+        })?;
+        match node.op.as_str() {
+            "Squeeze" | "Unsqueeze" | "Reshape" | "Flatten" | "Identity"
+            | "Transpose" | "Cast" => {
+                *cur = first_output(node)?.to_string();
+            }
+            _ => return Ok(node),
+        }
+    }
+    Err(ImportError::Malformed {
+        detail: "shaping-op cycle in graph".into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_and_limits() {
+        // 300 = 0b1_0101100 → [0xAC, 0x02].
+        let mut r = Reader::new(&[0xAC, 0x02]);
+        assert_eq!(r.varint().unwrap(), 300);
+        assert!(r.done());
+        // u64::MAX is ten bytes ending in 0x01.
+        let max = [0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0x01];
+        assert_eq!(Reader::new(&max).varint().unwrap(), u64::MAX);
+        // Truncated and over-long varints are typed errors, not panics.
+        assert!(Reader::new(&[0x80]).varint().is_err());
+        let over = [0xFF; 11];
+        assert!(Reader::new(&over).varint().is_err());
+    }
+
+    #[test]
+    fn ld_rejects_length_past_end() {
+        // Claims 100 bytes, supplies 1.
+        let mut r = Reader::new(&[0x64, 0x00]);
+        assert!(r.ld().is_err());
+    }
+
+    #[test]
+    fn empty_model_is_typed_error() {
+        let err = OnnxSource::parse(&[], None).unwrap_err();
+        assert!(matches!(err, ImportError::Malformed { .. }), "{err}");
+    }
+
+    #[test]
+    fn garbage_is_typed_error() {
+        for seed in 0u8..8 {
+            let bytes: Vec<u8> =
+                (0..64u32).map(|i| (i as u8).wrapping_mul(37) ^ seed).collect();
+            // Must return (any) error, never panic.
+            assert!(OnnxSource::parse(&bytes, None).is_err());
+        }
+    }
+}

@@ -3,9 +3,11 @@
 //! `python/compile/train.py`).
 
 pub mod arch;
+pub mod import;
 pub mod weights;
 pub mod zoo;
 
 pub use arch::{Arch, Cell, OutputActivation};
+pub use import::{ImportError, JsonSource, OnnxSource, TensorSource};
 pub use weights::{Tensor, Weights};
 pub use zoo::{all_archs, arch, BENCHMARKS};

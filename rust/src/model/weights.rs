@@ -1,10 +1,10 @@
-//! Trained-weight loading from the JSON interchange format written by
-//! `python/compile/model.py::params_to_json`.
+//! Trained-weight containers.  Loading lives in [`super::import`]: the
+//! JSON interchange doc written by `python/compile/model.py::
+//! params_to_json` and the in-tree ONNX reader both assemble a
+//! [`Weights`] through the same validated constructor.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-
-use crate::util::json::{parse, Value};
 
 use super::arch::Arch;
 
@@ -20,23 +20,24 @@ impl Tensor {
         self.shape.iter().product()
     }
 
-    /// 2-D accessor (row-major).
+    /// 2-D accessor (row-major).  The shape contract is a hard check —
+    /// tensors arrive from untrusted checkpoint files, and a release-mode
+    /// read through a mis-shaped tensor would return wrong-but-in-bounds
+    /// data silently.
     #[inline]
     pub fn at2(&self, r: usize, c: usize) -> f32 {
-        debug_assert_eq!(self.shape.len(), 2);
-        self.data[r * self.shape[1] + c]
-    }
-
-    fn from_json(v: &Value) -> anyhow::Result<Self> {
-        let shape = v.req("shape")?.as_usize_vec()?;
-        let data = v.req("data")?.as_f32_vec()?;
-        anyhow::ensure!(
-            shape.iter().product::<usize>() == data.len(),
-            "tensor shape {:?} != data length {}",
-            shape,
-            data.len()
+        assert!(
+            self.shape.len() == 2,
+            "at2 on a {}-D tensor (shape {:?})",
+            self.shape.len(),
+            self.shape
         );
-        Ok(Self { shape, data })
+        assert!(
+            r < self.shape[0] && c < self.shape[1],
+            "at2({r}, {c}) out of bounds for shape {:?}",
+            self.shape
+        );
+        self.data[r * self.shape[1] + c]
     }
 }
 
@@ -59,32 +60,23 @@ impl Weights {
         Self::from_json(&text)
     }
 
+    /// Parse the JSON interchange doc.  A thin wrapper over the import
+    /// layer: [`super::import::JsonSource`] + [`Weights::from_source`].
     pub fn from_json(text: &str) -> anyhow::Result<Self> {
-        let doc = parse(text)?;
-        let arch = Arch::from_json(doc.req("arch")?)?;
-        let declared = doc.req("param_count")?.as_usize()?;
-        let mut layers: BTreeMap<String, BTreeMap<String, Tensor>> =
-            BTreeMap::new();
-        for entry in doc.req("layers")?.as_array()? {
-            let name = entry.req("name")?.as_str()?.to_string();
-            let mut tensors = BTreeMap::new();
-            for (key, val) in entry.as_object()? {
-                if key == "name" {
-                    continue;
-                }
-                tensors.insert(key.clone(), Tensor::from_json(val)?);
-            }
-            anyhow::ensure!(
-                layers.insert(name.clone(), tensors).is_none(),
-                "duplicate layer {name:?}"
-            );
-        }
+        let mut src = super::import::JsonSource::parse(text)?;
+        let arch = src.arch.clone();
+        Self::from_source(&arch, &mut src)
+    }
+
+    /// Validated constructor shared by every import path: checks the
+    /// assembled layer map against the architecture's parameter count
+    /// and pinned tensor shapes.
+    pub(crate) fn from_parts(
+        arch: Arch,
+        layers: BTreeMap<String, BTreeMap<String, Tensor>>,
+    ) -> anyhow::Result<Self> {
         let w = Self { arch, layers };
         let counted = w.param_count();
-        anyhow::ensure!(
-            counted == declared,
-            "weights param count {counted} != declared {declared}"
-        );
         anyhow::ensure!(
             counted == w.arch.param_count(),
             "weights param count {counted} != arch {} count {}",
@@ -278,6 +270,23 @@ mod tests {
         assert_eq!(w.param_count(), 23);
         assert_eq!(w.tensor("rnn", "b").unwrap().data[1], 1.0);
         assert_eq!(w.tensor("out", "w").unwrap().at2(1, 0), -0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "at2 on a 1-D tensor")]
+    fn at2_rejects_non_2d_tensor() {
+        let t = Tensor { shape: vec![4], data: vec![0.0; 4] };
+        t.at2(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn at2_rejects_out_of_bounds_column() {
+        // (0, 4) on a (2, 3) tensor computes flat index 4 — in bounds of
+        // the data, so without the hard check this read returns row 1's
+        // second element silently.
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        t.at2(0, 4);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Float-vs-fixed accuracy sweep over a real checkpoint — the paper's
+//! §4 accuracy study (Fig. 2 reports the same scan as ratios over the
+//! synthetic-artifact grid; this report runs *imported* weights on the
+//! bundled dataset slice and pins absolute AUC + delta per precision).
+//!
+//! The output contract is `BENCH_accuracy.json` (see
+//! [`write_bench_json`]); `ci.sh --bench-smoke` greps its schema and the
+//! `accuracy_golden` tier-1 test pins the AUC values.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::{metrics, Dataset};
+use crate::fixed::{FixedSpec, QuantConfig};
+use crate::model::Weights;
+use crate::nn::fixed_engine::MAX_WIDTH;
+use crate::nn::{FixedEngine, FloatEngine};
+use crate::util::json;
+use crate::util::threads::parallel_map;
+
+use super::fig2::{eval_auc, eval_probs};
+use super::table::AsciiTable;
+
+/// One fixed-point precision's result.
+#[derive(Debug, Clone)]
+pub struct AccuracyPoint {
+    pub spec: FixedSpec,
+    pub auc_fixed: f64,
+}
+
+/// The sweep result for one model.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    /// Model-zoo key, e.g. `top_gru`.
+    pub key: String,
+    /// Events evaluated.
+    pub samples: usize,
+    /// Float (f32) baseline AUC.
+    pub auc_float: f64,
+    pub points: Vec<AccuracyPoint>,
+}
+
+impl AccuracyReport {
+    /// `auc_fixed - auc_float` for one point (negative = quantization
+    /// loss).
+    pub fn delta(&self, p: &AccuracyPoint) -> f64 {
+        p.auc_fixed - self.auc_float
+    }
+
+    /// The point with the given spec, if scanned.
+    pub fn point(&self, width: u32, integer: u32) -> Option<&AccuracyPoint> {
+        self.points
+            .iter()
+            .find(|p| p.spec.width == width && p.spec.integer == integer)
+    }
+}
+
+/// The default precision ladder: two clearly-degraded low widths, the
+/// hls4ml default `<16,6>`, and a near-float wide type.
+pub fn default_specs() -> Vec<FixedSpec> {
+    [(8, 4), (12, 6), (16, 6), (20, 8)]
+        .into_iter()
+        .map(|(w, i)| FixedSpec::new(w, i))
+        .collect()
+}
+
+/// Parse a `"W:I,W:I,..."` spec list (e.g. `"16:6,20:8"`), validating
+/// ranges up front — [`FixedSpec::new`] treats bad combinations as
+/// programming errors and panics, which a CLI flag must never reach.
+pub fn parse_specs(csv: &str) -> anyhow::Result<Vec<FixedSpec>> {
+    let mut specs = Vec::new();
+    for part in csv.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (w, i) = part.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("bad spec {part:?} (want WIDTH:INTEGER, e.g. 16:6)")
+        })?;
+        let width: u32 = w
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad width in spec {part:?}"))?;
+        let integer: u32 = i
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad integer bits in spec {part:?}"))?;
+        anyhow::ensure!(
+            (1..=MAX_WIDTH).contains(&width),
+            "spec {part:?}: width {width} out of range 1..={MAX_WIDTH}"
+        );
+        anyhow::ensure!(
+            (1..=width).contains(&integer),
+            "spec {part:?}: integer bits {integer} out of range 1..={width}"
+        );
+        specs.push(FixedSpec::new(width, integer));
+    }
+    anyhow::ensure!(!specs.is_empty(), "no fixed-point specs given");
+    Ok(specs)
+}
+
+/// Run the sweep: float baseline plus one [`FixedEngine`] per spec
+/// (PTQ config: truncation + saturation), parallel over specs.
+pub fn run(
+    weights: &Weights,
+    ds: &Dataset,
+    specs: &[FixedSpec],
+    workers: usize,
+) -> anyhow::Result<AccuracyReport> {
+    let arch = &weights.arch;
+    anyhow::ensure!(
+        ds.seq_len == arch.seq_len && ds.n_feat == arch.input_size,
+        "dataset shape ({} steps x {} features) does not feed {} \
+         ({} x {})",
+        ds.seq_len,
+        ds.n_feat,
+        arch.key(),
+        arch.seq_len,
+        arch.input_size
+    );
+    anyhow::ensure!(
+        ds.n_classes == arch.n_classes(),
+        "dataset has {} classes but {} outputs {}",
+        ds.n_classes,
+        arch.key(),
+        arch.n_classes()
+    );
+    for spec in specs {
+        anyhow::ensure!(
+            spec.width <= MAX_WIDTH,
+            "spec {} exceeds engine max width {MAX_WIDTH}",
+            spec.label()
+        );
+    }
+
+    let float_engine = FloatEngine::new(weights)?;
+    let probs = eval_probs(&float_engine, ds, workers);
+    // The float baseline must be clean; the fixed paths may saturate
+    // into NaN at very low widths, which binary_auc excludes per-sample.
+    metrics::require_finite(&probs)
+        .map_err(|e| anyhow::anyhow!("float baseline: {e}"))?;
+    let auc_float = metrics::mean_auc(&probs, ds.labels(), ds.n_classes);
+
+    let aucs = parallel_map(specs.len(), workers, |s| {
+        let engine = FixedEngine::new(weights, QuantConfig::ptq(specs[s]))
+            .expect("spec width validated against engine max");
+        eval_auc(&engine, ds, 1)
+    });
+
+    Ok(AccuracyReport {
+        key: arch.key(),
+        samples: ds.n,
+        auc_float,
+        points: specs
+            .iter()
+            .zip(aucs)
+            .map(|(&spec, auc_fixed)| AccuracyPoint { spec, auc_fixed })
+            .collect(),
+    })
+}
+
+/// Render one report as an ASCII table.
+pub fn render(report: &AccuracyReport) -> String {
+    let mut table = AsciiTable::new(
+        format!(
+            "Accuracy ({}): float AUC {:.4}, {} samples",
+            report.key, report.auc_float, report.samples
+        ),
+        &["type", "auc_fixed", "delta", "ratio"],
+    );
+    for p in &report.points {
+        let ratio = if report.auc_float > 0.0 {
+            p.auc_fixed / report.auc_float
+        } else {
+            0.0
+        };
+        table.row(vec![
+            format!("ap_fixed{}", p.spec.label()),
+            format!("{:.4}", p.auc_fixed),
+            format!("{:+.4}", report.delta(p)),
+            format!("{ratio:.3}"),
+        ]);
+    }
+    table.render()
+}
+
+/// Emit the sweep as machine-readable JSON (the CI bench artifact).
+pub fn write_bench_json(
+    path: &Path,
+    reports: &[AccuracyReport],
+) -> anyhow::Result<PathBuf> {
+    let doc = json::obj(vec![
+        ("bench", json::s("accuracy")),
+        ("schema_version", json::num(1.0)),
+        (
+            "models",
+            json::arr(
+                reports
+                    .iter()
+                    .map(|r| {
+                        json::obj(vec![
+                            ("key", json::s(&r.key)),
+                            ("samples", json::num(r.samples as f64)),
+                            ("auc_float", json::num(r.auc_float)),
+                            (
+                                "rows",
+                                json::arr(
+                                    r.points
+                                        .iter()
+                                        .map(|p| {
+                                            json::obj(vec![
+                                                (
+                                                    "width",
+                                                    json::num(
+                                                        p.spec.width as f64,
+                                                    ),
+                                                ),
+                                                (
+                                                    "integer",
+                                                    json::num(
+                                                        p.spec.integer as f64,
+                                                    ),
+                                                ),
+                                                (
+                                                    "auc_fixed",
+                                                    json::num(p.auc_fixed),
+                                                ),
+                                                (
+                                                    "delta",
+                                                    json::num(r.delta(p)),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut text = doc.to_json();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(path.to_path_buf())
+}
+
+/// Paper-shape checks on a completed sweep: the float baseline must
+/// actually separate the classes, the widest precision must sit near it
+/// (Fig. 2: AUC saturates with width), and widening must not lose
+/// accuracy.
+pub fn shape_check(report: &AccuracyReport) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        report.auc_float > 0.55,
+        "{}: float AUC {:.4} is not better than chance — not a trained \
+         checkpoint?",
+        report.key,
+        report.auc_float
+    );
+    let widest = report
+        .points
+        .iter()
+        .max_by_key(|p| p.spec.width)
+        .ok_or_else(|| anyhow::anyhow!("{}: empty sweep", report.key))?;
+    anyhow::ensure!(
+        report.delta(widest).abs() <= 0.05,
+        "{}: widest spec {} is {:.4} from float ({:.4} vs {:.4})",
+        report.key,
+        widest.spec.label(),
+        report.delta(widest),
+        widest.auc_fixed,
+        report.auc_float
+    );
+    let narrowest = report
+        .points
+        .iter()
+        .min_by_key(|p| p.spec.width)
+        .ok_or_else(|| anyhow::anyhow!("{}: empty sweep", report.key))?;
+    anyhow::ensure!(
+        widest.auc_fixed >= narrowest.auc_fixed - 0.02,
+        "{}: widening {} -> {} lost AUC ({:.4} -> {:.4})",
+        report.key,
+        narrowest.spec.label(),
+        widest.spec.label(),
+        narrowest.auc_fixed,
+        widest.auc_fixed
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ladder_is_engine_legal() {
+        let specs = default_specs();
+        assert_eq!(specs.len(), 4);
+        assert!(specs.iter().any(|s| s.label() == "<16,6>"));
+        for s in &specs {
+            assert!(s.width <= MAX_WIDTH);
+        }
+    }
+
+    #[test]
+    fn parse_specs_roundtrips() {
+        let specs = parse_specs("8:4, 16:6,20:8").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[1], FixedSpec::new(16, 6));
+    }
+
+    #[test]
+    fn parse_specs_rejects_bad_input_without_panicking() {
+        // Each of these would be a panic if fed straight to
+        // FixedSpec::new.
+        assert!(parse_specs("0:0").is_err());
+        assert!(parse_specs("8:9").is_err());
+        assert!(parse_specs("99:6").is_err());
+        assert!(parse_specs("16").is_err());
+        assert!(parse_specs("a:b").is_err());
+        assert!(parse_specs("").is_err());
+    }
+
+    fn toy_report() -> AccuracyReport {
+        AccuracyReport {
+            key: "top_gru".into(),
+            samples: 100,
+            auc_float: 0.99,
+            points: vec![
+                AccuracyPoint {
+                    spec: FixedSpec::new(8, 4),
+                    auc_fixed: 0.6,
+                },
+                AccuracyPoint {
+                    spec: FixedSpec::new(20, 8),
+                    auc_fixed: 0.985,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_check_accepts_saturating_sweep() {
+        shape_check(&toy_report()).unwrap();
+    }
+
+    #[test]
+    fn shape_check_rejects_wide_precision_loss() {
+        let mut r = toy_report();
+        r.points[1].auc_fixed = 0.5;
+        assert!(shape_check(&r).is_err());
+    }
+
+    #[test]
+    fn shape_check_rejects_chance_baseline() {
+        let mut r = toy_report();
+        r.auc_float = 0.5;
+        assert!(shape_check(&r).is_err());
+    }
+
+    #[test]
+    fn bench_json_has_the_grepped_schema() {
+        let path = std::env::temp_dir().join(format!(
+            "bench_accuracy_unit_{}.json",
+            std::process::id()
+        ));
+        write_bench_json(&path, &[toy_report()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        for marker in [
+            "\"bench\":\"accuracy\"",
+            "\"schema_version\":1",
+            "\"key\":\"top_gru\"",
+            "\"auc_float\":",
+            "\"width\":8,\"integer\":4,",
+            "\"width\":20,\"integer\":8,",
+            "\"delta\":",
+        ] {
+            assert!(text.contains(marker), "missing {marker} in {text}");
+        }
+        let doc = crate::util::json::parse(&text).unwrap();
+        let models = doc.req("models").unwrap().as_array().unwrap();
+        assert_eq!(models.len(), 1);
+    }
+}

@@ -10,6 +10,7 @@
 //! | Fig. 6 + Table 5 (static/non-static)| [`resources::fig6`], [`tables::table5`] |
 //! | §5.2 throughput (FPGA vs GPU-analog)| [`throughput::run`] |
 
+pub mod accuracy;
 pub mod csv;
 pub mod fig2;
 pub mod resources;

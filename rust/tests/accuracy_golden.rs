@@ -1,0 +1,137 @@
+//! Golden accuracy suite: the paper's float-vs-fixed AUC contract,
+//! pinned on the committed trained checkpoint + frozen test slice.
+//!
+//! `tests/fixtures/top_gru.meta.json` records the float AUC the python
+//! training pipeline measured on the same slice; the rust float engine
+//! must reproduce it, and the fixed-point ladder must show the Fig. 2
+//! shape — near-float at wide types, degrading as width shrinks.  The
+//! floors are far above the ~0.5 a gate-order or layout bug collapses
+//! to, so a wrong import is a loud failure, not a tolerance nibble.
+
+use std::path::PathBuf;
+
+use rnn_hls::data::Dataset;
+use rnn_hls::report::accuracy;
+use rnn_hls::util::json;
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn reference_slice_auc() -> f64 {
+    let text =
+        std::fs::read_to_string(fixtures().join("top_gru.meta.json")).unwrap();
+    let doc = json::parse(&text).unwrap();
+    doc.req("slice_float_auc").unwrap().as_f64().unwrap()
+}
+
+fn run_sweep() -> accuracy::AccuracyReport {
+    let weights = rnn_hls::model::Weights::load_path(
+        fixtures().join("top_gru.json"),
+        None,
+    )
+    .unwrap();
+    let ds = Dataset::load(fixtures().join("top_test_slice.bin")).unwrap();
+    assert_eq!(ds.n, 400, "fixture slice size changed — regenerate goldens");
+    accuracy::run(&weights, &ds, &accuracy::default_specs(), 2).unwrap()
+}
+
+#[test]
+fn float_engine_reproduces_the_python_auc() {
+    let report = run_sweep();
+    let reference = reference_slice_auc();
+    assert!(
+        reference > 0.9,
+        "meta.json reference AUC {reference} is implausible"
+    );
+    // f32 engine vs the python f32 pipeline: same weights, same events.
+    // Tolerance covers summation-order differences only.
+    assert!(
+        (report.auc_float - reference).abs() < 0.01,
+        "float AUC {} vs python reference {reference}",
+        report.auc_float
+    );
+}
+
+#[test]
+fn fixed_point_ladder_matches_fig2_shape() {
+    let report = run_sweep();
+
+    // <16,6> — hls4ml's default type: trained-network accuracy must
+    // survive PTQ essentially intact (Fig. 2 plateau).
+    let p16 = report.point(16, 6).expect("<16,6> scanned");
+    assert!(
+        p16.auc_fixed >= 0.92,
+        "<16,6> AUC {:.4} — gate-order/layout bugs collapse this to ~0.5",
+        p16.auc_fixed
+    );
+    assert!(
+        report.delta(p16).abs() <= 0.06,
+        "<16,6> delta {:.4} from float {:.4}",
+        report.delta(p16),
+        report.auc_float
+    );
+
+    // <20,8> — near-float.
+    let p20 = report.point(20, 8).expect("<20,8> scanned");
+    assert!(p20.auc_fixed >= 0.95, "<20,8> AUC {:.4}", p20.auc_fixed);
+    assert!(
+        report.delta(p20).abs() <= 0.04,
+        "<20,8> delta {:.4}",
+        report.delta(p20)
+    );
+
+    // <12,6> (6 fractional bits) — visibly degraded but still a
+    // classifier; <8,4> — deep in the cliff, only sanity-bounded.
+    let p12 = report.point(12, 6).expect("<12,6> scanned");
+    assert!(p12.auc_fixed >= 0.70, "<12,6> AUC {:.4}", p12.auc_fixed);
+    let p8 = report.point(8, 4).expect("<8,4> scanned");
+    assert!(p8.auc_fixed >= 0.30, "<8,4> AUC {:.4}", p8.auc_fixed);
+
+    // Monotone-with-width at the ends (small tolerance for tie noise),
+    // plus the packaged shape check the CLI prints as a warning.
+    assert!(
+        p20.auc_fixed >= p8.auc_fixed - 0.02,
+        "widest <20,8> ({:.4}) below narrowest <8,4> ({:.4})",
+        p20.auc_fixed,
+        p8.auc_fixed
+    );
+    accuracy::shape_check(&report).unwrap();
+}
+
+#[test]
+fn bench_json_schema_is_stable() {
+    let report = run_sweep();
+    let path = std::env::temp_dir().join(format!(
+        "bench_accuracy_golden_{}.json",
+        std::process::id()
+    ));
+    accuracy::write_bench_json(&path, std::slice::from_ref(&report)).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    for marker in [
+        "\"bench\":\"accuracy\"",
+        "\"schema_version\":1",
+        "\"key\":\"top_gru\"",
+        "\"samples\":400",
+        "\"auc_float\":",
+        "\"width\":16,\"integer\":6,",
+        "\"width\":20,\"integer\":8,",
+        "\"delta\":",
+    ] {
+        assert!(text.contains(marker), "missing {marker}");
+    }
+    // The emitted document parses back, with one row per scanned spec.
+    let doc = json::parse(&text).unwrap();
+    let models = doc.req("models").unwrap().as_array().unwrap();
+    assert_eq!(models.len(), 1);
+    let rows = models[0].req("rows").unwrap().as_array().unwrap();
+    assert_eq!(rows.len(), accuracy::default_specs().len());
+    for row in rows {
+        let width = row.req("width").unwrap().as_usize().unwrap();
+        let auc = row.req("auc_fixed").unwrap().as_f64().unwrap();
+        assert!((1..=26).contains(&width));
+        assert!((0.0..=1.0).contains(&auc), "AUC {auc} out of [0,1]");
+    }
+}

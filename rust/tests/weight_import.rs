@@ -1,0 +1,622 @@
+//! Weight-import integration tests.
+//!
+//! A local protobuf encoder (mirror of `python/compile/export_fixtures.
+//! py`) builds ONNX checkpoints from [`Weights`] in memory, so the tests
+//! cover bitwise roundtrips through ONNX's native layouts (gate-blocked
+//! `(1, G·H, I)` kernels, `iofc` LSTM order, `transB` Gemm weights, the
+//! split `Wb | Rb` bias), every typed rejection path with the offending
+//! tensor named, and the malformed-bytes-never-panic contract.  The
+//! committed fixtures pin the cross-language contract: the JSON and ONNX
+//! exports of the same trained checkpoint must import bitwise-identical.
+
+use std::path::PathBuf;
+
+use rnn_hls::model::{
+    zoo, Cell, ImportError, OnnxSource, Weights,
+};
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+// ---------------------------------------------------------------------
+// Minimal protobuf writers (mirror of the python exporter).
+// ---------------------------------------------------------------------
+
+fn varint(mut n: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let byte = (n & 0x7f) as u8;
+        n >>= 7;
+        if n != 0 {
+            out.push(byte | 0x80);
+        } else {
+            out.push(byte);
+            return out;
+        }
+    }
+}
+
+fn tag(field: u32, wire: u8) -> Vec<u8> {
+    varint(u64::from(field) << 3 | u64::from(wire))
+}
+
+fn p_int(field: u32, n: u64) -> Vec<u8> {
+    let mut v = tag(field, 0);
+    v.extend(varint(n));
+    v
+}
+
+fn p_bytes(field: u32, payload: &[u8]) -> Vec<u8> {
+    let mut v = tag(field, 2);
+    v.extend(varint(payload.len() as u64));
+    v.extend_from_slice(payload);
+    v
+}
+
+fn p_str(field: u32, s: &str) -> Vec<u8> {
+    p_bytes(field, s.as_bytes())
+}
+
+fn tensor_proto(name: &str, dims: &[usize], data: &[f32], dtype: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    for &d in dims {
+        body.extend(p_int(1, d as u64));
+    }
+    body.extend(p_int(2, dtype));
+    body.extend(p_str(8, name));
+    let mut raw = Vec::with_capacity(data.len() * 4);
+    for &f in data {
+        raw.extend_from_slice(&f.to_le_bytes());
+    }
+    body.extend(p_bytes(9, &raw));
+    body
+}
+
+fn attr_int(name: &str, value: u64) -> Vec<u8> {
+    let mut v = p_str(1, name);
+    v.extend(p_int(3, value));
+    v.extend(p_int(20, 2)); // type = INT
+    v
+}
+
+fn attr_str(name: &str, value: &str) -> Vec<u8> {
+    let mut v = p_str(1, name);
+    v.extend(p_str(4, value));
+    v.extend(p_int(20, 3)); // type = STRING
+    v
+}
+
+fn node_proto(
+    op: &str,
+    inputs: &[&str],
+    outputs: &[&str],
+    name: &str,
+    attrs: &[Vec<u8>],
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    for i in inputs {
+        body.extend(p_str(1, i));
+    }
+    for o in outputs {
+        body.extend(p_str(2, o));
+    }
+    body.extend(p_str(3, name));
+    body.extend(p_str(4, op));
+    for a in attrs {
+        body.extend(p_bytes(5, a));
+    }
+    body
+}
+
+fn model_proto(graph_name: &str, nodes: &[Vec<u8>], inits: &[Vec<u8>]) -> Vec<u8> {
+    let mut graph = Vec::new();
+    for n in nodes {
+        graph.extend(p_bytes(1, n));
+    }
+    graph.extend(p_str(2, graph_name));
+    for t in inits {
+        graph.extend(p_bytes(5, t));
+    }
+    let mut model = p_int(1, 8); // ir_version
+    model.extend(p_bytes(7, &graph));
+    model
+}
+
+// ---------------------------------------------------------------------
+// Weights → ONNX export, with corruption knobs for the rejection tests.
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct ExportOpts {
+    /// Gemm weights stored `(out, in)` with `transB=1` (the common
+    /// Keras-export layout) vs plain `(in, out)`.
+    transb: bool,
+    direction: Option<&'static str>,
+    /// GRU `linear_before_reset` attribute (Keras `reset_after`).
+    linear_before_reset: bool,
+    graph_name: Option<&'static str>,
+    hidden_size_attr: Option<u64>,
+    w_dtype: u64,
+    drop_bias_init: bool,
+    /// Swap the W dims to `(1, I, G·H)` — same element count, wrong
+    /// layout.
+    swap_w_dims: bool,
+}
+
+impl Default for ExportOpts {
+    fn default() -> Self {
+        Self {
+            transb: true,
+            direction: Some("forward"),
+            linear_before_reset: true,
+            graph_name: None,
+            hidden_size_attr: None,
+            w_dtype: 1,
+            drop_bias_init: false,
+            swap_w_dims: false,
+        }
+    }
+}
+
+/// Keras `(cols, G·H)` → ONNX `(G·H, cols)`: transpose with ONNX gate
+/// block `ob` reading Keras block `order[ob]`.
+fn to_onnx_blocks(
+    data: &[f32],
+    cols: usize,
+    h: usize,
+    order: &[usize],
+) -> Vec<f32> {
+    let gh = order.len() * h;
+    let mut out = vec![0.0f32; gh * cols];
+    for (ob, &kb) in order.iter().enumerate() {
+        for j in 0..h {
+            for c in 0..cols {
+                out[(ob * h + j) * cols + c] = data[c * gh + kb * h + j];
+            }
+        }
+    }
+    out
+}
+
+fn export_onnx(w: &Weights, opts: &ExportOpts) -> Vec<u8> {
+    let arch = &w.arch;
+    let h = arch.hidden_size;
+    let i = arch.input_size;
+    let g = arch.cell.gates();
+    // Keras → ONNX gate block order: LSTM [i,f,c,o] → [i,o,f,c].
+    let order: &[usize] = match arch.cell {
+        Cell::Lstm => &[0, 3, 1, 2],
+        Cell::Gru => &[0, 1, 2],
+    };
+
+    let kw = w.tensor("rnn", "w").unwrap();
+    let ku = w.tensor("rnn", "u").unwrap();
+    let kb = w.tensor("rnn", "b").unwrap();
+    let w_on = to_onnx_blocks(&kw.data, i, h, order);
+    let u_on = to_onnx_blocks(&ku.data, h, h, order);
+    let b_on: Vec<f32> = match arch.cell {
+        Cell::Lstm => {
+            // Reorder the single Keras bias into ONNX gate order, then
+            // split it across the Wb | Rb halves element-by-element
+            // (even indices → Wb, odd → Rb).  The reader sums the
+            // halves, and a sum where one addend is 0.0 is bit-exact —
+            // so this exercises the sum path, not just Rb = 0.
+            let mut reordered = vec![0.0f32; 4 * h];
+            for (ob, &kbk) in order.iter().enumerate() {
+                for j in 0..h {
+                    reordered[ob * h + j] = kb.data[kbk * h + j];
+                }
+            }
+            let mut both = vec![0.0f32; 8 * h];
+            for (x, &v) in reordered.iter().enumerate() {
+                if x % 2 == 0 {
+                    both[x] = v;
+                } else {
+                    both[4 * h + x] = v;
+                }
+            }
+            both
+        }
+        // Keras reset_after rows (2, 3H) are already Wb then Rb.
+        Cell::Gru => kb.data.clone(),
+    };
+
+    let w_dims: &[usize] = if opts.swap_w_dims {
+        &[1, i, g * h]
+    } else {
+        &[1, g * h, i]
+    };
+    let mut inits = vec![
+        tensor_proto("rnn.W", w_dims, &w_on, opts.w_dtype),
+        tensor_proto("rnn.R", &[1, g * h, h], &u_on, 1),
+    ];
+    if !opts.drop_bias_init {
+        inits.push(tensor_proto("rnn.B", &[1, 2 * g * h], &b_on, 1));
+    }
+
+    let mut attrs = Vec::new();
+    if let Some(hs) = opts.hidden_size_attr {
+        attrs.push(attr_int("hidden_size", hs));
+    } else {
+        attrs.push(attr_int("hidden_size", h as u64));
+    }
+    if let Some(d) = opts.direction {
+        attrs.push(attr_str("direction", d));
+    }
+    if arch.cell == Cell::Gru && opts.linear_before_reset {
+        attrs.push(attr_int("linear_before_reset", 1));
+    }
+    let op = match arch.cell {
+        Cell::Lstm => "LSTM",
+        Cell::Gru => "GRU",
+    };
+    let mut nodes = vec![
+        node_proto(
+            op,
+            &["x", "rnn.W", "rnn.R", "rnn.B"],
+            &["rnn_y", "rnn_h"],
+            "rnn",
+            &attrs,
+        ),
+        node_proto("Squeeze", &["rnn_h"], &["state"], "squeeze", &[]),
+    ];
+
+    let mut prev_name = "state".to_string();
+    let mut head: Vec<(String, bool)> = (0..arch.dense_sizes.len())
+        .map(|k| (format!("dense{k}"), true))
+        .collect();
+    head.push(("out".into(), false));
+    for (lname, relu) in head {
+        let wl = w.tensor(&lname, "w").unwrap();
+        let bl = w.tensor(&lname, "b").unwrap();
+        let (rows, cols) = (wl.shape[0], wl.shape[1]);
+        if opts.transb {
+            // Store (out, in).
+            let mut t = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r] = wl.data[r * cols + c];
+                }
+            }
+            inits.push(tensor_proto(&format!("{lname}.w"), &[cols, rows], &t, 1));
+        } else {
+            inits.push(tensor_proto(
+                &format!("{lname}.w"),
+                &[rows, cols],
+                &wl.data,
+                1,
+            ));
+        }
+        inits.push(tensor_proto(&format!("{lname}.b"), &[cols], &bl.data, 1));
+        let out_name = format!("{lname}_z");
+        let wn = format!("{lname}.w");
+        let bn = format!("{lname}.b");
+        let gemm_attrs = if opts.transb {
+            vec![attr_int("transB", 1)]
+        } else {
+            vec![]
+        };
+        nodes.push(node_proto(
+            "Gemm",
+            &[&prev_name, &wn, &bn],
+            &[&out_name],
+            &lname,
+            &gemm_attrs,
+        ));
+        prev_name = out_name;
+        if relu {
+            let act_name = format!("{lname}_a");
+            nodes.push(node_proto(
+                "Relu",
+                &[&prev_name],
+                &[&act_name],
+                &format!("{lname}_relu"),
+                &[],
+            ));
+            prev_name = act_name;
+        }
+    }
+    let act = match arch.output_activation {
+        rnn_hls::model::OutputActivation::Sigmoid => "Sigmoid",
+        rnn_hls::model::OutputActivation::Softmax => "Softmax",
+    };
+    nodes.push(node_proto(
+        act,
+        &[&prev_name],
+        &["probs"],
+        "output_activation",
+        &[],
+    ));
+
+    let graph_name = opts.graph_name.map(str::to_string).unwrap_or_else(|| {
+        w.arch.key()
+    });
+    model_proto(&graph_name, &nodes, &inits)
+}
+
+/// Bitwise tensor-by-tensor equality of two imported checkpoints.
+fn assert_bitwise_eq(a: &Weights, b: &Weights) {
+    assert_eq!(a.arch, b.arch);
+    let mut layers = vec!["rnn".to_string()];
+    layers.extend((0..a.arch.dense_sizes.len()).map(|k| format!("dense{k}")));
+    layers.push("out".into());
+    for layer in &layers {
+        let tensors: &[&str] =
+            if layer == "rnn" { &["w", "u", "b"] } else { &["w", "b"] };
+        for name in tensors {
+            let ta = a.tensor(layer, name).unwrap();
+            let tb = b.tensor(layer, name).unwrap();
+            assert_eq!(ta.shape, tb.shape, "{layer}.{name} shape");
+            let bits_a: Vec<u32> =
+                ta.data.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> =
+                tb.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{layer}.{name} data bits");
+        }
+    }
+}
+
+fn parse_and_build(bytes: &[u8]) -> anyhow::Result<Weights> {
+    let mut src = OnnxSource::parse(bytes, None)?;
+    let arch = src.arch.clone();
+    Weights::from_source(&arch, &mut src)
+}
+
+fn import_err(bytes: &[u8]) -> ImportError {
+    match OnnxSource::parse(bytes, None) {
+        Err(e) => e,
+        Ok(mut src) => {
+            let arch = src.arch.clone();
+            let err = Weights::from_source(&arch, &mut src)
+                .expect_err("import should fail");
+            err.downcast::<ImportError>().expect("typed import error")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Roundtrips
+// ---------------------------------------------------------------------
+
+#[test]
+fn lstm_roundtrip_is_bitwise_exact() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 0xA11CE);
+    let bytes = export_onnx(&w, &ExportOpts::default());
+    let got = parse_and_build(&bytes).unwrap();
+    assert_bitwise_eq(&w, &got);
+}
+
+#[test]
+fn gru_roundtrip_is_bitwise_exact() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let w = Weights::synthetic(&arch, 0xB0B);
+    let bytes = export_onnx(&w, &ExportOpts::default());
+    let got = parse_and_build(&bytes).unwrap();
+    assert_bitwise_eq(&w, &got);
+}
+
+#[test]
+fn gemm_without_transb_roundtrips() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let w = Weights::synthetic(&arch, 7);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts { transb: false, ..ExportOpts::default() },
+    );
+    let got = parse_and_build(&bytes).unwrap();
+    assert_bitwise_eq(&w, &got);
+}
+
+#[test]
+fn direction_attribute_is_optional() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 3);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts { direction: None, ..ExportOpts::default() },
+    );
+    assert_bitwise_eq(&w, &parse_and_build(&bytes).unwrap());
+}
+
+#[test]
+fn committed_json_and_onnx_fixtures_import_identically() {
+    // The cross-language contract: the python exporter wrote the same
+    // trained checkpoint in both formats; the two readers must produce
+    // bitwise-identical Weights.
+    let a = Weights::load_path(fixtures().join("top_gru.json"), None).unwrap();
+    let b = Weights::load_path(fixtures().join("top_gru.onnx"), None).unwrap();
+    assert_eq!(a.arch.key(), "top_gru");
+    assert_eq!(a.param_count(), 3089);
+    assert_bitwise_eq(&a, &b);
+}
+
+#[test]
+fn explicit_arch_hint_is_accepted_when_it_matches() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let w = Weights::synthetic(&arch, 5);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts {
+            graph_name: Some("mystery_export"),
+            ..ExportOpts::default()
+        },
+    );
+    // Without a hint the graph name resolves nowhere...
+    let err = OnnxSource::parse(&bytes, None).unwrap_err();
+    assert!(matches!(err, ImportError::Unsupported { .. }), "{err}");
+    // ...with the hint the same bytes import exactly.
+    let mut src = OnnxSource::parse(&bytes, Some(&arch)).unwrap();
+    let got = Weights::from_source(&arch, &mut src).unwrap();
+    assert_bitwise_eq(&w, &got);
+}
+
+// ---------------------------------------------------------------------
+// Typed rejection paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn missing_initializer_names_the_tensor() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts { drop_bias_init: true, ..ExportOpts::default() },
+    );
+    match import_err(&bytes) {
+        ImportError::MissingTensor { name } => assert_eq!(name, "rnn.B"),
+        other => panic!("want MissingTensor, got {other}"),
+    }
+}
+
+#[test]
+fn wrong_kernel_layout_names_the_tensor() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts { swap_w_dims: true, ..ExportOpts::default() },
+    );
+    match import_err(&bytes) {
+        ImportError::ShapeMismatch { name, want, got } => {
+            assert_eq!(name, "rnn.W");
+            assert_eq!(want, vec![1, 80, 6]);
+            assert_eq!(got, vec![1, 6, 80]);
+        }
+        other => panic!("want ShapeMismatch, got {other}"),
+    }
+}
+
+#[test]
+fn non_f32_dtype_names_the_tensor() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts { w_dtype: 7, ..ExportOpts::default() },
+    );
+    match import_err(&bytes) {
+        ImportError::BadDtype { name, got } => {
+            assert_eq!(name, "rnn.W");
+            assert_eq!(got, "INT64");
+        }
+        other => panic!("want BadDtype, got {other}"),
+    }
+}
+
+#[test]
+fn reverse_direction_is_unsupported() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts {
+            direction: Some("bidirectional"),
+            ..ExportOpts::default()
+        },
+    );
+    match import_err(&bytes) {
+        ImportError::Unsupported { what } => {
+            assert!(what.contains("bidirectional"), "{what}");
+        }
+        other => panic!("want Unsupported, got {other}"),
+    }
+}
+
+#[test]
+fn gru_without_reset_after_is_unsupported() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts {
+            linear_before_reset: false,
+            ..ExportOpts::default()
+        },
+    );
+    match import_err(&bytes) {
+        ImportError::Unsupported { what } => {
+            assert!(what.contains("linear_before_reset"), "{what}");
+        }
+        other => panic!("want Unsupported, got {other}"),
+    }
+}
+
+#[test]
+fn hidden_size_contradiction_is_arch_mismatch() {
+    let arch = zoo::arch("top", Cell::Lstm).unwrap();
+    let w = Weights::synthetic(&arch, 1);
+    let bytes = export_onnx(
+        &w,
+        &ExportOpts {
+            hidden_size_attr: Some(99),
+            ..ExportOpts::default()
+        },
+    );
+    match import_err(&bytes) {
+        ImportError::ArchMismatch { detail } => {
+            assert!(detail.contains("99"), "{detail}");
+        }
+        other => panic!("want ArchMismatch, got {other}"),
+    }
+}
+
+#[test]
+fn wrong_cell_hint_is_arch_mismatch() {
+    let lstm = zoo::arch("top", Cell::Lstm).unwrap();
+    let gru = zoo::arch("top", Cell::Gru).unwrap();
+    let w = Weights::synthetic(&gru, 1);
+    let bytes = export_onnx(&w, &ExportOpts::default());
+    let err = OnnxSource::parse(&bytes, Some(&lstm)).unwrap_err();
+    assert!(matches!(err, ImportError::ArchMismatch { .. }), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Malformed bytes must never panic
+// ---------------------------------------------------------------------
+
+/// Run the full import pipeline, discarding the outcome: any Result is
+/// fine, a panic is the bug.
+fn must_not_panic(bytes: &[u8]) {
+    if let Ok(mut src) = OnnxSource::parse(bytes, None) {
+        let arch = src.arch.clone();
+        let _ = Weights::from_source(&arch, &mut src);
+    }
+}
+
+#[test]
+fn truncated_onnx_never_panics() {
+    let bytes = std::fs::read(fixtures().join("top_gru.onnx")).unwrap();
+    // Every prefix near the start (where headers live), then stepped
+    // prefixes through the tensor payloads.
+    for end in 0..64.min(bytes.len()) {
+        must_not_panic(&bytes[..end]);
+    }
+    for end in (64..bytes.len()).step_by(97) {
+        must_not_panic(&bytes[..end]);
+    }
+}
+
+#[test]
+fn bit_flipped_onnx_never_panics() {
+    let bytes = std::fs::read(fixtures().join("top_gru.onnx")).unwrap();
+    for (step, mask) in [(211usize, 0x41u8), (137, 0xFF), (59, 0x08)] {
+        let mut mutated = bytes.clone();
+        for pos in (0..mutated.len()).step_by(step) {
+            mutated[pos] ^= mask;
+        }
+        must_not_panic(&mutated);
+    }
+}
+
+#[test]
+fn garbage_and_wrong_container_never_panic() {
+    must_not_panic(&[]);
+    must_not_panic(b"not a protobuf at all");
+    let json = std::fs::read(fixtures().join("top_gru.json")).unwrap();
+    must_not_panic(&json);
+    let pattern: Vec<u8> =
+        (0..4096u32).map(|x| (x.wrapping_mul(2654435761) >> 13) as u8).collect();
+    must_not_panic(&pattern);
+}
