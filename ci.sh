@@ -117,6 +117,34 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     grep -q '"width":20,"integer":8,' BENCH_accuracy.json
     grep -q '"delta":' BENCH_accuracy.json
     echo "accuracy rows (float baseline + fixed ladder) present"
+
+    echo "== bench-smoke: design-space explore (Pareto front artifact) =="
+    # Small measured sweep: top GRU over the default reuse/precision/
+    # strategy/clock ladders on the KU115, with the checkpoint's
+    # per-precision AUC joined in, pruned to the Pareto front.
+    cargo run --release -p rnn-hls --bin rnn-hls -- explore \
+        --model top_gru --device ku115 --accuracy \
+        --json "$PWD/BENCH_explore.json"
+    echo "== bench-smoke: BENCH_explore.json =="
+    test -s BENCH_explore.json
+    cat BENCH_explore.json
+    echo "== bench-smoke: explore schema check =="
+    # Schema, not values: front soundness and budget queries are pinned
+    # by the tier-1 hls_explore suite; here the artifact must carry the
+    # request echo plus per-row design identity, modeled cost, measured
+    # AUC, and the serving-bridge columns.
+    grep -q '"bench":"explore"' BENCH_explore.json
+    grep -q '"schema_version":1' BENCH_explore.json
+    grep -q '"device":"KU115"' BENCH_explore.json
+    grep -q '"model":"top_gru"' BENCH_explore.json
+    grep -q '"reuse_kernel":' BENCH_explore.json
+    grep -q '"strategy":' BENCH_explore.json
+    grep -q '"clock_mhz":' BENCH_explore.json
+    grep -q '"latency_ns":' BENCH_explore.json
+    grep -q '"auc":' BENCH_explore.json
+    grep -q '"backend":"fixed"' BENCH_explore.json
+    grep -q '"tier":' BENCH_explore.json
+    echo "explore rows (design identity + cost + AUC + tier) present"
     exit 0
 fi
 
@@ -156,6 +184,13 @@ echo "== tier-1: cargo test -q --test accuracy_golden (import + AUC goldens) =="
 cargo test -q --test accuracy_golden
 echo "== tier-1: cargo test -q --test weight_import (ONNX/JSON importers) =="
 cargo test -q --test weight_import
+
+# And for the design-space explorer: Pareto-front soundness (no survivor
+# dominated, every pruned row names a surviving dominator), budget
+# queries as true minima over the unpruned grid, and byte-stable
+# BENCH_explore.json output.
+echo "== tier-1: cargo test -q --test hls_explore (design-space explorer) =="
+cargo test -q --test hls_explore
 
 # Invariant lint (tools/lint): sync primitives confined to the
 # util::sync gateway, SeqCst on accounting writes, lock_or_recover

@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             }
             for cfg in candidates {
                 let report =
-                    HlsDesign::new(arch.clone(), cfg).synthesize_for(device)?;
+                    HlsDesign::new(arch.clone(), cfg)?.synthesize_for(device)?;
                 let (lut_u, _ff, dsp_u, _b) =
                     device.utilization(&report.resources);
                 let meets = report.timing.latency_us <= budget_us;

@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     let report = HlsDesign::new(
         weights.arch.clone(),
         HlsConfig::paper_default(FixedSpec::default16_6(), reuse),
-    )
+    )?
     .synthesize()?;
     println!("\nHLS synthesis estimate:\n{}", report.summary());
     println!(

@@ -97,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     let reuse = paper::reuse_grid(&benchmark, arch.cell)[0];
     let cfg = HlsConfig::paper_default(FixedSpec::default16_6(), reuse);
     let timing = latency::schedule(&arch, &cfg)?;
-    let synth = HlsDesign::new(arch, cfg).synthesize()?;
+    let synth = HlsDesign::new(arch, cfg)?.synthesize()?;
     println!("=== FPGA context (analytical HLS model) ===");
     println!("{}", synth.summary());
     println!(

@@ -3,9 +3,94 @@
 use crate::model::Arch;
 
 use super::device::Device;
-use super::latency::{self, DesignTiming};
+use super::latency::{self, DesignTiming, Strategy};
 use super::resource::{self, ResourceEstimate};
 use super::HlsConfig;
+
+/// Typed rejection of an invalid configuration, raised at
+/// [`HlsDesign::new`] — before any estimate is computed — so a bad knob
+/// setting can never yield silently wrong numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DesignError {
+    /// Under resource strategy, a reuse factor must divide the mult
+    /// count it time-multiplexes (`DSP = mults / R` only binds whole
+    /// DSP lanes when the division is exact — the rule behind the
+    /// paper's bracketed `[40]`/`[256]` reuse quirks).
+    ReuseNotDivisor {
+        arch_key: String,
+        /// Which matrix multiplication: `"kernel"` or `"recurrent"`.
+        which: &'static str,
+        reuse: usize,
+        mults: usize,
+    },
+    /// The synthesis clock must be a positive, finite frequency.
+    BadClock { clock_mhz: f64 },
+}
+
+impl std::fmt::Display for DesignError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DesignError::ReuseNotDivisor {
+                arch_key,
+                which,
+                reuse,
+                mults,
+            } => {
+                write!(
+                    f,
+                    "{arch_key}: {which} reuse factor {reuse} does not \
+                     divide the {mults} {which} mults ({mults} % {reuse} = \
+                     {}) — DSP = mults/R needs an exact divisor (cf. the \
+                     paper's bracketed reuse values)",
+                    mults % reuse
+                )
+            }
+            DesignError::BadClock { clock_mhz } => {
+                write!(
+                    f,
+                    "synthesis clock {clock_mhz} MHz is not a positive, \
+                     finite frequency"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for DesignError {}
+
+impl HlsConfig {
+    /// Validate this configuration against an architecture.  Under
+    /// resource strategy both reuse factors must exactly divide their
+    /// mult counts; under latency strategy the binder unrolls fully and
+    /// ignores the reuse factor, so no divisibility is required.
+    pub fn validate(&self, arch: &Arch) -> Result<(), DesignError> {
+        if !self.clock_mhz.is_finite() || self.clock_mhz <= 0.0 {
+            return Err(DesignError::BadClock {
+                clock_mhz: self.clock_mhz,
+            });
+        }
+        if self.strategy == Strategy::Resource {
+            let (mults_k, mults_r) = arch.rnn_mults_per_step();
+            if mults_k % self.reuse.kernel != 0 {
+                return Err(DesignError::ReuseNotDivisor {
+                    arch_key: arch.key(),
+                    which: "kernel",
+                    reuse: self.reuse.kernel,
+                    mults: mults_k,
+                });
+            }
+            if mults_r % self.reuse.recurrent != 0 {
+                return Err(DesignError::ReuseNotDivisor {
+                    arch_key: arch.key(),
+                    which: "recurrent",
+                    reuse: self.reuse.recurrent,
+                    mults: mults_r,
+                });
+            }
+        }
+        Ok(())
+    }
+}
 
 /// One "synthesis run" of the analytical model.
 #[derive(Debug, Clone)]
@@ -26,8 +111,13 @@ pub struct SynthesisReport {
 }
 
 impl HlsDesign {
-    pub fn new(arch: Arch, config: HlsConfig) -> Self {
-        Self { arch, config }
+    /// Construct a design, validating the configuration against the
+    /// architecture ([`HlsConfig::validate`]).  A design that constructs
+    /// always binds whole DSP lanes — non-divisor reuse factors are a
+    /// typed [`DesignError`], not a silently fractional estimate.
+    pub fn new(arch: Arch, config: HlsConfig) -> Result<Self, DesignError> {
+        config.validate(&arch)?;
+        Ok(Self { arch, config })
     }
 
     /// Run the scheduler + binder; errors on unsynthesizable configs.
@@ -93,7 +183,7 @@ mod tests {
             FixedSpec::new(16, 6),
             ReuseFactor::new(6, 5),
         );
-        let report = HlsDesign::new(arch, cfg).synthesize().unwrap();
+        let report = HlsDesign::new(arch, cfg).unwrap().synthesize().unwrap();
         assert_eq!(report.arch_key, "top_gru");
         assert_eq!(report.device.name, "KU115");
         assert!(report.fits_device);
@@ -109,7 +199,65 @@ mod tests {
             ReuseFactor::fully_parallel(),
         );
         cfg.strategy = Strategy::Latency;
-        assert!(HlsDesign::new(arch, cfg).synthesize().is_err());
+        assert!(HlsDesign::new(arch, cfg).unwrap().synthesize().is_err());
+    }
+
+    /// The paper's bracketed-quirk rule as a typed error: top LSTM has
+    /// 1600 recurrent mults, so reuse (60, 60) must be rejected (the
+    /// paper uses `60[40]`) while (60, 40) constructs.
+    #[test]
+    fn non_divisor_reuse_is_a_typed_error() {
+        let arch = zoo::arch("top", Cell::Lstm).unwrap();
+        let cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(60, 60),
+        );
+        let err = HlsDesign::new(arch.clone(), cfg).unwrap_err();
+        assert_eq!(
+            err,
+            super::DesignError::ReuseNotDivisor {
+                arch_key: "top_lstm".into(),
+                which: "recurrent",
+                reuse: 60,
+                mults: 1600,
+            }
+        );
+        assert!(err.to_string().contains("recurrent reuse factor 60"));
+
+        let ok = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(60, 40),
+        );
+        assert!(HlsDesign::new(arch, ok).is_ok());
+    }
+
+    /// Latency strategy unrolls fully and ignores the reuse factor, so
+    /// divisibility is not required there.
+    #[test]
+    fn latency_strategy_skips_divisibility() {
+        let arch = zoo::arch("top", Cell::Lstm).unwrap();
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(60, 60),
+        );
+        cfg.strategy = Strategy::Latency;
+        assert!(HlsDesign::new(arch, cfg).is_ok());
+    }
+
+    #[test]
+    fn bad_clock_is_a_typed_error() {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        for clock in [0.0, -200.0, f64::NAN, f64::INFINITY] {
+            let mut cfg = HlsConfig::paper_default(
+                FixedSpec::new(16, 6),
+                ReuseFactor::new(6, 5),
+            );
+            cfg.clock_mhz = clock;
+            assert!(matches!(
+                HlsDesign::new(arch.clone(), cfg),
+                Err(super::DesignError::BadClock { .. })
+            ));
+        }
     }
 
     #[test]
@@ -121,7 +269,7 @@ mod tests {
         );
         cfg.strategy = Strategy::Latency;
         cfg.mode = RnnMode::NonStatic;
-        let report = HlsDesign::new(arch, cfg).synthesize().unwrap();
+        let report = HlsDesign::new(arch, cfg).unwrap().synthesize().unwrap();
         assert!(!report.fits_device);
         assert!(report.summary().contains("DOES NOT FIT"));
     }

@@ -1,0 +1,698 @@
+//! Design-space exploration: Pareto search over the analytical HLS
+//! model.
+//!
+//! The paper's central claim is that the implementation "can be
+//! customized to meet specific design requirements for inference
+//! latencies and FPGA resources".  [`paper`] only *replays* the
+//! configurations the paper evaluated; this module *answers the budget
+//! question* for arbitrary targets:
+//!
+//! 1. [`build_grid`] enumerates reuse × precision × strategy × clock ×
+//!    RNN mode over a set of architectures, with divisibility-aware
+//!    reuse enumeration ([`reuse_ladder`]) so every candidate is valid
+//!    by construction ([`HlsDesign::new`] would reject anything else).
+//! 2. [`evaluate`] runs every candidate through the scheduler + binder
+//!    against one target [`Device`].
+//! 3. [`join_accuracy`] annotates candidates of a checkpoint model with
+//!    *measured* fixed-point AUC (`report::accuracy`), so the front
+//!    answers "cheapest design that meets a latency budget *and* holds
+//!    ≥ X AUC" — modeled cost joined with measured quality.
+//! 4. [`pareto`] admits candidates through [`Filters`] (device fit is
+//!    always required) and prunes to the Pareto front on (latency, II,
+//!    DSP, LUT, FF, BRAM, quality); [`ExploreResult`] carries the full
+//!    grid, the front, every pruned row's dominator, and budget queries
+//!    ([`ExploreResult::cheapest_within`]).
+//!
+//! Each front row also serializes as a named backend candidate
+//! ([`Candidate::backend_candidate`]): model key + `FixedSpec` + the
+//! traffic class its modeled latency supports — the explorer doubles as
+//! a scenario generator for the tiered serving layer.
+//!
+//! Methodology reference: Jia et al., *Analysis of Hardware Synthesis
+//! Strategies for Machine Learning in Collider Trigger and Data
+//! Acquisition* (arXiv 2411.11678).
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::TierClass;
+use crate::fixed::FixedSpec;
+use crate::model::{zoo, Arch};
+
+use super::design::HlsDesign;
+use super::latency::{DesignTiming, Strategy, LATENCY_STRATEGY_PARAM_LIMIT};
+use super::paper;
+use super::resource::ResourceEstimate;
+use super::{Device, HlsConfig, ReuseFactor, RnnMode};
+
+/// Default precision ladder (total bits; integer bits follow the
+/// paper's per-benchmark choice, [`spec_for`]).  Straddles the 18-bit
+/// DSP cliff so the front shows both sides of it.
+pub const DEFAULT_WIDTHS: [u32; 6] = [8, 12, 14, 16, 18, 20];
+
+/// Default clock ladder in MHz: the paper's 200 MHz plus two faster
+/// targets (each costs pipeline stages and retiming FFs,
+/// `latency::clock_penalty`).
+pub const DEFAULT_CLOCKS_MHZ: [f64; 3] = [200.0, 300.0, 400.0];
+
+/// Modeled-latency threshold for the trigger tier (10 µs — the L1T
+/// scale of the paper's §1 deployment story).  Front rows at or below
+/// it are serving candidates for the trigger path, the rest for
+/// offline.
+pub const TRIGGER_BUDGET_NS: f64 = 10_000.0;
+
+/// One exploration request: which architectures, against which device,
+/// over which knob ladders.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    pub archs: Vec<Arch>,
+    pub device: Device,
+    /// Total bit widths; integer bits via [`spec_for`].
+    pub widths: Vec<u32>,
+    pub clocks_mhz: Vec<f64>,
+    pub strategies: Vec<Strategy>,
+    pub modes: Vec<RnnMode>,
+}
+
+impl ExploreConfig {
+    /// Full default ladders for a set of architectures.
+    pub fn new(archs: Vec<Arch>, device: Device) -> Self {
+        Self {
+            archs,
+            device,
+            widths: DEFAULT_WIDTHS.to_vec(),
+            clocks_mhz: DEFAULT_CLOCKS_MHZ.to_vec(),
+            strategies: vec![Strategy::Latency, Strategy::Resource],
+            modes: vec![RnnMode::Static, RnnMode::NonStatic],
+        }
+    }
+}
+
+/// The precision the explorer scans at a given total width: integer
+/// bits follow the paper's per-benchmark Fig. 2 conclusion (6, or 10
+/// for QuickDraw), clamped into a legal `FixedSpec`.
+pub fn spec_for(benchmark: &str, width: u32) -> FixedSpec {
+    let integer = paper::chosen_integer_bits(benchmark)
+        .min(width.saturating_sub(1))
+        .max(1);
+    FixedSpec::new(width, integer)
+}
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            out.push(i);
+            if i != n / i {
+                out.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// The largest divisor of `n` at or below `target` (1 divides
+/// everything, so this is total for `target >= 1`).
+pub fn snap_down(n: usize, target: usize) -> usize {
+    let mut best = 1;
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            if i <= target && i > best {
+                best = i;
+            }
+            let j = n / i;
+            if j <= target && j > best {
+                best = j;
+            }
+        }
+        i += 1;
+    }
+    best
+}
+
+/// Divisibility-aware reuse enumeration: a geometric ladder of target
+/// factors from 1 up to `gates × hidden` (the paper's own maximum reuse
+/// scale), each snapped down to the nearest valid divisor pair, unioned
+/// with the paper's published grid for the three zoo benchmarks.  Every
+/// returned pair divides both mult counts exactly, so the whole ladder
+/// passes [`HlsConfig::validate`] by construction.
+pub fn reuse_ladder(arch: &Arch) -> Vec<ReuseFactor> {
+    let (mults_k, mults_r) = arch.rnn_mults_per_step();
+    let cap = (arch.cell.gates() * arch.hidden_size).max(1);
+    let mut set: BTreeSet<ReuseFactor> = BTreeSet::new();
+    let mut target = 1usize;
+    loop {
+        set.insert(ReuseFactor::new(
+            snap_down(mults_k, target),
+            snap_down(mults_r, target),
+        ));
+        if target >= cap {
+            break;
+        }
+        target = (target * 2).min(cap);
+    }
+    if zoo::BENCHMARKS.contains(&arch.name.as_str()) {
+        set.extend(paper::reuse_grid(&arch.name, arch.cell));
+    }
+    set.into_iter().collect()
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub arch_key: String,
+    pub config: HlsConfig,
+    pub timing: DesignTiming,
+    pub resources: ResourceEstimate,
+    pub fits_device: bool,
+    /// Measured fixed-point AUC, once joined ([`join_accuracy`]);
+    /// `None` for models without a bundled checkpoint.
+    pub auc: Option<f64>,
+}
+
+impl Candidate {
+    pub fn latency_ns(&self) -> f64 {
+        self.timing.latency_us * 1_000.0
+    }
+
+    pub fn ii_ns(&self) -> f64 {
+        self.timing.ii_us * 1_000.0
+    }
+
+    /// The stable (model, precision, reuse, strategy, mode, clock) key
+    /// every output surface sorts by, so JSON/CSV diff cleanly across
+    /// commits.
+    pub fn sort_key(&self) -> (String, u32, u32, usize, usize, u8, u8, u64) {
+        (
+            self.arch_key.clone(),
+            self.config.spec.width,
+            self.config.spec.integer,
+            self.config.reuse.kernel,
+            self.config.reuse.recurrent,
+            match self.config.strategy {
+                Strategy::Latency => 0,
+                Strategy::Resource => 1,
+            },
+            match self.config.mode {
+                RnnMode::Static => 0,
+                RnnMode::NonStatic => 1,
+            },
+            (self.config.clock_mhz * 1_000.0).round() as u64,
+        )
+    }
+
+    /// Stable row name, e.g. `top_gru_w16i6_r1x1_latency_static_c400` —
+    /// the identity of the design as a serving scenario.
+    pub fn name(&self) -> String {
+        format!(
+            "{}_w{}i{}_r{}x{}_{}_{}_c{}",
+            self.arch_key,
+            self.config.spec.width,
+            self.config.spec.integer,
+            self.config.reuse.kernel,
+            self.config.reuse.recurrent,
+            self.config.strategy.label(),
+            match self.config.mode {
+                RnnMode::Static => "static",
+                RnnMode::NonStatic => "nonstatic",
+            },
+            self.config.clock_mhz.round() as u64,
+        )
+    }
+
+    /// Minimization objectives: latency and II in time (comparable
+    /// across clocks), then the four resource axes.
+    fn cost_axes(&self) -> [f64; 6] {
+        [
+            self.latency_ns(),
+            self.ii_ns(),
+            self.resources.dsp as f64,
+            self.resources.lut as f64,
+            self.resources.ff as f64,
+            self.resources.bram_18k as f64,
+        ]
+    }
+
+    /// Pareto dominance: `self` is no worse than `other` on every cost
+    /// axis *and* on quality, and strictly better on at least one.
+    /// Quality is measured AUC when both rows carry one, precision
+    /// width otherwise (wider ≈ more accurate, Fig. 2).  Rows of
+    /// different models never dominate each other (a design for one
+    /// physics task is not a substitute for another), and a row with
+    /// measured AUC is never compared against one without.
+    pub fn dominates(&self, other: &Candidate) -> bool {
+        if self.arch_key != other.arch_key {
+            return false;
+        }
+        let (q_self, q_other) = match (self.auc, other.auc) {
+            (Some(a), Some(b)) => (a, b),
+            (None, None) => (
+                self.config.spec.width as f64,
+                other.config.spec.width as f64,
+            ),
+            _ => return false,
+        };
+        if q_self < q_other {
+            return false;
+        }
+        let a = self.cost_axes();
+        let b = other.cost_axes();
+        let mut strictly = q_self > q_other;
+        for (x, y) in a.iter().zip(b.iter()) {
+            if x > y {
+                return false;
+            }
+            if x < y {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    /// The serving-bridge row: this design as a named backend candidate
+    /// for the tiered serving layer.
+    pub fn backend_candidate(&self) -> BackendCandidate {
+        BackendCandidate {
+            name: self.name(),
+            model_key: self.arch_key.clone(),
+            backend: "fixed",
+            spec: self.config.spec,
+            tier: if self.latency_ns() <= TRIGGER_BUDGET_NS {
+                TierClass::Trigger
+            } else {
+                TierClass::Offline
+            },
+            latency_ns: self.latency_ns(),
+        }
+    }
+}
+
+/// A Pareto point as a serving scenario: the `nn::BackendSpec` registry
+/// row that would serve it (the bit-accurate fixed engine stands in for
+/// the FPGA datapath), the precision it runs at, and the traffic class
+/// its modeled latency supports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendCandidate {
+    /// Stable row name ([`Candidate::name`]).
+    pub name: String,
+    /// Model-zoo key routing requests to this design.
+    pub model_key: String,
+    /// Backend registry row, currently always `"fixed"`.
+    pub backend: &'static str,
+    pub spec: FixedSpec,
+    pub tier: TierClass,
+    pub latency_ns: f64,
+}
+
+/// The full candidate grid for one request: every (arch, width, clock,
+/// strategy, mode, reuse) combination that is valid by construction —
+/// divisor-snapped reuse under resource strategy, reuse (1, 1) under
+/// latency strategy (which is skipped entirely for models at or over
+/// the paper's 40k-parameter synthesis limit).
+pub fn build_grid(cfg: &ExploreConfig) -> Vec<(Arch, HlsConfig)> {
+    let fully_parallel = [ReuseFactor::fully_parallel()];
+    let mut out = Vec::new();
+    for arch in &cfg.archs {
+        let ladder = reuse_ladder(arch);
+        for &width in &cfg.widths {
+            let spec = spec_for(&arch.name, width);
+            for &clock_mhz in &cfg.clocks_mhz {
+                for &strategy in &cfg.strategies {
+                    if strategy == Strategy::Latency
+                        && arch.param_count() >= LATENCY_STRATEGY_PARAM_LIMIT
+                    {
+                        continue;
+                    }
+                    let reuses: &[ReuseFactor] = match strategy {
+                        Strategy::Latency => &fully_parallel,
+                        Strategy::Resource => &ladder,
+                    };
+                    for &reuse in reuses {
+                        for &mode in &cfg.modes {
+                            out.push((
+                                arch.clone(),
+                                HlsConfig {
+                                    spec,
+                                    reuse,
+                                    strategy,
+                                    mode,
+                                    clock_mhz,
+                                },
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate every grid point through the analytical model against the
+/// target device.  The grid is valid by construction, so construction
+/// or scheduling failures are real errors, not skips.  The result is
+/// sorted by [`Candidate::sort_key`].
+pub fn evaluate(cfg: &ExploreConfig) -> anyhow::Result<Vec<Candidate>> {
+    let mut out = Vec::new();
+    for (arch, hls_cfg) in build_grid(cfg) {
+        let report =
+            HlsDesign::new(arch, hls_cfg)?.synthesize_for(cfg.device)?;
+        out.push(Candidate {
+            arch_key: report.arch_key,
+            config: report.config,
+            timing: report.timing,
+            resources: report.resources,
+            fits_device: report.fits_device,
+            auc: None,
+        });
+    }
+    out.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+    Ok(out)
+}
+
+/// Measured-accuracy annotation for one checkpoint model: per-spec AUC
+/// from `report::accuracy`, keyed by precision.
+#[derive(Debug, Clone)]
+pub struct AccuracyJoin {
+    /// Model-zoo key the checkpoint implements (e.g. `top_gru`).
+    pub key: String,
+    pub auc_float: f64,
+    pub samples: usize,
+    pub auc_by_spec: Vec<(FixedSpec, f64)>,
+}
+
+impl AccuracyJoin {
+    pub fn auc_for(&self, spec: FixedSpec) -> Option<f64> {
+        self.auc_by_spec
+            .iter()
+            .find(|(s, _)| *s == spec)
+            .map(|(_, auc)| *auc)
+    }
+}
+
+/// Annotate candidates of the joined model with measured AUC; other
+/// models (and specs the join did not measure) stay unannotated.
+pub fn join_accuracy(candidates: &mut [Candidate], join: &AccuracyJoin) {
+    for c in candidates.iter_mut() {
+        if c.arch_key == join.key && c.auc.is_none() {
+            c.auc = join.auc_for(c.config.spec);
+        }
+    }
+}
+
+/// The distinct precision specs appearing among one model's candidates
+/// — what an accuracy join has to measure.
+pub fn distinct_specs(candidates: &[Candidate], key: &str) -> Vec<FixedSpec> {
+    let set: BTreeSet<(u32, u32)> = candidates
+        .iter()
+        .filter(|c| c.arch_key == key)
+        .map(|c| (c.config.spec.width, c.config.spec.integer))
+        .collect();
+    set.into_iter()
+        .map(|(w, i)| FixedSpec::new(w, i))
+        .collect()
+}
+
+/// Admission gates applied before pruning.  Device fit is always
+/// required; `min_auc` demands *measured* accuracy (a row without an
+/// AUC annotation never passes it).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Filters {
+    pub budget_ns: Option<f64>,
+    pub min_auc: Option<f64>,
+}
+
+impl Filters {
+    pub fn admits(&self, c: &Candidate) -> bool {
+        if !c.fits_device {
+            return false;
+        }
+        let meets_budget = match self.budget_ns {
+            Some(budget) => c.latency_ns() <= budget,
+            None => true,
+        };
+        let meets_auc = match self.min_auc {
+            Some(min) => c.auc.is_some_and(|a| a >= min),
+            None => true,
+        };
+        meets_budget && meets_auc
+    }
+}
+
+/// Record of one pruned row: which front row dominated it (both are
+/// indices into [`ExploreResult::candidates`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dropped {
+    pub index: usize,
+    pub dominated_by: usize,
+}
+
+/// The result of one exploration: the full evaluated grid (stable
+/// order), the admitted subset, its Pareto front, and every pruned
+/// row's dominator.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    pub device: Device,
+    pub filters: Filters,
+    /// Every evaluated candidate, sorted by [`Candidate::sort_key`].
+    pub candidates: Vec<Candidate>,
+    /// Indices into `candidates`: rows passing device fit + filters.
+    pub admitted: Vec<usize>,
+    /// Indices into `candidates`: the Pareto front of the admitted set.
+    pub front: Vec<usize>,
+    /// Admitted rows pruned from the front, each naming a surviving
+    /// dominator.
+    pub dropped: Vec<Dropped>,
+}
+
+impl ExploreResult {
+    /// Front rows in stable order.
+    pub fn front_rows(&self) -> impl Iterator<Item = &Candidate> {
+        self.front.iter().map(|&i| &self.candidates[i])
+    }
+
+    /// Lexicographic resource cost (DSP, then LUT, FF, BRAM): the total
+    /// order "cheapest" ranks by.  DSPs lead because they are the
+    /// scarce, non-substitutable resource in every §5 fit discussion.
+    pub fn resource_cost(c: &Candidate) -> (u64, u64, u64, u64) {
+        (
+            c.resources.dsp,
+            c.resources.lut,
+            c.resources.ff,
+            c.resources.bram_18k,
+        )
+    }
+
+    /// The cheapest admitted design with modeled latency within
+    /// `budget_ns`.  Scans the full admitted set — not just the front —
+    /// so the answer is the true minimum over the grid; ties resolve to
+    /// the first row in stable order.
+    pub fn cheapest_within(&self, budget_ns: f64) -> Option<&Candidate> {
+        self.admitted
+            .iter()
+            .map(|&i| &self.candidates[i])
+            .filter(|c| c.latency_ns() <= budget_ns)
+            .min_by(|a, b| Self::resource_cost(a).cmp(&Self::resource_cost(b)))
+    }
+
+    /// The fastest admitted design using at most `max_dsp` DSPs (the
+    /// dual budget query); ties break toward cheaper, then stable
+    /// order.
+    pub fn fastest_within_dsp(&self, max_dsp: u64) -> Option<&Candidate> {
+        self.admitted
+            .iter()
+            .map(|&i| &self.candidates[i])
+            .filter(|c| c.resources.dsp <= max_dsp)
+            .min_by(|a, b| {
+                a.latency_ns()
+                    .total_cmp(&b.latency_ns())
+                    .then(Self::resource_cost(a).cmp(&Self::resource_cost(b)))
+            })
+    }
+
+    /// Serving-bridge rows for the whole front, in stable order.
+    pub fn backend_candidates(&self) -> Vec<BackendCandidate> {
+        self.front_rows().map(|c| c.backend_candidate()).collect()
+    }
+}
+
+/// Dominance-prune the admitted rows.  Every dropped row names a
+/// dominator that is itself on the front: dominance is a strict partial
+/// order (transitive within a model's comparable rows), so following
+/// dominators upward from any pruned row terminates at an undominated
+/// one that — by transitivity — also dominates it.
+fn prune(
+    candidates: &[Candidate],
+    admitted: &[usize],
+) -> (Vec<usize>, Vec<Dropped>) {
+    let front: Vec<usize> = admitted
+        .iter()
+        .copied()
+        .filter(|&i| {
+            !admitted
+                .iter()
+                .any(|&j| j != i && candidates[j].dominates(&candidates[i]))
+        })
+        .collect();
+    let mut dropped = Vec::new();
+    for &i in admitted {
+        if front.contains(&i) {
+            continue;
+        }
+        let by = front
+            .iter()
+            .copied()
+            .find(|&j| candidates[j].dominates(&candidates[i]))
+            .expect("every dominated row has an undominated dominator");
+        dropped.push(Dropped {
+            index: i,
+            dominated_by: by,
+        });
+    }
+    (front, dropped)
+}
+
+/// Filter + prune already-evaluated (and possibly accuracy-joined)
+/// candidates.  Exposed separately from [`explore`] so the CLI can join
+/// accuracy between evaluation and pruning, and tests can drive
+/// synthetic grids.
+pub fn pareto(
+    device: Device,
+    mut candidates: Vec<Candidate>,
+    filters: Filters,
+) -> ExploreResult {
+    candidates.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+    let admitted: Vec<usize> = (0..candidates.len())
+        .filter(|&i| filters.admits(&candidates[i]))
+        .collect();
+    let (front, dropped) = prune(&candidates, &admitted);
+    ExploreResult {
+        device,
+        filters,
+        candidates,
+        admitted,
+        front,
+        dropped,
+    }
+}
+
+/// Run the full exploration: evaluate the grid, apply accuracy joins,
+/// filter, prune.
+pub fn explore(
+    cfg: &ExploreConfig,
+    joins: &[AccuracyJoin],
+    filters: Filters,
+) -> anyhow::Result<ExploreResult> {
+    let mut candidates = evaluate(cfg)?;
+    for join in joins {
+        join_accuracy(&mut candidates, join);
+    }
+    Ok(pareto(cfg.device, candidates, filters))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Cell;
+
+    #[test]
+    fn divisors_and_snap_down() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(snap_down(1200, 32), 30);
+        assert_eq!(snap_down(1600, 60), 50);
+        assert_eq!(snap_down(360, 7), 6);
+        assert_eq!(snap_down(17, 16), 1);
+        assert_eq!(snap_down(360, 360), 360);
+    }
+
+    #[test]
+    fn ladder_divides_and_contains_paper_grid() {
+        for arch in zoo::all_archs() {
+            let (mults_k, mults_r) = arch.rnn_mults_per_step();
+            let ladder = reuse_ladder(&arch);
+            assert!(!ladder.is_empty());
+            assert!(ladder.contains(&ReuseFactor::fully_parallel()));
+            for reuse in &ladder {
+                assert_eq!(mults_k % reuse.kernel, 0, "{}", arch.key());
+                assert_eq!(mults_r % reuse.recurrent, 0, "{}", arch.key());
+            }
+            for reuse in paper::reuse_grid(&arch.name, arch.cell) {
+                assert!(ladder.contains(&reuse), "{} {reuse:?}", arch.key());
+            }
+        }
+    }
+
+    #[test]
+    fn spec_for_follows_paper_integer_choice() {
+        assert_eq!(spec_for("top", 16), FixedSpec::new(16, 6));
+        assert_eq!(spec_for("quickdraw", 16), FixedSpec::new(16, 10));
+        // Clamped at narrow widths.
+        assert_eq!(spec_for("top", 4), FixedSpec::new(4, 3));
+        assert_eq!(spec_for("quickdraw", 8), FixedSpec::new(8, 7));
+    }
+
+    #[test]
+    fn candidate_name_is_stable() {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        let mut cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(6, 5),
+        );
+        cfg.clock_mhz = 400.0;
+        let c = Candidate {
+            arch_key: arch.key(),
+            config: cfg,
+            timing: crate::hls::latency::schedule(&arch, &cfg).unwrap(),
+            resources: crate::hls::resource::estimate(&arch, &cfg),
+            fits_device: true,
+            auc: None,
+        };
+        assert_eq!(c.name(), "top_gru_w16i6_r6x5_resource_static_c400");
+        let bc = c.backend_candidate();
+        assert_eq!(bc.backend, "fixed");
+        assert_eq!(bc.model_key, "top_gru");
+        assert_eq!(
+            bc.tier == TierClass::Trigger,
+            c.latency_ns() <= TRIGGER_BUDGET_NS
+        );
+    }
+
+    #[test]
+    fn grid_skips_latency_strategy_for_large_models() {
+        let cfg = ExploreConfig::new(
+            vec![zoo::arch("flavor", Cell::Lstm).unwrap()],
+            Device::KU115,
+        );
+        for (_, hls_cfg) in build_grid(&cfg) {
+            assert_eq!(hls_cfg.strategy, Strategy::Resource);
+        }
+    }
+
+    #[test]
+    fn mixed_auc_rows_never_dominate_each_other() {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        let cfg = HlsConfig::paper_default(
+            FixedSpec::new(16, 6),
+            ReuseFactor::new(6, 5),
+        );
+        let base = Candidate {
+            arch_key: arch.key(),
+            config: cfg,
+            timing: crate::hls::latency::schedule(&arch, &cfg).unwrap(),
+            resources: crate::hls::resource::estimate(&arch, &cfg),
+            fits_device: true,
+            auc: Some(0.99),
+        };
+        let mut other = base.clone();
+        other.auc = None;
+        assert!(!base.dominates(&other));
+        assert!(!other.dominates(&base));
+        // Identical rows do not dominate each other either.
+        assert!(!base.dominates(&base.clone()));
+    }
+}

@@ -21,6 +21,13 @@
 //!   (reuse-factor pairs per benchmark, including the LSTM `[40]`/`[256]`
 //!   divisibility quirks) plus the paper's reported numbers, so reports
 //!   can print paper-vs-model side by side.
+//! * [`explore`] — the design-space explorer on top of all of the above:
+//!   sweep reuse × precision × strategy × clock × RNN mode over the model
+//!   zoo, evaluate every candidate through [`design::HlsDesign`], prune
+//!   to the Pareto front on (latency, II, DSP/LUT/FF/BRAM, accuracy),
+//!   answer budget queries (`cheapest_within`), join measured AUC from
+//!   `report::accuracy` for checkpoint models, and emit each front row
+//!   as a named backend candidate for the tiered serving layer.
 //!
 //! Calibration: the model's free constants are fixed against the anchor
 //! points the paper states (top-tagging static II 315/314 ≈ seq × 16 at
@@ -30,11 +37,12 @@
 
 pub mod design;
 pub mod device;
+pub mod explore;
 pub mod latency;
 pub mod paper;
 pub mod resource;
 
-pub use design::{HlsDesign, SynthesisReport};
+pub use design::{DesignError, HlsDesign, SynthesisReport};
 pub use device::Device;
 pub use latency::{DesignTiming, Strategy};
 pub use resource::ResourceEstimate;

@@ -15,7 +15,7 @@
 
 use crate::model::{Arch, OutputActivation};
 
-use super::latency::Strategy;
+use super::latency::{clock_penalty, Strategy};
 use super::{HlsConfig, RnnMode};
 
 /// DSP48E2 multiplier input width: one DSP per product at or below this
@@ -101,6 +101,13 @@ pub fn rnn_block(arch: &Arch, cfg: &HlsConfig) -> ResourceEstimate {
     let (dsp_k, lut_k, ff_k) = lane_cost(lanes_k, cfg.spec.width, cfg.strategy);
     let (dsp_r, lut_r, ff_r) = lane_cost(lanes_r, cfg.spec.width, cfg.strategy);
 
+    // Retiming registers for clocks above the paper's 200 MHz: every
+    // extra pipeline stage (latency::clock_penalty) is one register per
+    // lane bit.  Zero at the paper clock, so Figs. 3–6 are untouched.
+    let retime_ff = clock_penalty(cfg.clock_mhz)
+        * (lanes_k + lanes_r)
+        * cfg.spec.width as u64;
+
     // Elementwise state math (Hadamards, adds) + activation LUT ports.
     let g = arch.cell.gates() as u64;
     let h = arch.hidden_size as u64;
@@ -121,7 +128,7 @@ pub fn rnn_block(arch: &Arch, cfg: &HlsConfig) -> ResourceEstimate {
     ResourceEstimate {
         dsp: dsp_k + dsp_r,
         lut: lut_k + lut_r + state_lut,
-        ff: ff_k + ff_r + state_ff,
+        ff: ff_k + ff_r + state_ff + retime_ff,
         bram_18k: bram,
     }
 }
@@ -145,7 +152,7 @@ pub fn head(arch: &Arch, cfg: &HlsConfig) -> ResourceEstimate {
         let (dsp, lut, ff) = lane_cost(lanes, cfg.spec.width, cfg.strategy);
         est.dsp += dsp;
         est.lut += lut;
-        est.ff += ff;
+        est.ff += ff + clock_penalty(cfg.clock_mhz) * lanes * w;
         if cfg.strategy == Strategy::Resource {
             est.bram_18k += (mults * w).div_ceil(18 * 1024);
         }
@@ -294,6 +301,23 @@ mod tests {
             !Device::KU115.fits(&est_n),
             "non-static top at W=16 must exceed the chip: {est_n:?}"
         );
+    }
+
+    /// The clock knob is a real trade: above 200 MHz the retiming
+    /// registers cost FFs (and only FFs), while at the paper clock the
+    /// calibration is bit-identical.
+    #[test]
+    fn clock_retiming_costs_ffs_only() {
+        let a = zoo::arch("top", Cell::Gru).unwrap();
+        let base = cfg16(ReuseFactor::new(6, 5));
+        let mut fast = base;
+        fast.clock_mhz = 400.0;
+        let e200 = estimate(&a, &base);
+        let e400 = estimate(&a, &fast);
+        assert!(e400.ff > e200.ff, "retiming must cost FFs");
+        assert_eq!(e400.dsp, e200.dsp);
+        assert_eq!(e400.lut, e200.lut);
+        assert_eq!(e400.bram_18k, e200.bram_18k);
     }
 
     /// QuickDraw at maximal quantized performance targets a U250 (§5.2).

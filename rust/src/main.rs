@@ -60,10 +60,14 @@ use rnn_hls::coordinator::{
 };
 use rnn_hls::data::generators;
 use rnn_hls::fixed::FixedSpec;
-use rnn_hls::hls::{paper, HlsConfig, HlsDesign, ReuseFactor, RnnMode};
+use rnn_hls::hls::{
+    explore, paper, Device, HlsConfig, HlsDesign, ReuseFactor, RnnMode,
+};
 use rnn_hls::model::Weights;
 use rnn_hls::nn::{BackendCtx, BackendSpec};
-use rnn_hls::report::{accuracy, fig2, resources, tables, throughput};
+use rnn_hls::report::{
+    accuracy, explore as explore_report, fig2, resources, tables, throughput,
+};
 use rnn_hls::runtime::{manifest, Runtime};
 use rnn_hls::util::cli::Command;
 
@@ -88,6 +92,7 @@ fn run() -> anyhow::Result<()> {
         "accuracy" => cmd_accuracy(&rest),
         "serve" => cmd_serve(&rest),
         "sweep" => cmd_sweep(&rest),
+        "explore" => cmd_explore(&rest),
         "golden" => cmd_golden(&rest),
         "list" => cmd_list(&rest),
         "help" | "--help" | "-h" => {
@@ -112,6 +117,9 @@ fn usage() -> String {
                        (--shards N partitions the stream across N\n\
                        coordinator shards; --shard-policy picks routing)\n\
        sweep           design-space sweep over the HLS model\n\
+       explore         Pareto search over reuse x precision x strategy x\n\
+                       clock (--budget-ns/--min-auc budget queries;\n\
+                       --accuracy joins measured AUC from the checkpoint)\n\
        golden          cross-check PJRT outputs vs python goldens\n\
        list            list models available in the artifacts manifest\n\
      \n\
@@ -766,7 +774,8 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
                     reuse,
                 );
                 cfg.mode = *mode;
-                let report = HlsDesign::new(arch.clone(), cfg).synthesize()?;
+                let report =
+                    HlsDesign::new(arch.clone(), cfg)?.synthesize()?;
                 println!("{}", report.summary());
             }
             // Latency strategy where synthesizable.
@@ -776,11 +785,227 @@ fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
             );
             cfg.strategy = rnn_hls::hls::Strategy::Latency;
             cfg.mode = *mode;
-            match HlsDesign::new(arch.clone(), cfg).synthesize() {
+            match HlsDesign::new(arch.clone(), cfg)
+                .map_err(anyhow::Error::from)
+                .and_then(|d| d.synthesize())
+            {
                 Ok(report) => println!("{}", report.summary()),
                 Err(e) => println!("{}: {e}", arch.key()),
             }
         }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- explore
+
+/// Parse `--model` into architectures: a zoo key (`top_gru`) or `all`.
+fn explore_archs(model: &str) -> anyhow::Result<Vec<rnn_hls::model::Arch>> {
+    if model == "all" {
+        return Ok(rnn_hls::model::zoo::all_archs());
+    }
+    let (benchmark, cell) = model.rsplit_once('_').ok_or_else(|| {
+        anyhow::anyhow!("model key {model:?} is not <benchmark>_<cell> or all")
+    })?;
+    Ok(vec![rnn_hls::model::zoo::arch(benchmark, cell.parse()?)?])
+}
+
+fn parse_f64_list(csv: &str, what: &str) -> anyhow::Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for part in csv.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        out.push(
+            part.parse()
+                .map_err(|_| anyhow::anyhow!("bad {what} value {part:?}"))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "no {what} values given");
+    Ok(out)
+}
+
+fn cmd_explore(rest: &[String]) -> anyhow::Result<()> {
+    use rnn_hls::nn::fixed_engine::MAX_WIDTH;
+
+    let cmd = Command::new(
+        "explore",
+        "design-space Pareto search over the analytical HLS model",
+    )
+    .opt("model", "zoo key (e.g. top_gru) or 'all'", Some("all"))
+    .opt(
+        "device",
+        "ku115 | u250 | vu9p_slr (default: the paper's per-benchmark part, \
+         ku115 for --model all)",
+        None,
+    )
+    .opt(
+        "widths",
+        "total-bit precision ladder, comma-separated",
+        Some("8,12,14,16,18,20"),
+    )
+    .opt(
+        "clock",
+        "synthesis-clock ladder in MHz, comma-separated",
+        Some("200,300,400"),
+    )
+    .opt("budget-ns", "admit only designs at or under this latency", None)
+    .opt(
+        "min-auc",
+        "admit only designs with measured AUC at or above this \
+         (requires --accuracy)",
+        None,
+    )
+    .flag(
+        "accuracy",
+        "join measured fixed-point AUC from the checkpoint into the front",
+    )
+    .opt(
+        "weights",
+        "checkpoint for the accuracy join",
+        Some(DEFAULT_WEIGHTS),
+    )
+    .opt(
+        "dataset",
+        "evaluation set for the accuracy join",
+        Some(DEFAULT_DATASET),
+    )
+    .opt("samples", "cap accuracy-join events (0 = all)", Some("0"))
+    .opt("workers", "accuracy-join threads", Some("4"))
+    .opt("json", "write the BENCH_explore.json artifact here", None)
+    .opt("csv", "write the Pareto front as CSV here", None);
+    let args = cmd.parse(rest)?;
+
+    let archs = explore_archs(args.get_or("model", "all"))?;
+    let device = match args.get("device") {
+        Some(name) => Device::by_name(name)?,
+        None if archs.len() == 1 => Device::for_benchmark(&archs[0].name),
+        None => Device::KU115,
+    };
+    let mut widths: Vec<u32> = Vec::new();
+    for part in args
+        .get_or("widths", "8,12,14,16,18,20")
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+    {
+        let w: u32 = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --widths value {part:?}"))?;
+        anyhow::ensure!(
+            (2..=48).contains(&w),
+            "--widths: width {w} out of range 2..=48"
+        );
+        widths.push(w);
+    }
+    anyhow::ensure!(!widths.is_empty(), "no --widths values given");
+    let clocks = parse_f64_list(args.get_or("clock", "200,300,400"), "clock")?;
+
+    let budget_ns: Option<f64> = match args.get("budget-ns") {
+        Some(text) => Some(
+            text.parse()
+                .map_err(|_| anyhow::anyhow!("bad --budget-ns {text:?}"))?,
+        ),
+        None => None,
+    };
+    let min_auc: Option<f64> = match args.get("min-auc") {
+        Some(text) => Some(
+            text.parse()
+                .map_err(|_| anyhow::anyhow!("bad --min-auc {text:?}"))?,
+        ),
+        None => None,
+    };
+    anyhow::ensure!(
+        min_auc.is_none() || args.has("accuracy"),
+        "--min-auc filters on *measured* AUC — pass --accuracy to join it"
+    );
+
+    let mut ecfg = explore::ExploreConfig::new(archs, device);
+    ecfg.widths = widths;
+    ecfg.clocks_mhz = clocks;
+    let mut candidates = explore::evaluate(&ecfg)?;
+    println!(
+        "evaluated {} candidates over {} model(s) on {}",
+        candidates.len(),
+        ecfg.archs.len(),
+        device.name
+    );
+
+    if args.has("accuracy") {
+        let weights_path =
+            PathBuf::from(args.get_or("weights", DEFAULT_WEIGHTS));
+        let weights = Weights::load_path(&weights_path, None)?;
+        let ds = rnn_hls::data::Dataset::load(
+            args.get_or("dataset", DEFAULT_DATASET),
+        )?;
+        let samples: usize = args.parse_num("samples", 0usize)?;
+        let ds = if samples > 0 { ds.truncated(samples) } else { ds };
+        let workers: usize = args.parse_num("workers", 4usize)?;
+        let baseline = accuracy::FloatBaseline::new(&weights, &ds, workers)?;
+        let key = baseline.key();
+        let specs: Vec<FixedSpec> = explore::distinct_specs(&candidates, &key)
+            .into_iter()
+            .filter(|s| s.width <= MAX_WIDTH)
+            .collect();
+        anyhow::ensure!(
+            !specs.is_empty(),
+            "--accuracy: no explored precision of {key} is evaluable \
+             (engine max width {MAX_WIDTH})"
+        );
+        let report = baseline.sweep(&specs, workers)?;
+        let join = explore::AccuracyJoin {
+            key: report.key.clone(),
+            auc_float: report.auc_float,
+            samples: report.samples,
+            auc_by_spec: report
+                .points
+                .iter()
+                .map(|p| (p.spec, p.auc_fixed))
+                .collect(),
+        };
+        println!(
+            "accuracy join: {} float AUC {:.4} over {} events, {} precisions",
+            join.key,
+            join.auc_float,
+            join.samples,
+            join.auc_by_spec.len()
+        );
+        explore::join_accuracy(&mut candidates, &join);
+    }
+
+    let filters = explore::Filters { budget_ns, min_auc };
+    let result = explore::pareto(device, candidates, filters);
+    println!("{}", explore_report::render(&result));
+
+    if let Some(budget) = budget_ns {
+        match result.cheapest_within(budget) {
+            Some(c) => println!(
+                "cheapest within {budget} ns: {} ({:.1} ns, {} DSP, {} LUT)",
+                c.name(),
+                c.latency_ns(),
+                c.resources.dsp,
+                c.resources.lut
+            ),
+            None => println!(
+                "no admitted design meets the {budget} ns budget on {}",
+                device.name
+            ),
+        }
+    }
+    anyhow::ensure!(
+        !result.front.is_empty(),
+        "no design on {} survives the filters — widen the grid or relax \
+         --budget-ns/--min-auc",
+        device.name
+    );
+
+    if let Some(path) = args.get("csv") {
+        let path = explore_report::write_csv(path, &result)?;
+        println!("wrote {}", path.display());
+    }
+    if let Some(path) = args.get("json") {
+        let path = explore_report::write_bench_json(
+            std::path::Path::new(path),
+            &result,
+        )?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

@@ -94,6 +94,120 @@ pub fn parse_specs(csv: &str) -> anyhow::Result<Vec<FixedSpec>> {
     Ok(specs)
 }
 
+/// The float (f32) reference evaluation for one (checkpoint, dataset)
+/// pair, computed once and reused across any number of fixed-point
+/// evaluations — [`run`] sweeps a spec ladder through it, and the HLS
+/// design-space explorer joins per-precision AUC from it without
+/// re-running the baseline per candidate.
+pub struct FloatBaseline<'a> {
+    weights: &'a Weights,
+    ds: &'a Dataset,
+    auc_float: f64,
+}
+
+impl<'a> FloatBaseline<'a> {
+    /// Validate dataset-vs-architecture shape and evaluate the float
+    /// reference.
+    pub fn new(
+        weights: &'a Weights,
+        ds: &'a Dataset,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        let arch = &weights.arch;
+        anyhow::ensure!(
+            ds.seq_len == arch.seq_len && ds.n_feat == arch.input_size,
+            "dataset shape ({} steps x {} features) does not feed {} \
+             ({} x {})",
+            ds.seq_len,
+            ds.n_feat,
+            arch.key(),
+            arch.seq_len,
+            arch.input_size
+        );
+        anyhow::ensure!(
+            ds.n_classes == arch.n_classes(),
+            "dataset has {} classes but {} outputs {}",
+            ds.n_classes,
+            arch.key(),
+            arch.n_classes()
+        );
+        let float_engine = FloatEngine::new(weights)?;
+        let probs = eval_probs(&float_engine, ds, workers);
+        // The float baseline must be clean; the fixed paths may saturate
+        // into NaN at very low widths, which binary_auc excludes
+        // per-sample.
+        metrics::require_finite(&probs)
+            .map_err(|e| anyhow::anyhow!("float baseline: {e}"))?;
+        let auc_float = metrics::mean_auc(&probs, ds.labels(), ds.n_classes);
+        Ok(Self {
+            weights,
+            ds,
+            auc_float,
+        })
+    }
+
+    /// Float reference AUC.
+    pub fn auc_float(&self) -> f64 {
+        self.auc_float
+    }
+
+    /// Events in the evaluation slice.
+    pub fn samples(&self) -> usize {
+        self.ds.n
+    }
+
+    /// Model-zoo key of the checkpoint, e.g. `top_gru`.
+    pub fn key(&self) -> String {
+        self.weights.arch.key()
+    }
+
+    /// Measured AUC of one fixed-point precision (PTQ config:
+    /// truncation + saturation).
+    pub fn eval_spec(
+        &self,
+        spec: FixedSpec,
+        workers: usize,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            spec.width <= MAX_WIDTH,
+            "spec {} exceeds engine max width {MAX_WIDTH}",
+            spec.label()
+        );
+        let engine = FixedEngine::new(self.weights, QuantConfig::ptq(spec))?;
+        Ok(eval_auc(&engine, self.ds, workers))
+    }
+
+    /// Sweep a precision ladder against this baseline, parallel over
+    /// specs.
+    pub fn sweep(
+        &self,
+        specs: &[FixedSpec],
+        workers: usize,
+    ) -> anyhow::Result<AccuracyReport> {
+        for spec in specs {
+            anyhow::ensure!(
+                spec.width <= MAX_WIDTH,
+                "spec {} exceeds engine max width {MAX_WIDTH}",
+                spec.label()
+            );
+        }
+        let aucs = parallel_map(specs.len(), workers, |s| {
+            self.eval_spec(specs[s], 1)
+                .expect("spec width validated against engine max")
+        });
+        Ok(AccuracyReport {
+            key: self.key(),
+            samples: self.samples(),
+            auc_float: self.auc_float,
+            points: specs
+                .iter()
+                .zip(aucs)
+                .map(|(&spec, auc_fixed)| AccuracyPoint { spec, auc_fixed })
+                .collect(),
+        })
+    }
+}
+
 /// Run the sweep: float baseline plus one [`FixedEngine`] per spec
 /// (PTQ config: truncation + saturation), parallel over specs.
 pub fn run(
@@ -102,56 +216,7 @@ pub fn run(
     specs: &[FixedSpec],
     workers: usize,
 ) -> anyhow::Result<AccuracyReport> {
-    let arch = &weights.arch;
-    anyhow::ensure!(
-        ds.seq_len == arch.seq_len && ds.n_feat == arch.input_size,
-        "dataset shape ({} steps x {} features) does not feed {} \
-         ({} x {})",
-        ds.seq_len,
-        ds.n_feat,
-        arch.key(),
-        arch.seq_len,
-        arch.input_size
-    );
-    anyhow::ensure!(
-        ds.n_classes == arch.n_classes(),
-        "dataset has {} classes but {} outputs {}",
-        ds.n_classes,
-        arch.key(),
-        arch.n_classes()
-    );
-    for spec in specs {
-        anyhow::ensure!(
-            spec.width <= MAX_WIDTH,
-            "spec {} exceeds engine max width {MAX_WIDTH}",
-            spec.label()
-        );
-    }
-
-    let float_engine = FloatEngine::new(weights)?;
-    let probs = eval_probs(&float_engine, ds, workers);
-    // The float baseline must be clean; the fixed paths may saturate
-    // into NaN at very low widths, which binary_auc excludes per-sample.
-    metrics::require_finite(&probs)
-        .map_err(|e| anyhow::anyhow!("float baseline: {e}"))?;
-    let auc_float = metrics::mean_auc(&probs, ds.labels(), ds.n_classes);
-
-    let aucs = parallel_map(specs.len(), workers, |s| {
-        let engine = FixedEngine::new(weights, QuantConfig::ptq(specs[s]))
-            .expect("spec width validated against engine max");
-        eval_auc(&engine, ds, 1)
-    });
-
-    Ok(AccuracyReport {
-        key: arch.key(),
-        samples: ds.n,
-        auc_float,
-        points: specs
-            .iter()
-            .zip(aucs)
-            .map(|(&spec, auc_fixed)| AccuracyPoint { spec, auc_fixed })
-            .collect(),
-    })
+    FloatBaseline::new(weights, ds, workers)?.sweep(specs, workers)
 }
 
 /// Render one report as an ASCII table.

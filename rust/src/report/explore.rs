@@ -1,0 +1,281 @@
+//! Output surfaces for the design-space explorer (`hls::explore`):
+//! ASCII Pareto-front table, CSV, and the `BENCH_explore.json` CI
+//! artifact.
+//!
+//! All three surfaces emit front rows in [`Candidate::sort_key`] order
+//! and the JSON writer goes through the deterministic `util::json`
+//! printer, so repeated runs over the same grid are byte-identical —
+//! `ci.sh --bench-smoke` relies on that to diff artifacts across
+//! commits.
+
+use std::path::{Path, PathBuf};
+
+use crate::hls::explore::{Candidate, ExploreResult};
+use crate::util::json::{self, Value};
+
+use super::csv::CsvWriter;
+use super::table::{f, AsciiTable};
+
+/// The per-row fields every machine-readable surface carries, in column
+/// order.
+pub const ROW_FIELDS: [&str; 18] = [
+    "name",
+    "model",
+    "width",
+    "integer",
+    "reuse_kernel",
+    "reuse_recurrent",
+    "strategy",
+    "mode",
+    "clock_mhz",
+    "latency_ns",
+    "ii_ns",
+    "dsp",
+    "lut",
+    "ff",
+    "bram_18k",
+    "auc",
+    "backend",
+    "tier",
+];
+
+fn auc_cell(c: &Candidate) -> String {
+    match c.auc {
+        Some(auc) => format!("{auc:.4}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Render the Pareto front as an ASCII table.
+pub fn render(result: &ExploreResult) -> String {
+    let mut table = AsciiTable::new(
+        format!(
+            "Design-space Pareto front on {} ({} evaluated, {} admitted, \
+             {} on front)",
+            result.device.name,
+            result.candidates.len(),
+            result.admitted.len(),
+            result.front.len()
+        ),
+        &[
+            "model", "type", "R", "strategy", "mode", "clk", "latency µs",
+            "II µs", "DSP", "LUT", "FF", "BRAM", "AUC", "tier",
+        ],
+    );
+    for c in result.front_rows() {
+        let bc = c.backend_candidate();
+        table.row(vec![
+            c.arch_key.clone(),
+            format!("ap_fixed{}", c.config.spec.label()),
+            c.config.reuse.label(),
+            c.config.strategy.label().to_string(),
+            c.config.mode.label().to_string(),
+            format!("{:.0}", c.config.clock_mhz),
+            f(c.timing.latency_us, 3),
+            f(c.timing.ii_us, 3),
+            c.resources.dsp.to_string(),
+            c.resources.lut.to_string(),
+            c.resources.ff.to_string(),
+            c.resources.bram_18k.to_string(),
+            auc_cell(c),
+            bc.tier.name().to_string(),
+        ]);
+    }
+    table.render()
+}
+
+fn row_cells(c: &Candidate) -> Vec<String> {
+    let bc = c.backend_candidate();
+    vec![
+        c.name(),
+        c.arch_key.clone(),
+        c.config.spec.width.to_string(),
+        c.config.spec.integer.to_string(),
+        c.config.reuse.kernel.to_string(),
+        c.config.reuse.recurrent.to_string(),
+        c.config.strategy.label().to_string(),
+        c.config.mode.label().to_string(),
+        format!("{:.0}", c.config.clock_mhz),
+        format!("{:.3}", c.latency_ns()),
+        format!("{:.3}", c.ii_ns()),
+        c.resources.dsp.to_string(),
+        c.resources.lut.to_string(),
+        c.resources.ff.to_string(),
+        c.resources.bram_18k.to_string(),
+        match c.auc {
+            Some(auc) => format!("{auc:.6}"),
+            None => String::new(),
+        },
+        bc.backend.to_string(),
+        bc.tier.name().to_string(),
+    ]
+}
+
+/// Emit the front as CSV (one row per Pareto point, [`ROW_FIELDS`]
+/// columns).
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    result: &ExploreResult,
+) -> anyhow::Result<PathBuf> {
+    let mut w = CsvWriter::new(path, &ROW_FIELDS);
+    for c in result.front_rows() {
+        w.row(&row_cells(c));
+    }
+    w.finish()
+}
+
+fn row_json(c: &Candidate) -> Value {
+    let bc = c.backend_candidate();
+    json::obj(vec![
+        ("name", json::s(&c.name())),
+        ("model", json::s(&c.arch_key)),
+        ("width", json::num(c.config.spec.width as f64)),
+        ("integer", json::num(c.config.spec.integer as f64)),
+        ("reuse_kernel", json::num(c.config.reuse.kernel as f64)),
+        ("reuse_recurrent", json::num(c.config.reuse.recurrent as f64)),
+        ("strategy", json::s(c.config.strategy.label())),
+        ("mode", json::s(c.config.mode.label())),
+        ("clock_mhz", json::num(c.config.clock_mhz)),
+        ("latency_ns", json::num(c.latency_ns())),
+        ("ii_ns", json::num(c.ii_ns())),
+        ("dsp", json::num(c.resources.dsp as f64)),
+        ("lut", json::num(c.resources.lut as f64)),
+        ("ff", json::num(c.resources.ff as f64)),
+        ("bram_18k", json::num(c.resources.bram_18k as f64)),
+        ("auc", c.auc.map(json::num).unwrap_or(Value::Null)),
+        ("backend", json::s(bc.backend)),
+        ("tier", json::s(bc.tier.name())),
+    ])
+}
+
+/// Emit the run as machine-readable JSON (the CI bench artifact):
+/// request echo (device, filters), grid/admitted/front counts, and one
+/// row per front point.
+pub fn write_bench_json(
+    path: &Path,
+    result: &ExploreResult,
+) -> anyhow::Result<PathBuf> {
+    let doc = json::obj(vec![
+        ("bench", json::s("explore")),
+        ("schema_version", json::num(1.0)),
+        ("device", json::s(result.device.name)),
+        ("grid", json::num(result.candidates.len() as f64)),
+        ("admitted", json::num(result.admitted.len() as f64)),
+        ("front", json::num(result.front.len() as f64)),
+        (
+            "budget_ns",
+            result.filters.budget_ns.map(json::num).unwrap_or(Value::Null),
+        ),
+        (
+            "min_auc",
+            result.filters.min_auc.map(json::num).unwrap_or(Value::Null),
+        ),
+        (
+            "rows",
+            json::arr(result.front_rows().map(row_json).collect()),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut text = doc.to_json();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(path.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::hls::explore::{pareto, Filters};
+    use crate::hls::{
+        latency, resource, Device, HlsConfig, ReuseFactor, Strategy,
+    };
+    use crate::model::{zoo, Cell};
+
+    fn candidates() -> Vec<Candidate> {
+        let arch = zoo::arch("top", Cell::Gru).unwrap();
+        [(ReuseFactor::new(1, 1), 16), (ReuseFactor::new(6, 5), 8)]
+            .into_iter()
+            .map(|(reuse, width)| {
+                let mut cfg =
+                    HlsConfig::paper_default(FixedSpec::new(width, 6), reuse);
+                cfg.strategy = Strategy::Resource;
+                Candidate {
+                    arch_key: arch.key(),
+                    config: cfg,
+                    timing: latency::schedule(&arch, &cfg).unwrap(),
+                    resources: resource::estimate(&arch, &cfg),
+                    fits_device: true,
+                    auc: (width == 16).then_some(0.9876),
+                }
+            })
+            .collect()
+    }
+
+    fn result() -> ExploreResult {
+        pareto(Device::KU115, candidates(), Filters::default())
+    }
+
+    #[test]
+    fn table_renders_every_front_row() {
+        let r = result();
+        let text = render(&r);
+        assert!(text.contains("Design-space Pareto front on KU115"));
+        assert!(text.contains("top_gru"));
+        assert!(text.contains("0.9876"));
+        assert_eq!(
+            text.lines().count(),
+            // title + header + separator + one line per front row
+            3 + r.front.len()
+        );
+    }
+
+    #[test]
+    fn csv_has_row_fields_header() {
+        let dir = std::env::temp_dir().join(format!(
+            "rnnhls-explore-csv-{}",
+            std::process::id()
+        ));
+        let path = dir.join("explore.csv");
+        write_csv(&path, &result()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(text.starts_with(&ROW_FIELDS.join(",")));
+        // Missing AUC serializes as an empty cell, not a sentinel.
+        assert!(text.contains(",resource,static,200,"));
+    }
+
+    #[test]
+    fn bench_json_has_the_grepped_schema_and_is_byte_stable() {
+        let dir = std::env::temp_dir().join(format!(
+            "rnnhls-explore-json-{}",
+            std::process::id()
+        ));
+        let a = dir.join("a.json");
+        let b = dir.join("b.json");
+        write_bench_json(&a, &result()).unwrap();
+        write_bench_json(&b, &result()).unwrap();
+        let ta = std::fs::read_to_string(&a).unwrap();
+        let tb = std::fs::read_to_string(&b).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(ta, tb, "same grid must serialize byte-identically");
+        for marker in [
+            "\"bench\":\"explore\"",
+            "\"schema_version\":1",
+            "\"device\":\"KU115\"",
+            "\"budget_ns\":null",
+            "\"min_auc\":null",
+            "\"auc\":",
+            "\"tier\":\"trigger\"",
+            "\"backend\":\"fixed\"",
+            "\"name\":\"top_gru_w8i6_r6x5_resource_static_c200\"",
+        ] {
+            assert!(ta.contains(marker), "missing {marker} in {ta}");
+        }
+        let doc = crate::util::json::parse(&ta).unwrap();
+        let rows = doc.req("rows").unwrap().as_array().unwrap();
+        assert!(!rows.is_empty());
+    }
+}

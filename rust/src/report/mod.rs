@@ -9,9 +9,14 @@
 //! | Tables 2–4 (latency bands)          | [`tables::latency_tables`] |
 //! | Fig. 6 + Table 5 (static/non-static)| [`resources::fig6`], [`tables::table5`] |
 //! | §5.2 throughput (FPGA vs GPU-analog)| [`throughput::run`] |
+//!
+//! Beyond the paper's own artifacts, [`accuracy`] sweeps an imported
+//! checkpoint's float-vs-fixed AUC, and [`explore`] renders the HLS
+//! design-space explorer's Pareto front (table/CSV/`BENCH_explore.json`).
 
 pub mod accuracy;
 pub mod csv;
+pub mod explore;
 pub mod fig2;
 pub mod resources;
 pub mod table;

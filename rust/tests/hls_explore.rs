@@ -1,0 +1,357 @@
+//! Property-style invariants for the HLS design-space explorer
+//! (`hls::explore`): grid validity by construction, Pareto-front
+//! soundness (no survivor dominated, every pruned row names a surviving
+//! dominator), device-fit of survivors, budget queries as true minima
+//! over the unpruned grid, byte-stable artifacts, consistency with the
+//! paper's own configuration grids, and the measured-accuracy join.
+
+use std::path::PathBuf;
+
+use rnn_hls::fixed::FixedSpec;
+use rnn_hls::hls::explore::{
+    self, AccuracyJoin, ExploreConfig, ExploreResult, Filters,
+    TRIGGER_BUDGET_NS,
+};
+use rnn_hls::hls::{
+    latency, paper, resource, DesignError, Device, HlsConfig, HlsDesign,
+    ReuseFactor, Strategy,
+};
+use rnn_hls::model::{zoo, Cell};
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn top_gru_config() -> ExploreConfig {
+    ExploreConfig::new(
+        vec![zoo::arch("top", Cell::Gru).unwrap()],
+        Device::KU115,
+    )
+}
+
+fn top_gru_result(filters: Filters) -> ExploreResult {
+    explore::explore(&top_gru_config(), &[], filters).unwrap()
+}
+
+/// Every grid point passes [`HlsConfig::validate`]: the divisor-aware
+/// reuse ladder can never produce a configuration the design layer
+/// rejects.
+#[test]
+fn grid_is_valid_by_construction() {
+    for arch in zoo::all_archs() {
+        let cfg = ExploreConfig::new(vec![arch.clone()], Device::U250);
+        let grid = explore::build_grid(&cfg);
+        assert!(!grid.is_empty(), "{}: empty grid", arch.key());
+        for (a, hls_cfg) in grid {
+            hls_cfg.validate(&a).unwrap();
+        }
+    }
+}
+
+/// Regression for the silently-wrong-fractional-DSP bug: a non-divisor
+/// reuse factor is a typed construction error, not a skewed estimate.
+#[test]
+fn non_divisor_reuse_rejected_at_construction() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    // 360 kernel mults: 7 is not a divisor.
+    let cfg = HlsConfig::paper_default(
+        FixedSpec::new(16, 6),
+        ReuseFactor::new(7, 7),
+    );
+    assert!(matches!(
+        HlsDesign::new(arch, cfg),
+        Err(DesignError::ReuseNotDivisor {
+            which: "kernel",
+            reuse: 7,
+            ..
+        })
+    ));
+}
+
+/// Front soundness: no survivor is dominated by any admitted row, every
+/// pruned row names a *surviving* dominator that actually dominates it,
+/// and the partition accounts for every admitted row.
+#[test]
+fn pareto_front_is_sound() {
+    let r = top_gru_result(Filters::default());
+    assert!(!r.front.is_empty());
+    for &i in &r.front {
+        for &j in &r.admitted {
+            assert!(
+                i == j || !r.candidates[j].dominates(&r.candidates[i]),
+                "front row {} dominated by {}",
+                r.candidates[i].name(),
+                r.candidates[j].name()
+            );
+        }
+    }
+    for d in &r.dropped {
+        assert!(
+            r.front.contains(&d.dominated_by),
+            "dominator of {} is not on the front",
+            r.candidates[d.index].name()
+        );
+        assert!(
+            r.candidates[d.dominated_by].dominates(&r.candidates[d.index]),
+            "{} does not dominate {}",
+            r.candidates[d.dominated_by].name(),
+            r.candidates[d.index].name()
+        );
+    }
+    assert_eq!(r.admitted.len(), r.front.len() + r.dropped.len());
+}
+
+/// Device fit is an admission gate: every survivor fits the target
+/// part.
+#[test]
+fn front_rows_fit_the_device() {
+    let r = top_gru_result(Filters::default());
+    for c in r.front_rows() {
+        assert!(c.fits_device, "{} on the front but does not fit", c.name());
+    }
+}
+
+/// Budget queries answer over the full admitted grid, not just the
+/// front: cross-check against an independent brute-force minimum.
+#[test]
+fn budget_queries_match_brute_force() {
+    let r = top_gru_result(Filters::default());
+    for budget_ns in [500.0, 1_000.0, 2_500.0, 10_000.0, 1e9] {
+        let brute = r
+            .admitted
+            .iter()
+            .map(|&i| &r.candidates[i])
+            .filter(|c| c.latency_ns() <= budget_ns)
+            .min_by_key(|c| ExploreResult::resource_cost(c));
+        let got = r.cheapest_within(budget_ns);
+        match (got, brute) {
+            (None, None) => {}
+            (Some(g), Some(b)) => {
+                assert_eq!(
+                    ExploreResult::resource_cost(g),
+                    ExploreResult::resource_cost(b),
+                    "budget {budget_ns}: {} vs brute-force {}",
+                    g.name(),
+                    b.name()
+                );
+            }
+            (g, b) => panic!(
+                "budget {budget_ns}: query {:?} vs brute force {:?}",
+                g.map(|c| c.name()),
+                b.map(|c| c.name())
+            ),
+        }
+    }
+    // The dual query: fastest design under a DSP cap, same cross-check.
+    for max_dsp in [30, 300, 3_000, 10_000] {
+        let brute = r
+            .admitted
+            .iter()
+            .map(|&i| &r.candidates[i])
+            .filter(|c| c.resources.dsp <= max_dsp)
+            .map(|c| c.latency_ns())
+            .fold(f64::INFINITY, f64::min);
+        match r.fastest_within_dsp(max_dsp) {
+            Some(c) => assert_eq!(c.latency_ns(), brute, "cap {max_dsp}"),
+            None => assert_eq!(brute, f64::INFINITY, "cap {max_dsp}"),
+        }
+    }
+}
+
+/// The CI artifact is byte-stable: two full, independent runs over the
+/// same grid serialize identically.
+#[test]
+fn bench_json_is_byte_stable_across_runs() {
+    let dir = std::env::temp_dir()
+        .join(format!("rnnhls-explore-stable-{}", std::process::id()));
+    let run = |name: &str| {
+        let r = top_gru_result(Filters {
+            budget_ns: Some(5_000.0),
+            min_auc: None,
+        });
+        let path = dir.join(name);
+        rnn_hls::report::explore::write_bench_json(&path, &r).unwrap();
+        std::fs::read_to_string(&path).unwrap()
+    };
+    let a = run("a.json");
+    let b = run("b.json");
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(a, b, "same grid must serialize byte-identically");
+    assert!(a.contains("\"bench\":\"explore\""));
+    assert!(a.contains("\"budget_ns\":5000"));
+}
+
+/// Consistency with the paper's own grids: walking the published top
+/// GRU reuse ladder (Table 2) at fixed precision/clock trades latency
+/// for DSPs monotonically, and consecutive rungs are mutually
+/// non-dominated — each is a genuine Pareto alternative.
+#[test]
+fn paper_reuse_grid_rungs_are_mutual_trade_offs() {
+    let arch = zoo::arch("top", Cell::Gru).unwrap();
+    let rungs: Vec<explore::Candidate> = paper::reuse_grid("top", Cell::Gru)
+        .into_iter()
+        .map(|reuse| {
+            let cfg =
+                HlsConfig::paper_default(FixedSpec::new(8, 6), reuse);
+            explore::Candidate {
+                arch_key: arch.key(),
+                config: cfg,
+                timing: latency::schedule(&arch, &cfg).unwrap(),
+                resources: resource::estimate(&arch, &cfg),
+                fits_device: true,
+                auc: None,
+            }
+        })
+        .collect();
+    assert!(rungs.len() >= 4);
+    for pair in rungs.windows(2) {
+        let (lo, hi) = (&pair[0], &pair[1]);
+        assert!(
+            hi.timing.latency_cycles > lo.timing.latency_cycles,
+            "latency must grow with reuse: {} vs {}",
+            lo.name(),
+            hi.name()
+        );
+        assert!(
+            hi.resources.dsp < lo.resources.dsp,
+            "DSPs must shrink with reuse: {} vs {}",
+            lo.name(),
+            hi.name()
+        );
+        assert!(!lo.dominates(hi), "{} dominates {}", lo.name(), hi.name());
+        assert!(!hi.dominates(lo), "{} dominates {}", hi.name(), lo.name());
+    }
+}
+
+/// The measured-accuracy join: annotated rows carry their per-precision
+/// AUC, `--min-auc` admits only rows that measured above the bar, and a
+/// bar nothing meets empties the front.
+#[test]
+fn accuracy_join_feeds_the_min_auc_filter() {
+    let cfg = top_gru_config();
+    let mut candidates = explore::evaluate(&cfg).unwrap();
+    let specs = explore::distinct_specs(&candidates, "top_gru");
+    assert_eq!(specs.len(), explore::DEFAULT_WIDTHS.len());
+    let join = AccuracyJoin {
+        key: "top_gru".into(),
+        auc_float: 0.99,
+        samples: 400,
+        auc_by_spec: specs
+            .iter()
+            .map(|&s| {
+                // Synthetic Fig. 2 shape: only wide types clear 0.98.
+                (s, if s.width >= 16 { 0.985 } else { 0.90 })
+            })
+            .collect(),
+    };
+    explore::join_accuracy(&mut candidates, &join);
+    assert!(candidates.iter().all(|c| c.auc.is_some()));
+
+    let admitted_bar = Filters {
+        budget_ns: None,
+        min_auc: Some(0.98),
+    };
+    let r = explore::pareto(cfg.device, candidates.clone(), admitted_bar);
+    assert!(!r.front.is_empty());
+    for c in r.front_rows() {
+        assert!(c.auc.unwrap() >= 0.98);
+        assert!(c.config.spec.width >= 16, "{}", c.name());
+    }
+
+    let impossible_bar = Filters {
+        budget_ns: None,
+        min_auc: Some(0.999),
+    };
+    let r = explore::pareto(cfg.device, candidates, impossible_bar);
+    assert!(r.admitted.is_empty() && r.front.is_empty());
+}
+
+/// The serving bridge: every front row serializes as a uniquely named
+/// backend candidate whose tier follows its modeled latency.
+#[test]
+fn serving_bridge_rows_are_named_and_tiered() {
+    let r = top_gru_result(Filters::default());
+    let rows = r.backend_candidates();
+    assert_eq!(rows.len(), r.front.len());
+    let mut names: Vec<&str> = rows.iter().map(|b| b.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), rows.len(), "backend candidate names collide");
+    for b in &rows {
+        assert!(b.name.starts_with("top_gru_w"), "{}", b.name);
+        assert_eq!(b.model_key, "top_gru");
+        assert_eq!(b.backend, "fixed");
+        assert_eq!(
+            b.tier == rnn_hls::coordinator::TierClass::Trigger,
+            b.latency_ns <= TRIGGER_BUDGET_NS,
+            "{}",
+            b.name
+        );
+    }
+}
+
+/// `FloatBaseline` refactor equivalence: the packaged `accuracy::run`,
+/// an explicit baseline + sweep, and a spec-by-spec `eval_spec` loop
+/// produce bit-identical reports — the explorer's one-baseline reuse
+/// changes nothing.
+#[test]
+fn float_baseline_sweep_equals_run() {
+    use rnn_hls::report::accuracy::{self, FloatBaseline};
+
+    let weights = rnn_hls::model::Weights::load_path(
+        fixtures().join("top_gru.json"),
+        None,
+    )
+    .unwrap();
+    let ds = rnn_hls::data::Dataset::load(
+        fixtures().join("top_test_slice.bin"),
+    )
+    .unwrap()
+    .truncated(40);
+    let specs = [FixedSpec::new(8, 4), FixedSpec::new(16, 6)];
+
+    let packaged = accuracy::run(&weights, &ds, &specs, 2).unwrap();
+    let baseline = FloatBaseline::new(&weights, &ds, 2).unwrap();
+    let swept = baseline.sweep(&specs, 2).unwrap();
+
+    assert_eq!(packaged.key, swept.key);
+    assert_eq!(packaged.samples, swept.samples);
+    assert_eq!(
+        packaged.auc_float.to_bits(),
+        swept.auc_float.to_bits(),
+        "float baseline diverged"
+    );
+    assert_eq!(packaged.points.len(), swept.points.len());
+    for (p, s) in packaged.points.iter().zip(&swept.points) {
+        assert_eq!(p.spec, s.spec);
+        assert_eq!(p.auc_fixed.to_bits(), s.auc_fixed.to_bits());
+        let lone = baseline.eval_spec(p.spec, 1).unwrap();
+        assert_eq!(p.auc_fixed.to_bits(), lone.to_bits());
+    }
+    assert_eq!(baseline.auc_float().to_bits(), packaged.auc_float.to_bits());
+    assert_eq!(baseline.samples(), 40);
+    assert_eq!(baseline.key(), "top_gru");
+}
+
+/// The acceptance-criteria shape: a 1 µs budget on the KU115 still
+/// leaves top GRU designs standing (the 400 MHz latency-strategy
+/// corner), every one fitting the device inside the budget.
+#[test]
+fn one_microsecond_budget_is_satisfiable_on_ku115() {
+    let r = top_gru_result(Filters {
+        budget_ns: Some(1_000.0),
+        min_auc: None,
+    });
+    assert!(!r.front.is_empty(), "nothing survives a 1 µs budget");
+    for c in r.front_rows() {
+        assert!(c.fits_device);
+        assert!(c.latency_ns() <= 1_000.0, "{}", c.name());
+        assert!(
+            (c.config.clock_mhz - 400.0).abs() < 1e-9,
+            "only the 400 MHz corner meets 1 µs, got {}",
+            c.name()
+        );
+        assert_eq!(c.config.strategy, Strategy::Latency);
+    }
+    assert!(r.cheapest_within(1_000.0).is_some());
+}
